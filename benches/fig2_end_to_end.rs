@@ -1,0 +1,74 @@
+//! Fig 2 bench: end-to-end per-epoch training time + inference latency
+//! under both representations. Requires artifacts built for the default
+//! bench configuration (`repro emit-buckets && make artifacts`);
+//! datasets without artifacts are skipped with a notice.
+//! Run: `cargo bench --bench fig2_end_to_end`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use repro::bench::{effective_scale, measure_inference};
+use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
+use repro::datasets;
+use repro::hag::PlanConfig;
+use repro::runtime::Runtime;
+use repro::util::benchkit::Bencher;
+
+const SCALE: f64 = 0.05;
+const SEED: u64 = 7;
+
+fn main() {
+    let artifacts =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = match Runtime::open(&artifacts) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("[fig2] no artifacts ({e:#}); run `repro \
+                       emit-buckets && make artifacts` first");
+            return;
+        }
+    };
+    let b = Bencher::quick();
+    for name in datasets::names() {
+        let ds =
+            datasets::load(name, effective_scale(name, SCALE), SEED);
+        let mut per_repr = [f64::NAN; 2];
+        for (ri, repr) in
+            [Repr::GnnGraph, Repr::Hag].into_iter().enumerate()
+        {
+            let lowered = lower_dataset(&ds, repr, None,
+                                        &PlanConfig::default())
+                .expect("lowering");
+            let tname = coordinator::artifact_name("gcn", "train",
+                                                   &lowered.bucket);
+            if runtime.spec(&tname).is_err() {
+                eprintln!("[fig2] skipping {tname}: artifact missing");
+                continue;
+            }
+            let workload =
+                pack_workload(&ds, &lowered.plan, &lowered.bucket)
+                    .expect("packing");
+            let mut trainer = coordinator::Trainer::new(
+                runtime.clone(), &tname, &workload, SEED)
+                .expect("trainer");
+            trainer.step().expect("warmup");
+            let stats = b.run(
+                &format!("fig2_train/{}/{}", repr.tag(), name), || {
+                    trainer.step().expect("step");
+                });
+            per_repr[ri] = stats.median.as_secs_f64() * 1e3;
+
+            let iname = coordinator::artifact_name(
+                "gcn", "infer", &lowered.bucket);
+            if let Ok(ms) = measure_inference(&runtime, &iname,
+                                              &workload, SEED, 5) {
+                println!("  -> {} inference median {ms:.2} ms",
+                         repr.tag());
+            }
+        }
+        if per_repr.iter().all(|x| x.is_finite()) {
+            println!("[fig2 {name}] train speedup (gnn/hag): {:.2}x",
+                     per_repr[0] / per_repr[1]);
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Fig 3 bench: HAG search on every dataset, measuring search
+//! throughput and printing the aggregation/data-transfer reductions
+//! (both set and sequential AGGREGATE). Structure-only: no artifacts
+//! needed. Run: `cargo bench --bench fig3_aggregations`.
+
+use repro::bench::effective_scale;
+use repro::datasets;
+use repro::hag::{hag_search, AggregateKind, SearchConfig};
+use repro::util::benchkit::Bencher;
+
+fn main() {
+    let base = 0.02; // small enough for repeated iterations
+    let b = Bencher::quick();
+    for kind in [AggregateKind::Set, AggregateKind::Sequential] {
+        for name in datasets::names() {
+            let ds =
+                datasets::load(name, effective_scale(name, base), 7);
+            let cfg = SearchConfig::paper_default(ds.graph.n())
+                .with_kind(kind);
+            let (_, stats) = hag_search(&ds.graph, &cfg);
+            println!(
+                "[fig3 {kind:?} {name}] aggs {} -> {} ({:.2}x), tx {} \
+                 -> {} ({:.2}x)",
+                stats.aggregations_before, stats.aggregations_after,
+                stats.aggregations_before as f64
+                    / stats.aggregations_after.max(1) as f64,
+                stats.transfers_before, stats.transfers_after,
+                stats.transfers_before as f64
+                    / stats.transfers_after.max(1) as f64);
+            b.run(&format!("fig3_search/{kind:?}/{name}"), || {
+                std::hint::black_box(hag_search(&ds.graph, &cfg));
+            });
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig 4 bench: capacity sweep on the COLLAB stand-in. The cost-model
+//! columns are exact; training timings additionally require the fig4
+//! sweep artifacts (`repro emit-buckets --fig4` + `make artifacts`).
+//! Run: `cargo bench --bench fig4_capacity`.
+
+use std::path::Path;
+
+use repro::bench::{effective_scale, fig4_rows, FIG4_FRACTIONS};
+use repro::coordinator::{lower_dataset, Repr};
+use repro::datasets;
+use repro::hag::PlanConfig;
+use repro::util::benchkit::Bencher;
+
+const SCALE: f64 = 0.02;
+const SEED: u64 = 7;
+
+fn main() {
+    let ds = datasets::load("COLLAB", effective_scale("COLLAB", SCALE),
+                            SEED);
+    let b = Bencher::quick();
+    for &frac in FIG4_FRACTIONS {
+        let capacity = (ds.graph.n() as f64 * frac) as usize;
+        b.run(&format!("fig4_capacity_search/{capacity}"), || {
+            std::hint::black_box(
+                lower_dataset(&ds, Repr::Hag, Some(capacity),
+                              &PlanConfig::default())
+                    .unwrap());
+        });
+    }
+
+    // Print the cost sweep (and timings if artifacts exist).
+    let artifacts =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match fig4_rows(&artifacts, SCALE, SEED, 3) {
+        Ok(rows) => {
+            for r in rows {
+                println!("[fig4] capacity {:>8}: agg_nodes {:>8}, cost \
+                          {:>10}, train {:?} ms, a-hat {:.1} KB",
+                         r.capacity, r.agg_nodes, r.cost_core,
+                         r.train_ms, r.ahat_bytes as f64 / 1024.0);
+            }
+        }
+        Err(e) => eprintln!("[fig4] sweep failed: {e:#}"),
+    }
+}

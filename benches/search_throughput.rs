@@ -1,0 +1,55 @@
+//! HAG-search scaling bench (L3 hot path): edges/second across graph
+//! sizes and pair-cap settings — the input to the §Perf iteration log.
+//! Run: `cargo bench --bench search_throughput`.
+
+use repro::datasets::{community_graph, CommunityCfg};
+use repro::hag::{hag_search, AggregateKind, SearchConfig};
+use repro::util::benchkit::Bencher;
+
+fn main() {
+    let b = Bencher::quick();
+
+    // scaling in |V| (constant average degree 20)
+    for &n in &[1_000usize, 4_000, 16_000] {
+        let cfg = CommunityCfg {
+            n,
+            e: n * 20,
+            communities: (n / 160).max(4),
+            intra_frac: 0.9,
+            zipf_exp: 0.9,
+            clone_frac: 0.5,
+        };
+        let (g, _) = community_graph(&cfg, 11);
+        let edges = g.e();
+        for kind in [AggregateKind::Set, AggregateKind::Sequential] {
+            let sc = SearchConfig::paper_default(g.n()).with_kind(kind);
+            let stats = b.run(
+                &format!("search_scaling/{kind:?}/n{n}"), || {
+                    std::hint::black_box(hag_search(&g, &sc));
+                });
+            let meps =
+                edges as f64 / stats.median.as_secs_f64() / 1e6;
+            println!("  -> {edges} edges, {meps:.2} Medges/s");
+        }
+    }
+
+    // pair_cap ablation (search-space window vs quality/speed)
+    let cfg = CommunityCfg {
+        n: 8_000,
+        e: 160_000,
+        communities: 50,
+        intra_frac: 0.9,
+        zipf_exp: 1.0,
+        clone_frac: 0.5,
+    };
+    let (g, _) = community_graph(&cfg, 13);
+    for &cap in &[16usize, 32, 64, 128] {
+        let mut sc = SearchConfig::paper_default(g.n());
+        sc.pair_cap = cap;
+        let (hag, _) = hag_search(&g, &sc);
+        b.run(&format!("search_pair_cap/{cap}"), || {
+            std::hint::black_box(hag_search(&g, &sc));
+        });
+        println!("  -> cost |E|-|VA| = {}", hag.cost_core());
+    }
+}

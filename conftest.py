@@ -1,0 +1,8 @@
+"""Pytest root hook: make `pytest python/tests/` work from the repo
+root by putting the python/ package directory on sys.path (tests import
+`compile.*` relative to that directory)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,72 @@
+//! HAG explorer: the paper's §4 algorithmics on any dataset — runs the
+//! search at several capacities and pair-cap settings, prints the cost
+//! landscape, validates Theorem 1 at every point, and compares against
+//! the random-merge ablation baseline.
+//!
+//! ```bash
+//! cargo run --release --example hag_explorer -- BZR 0.05
+//! ```
+
+use repro::bench::effective_scale;
+use repro::coordinator::random_merge_hag;
+use repro::datasets;
+use repro::hag::{check_equivalence_probabilistic, hag_search,
+                 AggregateKind, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let name = args.next().unwrap_or_else(|| "BZR".into());
+    let base: f64 = args.next().map(|s| s.parse().unwrap())
+        .unwrap_or(0.05);
+    let ds = datasets::load(&name, effective_scale(&name, base), 7);
+    println!("{} — {} nodes, {} edges", ds.name, ds.n(), ds.e());
+
+    println!("\ncapacity sweep (set AGGREGATE):");
+    println!("{:>10} {:>10} {:>12} {:>10} {:>10}", "capacity",
+             "agg nodes", "aggregations", "reduction", "ms");
+    let base_aggs = {
+        let cfg = SearchConfig::paper_default(ds.graph.n())
+            .with_capacity(0);
+        hag_search(&ds.graph, &cfg).1.aggregations_before
+    };
+    for frac in [0.0, 0.05, 0.125, 0.25, 0.5] {
+        let cap = (ds.graph.n() as f64 * frac) as usize;
+        let cfg = SearchConfig::paper_default(ds.graph.n())
+            .with_capacity(cap);
+        let (hag, stats) = hag_search(&ds.graph, &cfg);
+        check_equivalence_probabilistic(&ds.graph, &hag, 3)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!("{:>10} {:>10} {:>12} {:>9.2}x {:>10.1}", cap,
+                 stats.agg_nodes, stats.aggregations_after,
+                 base_aggs as f64 / stats.aggregations_after.max(1) as f64,
+                 stats.elapsed_ms);
+    }
+
+    println!("\nsequential AGGREGATE (prefix merging):");
+    let cfg = SearchConfig::paper_default(ds.graph.n())
+        .with_kind(AggregateKind::Sequential);
+    let (_, stats) = hag_search(&ds.graph, &cfg);
+    println!("  aggregations {} -> {} ({:.2}x), transfers {:.2}x",
+             stats.aggregations_before, stats.aggregations_after,
+             stats.aggregations_before as f64
+                 / stats.aggregations_after.max(1) as f64,
+             stats.transfers_before as f64
+                 / stats.transfers_after.max(1) as f64);
+
+    println!("\nablation — greedy (Algorithm 3) vs random merging:");
+    let cap = ds.graph.n() / 4;
+    let (greedy, gstats) = hag_search(
+        &ds.graph,
+        &SearchConfig::paper_default(ds.graph.n()).with_capacity(cap));
+    let random = random_merge_hag(&ds.graph, cap, 99);
+    check_equivalence_probabilistic(&ds.graph, &random, 4)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("  greedy: {:>10} aggregations ({} merges)",
+             greedy.aggregations(), gstats.iterations);
+    println!("  random: {:>10} aggregations ({} merges)",
+             random.aggregations(), random.agg_nodes.len());
+    println!("  greedy advantage: {:.2}x fewer",
+             random.aggregations() as f64
+                 / greedy.aggregations().max(1) as f64);
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Quickstart: build a graph, search a HAG, verify equivalence, and run
+//! one AOT-compiled GCN inference through the PJRT runtime.
+//!
+//! ```bash
+//! make artifacts            # compiles the default `tiny*` buckets
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use repro::coordinator::trainer::init_params;
+use repro::graph::Graph;
+use repro::hag::{build_plan, check_equivalence, hag_search, PlanConfig,
+                 SearchConfig};
+use repro::runtime::{HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the paper's Fig 1 input graph -----------------------------
+    let g = Graph::from_edges(
+        5,
+        &[
+            (1, 0), (2, 0), (3, 0),           // A <- {B, C, D}
+            (0, 1), (2, 1),                   // B <- {A, C}
+            (0, 2), (1, 2), (4, 2),           // C <- {A, B, E}
+            (1, 3), (2, 3),                   // D <- {B, C}
+            (2, 4), (3, 4),                   // E <- {C, D}
+        ],
+    );
+    println!("input graph: {} nodes, {} aggregation edges", g.n(), g.e());
+
+    // --- 2. Algorithm 3 ------------------------------------------------
+    let (hag, stats) = hag_search(&g, &SearchConfig {
+        capacity: usize::MAX,
+        kind: repro::hag::AggregateKind::Set,
+        pair_cap: usize::MAX,
+    });
+    println!("HAG search: {} aggregation nodes, aggregations {} -> {}",
+             stats.agg_nodes, stats.aggregations_before,
+             stats.aggregations_after);
+
+    // --- 3. Theorem 1 equivalence --------------------------------------
+    check_equivalence(&g, &hag).map_err(|e| anyhow::anyhow!(e))?;
+    println!("equivalence: cover(v) == N(v) for all v  [Theorem 1] OK");
+
+    // --- 4. execute through the AOT artifact ---------------------------
+    // The `tiny4` bucket (n_pad=128, 4 levels) fits this plan.
+    let plan = build_plan(&g, &hag, &PlanConfig {
+        br: 8, lvl_block: 128, max_bands: 1, nnzb_round: 16,
+    });
+    let runtime = Arc::new(Runtime::open("artifacts")?);
+    let exe = runtime.compile("gcn_infer_tiny4")?;
+    let b = &exe.spec.bucket;
+    println!("artifact: {} (n_pad={}, levels={}, l_pad={})",
+             exe.spec.name, b.n_pad, b.levels, b.l_pad);
+
+    // pad plan tensors into the bucket's static shapes
+    let zero = (b.m_pad() - 1) as i32;
+    let remap = |x: i32| -> i32 {
+        // plan zero-slot -> bucket zero-slot; level slots shift because
+        // l_pad/levels may differ between the plan and the bucket
+        if x as usize == plan.m_pad() - 1 {
+            zero
+        } else if (x as usize) < plan.n_pad {
+            x
+        } else {
+            let off = x as usize - plan.n_pad;
+            (b.n_pad + (off / plan.l_pad) * b.l_pad + off % plan.l_pad)
+                as i32
+        }
+    };
+    let mut lvl_left = vec![zero; b.levels * b.l_pad];
+    let mut lvl_right = vec![zero; b.levels * b.l_pad];
+    for l in 0..plan.levels {
+        for j in 0..plan.l_pad.min(b.l_pad) {
+            lvl_left[l * b.l_pad + j] =
+                remap(plan.lvl_left[l * plan.l_pad + j]);
+            lvl_right[l * b.l_pad + j] =
+                remap(plan.lvl_right[l * plan.l_pad + j]);
+        }
+    }
+    let (nb, nnzb) = b.bands[0];
+    let mut col = vec![zero; nb * nnzb];
+    let mut row = vec![0i32; nb * nnzb];
+    let (pnb, pnnzb) = plan.bands[0];
+    for blk in 0..pnb.min(nb) {
+        for j in 0..pnnzb.min(nnzb) {
+            col[blk * nnzb + j] =
+                remap(plan.band_cols[0][blk * pnnzb + j]);
+            row[blk * nnzb + j] = plan.band_rows[0][blk * pnnzb + j];
+        }
+    }
+
+    // features: one-hot node id (f_in = 8)
+    let f_in = b.f_in;
+    let mut h0 = vec![0f32; b.n_pad * f_in];
+    for v in 0..g.n() {
+        let new = plan.inv_perm[v] as usize;
+        h0[new * f_in + v % f_in] = 1.0;
+    }
+    let mut deg = vec![0f32; b.n_pad];
+    deg[..plan.n_pad.min(b.n_pad)]
+        .copy_from_slice(&plan.deg[..plan.n_pad.min(b.n_pad)]);
+
+    let param_specs: Vec<_> = exe.spec.inputs.iter()
+        .filter(|s| !matches!(s.name.as_str(), "h0" | "deg")
+                && !s.name.starts_with("lvl_")
+                && !s.name.starts_with("band"))
+        .cloned().collect();
+    let params = init_params(&param_specs, 42);
+    let mut inputs = Vec::new();
+    let mut pi = 0;
+    for s in &exe.spec.inputs {
+        inputs.push(match s.name.as_str() {
+            "h0" => HostTensor::f32(h0.clone(), &[b.n_pad, f_in]),
+            "deg" => HostTensor::f32(deg.clone(), &[b.n_pad]),
+            "lvl_left" => HostTensor::i32(lvl_left.clone(),
+                                          &[b.levels, b.l_pad]),
+            "lvl_right" => HostTensor::i32(lvl_right.clone(),
+                                           &[b.levels, b.l_pad]),
+            "band0_col" => HostTensor::i32(col.clone(), &[nb, nnzb]),
+            "band0_row" => HostTensor::i32(row.clone(), &[nb, nnzb]),
+            _ => {
+                pi += 1;
+                params[pi - 1].clone()
+            }
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let outs = runtime.run(&exe.spec.name.clone(), &inputs)?;
+    let logits = outs[0].as_f32()?;
+    println!("inference ({} classes) in {:.2} ms:", b.classes,
+             t0.elapsed().as_secs_f64() * 1e3);
+    for v in 0..g.n() {
+        let new = plan.inv_perm[v] as usize;
+        let row = &logits[new * b.classes..(new + 1) * b.classes];
+        println!("  node {v}: {row:?}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

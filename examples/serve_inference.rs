@@ -1,0 +1,79 @@
+//! Serving example: spin up the inference server over the BZR stand-in
+//! under both representations, drive it with concurrent client threads,
+//! and report latency percentiles + throughput — the serving-path
+//! counterpart of the Fig 2 inference comparison.
+//!
+//! ```bash
+//! cargo run --release -- emit-buckets --datasets BZR --scale 0.05
+//! make artifacts
+//! cargo run --release --example serve_inference
+//! ```
+
+use std::time::{Duration, Instant};
+
+use repro::bench::effective_scale;
+use repro::coordinator::{self, lower_dataset, pack_workload,
+                         BatchPolicy, Repr};
+use repro::datasets;
+use repro::hag::PlanConfig;
+use repro::util::Rng;
+
+const SCALE: f64 = 0.05;
+const SEED: u64 = 7;
+const REQUESTS: usize = 400;
+const CLIENTS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let ds = datasets::load("BZR", effective_scale("BZR", SCALE), SEED);
+    println!("serving {} ({} nodes, {} edges)", ds.name, ds.n(), ds.e());
+
+    for repr in [Repr::GnnGraph, Repr::Hag] {
+        let lowered =
+            lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+        let name = coordinator::artifact_name("gcn", "infer",
+                                              &lowered.bucket);
+        let workload =
+            pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
+        let server = coordinator::InferenceServer::spawn(
+            "artifacts", &name, &workload, &lowered.plan,
+            BatchPolicy { max_batch: 64,
+                          max_wait: Duration::from_millis(2) },
+            SEED)?;
+        let n = ds.n() as u32;
+        let f_in = ds.f_in;
+        let classes = ds.classes;
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let tx = server.client();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(SEED + c as u64);
+                for _ in 0..REQUESTS / CLIENTS {
+                    let (otx, orx) = coordinator::server::oneshot();
+                    let req = coordinator::ScoreRequest {
+                        node: rng.range_u32(0, n),
+                        features: (0..f_in)
+                            .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+                        reply: otx,
+                        submitted: Instant::now(),
+                    };
+                    if tx.send(req).is_err() {
+                        break;
+                    }
+                    let resp = orx.recv().expect("reply");
+                    assert_eq!(resp.logits.len(), classes);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        let stats = server.shutdown();
+        println!("\n[{:?}] {} requests in {} batches (mean {:.1}/batch)",
+                 repr, stats.requests, stats.batches, stats.mean_batch);
+        println!("  latency p50 {:.2} ms, p99 {:.2} ms; exec \
+                  {:.2} ms/batch; {:.0} req/s",
+                 stats.p50_ms, stats.p99_ms, stats.mean_exec_ms,
+                 stats.throughput_rps);
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""Shape buckets — the static-shape contract between rust (L3) and the
+AOT-compiled XLA executables (L2).
+
+XLA programs have static shapes; graphs do not. The rust plan compiler
+(``rust/src/hag/schedule``) lowers a graph/HAG into padded index tensors
+that fit a *bucket*: a named tuple of every static dimension the lowered
+HLO bakes in. ``aot.py`` compiles one artifact per (entry x bucket) and
+writes ``artifacts/manifest.json`` so the rust runtime can pick the right
+executable and know the exact input/output literal layout.
+
+Conventions (mirrored in rust, see hag::schedule):
+
+* ``n_pad``   — padded node count; multiple of 128 (matmul row tile) and
+  of ``br`` x every band's block count.
+* ``levels``  — number of HAG topological levels (0 = GNN-graph baseline).
+* ``l_pad``   — per-level slot count; multiple of ``lvl_block``.
+* ``bands``   — tuple of ``(nb, nnzb)`` for the final block-CSR segment
+  sum; sum(nb) * br == n_pad. Multiple bands bound padding waste under
+  skewed degree distributions (rust degree-sorts nodes so each band's
+  row blocks have similar nnz).
+* value buffer size ``m_pad = n_pad + levels * l_pad + 1``; the last slot
+  is pinned to zero and is the target of all index padding.
+* ``g_pad``   — padded graph count for graph classification (0 = node
+  classification). Last graph slot is the padding sink.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    name: str
+    n_pad: int
+    f_in: int
+    hidden: int
+    classes: int
+    levels: int
+    l_pad: int
+    bands: Tuple[Tuple[int, int], ...]   # ((nb, nnzb), ...)
+    br: int = 8
+    lvl_block: int = 128
+    g_pad: int = 0                       # 0 => node classification
+    # Band segment-sum implementation:
+    #   "mxu"     — Pallas block-CSR kernel (one-hot matmul reduction):
+    #               the TPU-shaped path; on the MXU the 8x one-hot FLOP
+    #               inflation is free.
+    #   "scatter" — XLA scatter-add: work ~ E*F, the right choice on
+    #               CPU (12.6x faster at REDDIT band shapes — see
+    #               EXPERIMENTS.md §Perf).
+    impl: str = "mxu"
+
+    def __post_init__(self):
+        assert self.impl in ("mxu", "scatter"), self.impl
+        assert self.n_pad % 128 == 0, "n_pad must be a multiple of 128"
+        assert sum(nb for nb, _ in self.bands) * self.br == self.n_pad, (
+            "bands must tile n_pad exactly")
+        if self.levels > 0:
+            assert self.l_pad % self.lvl_block == 0, (
+                "l_pad must be a multiple of lvl_block")
+
+    @property
+    def m_pad(self) -> int:
+        return self.n_pad + self.levels * self.l_pad + 1
+
+    @property
+    def is_graph_cls(self) -> bool:
+        return self.g_pad > 0
+
+    def plan_slots(self) -> int:
+        """Total index slots (for memory/padding-waste accounting)."""
+        return (self.levels * self.l_pad * 2
+                + sum(nb * nnzb for nb, nnzb in self.bands) * 2)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bands"] = [list(b) for b in self.bands]
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "Bucket":
+        d = dict(d)
+        d["bands"] = tuple(tuple(b) for b in d["bands"])
+        d.setdefault("impl", "mxu")
+        return Bucket(**d)
+
+
+def load_bucket_specs(path: str):
+    """Read a bucket-spec JSON (list of bucket dicts) emitted by
+    ``repro emit-buckets`` or hand-written for the default set."""
+    with open(path) as f:
+        data = json.load(f)
+    return [Bucket.from_json(d) for d in data["buckets"]]

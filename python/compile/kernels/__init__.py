@@ -1,0 +1,19 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Exports the three hot-spot kernels plus their pure-jnp oracles:
+
+* ``block_spmm`` — block-CSR segment-sum (the ``hag_aggregate`` operator)
+* ``level_combine`` — one HAG level of binary aggregations
+* ``tiled_matmul`` — MXU-tiled UPDATE matmul
+"""
+
+from .csr_spmm import block_spmm, block_spmm_max
+from .level_combine import level_combine, level_combine_max
+from .matmul import tiled_matmul
+from . import ref
+
+__all__ = [
+    "block_spmm", "block_spmm_max",
+    "level_combine", "level_combine_max",
+    "tiled_matmul", "ref",
+]

@@ -1,0 +1,103 @@
+"""Pallas block-CSR SpMM — the ``hag_aggregate`` hot-spot kernel.
+
+Computes a segment-sum of gathered feature rows: the sparse-adjacency ×
+dense-features product that dominates GNN aggregation (paper §5.1's
+``hag_aggregate`` operator). The same kernel executes both the GNN-graph
+baseline plan and the final-edge phase of a HAG plan; only the index
+tensors differ.
+
+TPU adaptation of the paper's CUDA gathers (DESIGN.md §Hardware-Adaptation):
+
+* rows are tiled into blocks of ``BR`` (the BlockSpec row tile) so each
+  output tile is VMEM-resident;
+* the per-block reduction is expressed as a one-hot ``[BR, NNZB] @
+  [NNZB, F]`` matmul, which maps onto the MXU systolic array instead of
+  warp shuffles;
+* accumulation is always f32 regardless of activation dtype.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO. The BlockSpec
+structure is still what a real-TPU build would use; see DESIGN.md §Perf
+for the VMEM/MXU estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_spmm_kernel(values_ref, blk_col_ref, blk_row_ref, out_ref,
+                       *, block_rows: int):
+    cols = blk_col_ref[0]                      # [NNZB] gather indices
+    rows = blk_row_ref[0]                      # [NNZB] local dest rows
+    gathered = values_ref[cols]                # [NNZB, F] (HBM->VMEM rows)
+    onehot = jnp.equal(
+        rows[:, None], jnp.arange(block_rows, dtype=rows.dtype)[None, :]
+    ).astype(jnp.float32)                      # [NNZB, BR]
+    acc = jax.lax.dot_general(
+        onehot, gathered.astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # [BR, F] on the MXU
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _block_spmm_max_kernel(values_ref, blk_col_ref, blk_row_ref, out_ref,
+                           *, block_rows: int):
+    # Max-pooling variant (GraphSAGE-P). Identity element is 0, which is
+    # valid because pooled operands are post-ReLU (>= 0); padding slots
+    # gather the pinned zero row and therefore never win the max except
+    # when a row has no real operands, in which case the aggregate is 0.
+    cols = blk_col_ref[0]
+    rows = blk_row_ref[0]
+    gathered = values_ref[cols].astype(jnp.float32)    # [NNZB, F]
+    mask = jnp.equal(
+        rows[:, None], jnp.arange(block_rows, dtype=rows.dtype)[None, :]
+    )                                                  # [NNZB, BR]
+    # [BR, NNZB, F] masked broadcast, reduce-max over NNZB (VPU reduce)
+    contrib = jnp.where(mask.T[:, :, None], gathered[None, :, :], 0.0)
+    out_ref[...] = contrib.max(axis=1).astype(out_ref.dtype)
+
+
+def _spmm_call(kernel, values, blk_col, blk_row, block_rows):
+    nb, nnzb = blk_col.shape
+    m, f = values.shape
+    return pl.pallas_call(
+        functools.partial(kernel, block_rows=block_rows),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, f), lambda b: (0, 0)),        # full buffer
+            pl.BlockSpec((1, nnzb), lambda b: (b, 0)),
+            pl.BlockSpec((1, nnzb), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, f), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * block_rows, f), values.dtype),
+        interpret=True,
+    )(values, blk_col, blk_row)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def block_spmm(values: jnp.ndarray, blk_col: jnp.ndarray,
+               blk_row: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Block-CSR SpMM (sum); see ref.block_spmm_ref for exact semantics.
+
+    values:  [M, F] activation buffer, slot M-1 pinned to zero
+    blk_col: [NB, NNZB] int32 gather indices (padding -> M-1)
+    blk_row: [NB, NNZB] int32 local destination row in 0..BR-1
+    returns: [NB*BR, F]
+    """
+    return _spmm_call(_block_spmm_kernel, values, blk_col, blk_row,
+                      block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def block_spmm_max(values: jnp.ndarray, blk_col: jnp.ndarray,
+                   blk_row: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Block-CSR max-pooling (GraphSAGE-P AGGREGATE); operands must be
+    >= 0 (post-ReLU) so the pinned zero slot is a valid identity."""
+    return _spmm_call(_block_spmm_max_kernel, values, blk_col, blk_row,
+                      block_rows)

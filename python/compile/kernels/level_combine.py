@@ -1,0 +1,76 @@
+"""Pallas kernel for one HAG level of binary aggregation nodes.
+
+Every aggregation node created by the search algorithm (Algorithm 3)
+combines exactly two operands. The rust scheduler groups nodes into
+topological levels; within a level all combines are independent, so the
+kernel is a double-gather + vector add over a tile of ``BL`` nodes:
+
+    out[i] = values[left[i]] + values[right[i]]
+
+Padding entries point both indices at the pinned zero slot ``M-1``, so the
+result rows for padding are exactly zero. The scatter of ``out`` back into
+the value buffer is done by the caller (L2) with a static
+``dynamic_update_slice`` — aggregation-node slots are allocated
+contiguously per level by the rust scheduler precisely so the scatter is a
+dense slice update rather than a random scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _level_combine_kernel(values_ref, left_ref, right_ref, out_ref):
+    left = left_ref[...]                      # [BL]
+    right = right_ref[...]                    # [BL]
+    acc = (values_ref[left].astype(jnp.float32)
+           + values_ref[right].astype(jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _level_combine_max_kernel(values_ref, left_ref, right_ref, out_ref):
+    # Max variant (GraphSAGE-P): operands are >= 0 post-ReLU, so padding
+    # (both indices -> pinned zero slot) yields exactly 0.
+    acc = jnp.maximum(values_ref[left_ref[...]].astype(jnp.float32),
+                      values_ref[right_ref[...]].astype(jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _combine_call(kernel, values, left, right, block_len):
+    (l,) = left.shape
+    m, f = values.shape
+    if l % block_len != 0:
+        raise ValueError(f"L={l} must be a multiple of block_len={block_len}")
+    return pl.pallas_call(
+        kernel,
+        grid=(l // block_len,),
+        in_specs=[
+            pl.BlockSpec((m, f), lambda b: (0, 0)),
+            pl.BlockSpec((block_len,), lambda b: (b,)),
+            pl.BlockSpec((block_len,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((block_len, f), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, f), values.dtype),
+        interpret=True,
+    )(values, left, right)
+
+
+@functools.partial(jax.jit, static_argnames=("block_len",))
+def level_combine(values: jnp.ndarray, left: jnp.ndarray,
+                  right: jnp.ndarray, block_len: int = 128) -> jnp.ndarray:
+    """values: [M, F] (slot M-1 zero); left/right: [L] int32; -> [L, F]."""
+    return _combine_call(_level_combine_kernel, values, left, right,
+                         block_len)
+
+
+@functools.partial(jax.jit, static_argnames=("block_len",))
+def level_combine_max(values: jnp.ndarray, left: jnp.ndarray,
+                      right: jnp.ndarray,
+                      block_len: int = 128) -> jnp.ndarray:
+    """Element-wise max combine (GraphSAGE-P); operands must be >= 0."""
+    return _combine_call(_level_combine_max_kernel, values, left, right,
+                         block_len)

@@ -1,0 +1,97 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth for every L1 kernel: pytest sweeps
+shapes/dtypes (hypothesis) and asserts the Pallas implementations match
+these to within dtype tolerance. They are also usable directly by the L2
+model (``model.py`` takes ``use_pallas=False``) so the whole AOT pipeline
+can be cross-checked kernel-by-kernel.
+
+Conventions shared with the rust plan compiler (``rust/src/hag/schedule``):
+
+* The activation buffer ``values`` has shape ``[M, F]`` where the **last
+  slot ``M-1`` is pinned to zero**. All index padding points at it, so
+  padded gather contributions vanish under summation without masks.
+* Aggregation layouts are *block-CSR*: rows are grouped into blocks of
+  ``BR`` rows; each block owns ``NNZB`` index slots. ``blk_col[b, j]``
+  indexes into ``values`` (padding -> ``M-1``), ``blk_row[b, j]`` is the
+  local destination row in ``0..BR`` (padding may point at any local row —
+  it only ever adds zeros).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_spmm_ref(values: jnp.ndarray, blk_col: jnp.ndarray,
+                   blk_row: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Block-CSR sparse-matrix x dense-features segment sum.
+
+    values:  [M, F]   activation buffer (slot M-1 must be zero)
+    blk_col: [NB, NNZB] gather indices into values
+    blk_row: [NB, NNZB] local destination row within the block (0..BR-1)
+    returns: [NB * BR, F] aggregated rows
+    """
+    nb, nnzb = blk_col.shape
+    f = values.shape[1]
+    gathered = values[blk_col.reshape(-1)].reshape(nb, nnzb, f)
+    # one-hot [NB, NNZB, BR] -> einsum to [NB, BR, F]; f32 accumulation
+    onehot = jnp.equal(
+        blk_row[:, :, None],
+        jnp.arange(block_rows, dtype=blk_row.dtype)[None, None, :],
+    ).astype(jnp.float32)
+    out = jnp.einsum("bjr,bjf->brf", onehot, gathered.astype(jnp.float32))
+    return out.reshape(nb * block_rows, f).astype(values.dtype)
+
+
+def block_spmm_max_ref(values: jnp.ndarray, blk_col: jnp.ndarray,
+                       blk_row: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Max-pooling variant of block_spmm_ref (identity 0; operands >= 0)."""
+    nb, nnzb = blk_col.shape
+    f = values.shape[1]
+    gathered = values[blk_col.reshape(-1)].reshape(nb, nnzb, f)
+    gathered = gathered.astype(jnp.float32)
+    mask = jnp.equal(
+        blk_row[:, :, None],
+        jnp.arange(block_rows, dtype=blk_row.dtype)[None, None, :],
+    )  # [NB, NNZB, BR]
+    contrib = jnp.where(mask[:, :, :, None], gathered[:, :, None, :], 0.0)
+    out = contrib.max(axis=1)  # [NB, BR, F]
+    return out.reshape(nb * block_rows, f).astype(values.dtype)
+
+
+def level_combine_max_ref(values: jnp.ndarray, left: jnp.ndarray,
+                          right: jnp.ndarray) -> jnp.ndarray:
+    """Max variant of level_combine_ref."""
+    return jnp.maximum(values[left], values[right])
+
+
+def level_combine_ref(values: jnp.ndarray, left: jnp.ndarray,
+                      right: jnp.ndarray) -> jnp.ndarray:
+    """One HAG level of binary aggregations.
+
+    values: [M, F]; left/right: [L] indices into values (padding -> M-1).
+    returns: [L, F] with out[i] = values[left[i]] + values[right[i]].
+    """
+    return values[left] + values[right]
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Dense matmul with f32 accumulation (MXU semantics)."""
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def csr_spmm_ref(values, row_ptr, col_idx, n_rows: int) -> jnp.ndarray:
+    """Plain CSR segment-sum reference (numpy loop; plan-compiler tests)."""
+    values = np.asarray(values)
+    rp = np.asarray(row_ptr)
+    ci = np.asarray(col_idx)
+    out = np.zeros((n_rows, values.shape[1]), dtype=values.dtype)
+    for r in range(n_rows):
+        sl = ci[rp[r]:rp[r + 1]]
+        if len(sl):
+            out[r] = values[sl].sum(axis=0)
+    return jnp.asarray(out)

@@ -1,0 +1,341 @@
+"""L2 — the GNN compute graph (JAX, build-time only).
+
+Implements the paper's Algorithm 2 over the plan-tensor encoding from
+``buckets.py``: 2-layer GCN (Table 1 row 1) and GraphSAGE-P (row 2), node-
+and graph-classification heads, full training step (loss + ``jax.grad`` +
+Adam) — all lowered by ``aot.py`` into single HLO programs that the rust
+coordinator executes without any Python.
+
+The hierarchical aggregation for *sum* aggregates is linear in the input
+activations, so its VJP is implemented as the exact transpose-plan
+execution (the paper's ``hag_aggregate_grad``) with **zero saved
+activations** — this is the paper's §3.2 observation that the ``a-hat``
+buffers need not be memorized for backprop. The max variant (GraphSAGE-P)
+is nonlinear and uses the per-kernel custom VJPs from ``ops.py`` instead.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+from .buckets import Bucket
+
+
+# =====================================================================
+# Hierarchical aggregation (Algorithm 2, lines 4-8)
+# =====================================================================
+
+def _levels_forward(buf, lvl_left, lvl_right, bucket: Bucket, combine):
+    """Evaluate aggregation-node levels in topological order.
+
+    Level l writes its l_pad results into buffer slots
+    [n_pad + l*l_pad, n_pad + (l+1)*l_pad) — contiguous by construction
+    (the rust scheduler allocates slots level-major), so the scatter is a
+    dense dynamic_update_slice.
+    """
+    if bucket.levels == 0:
+        return buf
+    # Static unroll (levels is small, <= ~8): lets XLA fuse each level's
+    # gather+add+update and use static-offset slice updates, which the
+    # scan + dynamic_update_slice form prevented (perf pass, §Perf).
+    for l in range(bucket.levels):
+        out = combine(buf, lvl_left[l], lvl_right[l], bucket.lvl_block)
+        buf = jax.lax.dynamic_update_slice(
+            buf, out, (bucket.n_pad + l * bucket.l_pad, 0))
+    return buf
+
+
+def _bands_forward(buf, band_cols, band_rows, bucket: Bucket, spmm):
+    """Final per-node aggregation (Algorithm 2, line 8): one block-CSR
+    segment-sum per degree band, concatenated to [n_pad, F]."""
+    parts = [spmm(buf, bc, br_, bucket.br)
+             for bc, br_ in zip(band_cols, band_rows)]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _bands_scatter_sum(buf, band_cols, band_rows, bucket: Bucket):
+    """Scatter-add band aggregation (bucket.impl == "scatter"): XLA
+    scatter with work ~ E*F — the CPU-optimal path (the Pallas one-hot
+    matmul inflates FLOPs by BR, free on the MXU, 12.6x slower on CPU;
+    EXPERIMENTS.md §Perf). Semantics identical to _bands_forward(sum)."""
+    out = jnp.zeros((bucket.n_pad, buf.shape[1]), buf.dtype)
+    row0 = 0
+    for bc, brw in zip(band_cols, band_rows):
+        nb, nnzb = bc.shape
+        grow = (row0
+                + jnp.arange(nb, dtype=brw.dtype)[:, None] * bucket.br
+                + brw)
+        out = out.at[grow.reshape(-1)].add(buf[bc.reshape(-1)])
+        row0 += nb * bucket.br
+    return out
+
+
+def _hag_aggregate_sum_impl(h, lvl_left, lvl_right, band_cols, band_rows,
+                            bucket: Bucket):
+    f = h.shape[1]
+    buf = jnp.zeros((bucket.m_pad, f), h.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, h, (0, 0))
+    buf = _levels_forward(buf, lvl_left, lvl_right, bucket,
+                          ops.level_combine)
+    if bucket.impl == "scatter":
+        return _bands_scatter_sum(buf, band_cols, band_rows, bucket)
+    return _bands_forward(buf, band_cols, band_rows, bucket, ops.block_spmm)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def hag_aggregate_sum(h, lvl_left, lvl_right, band_cols, band_rows,
+                      bucket: Bucket):
+    """Sum-aggregate over a HAG plan. h: [n_pad, F] -> agg: [n_pad, F].
+
+    band_cols/band_rows are tuples (one [nb, nnzb] i32 tensor per band).
+    """
+    return _hag_aggregate_sum_impl(h, lvl_left, lvl_right, band_cols,
+                                   band_rows, bucket)
+
+
+def _hag_sum_fwd(h, lvl_left, lvl_right, band_cols, band_rows, bucket):
+    out = _hag_aggregate_sum_impl(h, lvl_left, lvl_right, band_cols,
+                                  band_rows, bucket)
+    # Linear op: only the plan (indices) is needed for the backward pass.
+    return out, (lvl_left, lvl_right, band_cols, band_rows, h.shape[1])
+
+
+def _hag_sum_bwd(bucket: Bucket, res, g):
+    """The paper's hag_aggregate_grad: execute the transpose plan.
+
+    d_buf accumulates cotangents for every buffer slot; bands scatter the
+    output cotangent into their source slots, then levels propagate in
+    reverse topological order (each level's cotangent flows to both of
+    its operand slots). No forward activations are consumed — the sum
+    aggregation is linear (paper §3.2: a-hat is never memorized).
+    """
+    lvl_left, lvl_right, band_cols, band_rows, f = res
+    dtype = g.dtype
+    dbuf = jnp.zeros((bucket.m_pad, f), dtype)
+
+    # --- transpose of the band segment-sums
+    row0 = 0
+    for bc, brw in zip(band_cols, band_rows):
+        nb, nnzb = bc.shape
+        grow = (row0 + jnp.arange(nb, dtype=brw.dtype)[:, None] * bucket.br
+                + brw).reshape(-1)
+        dbuf = dbuf.at[bc.reshape(-1)].add(g[grow])
+        row0 += nb * bucket.br
+
+    # --- transpose of the levels, reverse topological order (static
+    # unroll, mirroring _levels_forward)
+    for l in reversed(range(bucket.levels)):
+        off = bucket.n_pad + l * bucket.l_pad
+        gl = jax.lax.dynamic_slice(dbuf, (off, 0), (bucket.l_pad, f))
+        dbuf = dbuf.at[lvl_left[l]].add(gl).at[lvl_right[l]].add(gl)
+
+    dh = jax.lax.dynamic_slice(dbuf, (0, 0), (bucket.n_pad, f))
+    return dh, None, None, None, None
+
+
+hag_aggregate_sum.defvjp(_hag_sum_fwd, _hag_sum_bwd)
+
+
+def hag_aggregate_max(h, lvl_left, lvl_right, band_cols, band_rows,
+                      bucket: Bucket):
+    """Max-aggregate (GraphSAGE-P). Nonlinear: AD goes through the
+    per-kernel custom VJPs (scan carries are saved — the memory-free
+    transpose trick only applies to linear aggregates)."""
+    f = h.shape[1]
+    buf = jnp.zeros((bucket.m_pad, f), h.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, h, (0, 0))
+    buf = _levels_forward(buf, lvl_left, lvl_right, bucket,
+                          ops.level_combine_max)
+    return _bands_forward(buf, band_cols, band_rows, bucket,
+                          ops.block_spmm_max)
+
+
+# =====================================================================
+# Models (Table 1)
+# =====================================================================
+
+def init_gcn_params(bucket: Bucket, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Glorot-ish init for the 2-layer GCN."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    s1 = (2.0 / (bucket.f_in + bucket.hidden)) ** 0.5
+    s2 = (2.0 / (bucket.hidden + bucket.classes)) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (bucket.f_in, bucket.hidden)) * s1,
+        "b1": jnp.zeros((bucket.hidden,)),
+        "w2": jax.random.normal(k2, (bucket.hidden, bucket.classes)) * s2,
+        "b2": jnp.zeros((bucket.classes,)),
+    }
+
+
+PARAM_ORDER = ("w1", "b1", "w2", "b2")
+
+
+def gcn_forward(params, h0, deg, plan, bucket: Bucket):
+    """2-layer GCN (Table 1): h' = relu(W . (a_v + h_v)/(|N(v)|+1)).
+
+    plan = (lvl_left, lvl_right, band_cols, band_rows); both layers reuse
+    the same plan (Algorithm 2 runs the same HAG every layer).
+    Returns final-layer logits [n_pad, classes].
+    """
+    lvl_l, lvl_r, bcs, brs = plan
+    norm = 1.0 / (deg + 1.0)
+
+    a1 = hag_aggregate_sum(h0, lvl_l, lvl_r, bcs, brs, bucket)
+    z1 = (a1 + h0) * norm[:, None]
+    h1 = jax.nn.relu(ops.matmul(z1, params["w1"]) + params["b1"])
+
+    a2 = hag_aggregate_sum(h1, lvl_l, lvl_r, bcs, brs, bucket)
+    z2 = (a2 + h1) * norm[:, None]
+    return ops.matmul(z2, params["w2"]) + params["b2"]
+
+
+def init_sage_params(bucket: Bucket, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """GraphSAGE-P: per-layer pool transform + update over concat."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+
+    def glorot(k, i, o):
+        return jax.random.normal(k, (i, o)) * (2.0 / (i + o)) ** 0.5
+
+    f, h, c = bucket.f_in, bucket.hidden, bucket.classes
+    return {
+        "wp1": glorot(ks[0], f, h), "bp1": jnp.zeros((h,)),
+        "wu1": glorot(ks[1], h + f, h), "bu1": jnp.zeros((h,)),
+        "wp2": glorot(ks[2], h, h), "bp2": jnp.zeros((h,)),
+        "wu2": glorot(ks[3], h + h, c), "bu2": jnp.zeros((c,)),
+    }
+
+
+SAGE_PARAM_ORDER = ("wp1", "bp1", "wu1", "bu1", "wp2", "bp2", "wu2", "bu2")
+
+
+def sage_forward(params, h0, deg, plan, bucket: Bucket):
+    """GraphSAGE-P (Table 1): a_v = max_u relu(W1 . h_u);
+    h_v' = relu(W2 . (a_v, h_v)). Max-pool aggregation over the HAG."""
+    del deg  # SAGE-P does not degree-normalize
+    lvl_l, lvl_r, bcs, brs = plan
+
+    z1 = jax.nn.relu(ops.matmul(h0, params["wp1"]) + params["bp1"])
+    a1 = hag_aggregate_max(z1, lvl_l, lvl_r, bcs, brs, bucket)
+    h1 = jax.nn.relu(
+        ops.matmul(jnp.concatenate([a1, h0], axis=1), params["wu1"])
+        + params["bu1"])
+
+    z2 = jax.nn.relu(ops.matmul(h1, params["wp2"]) + params["bp2"])
+    a2 = hag_aggregate_max(z2, lvl_l, lvl_r, bcs, brs, bucket)
+    return (ops.matmul(jnp.concatenate([a2, h1], axis=1), params["wu2"])
+            + params["bu2"])
+
+
+# =====================================================================
+# Heads + losses
+# =====================================================================
+
+def masked_softmax_ce(logits, labels, mask):
+    """Mean CE over mask-selected rows; padding rows contribute 0."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.sum(picked * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def graph_pool(h, graph_seg, graph_sizes, g_pad: int):
+    """Mean-pool node activations per graph (graph classification head).
+
+    graph_seg: [n_pad] graph id per node (padding -> g_pad-1, the sink);
+    graph_sizes: [g_pad] true node counts (sink size irrelevant, >= 1).
+    """
+    pooled = jnp.zeros((g_pad, h.shape[1]), h.dtype).at[graph_seg].add(h)
+    return pooled / jnp.maximum(graph_sizes, 1.0)[:, None]
+
+
+def accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    hits = (pred == labels).astype(jnp.float32) * mask
+    return jnp.sum(hits) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# =====================================================================
+# Training step (Adam inside the artifact)
+# =====================================================================
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def init_opt_state(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt, lr: float):
+    step = opt["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = ADAM_B1 * opt["m"][k] + (1 - ADAM_B1) * grads[k]
+        v = ADAM_B2 * opt["v"][k] + (1 - ADAM_B2) * grads[k] ** 2
+        new_m[k], new_v[k] = m, v
+        new_p[k] = params[k] - lr * (m / bc1) / (jnp.sqrt(v / bc2)
+                                                 + ADAM_EPS)
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def make_node_train_step(bucket: Bucket, forward, lr: float = 0.01):
+    """Node-classification train step: returns a function over flat plan
+    tensors suitable for AOT lowering. Loss is masked softmax CE."""
+
+    def train_step(params, opt, h0, deg, labels, mask,
+                   lvl_left, lvl_right, band_cols, band_rows):
+        plan = (lvl_left, lvl_right, band_cols, band_rows)
+
+        def loss_fn(p):
+            logits = forward(p, h0, deg, plan, bucket)
+            return masked_softmax_ce(logits, labels, mask), logits
+
+        (loss, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_opt = adam_update(params, grads, opt, lr)
+        return new_p, new_opt, loss, accuracy(logits, labels, mask)
+
+    return train_step
+
+
+def make_graph_train_step(bucket: Bucket, forward, lr: float = 0.01):
+    """Graph-classification train step (mean-pool head, paper §5.2)."""
+
+    def train_step(params, opt, h0, deg, graph_seg, graph_sizes,
+                   graph_labels, graph_mask,
+                   lvl_left, lvl_right, band_cols, band_rows):
+        plan = (lvl_left, lvl_right, band_cols, band_rows)
+
+        def loss_fn(p):
+            logits = forward(p, h0, deg, plan, bucket)
+            glogits = graph_pool(logits, graph_seg, graph_sizes,
+                                 bucket.g_pad)
+            return masked_softmax_ce(glogits, graph_labels,
+                                     graph_mask), glogits
+
+        (loss, glogits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_opt = adam_update(params, grads, opt, lr)
+        return (new_p, new_opt, loss,
+                accuracy(glogits, graph_labels, graph_mask))
+
+    return train_step
+
+
+def make_inference(bucket: Bucket, forward):
+    """Inference entry: logits only (serving path)."""
+
+    def inference(params, h0, deg, lvl_left, lvl_right, band_cols,
+                  band_rows):
+        plan = (lvl_left, lvl_right, band_cols, band_rows)
+        return forward(params, h0, deg, plan, bucket)
+
+    return inference

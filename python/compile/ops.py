@@ -1,0 +1,164 @@
+"""Differentiable wrappers around the L1 Pallas kernels.
+
+This is the paper's §5.1 operator pair:
+
+* ``hag_aggregate``   — forward aggregation over an execution plan
+  (HAG levels + final block-CSR segment-sum), built from the Pallas
+  kernels;
+* ``hag_aggregate_grad`` — its backward pass, registered via
+  ``jax.custom_vjp`` so ``jax.grad`` flows through the whole 2-layer model
+  inside one AOT-compiled train step.
+
+``pallas_call`` has no automatic VJP, so each kernel gets an explicit
+custom_vjp. Backward passes are the exact transposes:
+
+* ``level_combine`` bwd: scatter-add of the cotangent into both operand
+  slots (XLA ``scatter`` — fused by the CPU/TPU backends);
+* ``block_spmm``  bwd: the transpose gather/scatter — for every nnz slot
+  ``(b, j)``: ``d_values[blk_col[b,j]] += d_out[b*BR + blk_row[b,j]]``;
+* ``tiled_matmul`` bwd: two more ``tiled_matmul`` calls (dx, dw), so the
+  backward matmuls also run on the MXU-tiled kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+# ----------------------------------------------------------------- matmul
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(x, w, bm=128, bn=128, bk=128):
+    return kernels.tiled_matmul(x, w, bm=bm, bn=bn, bk=bk)
+
+
+def _matmul_fwd(x, w, bm, bn, bk):
+    return matmul(x, w, bm, bn, bk), (x, w)
+
+
+def _matmul_bwd(bm, bn, bk, res, g):
+    x, w = res
+    # dx = g @ w.T ; dw = x.T @ g — both on the Pallas kernel.
+    dx = kernels.tiled_matmul(g, w.T, bm=bm, bn=bn, bk=bk)
+    dw = kernels.tiled_matmul(x.T, g, bm=bm, bn=bn, bk=bk)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------- level_combine
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def level_combine(values, left, right, block_len=128):
+    return kernels.level_combine(values, left, right, block_len=block_len)
+
+
+def _level_combine_fwd(values, left, right, block_len):
+    out = level_combine(values, left, right, block_len)
+    # residuals must be jax values; `values` is saved only to supply the
+    # cotangent's shape (XLA keeps no extra copy: zeros_like is shape-only)
+    return out, (values, left, right)
+
+
+def _level_combine_bwd(block_len, res, g):
+    values, left, right = res
+    dv = jnp.zeros_like(values)
+    dv = dv.at[left].add(g).at[right].add(g)
+    # The pinned zero slot must stay zero-gradient: padding entries point
+    # at it, but its cotangent is irrelevant because the primal is never
+    # read as a trainable value; we still zero it for plan hygiene.
+    dv = dv.at[values.shape[0] - 1].set(0.0)
+    return dv, None, None
+
+
+level_combine.defvjp(_level_combine_fwd, _level_combine_bwd)
+
+
+# -------------------------------------------------------------- block_spmm
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def block_spmm(values, blk_col, blk_row, block_rows):
+    return kernels.block_spmm(values, blk_col, blk_row, block_rows)
+
+
+def _block_spmm_fwd(values, blk_col, blk_row, block_rows):
+    out = block_spmm(values, blk_col, blk_row, block_rows)
+    return out, (values, blk_col, blk_row)
+
+
+def _block_spmm_bwd(block_rows, res, g):
+    values, blk_col, blk_row = res
+    nb, nnzb = blk_col.shape
+    # global output row per nnz slot: b * BR + blk_row[b, j]
+    grow = (jnp.arange(nb, dtype=blk_row.dtype)[:, None] * block_rows
+            + blk_row)                                     # [NB, NNZB]
+    gslot = g[grow.reshape(-1)]                            # [NB*NNZB, F]
+    dv = jnp.zeros_like(values)
+    dv = dv.at[blk_col.reshape(-1)].add(gslot)
+    dv = dv.at[values.shape[0] - 1].set(0.0)
+    return dv, None, None
+
+
+block_spmm.defvjp(_block_spmm_fwd, _block_spmm_bwd)
+
+
+# ---------------------------------------------------- max variants (fwd +
+# argmax-routed bwd; operands must be >= 0, see kernels.csr_spmm)
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def block_spmm_max(values, blk_col, blk_row, block_rows):
+    return kernels.block_spmm_max(values, blk_col, blk_row, block_rows)
+
+
+def _block_spmm_max_fwd(values, blk_col, blk_row, block_rows):
+    out = block_spmm_max(values, blk_col, blk_row, block_rows)
+    return out, (values, blk_col, blk_row, out)
+
+
+def _block_spmm_max_bwd(block_rows, res, g):
+    values, blk_col, blk_row, out = res
+    nb, nnzb = blk_col.shape
+    grow = (jnp.arange(nb, dtype=blk_row.dtype)[:, None] * block_rows
+            + blk_row).reshape(-1)                         # [NB*NNZB]
+    cols = blk_col.reshape(-1)
+    # Route the cotangent to slots that achieved the max (ties split the
+    # gradient across all achievers, matching jnp.max's subgradient
+    # convention closely enough for training).
+    achieved = (values[cols] == out[grow]).astype(values.dtype)
+    dv = jnp.zeros(values.shape, dtype=values.dtype)
+    dv = dv.at[cols].add(achieved * g[grow])
+    dv = dv.at[values.shape[0] - 1].set(0.0)
+    return dv, None, None
+
+
+block_spmm_max.defvjp(_block_spmm_max_fwd, _block_spmm_max_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def level_combine_max(values, left, right, block_len=128):
+    return kernels.level_combine_max(values, left, right,
+                                     block_len=block_len)
+
+
+def _level_combine_max_fwd(values, left, right, block_len):
+    out = level_combine_max(values, left, right, block_len)
+    return out, (values, left, right, out)
+
+
+def _level_combine_max_bwd(block_len, res, g):
+    values, left, right, out = res
+    dl = (values[left] == out).astype(values.dtype) * g
+    dr = (values[right] == out).astype(values.dtype) * g
+    dv = jnp.zeros(values.shape, dtype=values.dtype)
+    dv = dv.at[left].add(dl).at[right].add(dr)
+    dv = dv.at[values.shape[0] - 1].set(0.0)
+    return dv, None, None
+
+
+level_combine_max.defvjp(_level_combine_max_fwd, _level_combine_max_bwd)

@@ -1,0 +1,71 @@
+"""Test-side plan builder: a minimal python mirror of the rust plan
+compiler (``rust/src/hag/schedule``), used to construct valid plan tensors
+from explicit adjacency/HAG structure in python tests. Deliberately naive
+(single band, no degree sorting) — the production compiler lives in rust;
+this exists so the L2 model can be validated independently."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.buckets import Bucket
+
+
+def dense_adj(adj: Dict[int, Sequence[int]], n: int) -> np.ndarray:
+    a = np.zeros((n, n), np.float32)
+    for v, ns in adj.items():
+        for u in ns:
+            a[v, u] = 1.0
+    return a
+
+
+def build_plan(bucket: Bucket, final_edges: Dict[int, Sequence[int]],
+               levels: List[List[Tuple[int, int]]] | None = None):
+    """Build (lvl_left, lvl_right, band_cols, band_rows) plan tensors.
+
+    final_edges: dest original node -> list of buffer-slot sources
+      (original node id, or n_pad + lvl*l_pad + i for aggregation nodes).
+    levels: per level, list of (left_slot, right_slot) binary combines;
+      combine i of level l writes slot n_pad + l*l_pad + i.
+    """
+    levels = levels or []
+    assert len(levels) == bucket.levels
+    zero = bucket.m_pad - 1
+
+    ll = np.full((bucket.levels, bucket.l_pad), zero, np.int32)
+    lr = np.full((bucket.levels, bucket.l_pad), zero, np.int32)
+    for li, combines in enumerate(levels):
+        assert len(combines) <= bucket.l_pad
+        for i, (a, b) in enumerate(combines):
+            ll[li, i], lr[li, i] = a, b
+
+    assert len(bucket.bands) == 1, "test helper supports a single band"
+    nb, nnzb = bucket.bands[0]
+    bc = np.full((nb, nnzb), zero, np.int32)
+    brw = np.zeros((nb, nnzb), np.int32)
+    fill = [0] * nb
+    for v, srcs in final_edges.items():
+        b, r = divmod(v, bucket.br)
+        for u in srcs:
+            j = fill[b]
+            assert j < nnzb, f"block {b} overflows nnzb={nnzb}"
+            bc[b, j], brw[b, j] = u, r
+            fill[b] = j + 1
+    return (jnp.asarray(ll), jnp.asarray(lr),
+            (jnp.asarray(bc),), (jnp.asarray(brw),))
+
+
+def gnn_graph_plan(bucket: Bucket, adj: Dict[int, Sequence[int]]):
+    """Plan for the standard GNN-graph (no aggregation nodes)."""
+    assert bucket.levels == 0
+    return build_plan(bucket, {v: list(ns) for v, ns in adj.items()})
+
+
+def degrees(adj: Dict[int, Sequence[int]], n_pad: int) -> jnp.ndarray:
+    d = np.zeros((n_pad,), np.float32)
+    for v, ns in adj.items():
+        d[v] = len(ns)
+    return jnp.asarray(d)

@@ -1,0 +1,165 @@
+"""L1 kernel correctness: Pallas implementations vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every property asserts allclose
+against ``kernels.ref`` within dtype-appropriate tolerance. These are the
+core correctness signal for the AOT pipeline: if these pass, the HLO the
+rust runtime executes computes exactly what the paper's Algorithm 2
+prescribes (given a valid plan, which rust-side proptests cover).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_spmm, level_combine, tiled_matmul, ref
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+TOL = {F32: dict(rtol=1e-5, atol=1e-5), BF16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _values(rng, m, f, dtype):
+    v = rng.standard_normal((m, f)).astype(np.float32)
+    v[-1] = 0.0  # pinned zero slot
+    return jnp.asarray(v, dtype=dtype)
+
+
+# ---------------------------------------------------------------- block_spmm
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(2, 90),
+    f=st.sampled_from([1, 4, 16, 32]),
+    nb=st.integers(1, 6),
+    nnzb=st.integers(1, 24),
+    br=st.sampled_from([1, 4, 8, 16]),
+    dtype=st.sampled_from([F32, BF16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_spmm_matches_ref(m, f, nb, nnzb, br, dtype, seed):
+    rng = np.random.default_rng(seed)
+    values = _values(rng, m, f, dtype)
+    blk_col = jnp.asarray(rng.integers(0, m, (nb, nnzb)), dtype=jnp.int32)
+    blk_row = jnp.asarray(rng.integers(0, br, (nb, nnzb)), dtype=jnp.int32)
+    got = block_spmm(values, blk_col, blk_row, br)
+    want = ref.block_spmm_ref(values, blk_col, blk_row, br)
+    assert got.shape == (nb * br, f)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOL[dtype])
+
+
+def test_block_spmm_padding_rows_are_zero():
+    """Slots pointing at the zero slot must contribute exactly zero."""
+    rng = np.random.default_rng(7)
+    m, f, br = 17, 8, 4
+    values = _values(rng, m, f, F32)
+    blk_col = jnp.full((2, 6), m - 1, dtype=jnp.int32)   # all padding
+    blk_row = jnp.zeros((2, 6), dtype=jnp.int32)
+    out = block_spmm(values, blk_col, blk_row, br)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_block_spmm_single_edge_identity():
+    """One real edge -> output row equals the gathered value row."""
+    rng = np.random.default_rng(8)
+    m, f, br = 9, 4, 2
+    values = _values(rng, m, f, F32)
+    blk_col = jnp.asarray([[3, m - 1, m - 1]], dtype=jnp.int32)
+    blk_row = jnp.asarray([[1, 0, 0]], dtype=jnp.int32)
+    out = np.asarray(block_spmm(values, blk_col, blk_row, br))
+    np.testing.assert_allclose(out[1], np.asarray(values)[3], rtol=1e-6)
+    np.testing.assert_allclose(out[0], 0.0)
+
+
+def test_block_spmm_duplicate_indices_accumulate():
+    """The same source gathered twice into one row doubles it."""
+    rng = np.random.default_rng(9)
+    m, f, br = 9, 4, 2
+    values = _values(rng, m, f, F32)
+    blk_col = jnp.asarray([[5, 5, m - 1]], dtype=jnp.int32)
+    blk_row = jnp.asarray([[0, 0, 1]], dtype=jnp.int32)
+    out = np.asarray(block_spmm(values, blk_col, blk_row, br))
+    np.testing.assert_allclose(out[0], 2 * np.asarray(values)[5], rtol=1e-6)
+
+
+# ------------------------------------------------------------- level_combine
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(2, 200),
+    f=st.sampled_from([1, 8, 16, 64]),
+    nblocks=st.integers(1, 4),
+    block_len=st.sampled_from([8, 32, 128]),
+    dtype=st.sampled_from([F32, BF16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_level_combine_matches_ref(m, f, nblocks, block_len, dtype, seed):
+    rng = np.random.default_rng(seed)
+    values = _values(rng, m, f, dtype)
+    length = nblocks * block_len
+    left = jnp.asarray(rng.integers(0, m, (length,)), dtype=jnp.int32)
+    right = jnp.asarray(rng.integers(0, m, (length,)), dtype=jnp.int32)
+    got = level_combine(values, left, right, block_len=block_len)
+    want = ref.level_combine_ref(values, left, right)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOL[dtype])
+
+
+def test_level_combine_padding_is_zero():
+    rng = np.random.default_rng(3)
+    m, f = 12, 8
+    values = _values(rng, m, f, F32)
+    left = jnp.full((8,), m - 1, dtype=jnp.int32)
+    right = jnp.full((8,), m - 1, dtype=jnp.int32)
+    out = level_combine(values, left, right, block_len=8)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_level_combine_rejects_ragged_length():
+    values = jnp.zeros((4, 2), dtype=F32)
+    idx = jnp.zeros((5,), dtype=jnp.int32)
+    with pytest.raises(ValueError):
+        level_combine(values, idx, idx, block_len=4)
+
+
+# -------------------------------------------------------------- tiled_matmul
+
+@settings(max_examples=30, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    tile=st.sampled_from([8, 16, 32]),
+    dtype=st.sampled_from([F32, BF16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tiled_matmul_matches_ref(mt, kt, nt, tile, dtype, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = mt * tile, kt * tile, nt * tile
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype=dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)), dtype=dtype)
+    got = tiled_matmul(x, w, bm=tile, bn=tile, bk=tile)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOL[dtype])
+
+
+def test_tiled_matmul_k_accumulation_order():
+    """Multiple K tiles must accumulate, not overwrite."""
+    m = k = n = 64
+    x = jnp.ones((m, k), dtype=F32)
+    w = jnp.ones((k, n), dtype=F32)
+    out = tiled_matmul(x, w, bm=32, bn=32, bk=16)  # 4 K-steps
+    np.testing.assert_allclose(np.asarray(out), float(k))
+
+
+def test_tiled_matmul_rejects_indivisible():
+    x = jnp.zeros((24, 16), dtype=F32)
+    w = jnp.zeros((16, 16), dtype=F32)
+    with pytest.raises(ValueError):
+        tiled_matmul(x, w, bm=16, bn=16, bk=16)

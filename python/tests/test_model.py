@@ -1,0 +1,283 @@
+"""L2 model correctness: aggregation semantics, HAG == GNN-graph
+equivalence (Theorem 1 at the numerics level), gradients, training step,
+and both model families from Table 1."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.buckets import Bucket
+from compile import model as M
+
+from .plan_utils import build_plan, gnn_graph_plan, dense_adj, degrees
+
+BR = 8
+
+
+def tiny_bucket(levels=0, l_pad=0, g_pad=0, f_in=8, hidden=16, classes=4,
+                nnzb=16):
+    return Bucket(name="t", n_pad=128, f_in=f_in, hidden=hidden,
+                  classes=classes, levels=levels, l_pad=l_pad,
+                  bands=((128 // BR, nnzb),), br=BR, g_pad=g_pad)
+
+
+RNG = np.random.default_rng(42)
+ADJ = {0: [1, 2, 3], 1: [0, 2], 2: [0, 1, 4], 3: [1, 2], 4: [1, 2]}
+
+
+def feats(bucket, n_real=5, seed=0):
+    rng = np.random.default_rng(seed)
+    h = np.zeros((bucket.n_pad, bucket.f_in), np.float32)
+    h[:n_real] = rng.standard_normal((n_real, bucket.f_in))
+    return jnp.asarray(h)
+
+
+class TestAggregationSemantics:
+    def test_gnn_graph_plan_matches_dense(self):
+        b = tiny_bucket()
+        h = feats(b)
+        plan = gnn_graph_plan(b, ADJ)
+        agg = M.hag_aggregate_sum(h, *plan[:2], plan[2], plan[3], b)
+        want = dense_adj(ADJ, b.n_pad) @ np.asarray(h)
+        np.testing.assert_allclose(np.asarray(agg), want, atol=1e-5)
+
+    def test_hag_plan_equivalent_to_gnn_graph(self):
+        """Paper Fig 1: HAG with shared {1,2} aggregation node produces
+        identical aggregates to the flat GNN-graph."""
+        b0 = tiny_bucket(levels=0)
+        bh = tiny_bucket(levels=1, l_pad=128)
+        h = feats(b0)
+        w = bh.n_pad  # slot of the single aggregation node
+        flat = gnn_graph_plan(b0, ADJ)
+        hag = build_plan(
+            bh,
+            {0: [w, 3], 1: [0, 2], 2: [0, 1, 4], 3: [w], 4: [w]},
+            levels=[[(1, 2)]],
+        )
+        a_flat = M.hag_aggregate_sum(h, *flat[:2], flat[2], flat[3], b0)
+        a_hag = M.hag_aggregate_sum(h, *hag[:2], hag[2], hag[3], bh)
+        np.testing.assert_allclose(np.asarray(a_flat), np.asarray(a_hag),
+                                   atol=1e-5)
+
+    def test_multi_level_hag(self):
+        """Two-level hierarchy: w2 = (w1 + node) must chain correctly."""
+        b = tiny_bucket(levels=2, l_pad=128)
+        h = feats(b)
+        w1 = b.n_pad            # level-0 slot 0: {1,2}
+        w2 = b.n_pad + b.l_pad  # level-1 slot 0: {w1, 3} = {1,2,3}
+        adj = {0: [1, 2, 3], 3: [1, 2, 3], 4: [1, 2]}
+        plan = build_plan(b, {0: [w2], 3: [w2], 4: [w1]},
+                          levels=[[(1, 2)], [(w1, 3)]])
+        agg = M.hag_aggregate_sum(h, *plan[:2], plan[2], plan[3], b)
+        want = dense_adj(adj, b.n_pad) @ np.asarray(h)
+        np.testing.assert_allclose(np.asarray(agg), want, atol=1e-5)
+
+    def test_transpose_grad_matches_dense_transpose(self):
+        b = tiny_bucket(levels=1, l_pad=128)
+        h = feats(b)
+        w = b.n_pad
+        plan = build_plan(
+            b, {0: [w, 3], 1: [0, 2], 2: [0, 1, 4], 3: [w], 4: [w]},
+            levels=[[(1, 2)]])
+        g = RNG.standard_normal((b.n_pad, b.f_in)).astype(np.float32)
+
+        def f(x):
+            return jnp.sum(
+                M.hag_aggregate_sum(x, *plan[:2], plan[2], plan[3], b)
+                * g)
+
+        dh = jax.grad(f)(h)
+        want = dense_adj(ADJ, b.n_pad).T @ g
+        np.testing.assert_allclose(np.asarray(dh), want, atol=1e-4)
+
+    def test_max_aggregate_matches_dense_max(self):
+        b = tiny_bucket()
+        rng = np.random.default_rng(3)
+        h = np.zeros((b.n_pad, b.f_in), np.float32)
+        h[:5] = np.abs(rng.standard_normal((5, b.f_in)))  # >= 0 domain
+        plan = gnn_graph_plan(b, ADJ)
+        agg = M.hag_aggregate_max(jnp.asarray(h), *plan[:2], plan[2],
+                                  plan[3], b)
+        want = np.zeros_like(h)
+        for v, ns in ADJ.items():
+            want[v] = h[list(ns)].max(axis=0)
+        np.testing.assert_allclose(np.asarray(agg), want, atol=1e-5)
+
+    def test_empty_neighborhood_aggregates_to_zero(self):
+        b = tiny_bucket()
+        h = feats(b)
+        plan = gnn_graph_plan(b, {0: [1]})  # only node 0 has neighbors
+        agg = np.asarray(
+            M.hag_aggregate_sum(h, *plan[:2], plan[2], plan[3], b))
+        assert np.all(agg[1:] == 0.0)
+
+
+class TestGCN:
+    def test_forward_shapes_and_padding(self):
+        b = tiny_bucket()
+        params = M.init_gcn_params(b)
+        h = feats(b)
+        plan = gnn_graph_plan(b, ADJ)
+        logits = M.gcn_forward(params, h, degrees(ADJ, b.n_pad), plan, b)
+        assert logits.shape == (b.n_pad, b.classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_gcn_equivalence_gnn_graph_vs_hag(self):
+        """End-to-end Theorem 1: same logits through the full 2-layer
+        model under both representations."""
+        b0 = tiny_bucket(levels=0)
+        bh = tiny_bucket(levels=1, l_pad=128)
+        params = M.init_gcn_params(b0)
+        h = feats(b0)
+        deg = degrees(ADJ, b0.n_pad)
+        w = bh.n_pad
+        flat = gnn_graph_plan(b0, ADJ)
+        hag = build_plan(
+            bh, {0: [w, 3], 1: [0, 2], 2: [0, 1, 4], 3: [w], 4: [w]},
+            levels=[[(1, 2)]])
+        l0 = M.gcn_forward(params, h, deg, flat, b0)
+        l1 = M.gcn_forward(params, h, deg, hag, bh)
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   atol=1e-5)
+
+    def test_train_step_decreases_loss(self):
+        b = tiny_bucket()
+        params = M.init_gcn_params(b)
+        opt = M.init_opt_state(params)
+        h = feats(b)
+        deg = degrees(ADJ, b.n_pad)
+        plan = gnn_graph_plan(b, ADJ)
+        labels = jnp.asarray(
+            np.array([0, 1, 2, 3, 0] + [0] * (b.n_pad - 5), np.int32))
+        mask = jnp.asarray(
+            np.array([1.0] * 5 + [0.0] * (b.n_pad - 5), np.float32))
+        step = jax.jit(M.make_node_train_step(b, M.gcn_forward, lr=0.05))
+        losses = []
+        for _ in range(20):
+            params, opt, loss, acc = step(params, opt, h, deg, labels,
+                                          mask, *plan)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.85, losses
+        assert int(opt["step"]) == 20
+
+    def test_gradients_equal_under_equivalent_plans(self):
+        """Equivalence condition (2): same parameter gradients."""
+        b0 = tiny_bucket(levels=0)
+        bh = tiny_bucket(levels=1, l_pad=128)
+        params = M.init_gcn_params(b0)
+        h = feats(b0)
+        deg = degrees(ADJ, b0.n_pad)
+        labels = jnp.zeros((b0.n_pad,), jnp.int32)
+        mask = jnp.asarray(np.array([1.0] * 5 + [0.0] * (b0.n_pad - 5),
+                                    np.float32))
+        w = bh.n_pad
+        flat = gnn_graph_plan(b0, ADJ)
+        hag = build_plan(
+            bh, {0: [w, 3], 1: [0, 2], 2: [0, 1, 4], 3: [w], 4: [w]},
+            levels=[[(1, 2)]])
+
+        def loss(p, plan, bb):
+            logits = M.gcn_forward(p, h, deg, plan, bb)
+            return M.masked_softmax_ce(logits, labels, mask)
+
+        g0 = jax.grad(loss)(params, flat, b0)
+        g1 = jax.grad(loss)(params, hag, bh)
+        for k in g0:
+            np.testing.assert_allclose(np.asarray(g0[k]),
+                                       np.asarray(g1[k]), atol=1e-5,
+                                       err_msg=k)
+
+
+class TestSage:
+    def test_forward_shapes(self):
+        b = tiny_bucket()
+        params = M.init_sage_params(b)
+        h = feats(b)
+        plan = gnn_graph_plan(b, ADJ)
+        out = M.sage_forward(params, h, degrees(ADJ, b.n_pad), plan, b)
+        assert out.shape == (b.n_pad, b.classes)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_sage_equivalence_gnn_graph_vs_hag(self):
+        """Max-pooling HAG must also satisfy Theorem 1 (max is
+        associative + commutative)."""
+        b0 = tiny_bucket(levels=0)
+        bh = tiny_bucket(levels=1, l_pad=128)
+        params = M.init_sage_params(b0)
+        h = feats(b0)
+        deg = degrees(ADJ, b0.n_pad)
+        w = bh.n_pad
+        flat = gnn_graph_plan(b0, ADJ)
+        hag = build_plan(
+            bh, {0: [w, 3], 1: [0, 2], 2: [0, 1, 4], 3: [w], 4: [w]},
+            levels=[[(1, 2)]])
+        l0 = M.sage_forward(params, h, deg, flat, b0)
+        l1 = M.sage_forward(params, h, deg, hag, bh)
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   atol=1e-5)
+
+    def test_sage_train_step_runs(self):
+        b = tiny_bucket()
+        params = M.init_sage_params(b)
+        opt = M.init_opt_state(params)
+        h = feats(b)
+        deg = degrees(ADJ, b.n_pad)
+        plan = gnn_graph_plan(b, ADJ)
+        labels = jnp.zeros((b.n_pad,), jnp.int32)
+        mask = jnp.asarray(np.array([1.0] * 5 + [0.0] * (b.n_pad - 5),
+                                    np.float32))
+        step = jax.jit(M.make_node_train_step(b, M.sage_forward, lr=0.05))
+        losses = []
+        p, o = params, opt
+        for _ in range(10):
+            p, o, loss, _ = step(p, o, h, deg, labels, mask, *plan)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+
+class TestGraphClassification:
+    def test_graph_pool_mean(self):
+        g_pad = 16
+        h = np.zeros((128, 4), np.float32)
+        h[0], h[1], h[2] = 1.0, 3.0, 10.0
+        seg = np.full((128,), g_pad - 1, np.int32)
+        seg[0] = seg[1] = 0
+        seg[2] = 1
+        sizes = np.ones((g_pad,), np.float32)
+        sizes[0], sizes[1] = 2.0, 1.0
+        pooled = M.graph_pool(jnp.asarray(h), jnp.asarray(seg),
+                              jnp.asarray(sizes), g_pad)
+        np.testing.assert_allclose(np.asarray(pooled)[0], 2.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(pooled)[1], 10.0, atol=1e-6)
+
+    def test_graph_train_step_decreases_loss(self):
+        b = tiny_bucket(levels=0, g_pad=16, classes=2, nnzb=32)
+        params = M.init_gcn_params(b)
+        opt = M.init_opt_state(params)
+        # two graphs of 4 nodes each: ring vs clique-ish
+        adj = {0: [1, 3], 1: [0, 2], 2: [1, 3], 3: [2, 0],
+               4: [5, 6, 7], 5: [4, 6, 7], 6: [4, 5, 7], 7: [4, 5, 6]}
+        rng = np.random.default_rng(0)
+        h = np.zeros((b.n_pad, b.f_in), np.float32)
+        h[:8] = rng.standard_normal((8, b.f_in))
+        plan = gnn_graph_plan(b, adj)
+        seg = np.full((b.n_pad,), b.g_pad - 1, np.int32)
+        seg[:4] = 0
+        seg[4:8] = 1
+        sizes = np.ones((b.g_pad,), np.float32)
+        sizes[0] = sizes[1] = 4.0
+        glabels = np.zeros((b.g_pad,), np.int32)
+        glabels[1] = 1
+        gmask = np.zeros((b.g_pad,), np.float32)
+        gmask[:2] = 1.0
+        step = jax.jit(M.make_graph_train_step(b, M.gcn_forward, lr=0.05))
+        p, o = params, opt
+        losses = []
+        for _ in range(15):
+            p, o, loss, acc = step(
+                p, o, jnp.asarray(h), degrees(adj, b.n_pad),
+                jnp.asarray(seg), jnp.asarray(sizes),
+                jnp.asarray(glabels), jnp.asarray(gmask), *plan)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses

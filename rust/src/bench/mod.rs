@@ -1,0 +1,365 @@
+//! Figure/table regeneration harnesses (paper §5 evaluation).
+//!
+//! Every table and figure in the paper's evaluation has a harness here,
+//! shared by the CLI (`repro bench-*`) and the criterion benches:
+//! * Table 2 — `repro stats` (dataset statistics)
+//! * Fig 2   — [`fig2`]: per-epoch training time + inference latency,
+//!   GNN-graph vs HAG, 2-layer GCN, 16 hidden dims, all five datasets
+//! * Fig 3   — [`fig3`]: #aggregations + data transfers, normalized to
+//!   the GNN-graph, with geometric mean (set and sequential modes)
+//! * Fig 4   — [`fig4`]: capacity sweep vs per-epoch time on COLLAB,
+//!   plus the §3.2 memory-overhead accounting
+//!
+//! Absolute numbers differ from the paper (V100/TensorFlow there, this
+//! CPU testbed here); the *shape* — who wins and by roughly how much —
+//! is the reproduction target. EXPERIMENTS.md records paper-vs-measured.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{self, lower_dataset, pack_workload, Repr};
+use crate::datasets::{self, Dataset};
+use crate::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
+use crate::runtime::Runtime;
+
+/// Per-dataset scale multiplier: REDDIT/COLLAB are far larger than the
+/// rest; on the CPU testbed they run at a further-reduced scale so the
+/// full figure regenerates in minutes. Documented in EXPERIMENTS.md.
+pub fn effective_scale(name: &str, base: f64) -> f64 {
+    match name.to_ascii_uppercase().as_str() {
+        "REDDIT" => base * 0.2,
+        "COLLAB" => base * 0.4,
+        _ => base,
+    }
+}
+
+fn dataset_list(names: Vec<String>) -> Vec<String> {
+    if names.is_empty() {
+        datasets::names().iter().map(|s| s.to_string()).collect()
+    } else {
+        names
+    }
+}
+
+fn geo_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+// ===================================================================
+// Fig 3 — aggregation + data-transfer reductions (pure structure)
+// ===================================================================
+
+/// One dataset row of Fig 3.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub dataset: String,
+    pub aggregations_gnn: usize,
+    pub aggregations_hag: usize,
+    pub transfers_gnn: usize,
+    pub transfers_hag: usize,
+    pub agg_reduction: f64,
+    pub transfer_reduction: f64,
+    pub search_ms: f64,
+}
+
+/// Compute Fig 3 rows for all datasets under `kind`.
+pub fn fig3_rows(kind: AggregateKind, base_scale: f64,
+                 seed: u64) -> Vec<Fig3Row> {
+    datasets::names()
+        .iter()
+        .map(|name| {
+            let ds = datasets::load(name,
+                                    effective_scale(name, base_scale),
+                                    seed);
+            let cfg = SearchConfig::paper_default(ds.graph.n())
+                .with_kind(kind);
+            let (_, stats) = hag_search(&ds.graph, &cfg);
+            Fig3Row {
+                dataset: name.to_string(),
+                aggregations_gnn: stats.aggregations_before,
+                aggregations_hag: stats.aggregations_after,
+                transfers_gnn: stats.transfers_before,
+                transfers_hag: stats.transfers_after,
+                agg_reduction: stats.aggregations_before as f64
+                    / stats.aggregations_after.max(1) as f64,
+                transfer_reduction: stats.transfers_before as f64
+                    / stats.transfers_after.max(1) as f64,
+                search_ms: stats.elapsed_ms,
+            }
+        })
+        .collect()
+}
+
+/// Print Fig 3 in the paper's normalized form.
+pub fn fig3(kind: AggregateKind, base_scale: f64, seed: u64) -> Result<()> {
+    println!("Fig 3 ({kind:?} AGGREGATE) — normalized to GNN-graph \
+              (lower is better for HAG columns)");
+    println!("{:<10} {:>14} {:>14} {:>12} {:>12} {:>10}", "dataset",
+             "aggs (HAG/GNN)", "tx (HAG/GNN)", "agg x", "tx x",
+             "search ms");
+    let rows = fig3_rows(kind, base_scale, seed);
+    for r in &rows {
+        println!("{:<10} {:>14.3} {:>14.3} {:>11.2}x {:>11.2}x {:>10.1}",
+                 r.dataset,
+                 1.0 / r.agg_reduction,
+                 1.0 / r.transfer_reduction,
+                 r.agg_reduction, r.transfer_reduction, r.search_ms);
+    }
+    let ga = geo_mean(&rows.iter().map(|r| r.agg_reduction)
+        .collect::<Vec<_>>());
+    let gt = geo_mean(&rows.iter().map(|r| r.transfer_reduction)
+        .collect::<Vec<_>>());
+    println!("{:<10} {:>14.3} {:>14.3} {:>11.2}x {:>11.2}x", "geo-mean",
+             1.0 / ga, 1.0 / gt, ga, gt);
+    println!("paper ({:?}): aggregations 1.5-6.3x, transfers 1.3-5.6x \
+              (set); up to 1.8x / 1.9x (sequential)", kind);
+    Ok(())
+}
+
+// ===================================================================
+// Fig 2 — end-to-end training + inference
+// ===================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub dataset: String,
+    pub train_ms_gnn: f64,
+    pub train_ms_hag: f64,
+    pub infer_ms_gnn: f64,
+    pub infer_ms_hag: f64,
+    pub train_speedup: f64,
+    pub infer_speedup: f64,
+}
+
+/// Measure one dataset end-to-end under both representations.
+pub fn fig2_row(artifacts: &Path, ds: &Dataset, seed: u64,
+                epochs: usize) -> Result<Fig2Row> {
+    let runtime = Arc::new(Runtime::open(artifacts)?);
+    let mut train_ms = [0f64; 2];
+    let mut infer_ms = [0f64; 2];
+    for (i, repr) in [Repr::GnnGraph, Repr::Hag].into_iter().enumerate() {
+        let lowered =
+            lower_dataset(ds, repr, None, &PlanConfig::default())?;
+        let workload = pack_workload(ds, &lowered.plan, &lowered.bucket)?;
+        // training
+        let tname =
+            coordinator::artifact_name("gcn", "train", &lowered.bucket);
+        let mut trainer = coordinator::Trainer::new(
+            runtime.clone(), &tname, &workload, seed)?;
+        let report = trainer.train(epochs, 0)?;
+        train_ms[i] = report.mean_epoch_ms;
+        // inference (median of epochs executions)
+        let iname =
+            coordinator::artifact_name("gcn", "infer", &lowered.bucket);
+        infer_ms[i] = measure_inference(&runtime, &iname, &workload,
+                                        seed, epochs.max(5))?;
+    }
+    Ok(Fig2Row {
+        dataset: ds.name.clone(),
+        train_ms_gnn: train_ms[0],
+        train_ms_hag: train_ms[1],
+        infer_ms_gnn: infer_ms[0],
+        infer_ms_hag: infer_ms[1],
+        train_speedup: train_ms[0] / train_ms[1],
+        infer_speedup: infer_ms[0] / infer_ms[1],
+    })
+}
+
+/// Median full-graph inference latency for an artifact.
+pub fn measure_inference(runtime: &Arc<Runtime>, artifact: &str,
+                         workload: &coordinator::PackedWorkload,
+                         seed: u64, repeats: usize) -> Result<f64> {
+    let exe = runtime.compile(artifact)?;
+    let param_specs: Vec<_> = exe.spec.inputs.iter()
+        .filter(|s| !matches!(s.name.as_str(), "h0" | "deg")
+                && !s.name.starts_with("lvl_")
+                && !s.name.starts_with("band"))
+        .cloned().collect();
+    let params = coordinator::trainer::init_params(&param_specs, seed);
+    let mut inputs = Vec::new();
+    let mut pi = 0;
+    for s in &exe.spec.inputs {
+        if matches!(s.name.as_str(), "h0" | "deg")
+            || s.name.starts_with("lvl_") || s.name.starts_with("band")
+        {
+            inputs.push(workload.get(&s.name).unwrap().clone());
+        } else {
+            inputs.push(params[pi].clone());
+            pi += 1;
+        }
+    }
+    let bufs = runtime.upload_checked(&exe, &inputs)?;
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let mut times = Vec::new();
+    runtime.execute(&exe, &refs)?; // warmup
+    for _ in 0..repeats {
+        let t0 = std::time::Instant::now();
+        runtime.execute(&exe, &refs)?;
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(times[times.len() / 2])
+}
+
+/// Print Fig 2 for the requested datasets.
+pub fn fig2(artifacts: &Path, names: Vec<String>, base_scale: f64,
+            seed: u64, epochs: usize) -> Result<()> {
+    println!("Fig 2 — per-epoch training time + inference latency \
+              (2-layer GCN, {} hidden dims)", coordinator::HIDDEN);
+    println!("{:<10} {:>12} {:>12} {:>9} {:>12} {:>12} {:>9}", "dataset",
+             "train gnn", "train hag", "speedup", "infer gnn",
+             "infer hag", "speedup");
+    let mut rows = Vec::new();
+    for name in dataset_list(names) {
+        let ds = datasets::load(&name,
+                                effective_scale(&name, base_scale), seed);
+        match fig2_row(artifacts, &ds, seed, epochs) {
+            Ok(r) => {
+                println!("{:<10} {:>10.1}ms {:>10.1}ms {:>8.2}x \
+                          {:>10.1}ms {:>10.1}ms {:>8.2}x",
+                         r.dataset, r.train_ms_gnn, r.train_ms_hag,
+                         r.train_speedup, r.infer_ms_gnn, r.infer_ms_hag,
+                         r.infer_speedup);
+                rows.push(r);
+            }
+            Err(e) => println!("{name:<10} SKIPPED: {e:#}"),
+        }
+    }
+    if !rows.is_empty() {
+        let gt = geo_mean(&rows.iter().map(|r| r.train_speedup)
+            .collect::<Vec<_>>());
+        let gi = geo_mean(&rows.iter().map(|r| r.infer_speedup)
+            .collect::<Vec<_>>());
+        println!("{:<10} {:>12} {:>12} {:>8.2}x {:>12} {:>12} {:>8.2}x",
+                 "geo-mean", "", "", gt, "", "", gi);
+    }
+    println!("paper: train up to 2.8x, inference up to 2.9x (V100)");
+    Ok(())
+}
+
+// ===================================================================
+// Fig 4 — capacity sweep (COLLAB)
+// ===================================================================
+
+/// Capacity fractions swept by Fig 4 (of |V|).
+pub const FIG4_FRACTIONS: &[f64] = &[0.0, 0.03125, 0.0625, 0.125, 0.25];
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub capacity: usize,
+    pub agg_nodes: usize,
+    pub cost_core: usize,
+    pub train_ms: Option<f64>,
+    pub ahat_bytes: usize,
+    pub plan_bytes: usize,
+}
+
+/// Bucket name for a Fig 4 sweep point.
+pub fn fig4_bucket_name(frac: f64) -> String {
+    format!("collab_cap{:04}", (frac * 10_000.0) as usize)
+}
+
+/// Compute (and if artifacts exist, measure) the Fig 4 sweep.
+pub fn fig4_rows(artifacts: &Path, base_scale: f64, seed: u64,
+                 epochs: usize) -> Result<Vec<Fig4Row>> {
+    let ds = datasets::load("COLLAB",
+                            effective_scale("COLLAB", base_scale), seed);
+    let runtime = Runtime::open(artifacts).ok().map(Arc::new);
+    let mut rows = Vec::new();
+    for &frac in FIG4_FRACTIONS {
+        let capacity = (ds.graph.n() as f64 * frac) as usize;
+        let lowered = lower_dataset(&ds, Repr::Hag, Some(capacity),
+                                    &PlanConfig::default())?;
+        let mut bucket = lowered.bucket.clone();
+        bucket.name = fig4_bucket_name(frac);
+        let tname = coordinator::artifact_name("gcn", "train", &bucket);
+        let train_ms = match &runtime {
+            Some(rt) if rt.spec(&tname).is_ok() => {
+                let workload =
+                    pack_workload(&ds, &lowered.plan, &bucket)?;
+                let mut trainer = coordinator::Trainer::new(
+                    rt.clone(), &tname, &workload, seed)?;
+                Some(trainer.train(epochs, 0)?.mean_epoch_ms)
+            }
+            _ => None,
+        };
+        rows.push(Fig4Row {
+            capacity,
+            agg_nodes: lowered.hag.agg_nodes.len(),
+            cost_core: lowered.hag.cost_core(),
+            train_ms,
+            ahat_bytes: lowered.hag
+                .ahat_memory_bytes(coordinator::HIDDEN),
+            plan_bytes: lowered.plan.plan_bytes(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Emit the Fig-4 sweep buckets into `buckets.json` (so `make
+/// artifacts` builds them). Returns bucket specs.
+pub fn fig4_buckets(base_scale: f64, seed: u64)
+                    -> Result<Vec<crate::runtime::BucketSpec>> {
+    let ds = datasets::load("COLLAB",
+                            effective_scale("COLLAB", base_scale), seed);
+    let mut out = Vec::new();
+    for &frac in FIG4_FRACTIONS {
+        let capacity = (ds.graph.n() as f64 * frac) as usize;
+        let lowered = lower_dataset(&ds, Repr::Hag, Some(capacity),
+                                    &PlanConfig::default())?;
+        let mut bucket = lowered.bucket;
+        bucket.name = fig4_bucket_name(frac);
+        out.push(bucket);
+    }
+    Ok(out)
+}
+
+/// Print Fig 4.
+pub fn fig4(artifacts: &Path, base_scale: f64, seed: u64, epochs: usize,
+            report_memory: bool) -> Result<()> {
+    println!("Fig 4 — capacity sweep on COLLAB (per-epoch GCN training \
+              time vs capacity)");
+    println!("{:>10} {:>10} {:>12} {:>12} {:>14}", "capacity",
+             "agg nodes", "cost |E|-|VA|", "train ms", "a-hat mem");
+    let rows = fig4_rows(artifacts, base_scale, seed, epochs)?;
+    let feat_bytes: usize = rows
+        .first()
+        .map(|_| {
+            let ds = datasets::load(
+                "COLLAB", effective_scale("COLLAB", base_scale), seed);
+            ds.n() * coordinator::HIDDEN * 4 * 2 // 2 layers of h
+        })
+        .unwrap_or(1);
+    for r in &rows {
+        println!("{:>10} {:>10} {:>12} {:>12} {:>12.1}KB", r.capacity,
+                 r.agg_nodes, r.cost_core,
+                 r.train_ms.map(|t| format!("{t:.1}"))
+                     .unwrap_or_else(|| "n/a".into()),
+                 r.ahat_bytes as f64 / 1024.0);
+    }
+    if rows.iter().all(|r| r.train_ms.is_none()) {
+        println!("(no fig4 artifacts found — run `repro emit-buckets` \
+                  with fig4 sweep + `make artifacts` for timings; \
+                  cost-model columns above are exact)");
+    }
+    if report_memory {
+        let last = rows.last().unwrap();
+        println!("\n§3.2 memory overhead at capacity |V|/4:");
+        println!("  a-hat buffers : {:.1} KB ({:.3}% of activation \
+                  memory {:.1} KB)",
+                 last.ahat_bytes as f64 / 1024.0,
+                 100.0 * last.ahat_bytes as f64 / feat_bytes as f64,
+                 feat_bytes as f64 / 1024.0);
+        println!("  plan tensors  : {:.1} KB", last.plan_bytes as f64
+                 / 1024.0);
+    }
+    println!("paper: training time decreases monotonically with \
+              capacity; best HAG ~150K agg nodes, 6MB (0.1% overhead), \
+              2.8x speedup");
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! Data packer: dataset + execution plan -> named host tensors matching
+//! the artifact manifest layout.
+//!
+//! The plan compiler degree-sorts (permutes) nodes; every per-node
+//! tensor crossing the boundary is permuted here, and logits coming back
+//! are un-permuted by [`unpermute_rows`]. Padding rows are zero (masked
+//! out of the loss), and graph-classification padding nodes point at the
+//! sink graph `g_pad - 1`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::datasets::{Dataset, Task};
+use crate::hag::ExecutionPlan;
+use crate::runtime::{BucketSpec, HostTensor};
+
+/// Named tensors for the data + plan section of an artifact's inputs.
+pub struct PackedWorkload {
+    tensors: HashMap<String, HostTensor>,
+}
+
+impl PackedWorkload {
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    /// Replace the feature matrix (serving path: batched feature
+    /// updates re-pack only `h0`).
+    pub fn set_h0(&mut self, h0: HostTensor) {
+        self.tensors.insert("h0".into(), h0);
+    }
+}
+
+/// Pack `ds` lowered through `plan` for `bucket`.
+pub fn pack_workload(ds: &Dataset, plan: &ExecutionPlan,
+                     bucket: &BucketSpec) -> Result<PackedWorkload> {
+    if !bucket.fits(plan) {
+        bail!("plan does not fit bucket {:?}: plan n_pad={} levels={} \
+               l_pad={} bands={:?} vs bucket n_pad={} levels={} l_pad={} \
+               bands={:?}",
+              bucket.name, plan.n_pad, plan.levels, plan.l_pad,
+              plan.bands, bucket.n_pad, bucket.levels, bucket.l_pad,
+              bucket.bands);
+    }
+    if ds.f_in != bucket.f_in {
+        bail!("dataset f_in={} != bucket f_in={}", ds.f_in, bucket.f_in);
+    }
+    let n = ds.n();
+    let n_pad = plan.n_pad;
+    let f = ds.f_in;
+    let mut t = HashMap::new();
+
+    // ---- h0: permuted features, zero padding ----
+    let mut h0 = vec![0f32; n_pad * f];
+    for new in 0..n {
+        let old = plan.perm[new] as usize;
+        h0[new * f..(new + 1) * f]
+            .copy_from_slice(&ds.features[old * f..(old + 1) * f]);
+    }
+    t.insert("h0".into(), HostTensor::f32(h0, &[n_pad, f]));
+
+    // ---- deg (already permuted by the plan compiler) ----
+    t.insert("deg".into(),
+             HostTensor::f32(plan.deg.clone(), &[n_pad]));
+
+    // ---- plan tensors ----
+    if plan.levels > 0 {
+        t.insert("lvl_left".into(),
+                 HostTensor::i32(plan.lvl_left.clone(),
+                                 &[plan.levels, plan.l_pad]));
+        t.insert("lvl_right".into(),
+                 HostTensor::i32(plan.lvl_right.clone(),
+                                 &[plan.levels, plan.l_pad]));
+    }
+    for (i, (&(nb, nnzb), (cols, rows))) in plan
+        .bands
+        .iter()
+        .zip(plan.band_cols.iter().zip(plan.band_rows.iter()))
+        .enumerate()
+    {
+        t.insert(format!("band{i}_col"),
+                 HostTensor::i32(cols.clone(), &[nb, nnzb]));
+        t.insert(format!("band{i}_row"),
+                 HostTensor::i32(rows.clone(), &[nb, nnzb]));
+    }
+
+    // ---- task-specific tensors ----
+    match ds.task {
+        Task::NodeClassification => {
+            let mut labels = vec![0i32; n_pad];
+            let mut mask = vec![0f32; n_pad];
+            for new in 0..n {
+                let old = plan.perm[new] as usize;
+                labels[new] = ds.labels[old] as i32;
+                mask[new] = if ds.train_mask[old] { 1.0 } else { 0.0 };
+            }
+            t.insert("labels".into(), HostTensor::i32(labels, &[n_pad]));
+            t.insert("mask".into(), HostTensor::f32(mask, &[n_pad]));
+        }
+        Task::GraphClassification => {
+            let g_pad = bucket.g_pad;
+            if ds.num_graphs + 1 > g_pad {
+                bail!("{} graphs (+ sink) exceed g_pad={}",
+                      ds.num_graphs, g_pad);
+            }
+            let sink = (g_pad - 1) as i32;
+            let mut seg = vec![sink; n_pad];
+            let mut sizes = vec![1f32; g_pad];
+            let mut counts = vec![0usize; g_pad];
+            for new in 0..n {
+                let old = plan.perm[new] as usize;
+                let gi = ds.graph_seg[old] as usize;
+                seg[new] = gi as i32;
+                counts[gi] += 1;
+            }
+            for gi in 0..ds.num_graphs {
+                sizes[gi] = counts[gi].max(1) as f32;
+            }
+            let mut glabels = vec![0i32; g_pad];
+            let mut gmask = vec![0f32; g_pad];
+            for gi in 0..ds.num_graphs {
+                glabels[gi] = ds.graph_labels[gi] as i32;
+                gmask[gi] = 1.0;
+            }
+            t.insert("graph_seg".into(), HostTensor::i32(seg, &[n_pad]));
+            t.insert("graph_sizes".into(),
+                     HostTensor::f32(sizes, &[g_pad]));
+            t.insert("graph_labels".into(),
+                     HostTensor::i32(glabels, &[g_pad]));
+            t.insert("graph_mask".into(),
+                     HostTensor::f32(gmask, &[g_pad]));
+        }
+    }
+    Ok(PackedWorkload { tensors: t })
+}
+
+/// Un-permute per-node output rows (e.g. logits) back to original node
+/// order. `rows` is `[n_pad, width]`; output is `[plan.n, width]`.
+pub fn unpermute_rows(plan: &ExecutionPlan, rows: &[f32],
+                      width: usize) -> Vec<f32> {
+    let mut out = vec![0f32; plan.n * width];
+    for new in 0..plan.n {
+        let old = plan.perm[new] as usize;
+        out[old * width..(old + 1) * width]
+            .copy_from_slice(&rows[new * width..(new + 1) * width]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::hag::{build_plan, AggregateKind, Hag, PlanConfig};
+
+    fn bucket_for(plan: &ExecutionPlan, ds: &Dataset,
+                  g_pad: usize) -> BucketSpec {
+        BucketSpec {
+            name: "test".into(),
+            n_pad: plan.n_pad,
+            f_in: ds.f_in,
+            hidden: 16,
+            classes: ds.classes,
+            levels: plan.levels,
+            l_pad: plan.l_pad,
+            bands: plan.bands.clone(),
+            br: plan.br,
+            lvl_block: plan.lvl_block,
+            g_pad,
+            impl_: "scatter".into(),
+        }
+    }
+
+    #[test]
+    fn node_pack_permutes_consistently() {
+        let ds = datasets::load("BZR", 0.02, 11);
+        let hag = Hag::from_graph(&ds.graph, AggregateKind::Set);
+        let plan = build_plan(&ds.graph, &hag, &PlanConfig::default());
+        let bucket = bucket_for(&plan, &ds, 0);
+        let w = pack_workload(&ds, &plan, &bucket).unwrap();
+        let h0 = w.get("h0").unwrap().as_f32().unwrap();
+        let labels = w.get("labels").unwrap().as_i32().unwrap();
+        // row `new` must hold features/label of node perm[new]
+        for new in [0usize, 1, ds.n() / 2, ds.n() - 1] {
+            let old = plan.perm[new] as usize;
+            assert_eq!(h0[new * ds.f_in],
+                       ds.features[old * ds.f_in]);
+            assert_eq!(labels[new], ds.labels[old] as i32);
+        }
+        // padding region zero
+        for pad in ds.n()..plan.n_pad {
+            assert_eq!(labels[pad], 0);
+            assert!(h0[pad * ds.f_in..(pad + 1) * ds.f_in]
+                .iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn graph_pack_builds_segments() {
+        let ds = datasets::load("IMDB", 0.01, 13);
+        let hag = Hag::from_graph(&ds.graph, AggregateKind::Set);
+        let plan = build_plan(&ds.graph, &hag, &PlanConfig::default());
+        let g_pad = (ds.num_graphs + 1).next_multiple_of(16);
+        let bucket = bucket_for(&plan, &ds, g_pad);
+        let w = pack_workload(&ds, &plan, &bucket).unwrap();
+        let seg = w.get("graph_seg").unwrap().as_i32().unwrap();
+        let sizes = w.get("graph_sizes").unwrap().as_f32().unwrap();
+        let gmask = w.get("graph_mask").unwrap().as_f32().unwrap();
+        // all real nodes point at real graphs; padding at sink
+        for new in 0..ds.n() {
+            assert!((seg[new] as usize) < ds.num_graphs);
+        }
+        for pad in ds.n()..plan.n_pad {
+            assert_eq!(seg[pad] as usize, g_pad - 1);
+        }
+        // sizes add up to n over real graphs
+        let total: f32 = sizes[..ds.num_graphs].iter().sum();
+        assert_eq!(total as usize, ds.n());
+        assert_eq!(gmask[..ds.num_graphs].iter()
+            .filter(|&&m| m == 1.0).count(), ds.num_graphs);
+    }
+
+    #[test]
+    fn unpermute_roundtrip() {
+        let ds = datasets::load("BZR", 0.02, 17);
+        let hag = Hag::from_graph(&ds.graph, AggregateKind::Set);
+        let plan = build_plan(&ds.graph, &hag, &PlanConfig::default());
+        // permuted "logits" = new index; unpermute must place new index
+        // at old position
+        let rows: Vec<f32> = (0..plan.n_pad).map(|i| i as f32).collect();
+        let out = unpermute_rows(&plan, &rows, 1);
+        for old in 0..plan.n {
+            assert_eq!(out[old], plan.inv_perm[old] as f32);
+        }
+    }
+
+    #[test]
+    fn bucket_mismatch_rejected() {
+        let ds = datasets::load("BZR", 0.02, 19);
+        let hag = Hag::from_graph(&ds.graph, AggregateKind::Set);
+        let plan = build_plan(&ds.graph, &hag, &PlanConfig::default());
+        let mut bucket = bucket_for(&plan, &ds, 0);
+        bucket.n_pad += 128;
+        assert!(pack_workload(&ds, &plan, &bucket).is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Inference serving path: request router + dynamic batcher.
+//!
+//! Serving model: the graph (and its HAG plan) is resident; clients
+//! submit *feature-update scoring requests* — "these node feature rows
+//! changed, give me fresh logits for them" (the transductive GNN serving
+//! pattern: user/post features refresh continuously, topology changes
+//! slowly). The batcher coalesces concurrent requests into one XLA
+//! execution over the shared graph, amortizing the full-graph
+//! aggregation across the batch — exactly where HAG's reduced
+//! aggregation count pays off in serving latency.
+//!
+//! Flow: client threads -> bounded mpsc queue -> batcher thread
+//! (size- or deadline-triggered) -> XLA execute -> per-request oneshot
+//! replies. The `xla` crate's handles are not `Send` (Rc + raw
+//! pointers), so the batcher thread owns its *own* PJRT client,
+//! executable and device buffers end to end; only plain host tensors
+//! cross the thread boundary. Built on std::sync primitives (tokio is
+//! not vendored here; a blocking XLA worker gains nothing from an async
+//! runtime anyway).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError,
+                      SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::hag::ExecutionPlan;
+use crate::runtime::{Executable, HostTensor, Runtime};
+
+use super::packing::PackedWorkload;
+use super::trainer::init_params;
+
+/// One scoring request: overwrite node features, return its logits.
+pub struct ScoreRequest {
+    /// Original (un-permuted) node id.
+    pub node: u32,
+    /// Replacement feature row (`f_in` long), or empty to keep current.
+    pub features: Vec<f32>,
+    /// Single-use reply channel.
+    pub reply: SyncSender<ScoreResponse>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScoreResponse {
+    pub node: u32,
+    pub logits: Vec<f32>,
+    /// Queue + batch + execute time.
+    pub latency: Duration,
+}
+
+/// Create a reply channel pair for a [`ScoreRequest`].
+pub fn oneshot() -> (SyncSender<ScoreResponse>,
+                     Receiver<ScoreResponse>) {
+    sync_channel(1)
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_exec_ms: f64,
+    pub throughput_rps: f64,
+}
+
+/// The inference server over one prepared (graph, plan, artifact).
+pub struct InferenceServer {
+    tx: SyncSender<ScoreRequest>,
+    handle: std::thread::JoinHandle<ServeStats>,
+}
+
+impl InferenceServer {
+    /// Spawn the batcher thread and block until its PJRT state is
+    /// ready. `workload` supplies the resident graph tensors; params
+    /// are initialized (a full deployment would load a checkpoint).
+    pub fn spawn(artifacts_dir: impl Into<PathBuf>, artifact: &str,
+                 workload: &PackedWorkload, plan: &ExecutionPlan,
+                 policy: BatchPolicy, seed: u64)
+                 -> Result<InferenceServer> {
+        let dir = artifacts_dir.into();
+        let artifact = artifact.to_string();
+        // Host-side state crossing into the worker thread (all Send).
+        let h0 = workload
+            .get("h0")
+            .ok_or_else(|| anyhow!("workload missing h0"))?
+            .as_f32()?
+            .to_vec();
+        let statics: Vec<(String, HostTensor)> = workload
+            .names()
+            .filter(|n| *n != "h0")
+            .map(|n| (n.to_string(), workload.get(n).unwrap().clone()))
+            .collect();
+        let inv_perm = plan.inv_perm.clone();
+
+        let (tx, rx) = sync_channel::<ScoreRequest>(4096);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let handle = std::thread::spawn(move || {
+            let setup = Worker::setup(&dir, &artifact, statics, h0,
+                                      seed);
+            match setup {
+                Ok(mut w) => {
+                    let _ = ready_tx.send(Ok(()));
+                    w.batcher_loop(rx, &inv_perm, policy)
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    ServeStats::default()
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(InferenceServer { tx, handle }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = handle.join();
+                Err(anyhow!("server thread died during setup"))
+            }
+        }
+    }
+
+    pub fn client(&self) -> SyncSender<ScoreRequest> {
+        self.tx.clone()
+    }
+
+    /// Close the queue and collect final stats.
+    pub fn shutdown(self) -> ServeStats {
+        drop(self.tx);
+        self.handle.join().unwrap_or_default()
+    }
+}
+
+/// Thread-confined XLA state.
+struct Worker {
+    runtime: Runtime,
+    exe: std::sync::Arc<Executable>,
+    static_slots: Vec<(usize, xla::PjRtBuffer)>,
+    h0_index: usize,
+    h0: Vec<f32>,
+    n_pad: usize,
+    f_in: usize,
+    classes: usize,
+}
+
+impl Worker {
+    fn setup(dir: &PathBuf, artifact: &str,
+             statics: Vec<(String, HostTensor)>, h0: Vec<f32>,
+             seed: u64) -> Result<Worker> {
+        let runtime = Runtime::open(dir)?;
+        let exe = runtime.compile(artifact)?;
+        if exe.spec.kind != "infer" {
+            return Err(anyhow!("{artifact} is not an infer artifact"));
+        }
+        let bucket = &exe.spec.bucket;
+        let (n_pad, f_in, classes) =
+            (bucket.n_pad, bucket.f_in, bucket.classes);
+
+        let param_specs: Vec<_> = exe.spec.inputs.iter()
+            .filter(|s| !matches!(s.name.as_str(), "h0" | "deg")
+                    && !s.name.starts_with("lvl_")
+                    && !s.name.starts_with("band"))
+            .cloned().collect();
+        let params = init_params(&param_specs, seed);
+
+        let mut static_slots = Vec::new();
+        let mut h0_index = None;
+        let mut pi = 0usize;
+        for (i, s) in exe.spec.inputs.iter().enumerate() {
+            if s.name == "h0" {
+                h0_index = Some(i);
+            } else if s.name == "deg" || s.name.starts_with("lvl_")
+                || s.name.starts_with("band")
+            {
+                let t = statics.iter().find(|(n, _)| *n == s.name)
+                    .map(|(_, t)| t)
+                    .ok_or_else(|| anyhow!("workload missing {:?}",
+                                           s.name))?;
+                static_slots.push((i, runtime.upload(t)?));
+            } else {
+                static_slots.push((i, runtime.upload(&params[pi])?));
+                pi += 1;
+            }
+        }
+        let h0_index =
+            h0_index.ok_or_else(|| anyhow!("artifact lacks h0 input"))?;
+        Ok(Worker { runtime, exe, static_slots, h0_index, h0, n_pad,
+                    f_in, classes })
+    }
+
+    fn batcher_loop(&mut self, rx: Receiver<ScoreRequest>,
+                    inv_perm: &[u32], policy: BatchPolicy) -> ServeStats {
+        let mut stats_lat: Vec<f64> = Vec::new();
+        let mut stats_exec: Vec<f64> = Vec::new();
+        let mut batches = 0usize;
+        let mut requests = 0usize;
+        let t_start = Instant::now();
+        loop {
+            // Collect a batch: first request blocks, the rest race the
+            // deadline.
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + policy.max_wait;
+            while batch.len() < policy.max_batch {
+                let left =
+                    deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout)
+                    | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Apply feature updates to the resident (permuted) h0.
+            for r in &batch {
+                if !r.features.is_empty() {
+                    let new = inv_perm[r.node as usize] as usize;
+                    self.h0[new * self.f_in..(new + 1) * self.f_in]
+                        .copy_from_slice(&r.features);
+                }
+            }
+            let te = Instant::now();
+            let result = self.run_batch();
+            let exec_ms = te.elapsed().as_secs_f64() * 1e3;
+            stats_exec.push(exec_ms);
+            batches += 1;
+            match result {
+                Ok(logits) => {
+                    for r in batch {
+                        requests += 1;
+                        let new = inv_perm[r.node as usize] as usize;
+                        let row = logits[new * self.classes
+                            ..(new + 1) * self.classes].to_vec();
+                        let latency = r.submitted.elapsed();
+                        stats_lat.push(latency.as_secs_f64() * 1e3);
+                        let _ = r.reply.send(ScoreResponse {
+                            node: r.node,
+                            logits: row,
+                            latency,
+                        });
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[serve] batch failed: {e:#}");
+                    // drop replies; clients observe a closed channel
+                }
+            }
+        }
+        finalize_stats(stats_lat, stats_exec, batches, requests,
+                       t_start.elapsed())
+    }
+
+    fn run_batch(&self) -> Result<Vec<f32>> {
+        let h0_buf = self.runtime.upload(&HostTensor::f32(
+            self.h0.clone(), &[self.n_pad, self.f_in]))?;
+        let n_inputs = self.exe.spec.inputs.len();
+        let mut slots: Vec<Option<&xla::PjRtBuffer>> =
+            vec![None; n_inputs];
+        for (i, b) in &self.static_slots {
+            slots[*i] = Some(b);
+        }
+        slots[self.h0_index] = Some(&h0_buf);
+        let args: Vec<&xla::PjRtBuffer> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.ok_or_else(|| anyhow!("input {i} unbound")))
+            .collect::<Result<_>>()?;
+        let outs = self.runtime.execute(&self.exe, &args)?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+}
+
+fn finalize_stats(mut lat: Vec<f64>, exec: Vec<f64>, batches: usize,
+                  requests: usize, elapsed: Duration) -> ServeStats {
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            f64::NAN
+        } else {
+            lat[((lat.len() as f64 - 1.0) * p) as usize]
+        }
+    };
+    ServeStats {
+        requests,
+        batches,
+        mean_batch: if batches == 0 {
+            0.0
+        } else {
+            requests as f64 / batches as f64
+        },
+        p50_ms: pct(0.5),
+        p99_ms: pct(0.99),
+        mean_exec_ms: if exec.is_empty() {
+            f64::NAN
+        } else {
+            exec.iter().sum::<f64>() / exec.len() as f64
+        },
+        throughput_rps: requests as f64 / elapsed.as_secs_f64().max(1e-9),
+    }
+}

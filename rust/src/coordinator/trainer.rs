@@ -1,0 +1,227 @@
+//! Training coordinator: drives AOT-compiled train-step executables.
+//!
+//! The entire optimization step (fwd + bwd + Adam) is one XLA program;
+//! rust owns the epoch loop, parameter state, metrics and logging. Plan
+//! and data tensors are uploaded to device **once**; only parameters and
+//! optimizer state round-trip per step (they are the step outputs).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::Rng;
+
+use crate::runtime::{Executable, HostTensor, Runtime, TensorSpec};
+
+use super::packing::PackedWorkload;
+
+/// Per-epoch record for the loss curve / throughput reporting.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+    pub wall_ms: f64,
+}
+
+/// Training run summary.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub artifact: String,
+    pub epochs: Vec<EpochStats>,
+    pub total_s: f64,
+    pub mean_epoch_ms: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.epochs.last().map(|e| e.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn final_accuracy(&self) -> f32 {
+        self.epochs.last().map(|e| e.accuracy).unwrap_or(f32::NAN)
+    }
+}
+
+/// How artifact inputs split into sections (by manifest naming
+/// convention; see aot.py `build_entry`).
+fn is_param(s: &TensorSpec) -> bool {
+    !s.name.starts_with("m_")
+        && !s.name.starts_with("v_")
+        && s.name != "opt_step"
+        && !is_data_or_plan(s)
+}
+
+fn is_data_or_plan(s: &TensorSpec) -> bool {
+    matches!(s.name.as_str(),
+             "h0" | "deg" | "labels" | "mask" | "graph_seg"
+             | "graph_sizes" | "graph_labels" | "graph_mask")
+        || s.name.starts_with("lvl_")
+        || s.name.starts_with("band")
+}
+
+/// Glorot-ish param init matching `model.init_gcn_params` /
+/// `init_sage_params` statistics (exact values differ; training
+/// dynamics, not bit-equality, is the contract here).
+pub fn init_params(specs: &[TensorSpec], seed: u64) -> Vec<HostTensor> {
+    let mut rng = Rng::seed_from_u64(seed);
+    specs
+        .iter()
+        .map(|s| {
+            let n = s.elements();
+            let data = if s.shape.len() == 2 {
+                let scale =
+                    (2.0 / (s.shape[0] + s.shape[1]) as f32).sqrt();
+                (0..n).map(|_| rng.normal_f32() * scale).collect()
+            } else {
+                vec![0f32; n] // biases
+            };
+            HostTensor::f32(data, &s.shape)
+        })
+        .collect()
+}
+
+/// Trainer over one artifact + one packed workload.
+pub struct Trainer {
+    runtime: Arc<Runtime>,
+    exe: Arc<Executable>,
+    /// Current parameters, artifact order.
+    pub params: Vec<HostTensor>,
+    /// Optimizer state (m.., v.., step), artifact order.
+    opt: Vec<HostTensor>,
+    /// Uploaded data + plan buffers, keyed by input index.
+    static_bufs: Vec<(usize, xla::PjRtBuffer)>,
+    n_params: usize,
+}
+
+impl Trainer {
+    pub fn new(runtime: Arc<Runtime>, artifact: &str,
+               workload: &PackedWorkload, seed: u64) -> Result<Self> {
+        let exe = runtime.compile(artifact)?;
+        let spec = &exe.spec;
+        if spec.kind != "train" {
+            bail!("{artifact} is not a train artifact");
+        }
+        let param_specs: Vec<TensorSpec> = spec.inputs.iter()
+            .filter(|s| is_param(s)).cloned().collect();
+        let n_params = param_specs.len();
+        let params = init_params(&param_specs, seed);
+        // optimizer state: zeros of each param + step counter
+        let mut opt: Vec<HostTensor> = Vec::new();
+        for s in spec.inputs.iter().filter(|s| s.name.starts_with("m_")
+            || s.name.starts_with("v_")) {
+            opt.push(HostTensor::f32(vec![0.0; s.elements()], &s.shape));
+        }
+        opt.push(HostTensor::scalar_i32(0));
+
+        // upload static (data + plan) buffers once
+        let mut static_bufs = Vec::new();
+        for (i, s) in spec.inputs.iter().enumerate() {
+            if is_data_or_plan(s) {
+                let t = workload.get(&s.name).ok_or_else(|| {
+                    anyhow!("workload missing tensor {:?} needed by {}",
+                          s.name, artifact)
+                })?;
+                if t.shape() != s.shape.as_slice() {
+                    bail!("tensor {:?}: workload shape {:?} != \
+                           artifact shape {:?}",
+                          s.name, t.shape(), s.shape);
+                }
+                static_bufs.push((i, runtime.upload(t)?));
+            }
+        }
+        Ok(Trainer { runtime, exe, params, opt, static_bufs, n_params })
+    }
+
+    /// One optimization step (one full-batch epoch for GCN training).
+    pub fn step(&mut self) -> Result<(f32, f32)> {
+        let spec = &self.exe.spec;
+        // Assemble args in artifact order.
+        let mut dyn_bufs: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        {
+            let mut pi = 0usize;
+            let mut oi = 0usize;
+            for (i, s) in spec.inputs.iter().enumerate() {
+                if is_data_or_plan(s) {
+                    continue;
+                }
+                let t = if is_param(s) {
+                    let t = &self.params[pi];
+                    pi += 1;
+                    t
+                } else {
+                    let t = &self.opt[oi];
+                    oi += 1;
+                    t
+                };
+                dyn_bufs.push((i, self.runtime.upload(t)?));
+            }
+        }
+        let mut slots: Vec<Option<&xla::PjRtBuffer>> =
+            vec![None; spec.inputs.len()];
+        for (i, b) in &self.static_bufs {
+            slots[*i] = Some(b);
+        }
+        for (i, b) in &dyn_bufs {
+            slots[*i] = Some(b);
+        }
+        let args: Vec<&xla::PjRtBuffer> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.ok_or_else(|| {
+                anyhow!("input {} ({}) unbound", i, spec.inputs[i].name)
+            }))
+            .collect::<Result<_>>()?;
+
+        let outs = self.runtime.execute(&self.exe, &args)?;
+        // outputs: new params, new m, new v, new step, loss, acc
+        let n_out = outs.len();
+        let loss = outs[n_out - 2].as_f32()?[0];
+        let acc = outs[n_out - 1].as_f32()?[0];
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(self.n_params).collect();
+        self.opt = it.take(2 * self.n_params + 1).collect();
+        Ok((loss, acc))
+    }
+
+    /// Run `epochs` steps, collecting per-epoch stats.
+    pub fn train(&mut self, epochs: usize,
+                 log_every: usize) -> Result<TrainReport> {
+        let t0 = Instant::now();
+        let mut stats = Vec::with_capacity(epochs);
+        for e in 0..epochs {
+            let ts = Instant::now();
+            let (loss, acc) = self.step()?;
+            let wall_ms = ts.elapsed().as_secs_f64() * 1e3;
+            if log_every > 0 && (e % log_every == 0 || e + 1 == epochs) {
+                eprintln!(
+                    "[train {}] epoch {e:4}  loss {loss:.4}  \
+                     acc {acc:.3}  {wall_ms:.1} ms",
+                    self.exe.spec.name);
+            }
+            stats.push(EpochStats { epoch: e, loss, accuracy: acc,
+                                    wall_ms });
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        // steady-state epoch time: skip warmup epoch 0
+        let tail: Vec<f64> =
+            stats.iter().skip(1.min(stats.len() - 1))
+                .map(|s| s.wall_ms).collect();
+        let mean_epoch_ms = if tail.is_empty() {
+            f64::NAN
+        } else {
+            tail.iter().sum::<f64>() / tail.len() as f64
+        };
+        Ok(TrainReport {
+            artifact: self.exe.spec.name.clone(),
+            epochs: stats,
+            total_s,
+            mean_epoch_ms,
+        })
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        &self.exe.spec.name
+    }
+}

@@ -1,0 +1,77 @@
+//! Incremental graph builder: collects edges, sorts, dedups, emits CSR.
+
+use super::Graph;
+
+/// Accumulates `(src, dst)` aggregation edges and builds a [`Graph`].
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new() }
+    }
+
+    /// Add an aggregation edge `src -> dst` (src aggregated into dst).
+    pub fn edge(&mut self, src: u32, dst: u32) -> &mut Self {
+        debug_assert!((src as usize) < self.n && (dst as usize) < self.n,
+                      "edge ({src},{dst}) out of range n={}", self.n);
+        self.edges.push((src, dst));
+        self
+    }
+
+    pub fn edges(mut self, it: impl IntoIterator<Item = (u32, u32)>) -> Self {
+        for (s, d) in it {
+            self.edge(s, d);
+        }
+        self
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Sort by (dst, src), dedup, emit CSR-of-in-neighbors.
+    pub fn build(mut self) -> Graph {
+        self.edges.sort_unstable_by_key(|&(s, d)| (d, s));
+        self.edges.dedup();
+        let mut offsets = Vec::with_capacity(self.n + 1);
+        let mut neighbors = Vec::with_capacity(self.edges.len());
+        offsets.push(0u32);
+        let mut cur = 0u32;
+        for (s, d) in self.edges {
+            while cur < d {
+                offsets.push(neighbors.len() as u32);
+                cur += 1;
+            }
+            neighbors.push(s);
+        }
+        while (offsets.len() as usize) < self.n + 1 {
+            offsets.push(neighbors.len() as u32);
+        }
+        Graph::from_csr(offsets, neighbors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(3).build();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.e(), 0);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+    }
+
+    #[test]
+    fn trailing_isolated_nodes() {
+        let g = GraphBuilder::new(5).edges([(0u32, 1u32)]).build();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(4), &[] as &[u32]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Input-graph substrate: CSR graphs, builders, statistics, batching.
+//!
+//! The paper's GNN abstraction (Algorithm 1) aggregates over each node's
+//! in-neighborhood `N(v)`. We store directed aggregation edges `u -> v`
+//! ("u's activations are aggregated into v") in CSR-of-in-neighbors form
+//! with deterministic (sorted) neighbor order — determinism matters both
+//! for reproducible HAG search and for the sequential-AGGREGATE variant,
+//! where neighbor order is semantic.
+
+mod builder;
+pub mod io;
+
+pub use builder::GraphBuilder;
+
+/// A directed graph in CSR (in-neighbor) layout.
+///
+/// `offsets.len() == n + 1`; the in-neighbors of `v` are
+/// `neighbors[offsets[v]..offsets[v+1]]`, sorted ascending and
+/// duplicate-free.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    offsets: Vec<u32>,
+    neighbors: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an edge list of `(src, dst)` aggregation edges.
+    /// Duplicates are removed; `n` is the node count (ids `0..n`).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        GraphBuilder::new(n).edges(edges.iter().copied()).build()
+    }
+
+    /// Treat an undirected edge list as bidirectional aggregation.
+    pub fn from_undirected_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut b = GraphBuilder::new(n);
+        for &(u, v) in edges {
+            b.edge(u, v);
+            b.edge(v, u);
+        }
+        b.build()
+    }
+
+    pub(crate) fn from_csr(offsets: Vec<u32>, neighbors: Vec<u32>) -> Self {
+        debug_assert!(!offsets.is_empty());
+        debug_assert_eq!(*offsets.last().unwrap() as usize, neighbors.len());
+        Graph { offsets, neighbors }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total aggregation-edge count `|E|`.
+    pub fn e(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// In-neighbors of `v`, sorted ascending.
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.neighbors[s..e]
+    }
+
+    /// In-degree of `v`.
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Iterate `(v, neighbors)` for all nodes.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &[u32])> {
+        (0..self.n() as u32).map(move |v| (v, self.neighbors(v)))
+    }
+
+    /// Edge density `|E| / |V|^2` (as the paper reports for COLLAB).
+    pub fn density(&self) -> f64 {
+        let n = self.n() as f64;
+        if n == 0.0 {
+            0.0
+        } else {
+            self.e() as f64 / (n * n)
+        }
+    }
+
+    /// Degree distribution summary (min, mean, max).
+    pub fn degree_stats(&self) -> (usize, f64, usize) {
+        if self.n() == 0 {
+            return (0, 0.0, 0);
+        }
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for v in 0..self.n() as u32 {
+            let d = self.degree(v);
+            min = min.min(d);
+            max = max.max(d);
+        }
+        (min, self.e() as f64 / self.n() as f64, max)
+    }
+
+    /// Disjoint union (block-diagonal batching for graph classification).
+    /// Returns the merged graph plus, for each input graph, its node-id
+    /// offset in the merged graph.
+    pub fn disjoint_union(graphs: &[Graph]) -> (Graph, Vec<u32>) {
+        let total_n: usize = graphs.iter().map(|g| g.n()).sum();
+        let total_e: usize = graphs.iter().map(|g| g.e()).sum();
+        let mut offsets = Vec::with_capacity(total_n + 1);
+        let mut neighbors = Vec::with_capacity(total_e);
+        let mut starts = Vec::with_capacity(graphs.len());
+        offsets.push(0u32);
+        let mut base = 0u32;
+        for g in graphs {
+            starts.push(base);
+            for v in 0..g.n() as u32 {
+                neighbors.extend(g.neighbors(v).iter().map(|&u| u + base));
+                offsets.push(neighbors.len() as u32);
+            }
+            base += g.n() as u32;
+        }
+        (Graph { offsets, neighbors }, starts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_roundtrip() {
+        let g = Graph::from_edges(4, &[(1, 0), (2, 0), (3, 2), (1, 2)]);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.e(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[] as &[u32]);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn dedup_and_sort() {
+        let g = Graph::from_edges(3, &[(2, 0), (1, 0), (2, 0), (1, 0)]);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.e(), 2);
+    }
+
+    #[test]
+    fn undirected_doubles_edges() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]);
+        assert_eq!(g.e(), 4);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn disjoint_union_offsets() {
+        let g1 = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]);
+        let g2 = Graph::from_undirected_edges(2, &[(0, 1)]);
+        let (m, starts) = Graph::disjoint_union(&[g1, g2]);
+        assert_eq!(m.n(), 5);
+        assert_eq!(m.e(), 6);
+        assert_eq!(starts, vec![0, 3]);
+        assert_eq!(m.neighbors(3), &[4]);
+        assert_eq!(m.neighbors(4), &[3]);
+    }
+
+    #[test]
+    fn degree_stats_and_density() {
+        let g = Graph::from_edges(4, &[(1, 0), (2, 0), (3, 0)]);
+        let (min, mean, max) = g.degree_stats();
+        assert_eq!((min, max), (0, 3));
+        assert!((mean - 0.75).abs() < 1e-9);
+        assert!((g.density() - 3.0 / 16.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Theorem 1 oracle: a GNN-graph and a HAG are equivalent iff
+//! `cover(v) == N(v)` for every original node `v`.
+//!
+//! Two checkers:
+//! * [`check_equivalence`] — exact: materializes each node's cover
+//!   multiset (memoizing per-aggregation-node covers) and compares it to
+//!   the CSR neighbor list. For `Set` aggregates the comparison is as
+//!   sorted multisets; for `Sequential`, as ordered lists.
+//! * [`check_equivalence_probabilistic`] — for very large graphs: runs
+//!   one f64 sum-aggregation of random values through both
+//!   representations. Sum aggregation is linear, so any cover mismatch
+//!   perturbs the result; collision probability is negligible
+//!   (~2^-40 per node with the tolerance used).
+
+use crate::graph::Graph;
+use crate::util::Rng;
+
+use super::{AggregateKind, Hag};
+
+/// Exact Theorem-1 check. Returns the first offending node on failure.
+pub fn check_equivalence(g: &Graph, hag: &Hag) -> Result<(), String> {
+    if g.n() != hag.n {
+        return Err(format!("node count mismatch: {} vs {}", g.n(), hag.n));
+    }
+    hag.validate()?;
+
+    // Memoize covers of aggregation nodes (sorted for Set).
+    let na = hag.agg_nodes.len();
+    let mut covers: Vec<Vec<u32>> = Vec::with_capacity(na);
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        let mut c = Vec::new();
+        for &s in &[a.left, a.right] {
+            if (s as usize) < hag.n {
+                c.push(s);
+            } else {
+                c.extend_from_slice(&covers[s as usize - hag.n]);
+            }
+        }
+        if hag.kind == AggregateKind::Set {
+            c.sort_unstable();
+        }
+        debug_assert!(i == covers.len());
+        covers.push(c);
+    }
+
+    for v in 0..hag.n as u32 {
+        let mut cover = Vec::new();
+        for &s in &hag.in_edges[v as usize] {
+            if (s as usize) < hag.n {
+                cover.push(s);
+            } else {
+                cover.extend_from_slice(&covers[s as usize - hag.n]);
+            }
+        }
+        let mut want = g.neighbors(v).to_vec();
+        match hag.kind {
+            AggregateKind::Set => {
+                cover.sort_unstable();
+                // CSR neighbor lists are already sorted.
+            }
+            AggregateKind::Sequential => {
+                // order is semantic; `want` is the CSR (ascending) order,
+                // which is the canonical sequential order in this repo.
+                want = g.neighbors(v).to_vec();
+            }
+        }
+        if cover != want {
+            return Err(format!(
+                "node {v}: cover(v) = {:?} != N(v) = {:?}",
+                &cover[..cover.len().min(16)],
+                &want[..want.len().min(16)]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Probabilistic Theorem-1 check via one linear aggregation pass in f64.
+pub fn check_equivalence_probabilistic(g: &Graph, hag: &Hag,
+                                       seed: u64) -> Result<(), String> {
+    if g.n() != hag.n {
+        return Err(format!("node count mismatch: {} vs {}", g.n(), hag.n));
+    }
+    hag.validate()?;
+    let mut rng = Rng::seed_from_u64(seed);
+    let x: Vec<f64> =
+        (0..g.n()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    // Reference: CSR aggregation.
+    let mut want = vec![0f64; g.n()];
+    for (v, ns) in g.iter() {
+        want[v as usize] = ns.iter().map(|&u| x[u as usize]).sum();
+    }
+
+    // HAG aggregation: agg-node slots in creation (= topo) order.
+    let mut ahat = vec![0f64; hag.agg_nodes.len()];
+    let val = |s: u32, ahat: &[f64]| -> f64 {
+        if (s as usize) < hag.n {
+            x[s as usize]
+        } else {
+            ahat[s as usize - hag.n]
+        }
+    };
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        ahat[i] = val(a.left, &ahat) + val(a.right, &ahat);
+    }
+    for v in 0..hag.n {
+        let got: f64 = hag.in_edges[v].iter().map(|&s| val(s, &ahat)).sum();
+        // covers are small-integer sums of unit-range values; 1e-6 is
+        // far above accumulated rounding yet far below any structural
+        // difference detectable at this precision.
+        if (got - want[v]).abs() > 1e-6 * (1.0 + want[v].abs()) {
+            return Err(format!(
+                "node {v}: aggregate {got} != reference {}", want[v]));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::AggNode;
+
+    fn g5() -> Graph {
+        Graph::from_edges(5, &[(1, 0), (2, 0), (1, 3), (2, 3), (0, 2)])
+    }
+
+    #[test]
+    fn trivial_hag_is_equivalent() {
+        let g = g5();
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        check_equivalence(&g, &h).unwrap();
+        check_equivalence_probabilistic(&g, &h, 1).unwrap();
+    }
+
+    #[test]
+    fn valid_merge_is_equivalent() {
+        let g = g5();
+        let mut h = Hag::from_graph(&g, AggregateKind::Set);
+        h.agg_nodes.push(AggNode { left: 1, right: 2 });
+        h.in_edges[0] = vec![5];
+        h.in_edges[3] = vec![5];
+        check_equivalence(&g, &h).unwrap();
+        check_equivalence_probabilistic(&g, &h, 2).unwrap();
+    }
+
+    #[test]
+    fn broken_cover_detected() {
+        let g = g5();
+        let mut h = Hag::from_graph(&g, AggregateKind::Set);
+        h.in_edges[0] = vec![1]; // dropped neighbor 2
+        assert!(check_equivalence(&g, &h).is_err());
+        assert!(check_equivalence_probabilistic(&g, &h, 3).is_err());
+    }
+
+    #[test]
+    fn duplicate_cover_detected() {
+        let g = g5();
+        let mut h = Hag::from_graph(&g, AggregateKind::Set);
+        h.agg_nodes.push(AggNode { left: 1, right: 2 });
+        h.in_edges[0] = vec![1, 5]; // covers {1,1,2}: duplicate
+        assert!(check_equivalence(&g, &h).is_err());
+        assert!(check_equivalence_probabilistic(&g, &h, 4).is_err());
+    }
+
+    #[test]
+    fn sequential_order_mismatch_detected() {
+        let g = g5(); // N(0) = [1, 2] in canonical order
+        let mut h = Hag::from_graph(&g, AggregateKind::Sequential);
+        h.in_edges[0] = vec![2, 1]; // wrong order
+        assert!(check_equivalence(&g, &h).is_err());
+        // NB: the probabilistic checker uses a sum (commutative), so it
+        // cannot see ordering — exact checker is authoritative for
+        // Sequential.
+        h.in_edges[0] = vec![1, 2];
+        check_equivalence(&g, &h).unwrap();
+    }
+}

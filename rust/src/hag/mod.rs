@@ -1,0 +1,283 @@
+//! Hierarchically Aggregated computation Graphs (paper §3).
+//!
+//! A [`Hag`] augments an input [`Graph`](crate::graph::Graph) with
+//! *aggregation nodes* `V_A`, each holding the intermediate aggregate of
+//! exactly two operands (Algorithm 3 only ever materializes binary
+//! merges). Buffer-slot ids ("slots") index `0..n` for original nodes and
+//! `n..n+|V_A|` for aggregation nodes, in creation order — creation order
+//! is topological by construction, since a merge can only reference slots
+//! that already exist.
+
+pub mod equivalence;
+pub mod schedule;
+pub mod search;
+
+pub use equivalence::{check_equivalence, check_equivalence_probabilistic};
+pub use schedule::{build_plan, ExecutionPlan, PlanConfig};
+pub use search::{hag_search, SearchConfig};
+
+use crate::graph::Graph;
+
+/// Slot id: original node (`< n`) or aggregation node (`>= n`).
+pub type Slot = u32;
+
+/// An aggregation node: the (set or sequential) aggregate of two slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AggNode {
+    pub left: Slot,
+    pub right: Slot,
+}
+
+/// Which AGGREGATE class the HAG was built for (paper Table 1).
+///
+/// * `Set` — associative + commutative (GCN sum, GraphSAGE-P max):
+///   aggregation nodes may cover any subset, in any order.
+/// * `Sequential` — order-sensitive (GraphSAGE-LSTM, Tree-LSTM):
+///   aggregation nodes must cover *prefixes* of each node's ordered
+///   neighbor list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregateKind {
+    Set,
+    Sequential,
+}
+
+/// A HAG equivalent to some input GNN-graph.
+#[derive(Debug, Clone)]
+pub struct Hag {
+    /// Original node count `|V|`.
+    pub n: usize,
+    /// Aggregation nodes, creation (= topological) order.
+    pub agg_nodes: Vec<AggNode>,
+    /// Per original node: its current in-neighbor slot list. For
+    /// `Sequential`, order is semantic (the aggregation order).
+    pub in_edges: Vec<Vec<Slot>>,
+    pub kind: AggregateKind,
+}
+
+impl Hag {
+    /// The trivial HAG: the GNN-graph itself (`V_A = {}`, paper §3.1).
+    pub fn from_graph(g: &Graph, kind: AggregateKind) -> Self {
+        Hag {
+            n: g.n(),
+            agg_nodes: Vec::new(),
+            in_edges: g.iter().map(|(_, ns)| ns.to_vec()).collect(),
+            kind,
+        }
+    }
+
+    /// Total slot count `|V| + |V_A|`.
+    pub fn slots(&self) -> usize {
+        self.n + self.agg_nodes.len()
+    }
+
+    /// `|Ê|`: HAG edges = 2 per aggregation node + remaining final edges.
+    pub fn e_hat(&self) -> usize {
+        2 * self.agg_nodes.len()
+            + self.in_edges.iter().map(|l| l.len()).sum::<usize>()
+    }
+
+    /// Number of binary aggregations per GNN layer:
+    /// `sum over v in V u V_A of max(|N_hat(v)| - 1, 0)`.
+    pub fn aggregations(&self) -> usize {
+        self.agg_nodes.len()
+            + self
+                .in_edges
+                .iter()
+                .map(|l| l.len().saturating_sub(1))
+                .sum::<usize>()
+    }
+
+    /// Operand reads per GNN layer — the paper's "data transfers between
+    /// GPU threads" metric, in unit rows (multiply by `4 * hidden_dim`
+    /// for bytes; DESIGN.md §Hardware-Adaptation maps this to HBM->VMEM
+    /// row reads on TPU).
+    pub fn data_transfers(&self) -> usize {
+        self.e_hat()
+    }
+
+    /// The paper's cost function (§4.1):
+    /// `cost = alpha * (|E_hat| - |V_A|) + (beta - alpha) * |V|`.
+    pub fn cost(&self, alpha: f64, beta: f64) -> f64 {
+        alpha * (self.e_hat() as f64 - self.agg_nodes.len() as f64)
+            + (beta - alpha) * self.n as f64
+    }
+
+    /// The quantity Algorithm 3 minimizes: `|E_hat| - |V_A|`.
+    pub fn cost_core(&self) -> usize {
+        self.e_hat() - self.agg_nodes.len()
+    }
+
+    /// Expand `cover(slot)` (paper Eq. 2/3): the multiset of original
+    /// nodes whose layer-(k-1) activations feed this slot's aggregate.
+    /// Returned sorted for `Set`, in aggregation order for `Sequential`.
+    pub fn cover(&self, slot: Slot) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.cover_into(slot, &mut out);
+        if self.kind == AggregateKind::Set {
+            out.sort_unstable();
+        }
+        out
+    }
+
+    fn cover_into(&self, slot: Slot, out: &mut Vec<u32>) {
+        if (slot as usize) < self.n {
+            out.push(slot);
+        } else {
+            let a = self.agg_nodes[slot as usize - self.n];
+            self.cover_into(a.left, out);
+            self.cover_into(a.right, out);
+        }
+    }
+
+    /// `cover` of an original node's *neighborhood*: what Theorem 1
+    /// compares against `N(v)`.
+    pub fn node_cover(&self, v: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        for &s in &self.in_edges[v as usize] {
+            self.cover_into(s, &mut out);
+        }
+        if self.kind == AggregateKind::Set {
+            out.sort_unstable();
+        }
+        out
+    }
+
+    /// Memory overhead of the intermediate `a-hat` buffers in bytes for a
+    /// given hidden dim (paper §3.2: constant across layers, not saved
+    /// for backprop).
+    pub fn ahat_memory_bytes(&self, hidden: usize) -> usize {
+        self.agg_nodes.len() * hidden * 4
+    }
+
+    /// Structural sanity: every agg node references earlier slots only,
+    /// every final edge references a valid slot, and (for `Set`) no
+    /// duplicate slots in a node's in-list.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, a) in self.agg_nodes.iter().enumerate() {
+            let self_slot = (self.n + i) as u32;
+            if a.left >= self_slot || a.right >= self_slot {
+                return Err(format!(
+                    "agg node {i} references non-earlier slot \
+                     ({}, {}) >= {self_slot}",
+                    a.left, a.right
+                ));
+            }
+        }
+        let max_slot = self.slots() as u32;
+        for (v, l) in self.in_edges.iter().enumerate() {
+            for &s in l {
+                if s >= max_slot {
+                    return Err(format!("node {v} references slot {s} \
+                                        >= {max_slot}"));
+                }
+            }
+            if self.kind == AggregateKind::Set {
+                let mut sorted = l.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                if sorted.len() != l.len() {
+                    return Err(format!("node {v} has duplicate in-slots"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_fig1_graph() -> Graph {
+        // Fig 1a: A..E = 0..4; neighbors:
+        // A<-{B,C,D}, B<-{A,C}, C<-{A,B,E}, D<-{B,C}, E<-{C,D}
+        Graph::from_edges(
+            5,
+            &[
+                (1, 0), (2, 0), (3, 0),
+                (0, 1), (2, 1),
+                (0, 2), (1, 2), (4, 2),
+                (1, 3), (2, 3),
+                (2, 4), (3, 4),
+            ],
+        )
+    }
+
+    #[test]
+    fn trivial_hag_matches_graph_cost() {
+        let g = paper_fig1_graph();
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        assert_eq!(h.e_hat(), g.e());
+        assert_eq!(h.aggregations(), 12 - 5); // sum (deg-1) = |E|-|V|
+        assert_eq!(h.data_transfers(), 12);
+        assert_eq!(h.cost_core(), 12);
+    }
+
+    #[test]
+    fn manual_merge_reduces_cost() {
+        let g = paper_fig1_graph();
+        let mut h = Hag::from_graph(&g, AggregateKind::Set);
+        // merge {B, C} (slots 1, 2), shared by A and D
+        let w = h.slots() as u32;
+        h.agg_nodes.push(AggNode { left: 1, right: 2 });
+        for v in [0usize, 3] {
+            h.in_edges[v].retain(|&s| s != 1 && s != 2);
+            h.in_edges[v].push(w);
+        }
+        h.validate().unwrap();
+        // edges: 12 - 4 + 2 (consumers) + 2 (agg inputs) = 12; |V_A|=1
+        assert_eq!(h.e_hat(), 12);
+        assert_eq!(h.cost_core(), 11);
+        assert_eq!(h.node_cover(0), vec![1, 2, 3]);
+        assert_eq!(h.node_cover(3), vec![1, 2]);
+    }
+
+    #[test]
+    fn cover_nested() {
+        let mut h = Hag {
+            n: 4,
+            agg_nodes: vec![],
+            in_edges: vec![vec![]; 4],
+            kind: AggregateKind::Set,
+        };
+        h.agg_nodes.push(AggNode { left: 1, right: 2 }); // slot 4 = {1,2}
+        h.agg_nodes.push(AggNode { left: 4, right: 3 }); // slot 5 = {1,2,3}
+        h.in_edges[0] = vec![5];
+        assert_eq!(h.cover(5), vec![1, 2, 3]);
+        assert_eq!(h.node_cover(0), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn sequential_cover_preserves_order() {
+        let mut h = Hag {
+            n: 4,
+            agg_nodes: vec![],
+            in_edges: vec![vec![]; 4],
+            kind: AggregateKind::Sequential,
+        };
+        h.agg_nodes.push(AggNode { left: 3, right: 1 }); // slot 4 = (3,1)
+        h.in_edges[0] = vec![4, 2]; // cover = (3,1,2)
+        assert_eq!(h.node_cover(0), vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn validate_rejects_forward_reference() {
+        let mut h = Hag {
+            n: 2,
+            agg_nodes: vec![AggNode { left: 3, right: 0 }],
+            in_edges: vec![vec![], vec![]],
+            kind: AggregateKind::Set,
+        };
+        assert!(h.validate().is_err());
+        h.agg_nodes[0] = AggNode { left: 1, right: 0 };
+        assert!(h.validate().is_ok());
+    }
+
+    #[test]
+    fn cost_function_formula() {
+        let g = paper_fig1_graph();
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        // alpha=1, beta=2: cost = (12-0) + (2-1)*5 = 17
+        assert!((h.cost(1.0, 2.0) - 17.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,487 @@
+//! Plan compiler: lower a [`Hag`] into the padded index tensors the
+//! AOT-compiled XLA executables consume (see python/compile/buckets.py
+//! for the other side of the contract).
+//!
+//! Pipeline:
+//! 1. **Leveling** — aggregation nodes are grouped into topological
+//!    levels (`level(w) = 1 + max(level(left), level(right))`); within a
+//!    level all binary combines are independent and execute as one
+//!    `level_combine` kernel call. Slots are allocated level-major so the
+//!    scatter back into the value buffer is a dense slice update.
+//! 2. **Degree sort** — original nodes are relabeled by *final* in-edge
+//!    count (descending) so that consecutive rows have similar nnz; the
+//!    permutation is recorded for the data packer.
+//! 3. **Banding** — row blocks (`br` rows each) are partitioned into a
+//!    few contiguous *bands*; each band is padded to its own max
+//!    block-nnz. Banding bounds the padding waste a single hub row would
+//!    otherwise impose on every block.
+//! 4. **Padding** — all index padding points at the pinned zero slot
+//!    `m_pad - 1`, making padded contributions exactly zero.
+
+use crate::graph::Graph;
+
+use super::Hag;
+
+/// Static layout knobs (must match the bucket the artifact was built
+/// with; see `Bucket` in python/compile/buckets.py).
+#[derive(Debug, Clone)]
+pub struct PlanConfig {
+    /// Rows per block-CSR block (output tile height).
+    pub br: usize,
+    /// Level tensor quantum (`l_pad` is a multiple of this).
+    pub lvl_block: usize,
+    /// Maximum number of degree bands.
+    pub max_bands: usize,
+    /// nnzb values are rounded up to a multiple of this.
+    pub nnzb_round: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        // max_bands=6: under the scatter implementation the aggregation
+        // cost is proportional to *padded* slots, so banding must track
+        // the degree distribution tightly (perf pass; EXPERIMENTS.md
+        // §Perf).
+        PlanConfig { br: 8, lvl_block: 128, max_bands: 6, nnzb_round: 32 }
+    }
+}
+
+/// The lowered plan: everything the runtime needs to pack literals.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Real node count.
+    pub n: usize,
+    /// Padded node count (multiple of 128 and of `br`).
+    pub n_pad: usize,
+    /// Number of HAG levels (0 for the GNN-graph baseline).
+    pub levels: usize,
+    /// Slots per level (multiple of `lvl_block`; 0 when `levels == 0`).
+    pub l_pad: usize,
+    /// Per band `(nb, nnzb)`; `sum(nb) * br == n_pad`.
+    pub bands: Vec<(usize, usize)>,
+    pub br: usize,
+    pub lvl_block: usize,
+    /// `perm[new_id] = old_id` (degree sort); data packers use this.
+    pub perm: Vec<u32>,
+    /// `inv_perm[old_id] = new_id`.
+    pub inv_perm: Vec<u32>,
+    /// Level combine operands, `[levels * l_pad]` row-major, buffer-slot
+    /// indices (padding -> zero slot).
+    pub lvl_left: Vec<i32>,
+    pub lvl_right: Vec<i32>,
+    /// Per band: gather indices `[nb * nnzb]` row-major.
+    pub band_cols: Vec<Vec<i32>>,
+    /// Per band: local destination rows `[nb * nnzb]`.
+    pub band_rows: Vec<Vec<i32>>,
+    /// True in-degree per *permuted* node, `[n_pad]` (GCN normalizer).
+    pub deg: Vec<f32>,
+}
+
+impl ExecutionPlan {
+    /// Value-buffer length: `n_pad + levels * l_pad + 1` (zero slot last).
+    pub fn m_pad(&self) -> usize {
+        self.n_pad + self.levels * self.l_pad + 1
+    }
+
+    /// Index of the pinned zero slot (all padding points here).
+    pub fn zero_slot(&self) -> i32 {
+        (self.m_pad() - 1) as i32
+    }
+
+    /// Bytes of index tensors (plan memory; §3.2 accounting).
+    pub fn plan_bytes(&self) -> usize {
+        4 * (self.lvl_left.len() + self.lvl_right.len()
+            + self.band_cols.iter().map(|b| b.len()).sum::<usize>()
+            + self.band_rows.iter().map(|b| b.len()).sum::<usize>()
+            + self.deg.len())
+    }
+
+    /// Total padded index slots vs real entries (padding-waste ratio).
+    pub fn padding_ratio(&self, hag: &Hag) -> f64 {
+        let real = hag.e_hat() as f64;
+        let padded = (self.levels * self.l_pad * 2
+            + self.bands.iter().map(|&(nb, nnzb)| nb * nnzb).sum::<usize>())
+            as f64;
+        if real == 0.0 { 1.0 } else { padded / real }
+    }
+}
+
+fn round_up(x: usize, q: usize) -> usize {
+    if q == 0 { x } else { x.div_ceil(q) * q }
+}
+
+/// Lower `hag` (over input graph `g`, for true degrees) into an
+/// [`ExecutionPlan`].
+pub fn build_plan(g: &Graph, hag: &Hag, cfg: &PlanConfig) -> ExecutionPlan {
+    assert_eq!(g.n(), hag.n);
+    let n = hag.n;
+    let n_pad = round_up(n.max(1), 128_usize.max(cfg.br));
+    let na = hag.agg_nodes.len();
+
+    // ---- 1. leveling ----------------------------------------------
+    // level[i] for agg node i (1-based); originals are level 0.
+    let mut level = vec![0u32; na];
+    let mut max_level = 0u32;
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        let lv = |s: u32| -> u32 {
+            if (s as usize) < n { 0 } else { level[s as usize - n] }
+        };
+        level[i] = 1 + lv(a.left).max(lv(a.right));
+        max_level = max_level.max(level[i]);
+    }
+    let levels = max_level as usize;
+    // index within level, assigned in creation order
+    let mut level_sizes = vec![0usize; levels + 1];
+    let mut idx_in_level = vec![0usize; na];
+    for i in 0..na {
+        let l = level[i] as usize;
+        idx_in_level[i] = level_sizes[l];
+        level_sizes[l] += 1;
+    }
+    let l_pad = if levels == 0 {
+        0
+    } else {
+        round_up(level_sizes[1..].iter().copied().max().unwrap_or(0)
+                 .max(1), cfg.lvl_block)
+    };
+
+    // ---- 2. degree sort (by final in-edge count, desc) --------------
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&v| std::cmp::Reverse(hag.in_edges[v as usize].len()));
+    let perm = order; // perm[new] = old
+    let mut inv_perm = vec![0u32; n];
+    for (new, &old) in perm.iter().enumerate() {
+        inv_perm[old as usize] = new as u32;
+    }
+
+    let m_pad = n_pad + levels * l_pad + 1;
+    let zero = (m_pad - 1) as i32;
+
+    // buffer slot of a HAG slot id
+    let slot_of = |s: u32| -> i32 {
+        if (s as usize) < n {
+            inv_perm[s as usize] as i32
+        } else {
+            let i = s as usize - n;
+            (n_pad + (level[i] as usize - 1) * l_pad + idx_in_level[i])
+                as i32
+        }
+    };
+
+    // ---- level tensors ----------------------------------------------
+    let mut lvl_left = vec![zero; levels * l_pad];
+    let mut lvl_right = vec![zero; levels * l_pad];
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        let l = level[i] as usize - 1;
+        let j = idx_in_level[i];
+        lvl_left[l * l_pad + j] = slot_of(a.left);
+        lvl_right[l * l_pad + j] = slot_of(a.right);
+    }
+
+    // ---- 3. banding ---------------------------------------------------
+    let nb_total = n_pad / cfg.br;
+    // nnz per block (over permuted rows)
+    let mut block_nnz = vec![0usize; nb_total];
+    for new in 0..n {
+        let old = perm[new] as usize;
+        block_nnz[new / cfg.br] += hag.in_edges[old].len();
+    }
+    let boundaries = band_boundaries(&block_nnz, cfg.max_bands);
+    let mut bands = Vec::with_capacity(boundaries.len());
+    for w in boundaries.windows(2) {
+        let (s, e) = (w[0], w[1]);
+        let maxnnz = block_nnz[s..e].iter().copied().max().unwrap_or(0);
+        let nnzb = round_up(maxnnz.max(1), cfg.nnzb_round).max(8);
+        bands.push((e - s, nnzb));
+    }
+
+    // ---- 4. fill band tensors ----------------------------------------
+    let mut band_cols: Vec<Vec<i32>> = Vec::with_capacity(bands.len());
+    let mut band_rows: Vec<Vec<i32>> = Vec::with_capacity(bands.len());
+    let mut block0 = 0usize;
+    for &(nb, nnzb) in &bands {
+        let mut cols = vec![zero; nb * nnzb];
+        let mut rows = vec![0i32; nb * nnzb];
+        let mut fill = vec![0usize; nb];
+        for b in 0..nb {
+            let gblock = block0 + b;
+            for r in 0..cfg.br {
+                let new = gblock * cfg.br + r;
+                if new >= n {
+                    continue;
+                }
+                let old = perm[new] as usize;
+                for &s in &hag.in_edges[old] {
+                    let j = fill[b];
+                    debug_assert!(j < nnzb, "band nnzb overflow");
+                    cols[b * nnzb + j] = slot_of(s);
+                    rows[b * nnzb + j] = r as i32;
+                    fill[b] = j + 1;
+                }
+            }
+        }
+        band_cols.push(cols);
+        band_rows.push(rows);
+        block0 += nb;
+    }
+
+    // ---- degrees (true graph degree, permuted) -----------------------
+    let mut deg = vec![0f32; n_pad];
+    for new in 0..n {
+        deg[new] = g.degree(perm[new]) as f32;
+    }
+
+    ExecutionPlan {
+        n,
+        n_pad,
+        levels,
+        l_pad,
+        bands,
+        br: cfg.br,
+        lvl_block: cfg.lvl_block,
+        perm,
+        inv_perm,
+        lvl_left,
+        lvl_right,
+        band_cols,
+        band_rows,
+        deg,
+    }
+}
+
+/// Choose contiguous band boundaries over (descending-ish) block nnz,
+/// minimizing total padded slots `sum(len * max)`. Exhaustive DP over a
+/// bounded candidate-boundary set (log-spaced) keeps this O(C^2 * bands)
+/// regardless of graph size.
+fn band_boundaries(block_nnz: &[usize], max_bands: usize) -> Vec<usize> {
+    let nb = block_nnz.len();
+    if nb == 0 {
+        return vec![0, 0];
+    }
+    if max_bands <= 1 {
+        return vec![0, nb];
+    }
+    // Candidate boundaries: log-spaced positions.
+    let mut cands: Vec<usize> = vec![0, nb];
+    let mut x = 1usize;
+    while x < nb {
+        cands.push(x);
+        x = (x * 3).div_ceil(2); // ~1.5x growth
+    }
+    cands.sort_unstable();
+    cands.dedup();
+    let c = cands.len();
+    // cost of a single band covering cands[i]..cands[j]
+    let seg_cost = |i: usize, j: usize| -> u64 {
+        let (s, e) = (cands[i], cands[j]);
+        let m = block_nnz[s..e].iter().copied().max().unwrap_or(0);
+        ((e - s) as u64) * (m.max(1) as u64)
+    };
+    // dp[k][i] = min cost to cover cands[i]..nb with k bands
+    let inf = u64::MAX / 2;
+    let mut dp = vec![vec![inf; c]; max_bands + 1];
+    let mut nxt = vec![vec![0usize; c]; max_bands + 1];
+    for k in 1..=max_bands {
+        for i in (0..c - 1).rev() {
+            for j in (i + 1)..c {
+                let tail = if j == c - 1 {
+                    0
+                } else if k > 1 {
+                    dp[k - 1][j]
+                } else {
+                    continue;
+                };
+                if tail >= inf {
+                    continue;
+                }
+                let cost = seg_cost(i, j).saturating_add(tail);
+                if cost < dp[k][i] {
+                    dp[k][i] = cost;
+                    nxt[k][i] = j;
+                }
+            }
+        }
+    }
+    // walk
+    let mut best_k = 1;
+    for k in 2..=max_bands {
+        if dp[k][0] < dp[best_k][0] {
+            best_k = k;
+        }
+    }
+    let mut out = vec![0usize];
+    let (mut i, mut k) = (0usize, best_k);
+    while cands[i] != nb {
+        let j = nxt[k][i];
+        out.push(cands[j]);
+        i = j;
+        k -= 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::{hag_search, AggregateKind, SearchConfig};
+
+    fn grid_graph(w: usize, h: usize) -> Graph {
+        let mut edges = Vec::new();
+        let id = |x: usize, y: usize| (y * w + x) as u32;
+        for y in 0..h {
+            for x in 0..w {
+                if x + 1 < w {
+                    edges.push((id(x, y), id(x + 1, y)));
+                }
+                if y + 1 < h {
+                    edges.push((id(x, y), id(x, y + 1)));
+                }
+            }
+        }
+        Graph::from_undirected_edges(w * h, &edges)
+    }
+
+    /// Reference sum-aggregation through plan tensors in f64 — mirrors
+    /// exactly what the XLA artifact computes.
+    fn simulate_plan(plan: &ExecutionPlan, x_old: &[f64]) -> Vec<f64> {
+        let m = plan.m_pad();
+        let mut buf = vec![0f64; m];
+        for new in 0..plan.n {
+            buf[new] = x_old[plan.perm[new] as usize];
+        }
+        for l in 0..plan.levels {
+            let base = plan.n_pad + l * plan.l_pad;
+            for j in 0..plan.l_pad {
+                let li = plan.lvl_left[l * plan.l_pad + j] as usize;
+                let ri = plan.lvl_right[l * plan.l_pad + j] as usize;
+                buf[base + j] = buf[li] + buf[ri];
+            }
+        }
+        let mut out_new = vec![0f64; plan.n_pad];
+        let mut row0 = 0usize;
+        for (bi, &(nb, nnzb)) in plan.bands.iter().enumerate() {
+            for b in 0..nb {
+                for j in 0..nnzb {
+                    let col = plan.band_cols[bi][b * nnzb + j] as usize;
+                    let r = plan.band_rows[bi][b * nnzb + j] as usize;
+                    out_new[row0 + b * plan.br + r] += buf[col];
+                }
+            }
+            row0 += nb * plan.br;
+        }
+        // un-permute
+        let mut out = vec![0f64; plan.n];
+        for new in 0..plan.n {
+            out[plan.perm[new] as usize] = out_new[new];
+        }
+        out
+    }
+
+    fn check_plan_matches_graph(g: &Graph, plan: &ExecutionPlan) {
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        let x: Vec<f64> =
+            (0..g.n()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let got = simulate_plan(plan, &x);
+        for (v, ns) in g.iter() {
+            let want: f64 = ns.iter().map(|&u| x[u as usize]).sum();
+            assert!((got[v as usize] - want).abs() < 1e-9,
+                    "node {v}: {} vs {want}", got[v as usize]);
+        }
+    }
+
+    #[test]
+    fn plan_of_trivial_hag_matches_graph() {
+        let g = grid_graph(7, 5);
+        let hag = Hag::from_graph(&g, AggregateKind::Set);
+        let plan = build_plan(&g, &hag, &PlanConfig::default());
+        assert_eq!(plan.levels, 0);
+        assert_eq!(plan.n_pad % 128, 0);
+        check_plan_matches_graph(&g, &plan);
+    }
+
+    #[test]
+    fn plan_of_searched_hag_matches_graph() {
+        let g = grid_graph(9, 9);
+        let (hag, _) = hag_search(
+            &g, &SearchConfig::paper_default(g.n()).exact());
+        let plan = build_plan(&g, &hag, &PlanConfig::default());
+        if !hag.agg_nodes.is_empty() {
+            assert!(plan.levels >= 1);
+        }
+        check_plan_matches_graph(&g, &plan);
+    }
+
+    #[test]
+    fn plan_of_clique_hag_matches_graph() {
+        let mut edges = Vec::new();
+        for u in 0..20u32 {
+            for v in 0..20u32 {
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let g = Graph::from_edges(20, &edges);
+        let (hag, _) = hag_search(
+            &g,
+            &SearchConfig { capacity: usize::MAX, kind: AggregateKind::Set,
+                            pair_cap: usize::MAX });
+        let plan = build_plan(&g, &hag, &PlanConfig::default());
+        assert!(plan.levels >= 1, "clique must produce hierarchy");
+        check_plan_matches_graph(&g, &plan);
+    }
+
+    #[test]
+    fn degree_sort_orders_rows() {
+        // one hub + leaves: hub must land in row 0 after permutation
+        let mut edges = Vec::new();
+        for u in 1..50u32 {
+            edges.push((u, 0));
+        }
+        let g = Graph::from_edges(50, &edges);
+        let hag = Hag::from_graph(&g, AggregateKind::Set);
+        let plan = build_plan(&g, &hag, &PlanConfig::default());
+        assert_eq!(plan.perm[0], 0, "hub first");
+        assert_eq!(plan.deg[0], 49.0);
+        check_plan_matches_graph(&g, &plan);
+    }
+
+    #[test]
+    fn banding_reduces_padding_on_skewed_degrees() {
+        // hub of degree 500 + 2000 degree-2 nodes
+        let mut edges = Vec::new();
+        for u in 1..=500u32 {
+            edges.push((u, 0));
+        }
+        for v in 501..2501u32 {
+            edges.push((v - 500, v));
+            edges.push((v - 499, v));
+        }
+        let g = Graph::from_edges(2501, &edges);
+        let hag = Hag::from_graph(&g, AggregateKind::Set);
+        let multi = build_plan(&g, &hag, &PlanConfig::default());
+        let single = build_plan(
+            &g, &hag,
+            &PlanConfig { max_bands: 1, ..PlanConfig::default() });
+        let slots = |p: &ExecutionPlan| p.bands.iter()
+            .map(|&(nb, nnzb)| nb * nnzb).sum::<usize>();
+        assert!(slots(&multi) < slots(&single),
+                "banding must reduce padded slots: {} vs {}",
+                slots(&multi), slots(&single));
+        check_plan_matches_graph(&g, &multi);
+        check_plan_matches_graph(&g, &single);
+    }
+
+    #[test]
+    fn l_pad_quantized() {
+        let g = grid_graph(9, 9);
+        let (hag, _) = hag_search(
+            &g, &SearchConfig::paper_default(g.n()).exact());
+        let plan = build_plan(&g, &hag, &PlanConfig::default());
+        if plan.levels > 0 {
+            assert_eq!(plan.l_pad % plan.lvl_block, 0);
+        }
+        assert_eq!(plan.m_pad(),
+                   plan.n_pad + plan.levels * plan.l_pad + 1);
+    }
+}

@@ -1,0 +1,558 @@
+//! Algorithm 3 — the HAG search algorithm.
+//!
+//! Greedy redundancy elimination: repeatedly find the pair of slots
+//! `(v1, v2)` co-aggregated by the most consumers, materialize a new
+//! aggregation node `w = v1 (+) v2`, and rewire every consumer of both to
+//! consume `w` instead. Each iteration removes `redundancy - 1` binary
+//! aggregations. Guarantees (paper §4): global optimum for sequential
+//! AGGREGATE (Theorem 2), `(1 - 1/e)`-approximation for set AGGREGATE
+//! (Theorem 3).
+//!
+//! Implementation notes (Appendix D realized):
+//! * a lazy max-heap keyed by redundancy holds candidate pairs; stale
+//!   entries are dropped on pop by consulting the exact count map;
+//! * set-AGGREGATE pair counts are maintained incrementally: a merge
+//!   touches only the consumers of the merged pair, so only pairs
+//!   involving `v1`, `v2`, or `w` within those consumers' lists change;
+//! * for hub consumers, enumerating all `C(deg, 2)` pairs is quadratic —
+//!   `pair_cap` bounds the per-consumer window (the first `pair_cap`
+//!   list positions generate pairs). Exact when every degree fits the
+//!   cap; on hub-heavy graphs this trades a slightly smaller search
+//!   space for near-linear runtime. The window re-fills as merges shrink
+//!   the lists, so coverage recovers as the search progresses.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::Graph;
+use crate::util::FxHashMap as HashMap;
+
+use super::{AggNode, AggregateKind, Hag, Slot};
+
+/// Tuning knobs for [`hag_search`].
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Upper bound on `|V_A|`. The paper's default for the evaluation is
+    /// `|V| / 4` (§5.2); `usize::MAX` means unbounded (Theorem 2 setting
+    /// requires `capacity >= |E|`).
+    pub capacity: usize,
+    /// Set or sequential AGGREGATE (drives the redundancy definition).
+    pub kind: AggregateKind,
+    /// Per-consumer candidate-pair window (set AGGREGATE only); see
+    /// module docs. `usize::MAX` = exact.
+    pub pair_cap: usize,
+}
+
+impl SearchConfig {
+    /// Paper §5.2 defaults: capacity = |V|/4, set aggregate.
+    pub fn paper_default(n: usize) -> Self {
+        SearchConfig {
+            capacity: n / 4,
+            kind: AggregateKind::Set,
+            pair_cap: 64,
+        }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    pub fn with_kind(mut self, kind: AggregateKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn exact(mut self) -> Self {
+        self.pair_cap = usize::MAX;
+        self
+    }
+}
+
+/// Search statistics, reported by benches and `repro search`.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    pub iterations: usize,
+    pub agg_nodes: usize,
+    pub aggregations_before: usize,
+    pub aggregations_after: usize,
+    pub transfers_before: usize,
+    pub transfers_after: usize,
+    pub elapsed_ms: f64,
+}
+
+/// Run Algorithm 3 on `g`, returning the optimized HAG and stats.
+pub fn hag_search(g: &Graph, cfg: &SearchConfig) -> (Hag, SearchStats) {
+    let t0 = std::time::Instant::now();
+    let mut hag = Hag::from_graph(g, cfg.kind);
+    let before_aggs = hag.aggregations();
+    let before_tx = hag.data_transfers();
+    let iterations = match cfg.kind {
+        AggregateKind::Set => search_set(&mut hag, cfg),
+        AggregateKind::Sequential => search_sequential(&mut hag, cfg),
+    };
+    let stats = SearchStats {
+        iterations,
+        agg_nodes: hag.agg_nodes.len(),
+        aggregations_before: before_aggs,
+        aggregations_after: hag.aggregations(),
+        transfers_before: before_tx,
+        transfers_after: hag.data_transfers(),
+        elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    (hag, stats)
+}
+
+/// Normalize an unordered pair to `(lo, hi)`.
+#[inline]
+fn norm(a: Slot, b: Slot) -> (Slot, Slot) {
+    if a < b { (a, b) } else { (b, a) }
+}
+
+// ===================================================================
+// Set AGGREGATE
+// ===================================================================
+
+struct SetState {
+    /// consumers[slot] -> sorted Vec of original-node consumers.
+    consumers: Vec<Vec<u32>>,
+    /// Exact redundancy count per candidate pair.
+    pair_count: HashMap<(Slot, Slot), u32>,
+    /// Lazy max-heap of (count, pair); entries may be stale.
+    heap: BinaryHeap<(u32, Reverse<(Slot, Slot)>)>,
+}
+
+fn search_set(hag: &mut Hag, cfg: &SearchConfig) -> usize {
+    // With a finite pair_cap the candidate window misses pairs beyond
+    // the first `cap` list positions. Merges shrink lists, so
+    // re-scanning after the heap drains recovers coverage: run rounds
+    // until a round makes no progress or capacity is reached.
+    let mut total = 0usize;
+    loop {
+        let made = search_set_round(hag, cfg);
+        total += made;
+        if made == 0 || hag.agg_nodes.len() >= cfg.capacity
+            || cfg.pair_cap == usize::MAX
+        {
+            return total;
+        }
+    }
+}
+
+fn search_set_round(hag: &mut Hag, cfg: &SearchConfig) -> usize {
+    let slots = hag.slots();
+    // Build consumer lists over *all* current slots (merges may pair an
+    // aggregation node with anything).
+    let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); slots];
+    for (v, l) in hag.in_edges.iter().enumerate() {
+        for &s in l {
+            consumers[s as usize].push(v as u32);
+        }
+    }
+    debug_assert!(consumers.iter()
+        .all(|c| c.windows(2).all(|p| p[0] < p[1])));
+    let mut st = SetState {
+        consumers,
+        pair_count: HashMap::default(),
+        heap: BinaryHeap::new(),
+    };
+    for l in hag.in_edges.iter() {
+        let w = l.len().min(cfg.pair_cap);
+        for i in 0..w {
+            for j in (i + 1)..w {
+                let p = norm(l[i], l[j]);
+                *st.pair_count.entry(p).or_insert(0) += 1;
+            }
+        }
+    }
+    for (&p, &c) in st.pair_count.iter() {
+        if c >= 2 {
+            st.heap.push((c, Reverse(p)));
+        }
+    }
+
+    let exact = cfg.pair_cap == usize::MAX;
+    let mut iterations = 0usize;
+    while hag.agg_nodes.len() < cfg.capacity {
+        // Pop the highest-redundancy non-stale pair.
+        let (v1, v2, red) = loop {
+            match st.heap.pop() {
+                None => return iterations,
+                Some((c, Reverse(p))) => {
+                    let cur = st.pair_count.get(&p).copied().unwrap_or(0);
+                    if cur == c && c >= 2 {
+                        break (p.0, p.1, c);
+                    }
+                    // stale: if the current count is still >= 2 the pair
+                    // was re-pushed on update; just drop this entry.
+                }
+            }
+        };
+
+        // The merge is driven by the *live* consumer intersection: with
+        // a finite pair_cap the windowed count can drift below the true
+        // redundancy, so the intersection is the source of truth.
+        let shared = intersect_sorted(&st.consumers[v1 as usize],
+                                      &st.consumers[v2 as usize]);
+        if exact {
+            debug_assert_eq!(shared.len() as u32, red,
+                             "exact mode: count must match intersection");
+        }
+        st.pair_count.remove(&norm(v1, v2));
+        if shared.len() < 2 {
+            // Windowed count drifted: merging would add a node that
+            // saves nothing. Skip.
+            continue;
+        }
+
+        // Materialize w = v1 (+) v2.
+        let w = hag.slots() as Slot;
+        hag.agg_nodes.push(AggNode { left: v1, right: v2 });
+        st.consumers.push(Vec::new());
+
+        for &u in &shared {
+            let list = &mut hag.in_edges[u as usize];
+            let old_w = list.len().min(cfg.pair_cap);
+            // Pairs inside the old window disappear for v1/v2 entries.
+            remove_window_pairs(&mut st.pair_count, list, old_w, v1, v2);
+            list.retain(|&s| s != v1 && s != v2);
+            list.push(w);
+            add_window_pairs(&mut st.pair_count, &mut st.heap, list,
+                             cfg.pair_cap);
+            st.consumers[w as usize].push(u);
+        }
+        // Remove the rewired consumers from v1/v2 consumer lists
+        // (`shared` is sorted, so binary_search is valid).
+        for &v in &[v1, v2] {
+            let cs = &mut st.consumers[v as usize];
+            cs.retain(|u| shared.binary_search(u).is_err());
+        }
+        debug_assert!(st.consumers[w as usize].windows(2)
+            .all(|p| p[0] < p[1]));
+
+        iterations += 1;
+    }
+    iterations
+}
+
+/// Remove every windowed pair of `list` that involves `v1` or `v2`
+/// (the entries about to be rewired), decrementing counts.
+fn remove_window_pairs(pc: &mut HashMap<(Slot, Slot), u32>, list: &[Slot],
+                       w: usize, v1: Slot, v2: Slot) {
+    for i in 0..w {
+        for j in (i + 1)..w {
+            let (a, b) = (list[i], list[j]);
+            if a == v1 || a == v2 || b == v1 || b == v2 {
+                let p = norm(a, b);
+                if let Some(c) = pc.get_mut(&p) {
+                    *c = c.saturating_sub(1);
+                    if *c == 0 {
+                        pc.remove(&p);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Count windowed pairs involving the just-appended last element (the
+/// new `w` slot). If the list outgrew the window the new element is
+/// outside it and no pairs are added — with a finite `pair_cap` counts
+/// may *under*estimate true redundancy (never overestimate it from this
+/// path), which the merge loop tolerates by re-checking the live
+/// intersection.
+fn add_window_pairs(pc: &mut HashMap<(Slot, Slot), u32>,
+                    heap: &mut BinaryHeap<(u32, Reverse<(Slot, Slot)>)>,
+                    list: &[Slot], cap: usize) {
+    if list.len() > cap {
+        return; // appended element is outside the window
+    }
+    let last = list.len() - 1;
+    for i in 0..last {
+        let p = norm(list[i], list[last]);
+        let c = pc.entry(p).or_insert(0);
+        *c += 1;
+        if *c >= 2 {
+            heap.push((*c, Reverse(p)));
+        }
+    }
+}
+
+fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+// ===================================================================
+// Sequential AGGREGATE (common-prefix merging, Algorithm 3 line 8)
+// ===================================================================
+
+fn search_sequential(hag: &mut Hag, cfg: &SearchConfig) -> usize {
+    // Redundancy of (v1, v2) = #consumers whose list starts (v1, v2).
+    // A merge replaces that prefix with (w, rest...), so each consumer's
+    // first-two pair changes — counts update in O(1) per consumer.
+    let mut pair_count: HashMap<(Slot, Slot), u32> = HashMap::default();
+    let mut members: HashMap<(Slot, Slot), Vec<u32>> = HashMap::default();
+    for (v, l) in hag.in_edges.iter().enumerate() {
+        if l.len() >= 2 {
+            let p = (l[0], l[1]); // ordered pair!
+            *pair_count.entry(p).or_insert(0) += 1;
+            members.entry(p).or_default().push(v as u32);
+        }
+    }
+    let mut heap: BinaryHeap<(u32, Reverse<(Slot, Slot)>)> = pair_count
+        .iter()
+        .filter(|(_, &c)| c >= 2)
+        .map(|(&p, &c)| (c, Reverse(p)))
+        .collect();
+
+    let mut iterations = 0usize;
+    while hag.agg_nodes.len() < cfg.capacity {
+        let (p, _red) = loop {
+            match heap.pop() {
+                None => return iterations,
+                Some((c, Reverse(p))) => {
+                    let cur = pair_count.get(&p).copied().unwrap_or(0);
+                    if cur == c && c >= 2 {
+                        break (p, c);
+                    }
+                }
+            }
+        };
+        let w = hag.slots() as Slot;
+        hag.agg_nodes.push(AggNode { left: p.0, right: p.1 });
+        let users = members.remove(&p).unwrap_or_default();
+        pair_count.remove(&p);
+        for u in users {
+            let list = &mut hag.in_edges[u as usize];
+            // Membership lists are kept exact (a consumer's prefix only
+            // changes when its pair is merged, which consumes the
+            // membership), but guard defensively.
+            if list.len() < 2 || (list[0], list[1]) != p {
+                debug_assert!(false, "stale sequential membership");
+                continue;
+            }
+            list.splice(0..2, [w]);
+            if list.len() >= 2 {
+                let np = (list[0], list[1]);
+                let c = pair_count.entry(np).or_insert(0);
+                *c += 1;
+                members.entry(np).or_default().push(u);
+                if *c >= 2 {
+                    heap.push((*c, Reverse(np)));
+                }
+            }
+        }
+        iterations += 1;
+    }
+    iterations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::check_equivalence;
+
+    fn fig1() -> Graph {
+        Graph::from_edges(
+            5,
+            &[
+                (1, 0), (2, 0), (3, 0),
+                (0, 1), (2, 1),
+                (0, 2), (1, 2), (4, 2),
+                (1, 3), (2, 3),
+                (2, 4), (3, 4),
+            ],
+        )
+    }
+
+    #[test]
+    fn set_search_on_fig1_finds_shared_pairs() {
+        let g = fig1();
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (h, stats) = hag_search(&g, &cfg);
+        h.validate().unwrap();
+        check_equivalence(&g, &h).unwrap();
+        // Fig 1: {B,C} (consumers A, D) and {C,D} (consumers A, E) both
+        // have redundancy 2, but they overlap in consumer A — greedy
+        // takes one of them, after which the other drops below 2. One
+        // merge, one aggregation saved.
+        assert_eq!(stats.agg_nodes, 1, "{stats:?}");
+        assert_eq!(h.aggregations(),
+                   Hag::from_graph(&g, AggregateKind::Set)
+                       .aggregations() - 1);
+    }
+
+    #[test]
+    fn set_search_respects_capacity() {
+        let g = fig1();
+        let cfg = SearchConfig {
+            capacity: 1,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (h, stats) = hag_search(&g, &cfg);
+        assert_eq!(h.agg_nodes.len(), 1);
+        assert_eq!(stats.iterations, 1);
+        check_equivalence(&g, &h).unwrap();
+    }
+
+    #[test]
+    fn set_search_zero_capacity_is_identity() {
+        let g = fig1();
+        let cfg = SearchConfig {
+            capacity: 0,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (h, stats) = hag_search(&g, &cfg);
+        assert_eq!(h.agg_nodes.len(), 0);
+        assert_eq!(stats.aggregations_after, stats.aggregations_before);
+        check_equivalence(&g, &h).unwrap();
+    }
+
+    #[test]
+    fn set_search_no_redundancy_no_merges() {
+        // path graph: no two nodes share 2+ common in-neighbors
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (h, _) = hag_search(&g, &cfg);
+        assert_eq!(h.agg_nodes.len(), 0);
+    }
+
+    #[test]
+    fn set_search_clique_saves_many() {
+        // K6: every node aggregates the other 5; massive overlap.
+        let mut edges = Vec::new();
+        for u in 0..6u32 {
+            for v in 0..6u32 {
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let g = Graph::from_edges(6, &edges);
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (h, stats) = hag_search(&g, &cfg);
+        check_equivalence(&g, &h).unwrap();
+        assert!(stats.aggregations_after < stats.aggregations_before,
+                "{stats:?}");
+    }
+
+    #[test]
+    fn seq_search_merges_common_prefixes() {
+        // Three nodes aggregate the ordered prefix (5, 6):
+        let mut edges_by_node: Vec<Vec<u32>> = vec![vec![]; 8];
+        edges_by_node[0] = vec![5, 6, 7];
+        edges_by_node[1] = vec![5, 6];
+        edges_by_node[2] = vec![5, 6, 3];
+        let mut b = crate::graph::GraphBuilder::new(8);
+        for (v, l) in edges_by_node.iter().enumerate() {
+            for &u in l {
+                b.edge(u, v as u32);
+            }
+        }
+        let g = b.build();
+        // NB: CSR sorts neighbors ascending, so ordered lists here are
+        // the sorted ones; prefix (5,6) is shared by nodes 0 and 1; node
+        // 2's sorted list is (3,5,6) — prefix (3,5).
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Sequential,
+            pair_cap: usize::MAX,
+        };
+        let (h, stats) = hag_search(&g, &cfg);
+        h.validate().unwrap();
+        check_equivalence(&g, &h).unwrap();
+        assert!(stats.agg_nodes >= 1);
+        assert!(stats.aggregations_after <= stats.aggregations_before);
+    }
+
+    #[test]
+    fn seq_search_chains_prefixes() {
+        // Two nodes share a long ordered prefix (1,2,3,4): expect chained
+        // merges w1=(1,2), w2=(w1,3), w3=(w2,4).
+        let mut b = crate::graph::GraphBuilder::new(7);
+        for v in [5u32, 6u32] {
+            for u in [1u32, 2, 3, 4] {
+                b.edge(u, v);
+            }
+        }
+        let g = b.build();
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Sequential,
+            pair_cap: usize::MAX,
+        };
+        let (h, _) = hag_search(&g, &cfg);
+        check_equivalence(&g, &h).unwrap();
+        assert_eq!(h.agg_nodes.len(), 3);
+        // each consumer now aggregates exactly one slot
+        assert_eq!(h.in_edges[5].len(), 1);
+        assert_eq!(h.in_edges[6].len(), 1);
+        // aggregations: 3 (chain) vs 6 before
+        assert_eq!(h.aggregations(), 3);
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let g = fig1();
+        let cfg = SearchConfig::paper_default(g.n());
+        let (h1, _) = hag_search(&g, &cfg);
+        let (h2, _) = hag_search(&g, &cfg);
+        assert_eq!(h1.agg_nodes, h2.agg_nodes);
+        assert_eq!(h1.in_edges, h2.in_edges);
+    }
+
+    #[test]
+    fn monotone_cost_in_capacity() {
+        // More capacity can never hurt under the cost model (f monotone,
+        // Theorem 3's premise).
+        let mut edges = Vec::new();
+        for u in 0..12u32 {
+            for v in 0..12u32 {
+                if u != v && (u + v) % 3 != 0 {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let g = Graph::from_edges(12, &edges);
+        let mut last = usize::MAX;
+        for cap in [0usize, 1, 2, 4, 8, 16, 64] {
+            let cfg = SearchConfig {
+                capacity: cap,
+                kind: AggregateKind::Set,
+                pair_cap: usize::MAX,
+            };
+            let (h, _) = hag_search(&g, &cfg);
+            check_equivalence(&g, &h).unwrap();
+            let c = h.cost_core();
+            assert!(c <= last, "cost went up at capacity {cap}");
+            last = c;
+        }
+    }
+}

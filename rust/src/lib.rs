@@ -1,0 +1,25 @@
+//! # repro — Redundancy-Free Computation Graphs for GNNs (HAG)
+//!
+//! A rust + JAX + Pallas reproduction of *"Redundancy-Free Computation
+//! Graphs for Graph Neural Networks"* (Jia et al., 2019): GNN neighbor
+//! aggregation de-duplicated through **Hierarchically Aggregated
+//! computation Graphs**.
+//!
+//! Architecture (three layers, Python never on the hot path):
+//! * **L3 (this crate)** — graph substrate, the HAG search algorithm
+//!   (paper Algorithm 3), plan compiler, PJRT runtime, training
+//!   coordinator and inference server, dataset generators, benches.
+//! * **L2 (python/compile/model.py)** — GCN / GraphSAGE-P fwd+bwd in
+//!   JAX, AOT-lowered to HLO text per shape bucket.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the
+//!   aggregation hot-spots, lowered inside the L2 HLO.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod coordinator;
+pub mod datasets;
+pub mod graph;
+pub mod hag;
+pub mod runtime;
+pub mod util;

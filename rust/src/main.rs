@@ -1,0 +1,287 @@
+//! `repro` — CLI for the HAG reproduction.
+//!
+//! Typical flow:
+//! ```text
+//! repro stats                         # Table 2 (dataset statistics)
+//! repro search --dataset BZR         # run Algorithm 3, print savings
+//! repro emit-buckets --scale 0.05    # phase 1 of the AOT build
+//! make artifacts                     # phase 2 (python, once)
+//! repro train --dataset BZR --repr hag --epochs 50
+//! repro serve --dataset BZR --requests 500
+//! repro bench-fig2 / bench-fig3 / bench-fig4
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
+use repro::datasets;
+use repro::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
+use repro::runtime::Runtime;
+use repro::util::cli::Args;
+use repro::util::Rng;
+
+const USAGE: &str = "\
+repro — Redundancy-free GNN computation graphs (HAG)
+
+USAGE: repro <subcommand> [options]
+
+SUBCOMMANDS
+  stats          Table 2: dataset stand-in statistics
+  search         run Algorithm 3, report savings + equivalence
+  emit-buckets   write artifacts/buckets.json (AOT build phase 1)
+  train          train a 2-layer GCN (gnn-graph or hag repr)
+  infer          one-shot full-graph inference latency
+  serve          batched scoring server with latency percentiles
+  bench-fig2     Fig 2: end-to-end train + inference comparison
+  bench-fig3     Fig 3: aggregation/data-transfer reductions
+  bench-fig4     Fig 4: capacity sweep on COLLAB
+
+COMMON OPTIONS
+  --artifacts DIR   artifact directory        [artifacts]
+  --dataset NAME    BZR | PPI | REDDIT | IMDB | COLLAB
+  --datasets NAME   (repeatable) subset for emit-buckets / bench-fig2
+  --scale F         dataset scale factor      [0.05]
+  --seed N          generator seed            [7]
+  --repr R          gnn | hag                 [hag]
+  --epochs N        training epochs           [20]
+  --model M         gcn | sage                [gcn]
+  --capacity-frac F search capacity / |V|     [0.25]
+  --kind K          set | seq (bench-fig3 / search)
+  --fig4            (emit-buckets) include Fig-4 sweep buckets
+  --requests N --max-batch N --concurrency N  (serve)
+  --report-memory   (bench-fig4) print §3.2 memory accounting
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts: PathBuf = args
+        .get_or::<String>("artifacts", "artifacts".into())?.into();
+    let scale = args.get_or("scale", 0.05)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let sub = args.subcommand.clone().unwrap_or_default();
+    let r = match sub.as_str() {
+        "stats" => cmd_stats(scale, seed),
+        "search" => cmd_search(&args, scale, seed),
+        "emit-buckets" => cmd_emit_buckets(&args, &artifacts, scale,
+                                           seed),
+        "train" => cmd_train(&args, &artifacts, scale, seed),
+        "infer" => cmd_infer(&args, &artifacts, scale, seed),
+        "serve" => cmd_serve(&args, &artifacts, scale, seed),
+        "bench-fig2" => repro::bench::fig2(
+            &artifacts, args.get_all("datasets"), scale, seed,
+            args.get_or("epochs", 10usize)?),
+        "bench-fig3" => repro::bench::fig3(parse_kind(&args)?, scale,
+                                           seed),
+        "bench-fig4" => repro::bench::fig4(
+            &artifacts, args.get_or("scale", 0.02)?, seed,
+            args.get_or("epochs", 5usize)?,
+            args.flag("report-memory")?),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    };
+    args.finish()?;
+    r
+}
+
+fn parse_kind(args: &Args) -> Result<AggregateKind> {
+    Ok(match args.get_or::<String>("kind", "set".into())?.as_str() {
+        "set" => AggregateKind::Set,
+        "seq" | "sequential" => AggregateKind::Sequential,
+        other => bail!("--kind must be set|seq, got {other:?}"),
+    })
+}
+
+fn parse_repr(args: &Args) -> Result<Repr> {
+    Ok(match args.get_or::<String>("repr", "hag".into())?.as_str() {
+        "gnn" | "gnn-graph" => Repr::GnnGraph,
+        "hag" => Repr::Hag,
+        other => bail!("--repr must be gnn|hag, got {other:?}"),
+    })
+}
+
+fn req_dataset(args: &Args) -> Result<String> {
+    args.get::<String>("dataset")?
+        .context("--dataset is required (BZR|PPI|REDDIT|IMDB|COLLAB)")
+}
+
+fn cmd_stats(scale: f64, seed: u64) -> Result<()> {
+    println!("Table 2 — dataset stand-ins at scale {scale} (paper-scale \
+              targets in parentheses)");
+    println!("{:<10} {:>10} {:>12} {:>8} {:>8}  task", "name", "nodes",
+             "edges", "deg", "dens%");
+    for &(name, n0, e0, task) in datasets::PAPER_TABLE2 {
+        let ds = datasets::load(
+            name, repro::bench::effective_scale(name, scale), seed);
+        let (_, mean_deg, _) = ds.graph.degree_stats();
+        println!(
+            "{:<10} {:>10} {:>12} {:>8.1} {:>8.3}  {:?}  (paper: {} / {})",
+            name, ds.n(), ds.e(), mean_deg,
+            100.0 * ds.graph.density(), task, n0, e0);
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let ds = datasets::load(&name, scale, seed);
+    let kind = parse_kind(args)?;
+    let frac = args.get_or("capacity-frac", 0.25)?;
+    let cfg = SearchConfig::paper_default(ds.graph.n())
+        .with_capacity((ds.graph.n() as f64 * frac) as usize)
+        .with_kind(kind);
+    let (hag, stats) = hag_search(&ds.graph, &cfg);
+    repro::hag::check_equivalence_probabilistic(&ds.graph, &hag, seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("dataset       : {} (n={}, e={})", ds.name, ds.n(), ds.e());
+    println!("kind          : {kind:?}   capacity: {}", cfg.capacity);
+    println!("agg nodes     : {}", stats.agg_nodes);
+    println!("aggregations  : {} -> {}  ({:.2}x)",
+             stats.aggregations_before, stats.aggregations_after,
+             stats.aggregations_before as f64
+                 / stats.aggregations_after.max(1) as f64);
+    println!("data transfers: {} -> {}  ({:.2}x)",
+             stats.transfers_before, stats.transfers_after,
+             stats.transfers_before as f64
+                 / stats.transfers_after.max(1) as f64);
+    println!("search time   : {:.1} ms  ({} merges)", stats.elapsed_ms,
+             stats.iterations);
+    println!("equivalence   : OK (probabilistic, Theorem 1)");
+    Ok(())
+}
+
+fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
+                    seed: u64) -> Result<()> {
+    let mut names = args.get_all("datasets");
+    if names.is_empty() {
+        names = datasets::names().iter().map(|s| s.to_string()).collect();
+    }
+    let mut sets = Vec::new();
+    for name in &names {
+        let s = repro::bench::effective_scale(name, scale);
+        eprintln!("[emit-buckets] generating {name} at scale {s:.4}");
+        sets.push(datasets::load(name, s, seed));
+    }
+    let out = artifacts.join("buckets.json");
+    let mut buckets = coordinator::emit_buckets(
+        &sets, &PlanConfig::default(), &out)?;
+    if args.flag("fig4")? {
+        eprintln!("[emit-buckets] adding Fig-4 capacity sweep buckets");
+        buckets.extend(repro::bench::fig4_buckets(
+            args.get_or("fig4-scale", 0.02)?, seed)?);
+        coordinator::write_buckets_json(&buckets, &out)?;
+    }
+    println!("wrote {} buckets -> {}", buckets.len(), out.display());
+    println!("now run: make artifacts");
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &PathBuf, scale: f64,
+             seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let repr = parse_repr(args)?;
+    let epochs = args.get_or("epochs", 20usize)?;
+    let model = args.get_or::<String>("model", "gcn".into())?;
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let lowered =
+        lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+    let runtime = Arc::new(Runtime::open(artifacts)?);
+    let aname = coordinator::artifact_name(&model, "train",
+                                           &lowered.bucket);
+    let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
+    let mut trainer = coordinator::Trainer::new(runtime, &aname,
+                                                &workload, seed)?;
+    let report = trainer.train(epochs, 1.max(epochs / 10))?;
+    println!("artifact      : {}", report.artifact);
+    println!("epochs        : {}", report.epochs.len());
+    println!("final loss    : {:.4}", report.final_loss());
+    println!("final accuracy: {:.3}", report.final_accuracy());
+    println!("mean epoch    : {:.1} ms", report.mean_epoch_ms);
+    Ok(())
+}
+
+fn cmd_infer(args: &Args, artifacts: &PathBuf, scale: f64,
+             seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let repr = parse_repr(args)?;
+    let repeats = args.get_or("repeats", 10usize)?;
+    let model = args.get_or::<String>("model", "gcn".into())?;
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let lowered =
+        lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+    let runtime = Arc::new(Runtime::open(artifacts)?);
+    let aname = coordinator::artifact_name(&model, "infer",
+                                           &lowered.bucket);
+    let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
+    let ms = repro::bench::measure_inference(&runtime, &aname, &workload,
+                                             seed, repeats)?;
+    println!("artifact : {aname}");
+    println!("inference: median {ms:.2} ms ({} nodes)", ds.n());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
+             seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let repr = parse_repr(args)?;
+    let requests = args.get_or("requests", 500usize)?;
+    let max_batch = args.get_or("max-batch", 64usize)?;
+    let concurrency = args.get_or("concurrency", 8usize)?;
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let lowered =
+        lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+    let aname = coordinator::artifact_name("gcn", "infer",
+                                           &lowered.bucket);
+    let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
+    let server = coordinator::InferenceServer::spawn(
+        artifacts.clone(), &aname, &workload, &lowered.plan,
+        coordinator::BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        seed)?;
+    let n = ds.n() as u32;
+    let f_in = ds.f_in;
+    let mut handles = Vec::new();
+    for c in 0..concurrency {
+        let tx = server.client();
+        let per = requests / concurrency.max(1);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(seed + c as u64);
+            for _ in 0..per {
+                let (otx, orx) = coordinator::server::oneshot();
+                let req = coordinator::ScoreRequest {
+                    node: rng.range_u32(0, n),
+                    features: (0..f_in)
+                        .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+                    reply: otx,
+                    submitted: std::time::Instant::now(),
+                };
+                if tx.send(req).is_err() {
+                    break;
+                }
+                let _ = orx.recv();
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let stats = server.shutdown();
+    println!("requests   : {}", stats.requests);
+    println!("batches    : {} (mean size {:.1})", stats.batches,
+             stats.mean_batch);
+    println!("latency    : p50 {:.2} ms  p99 {:.2} ms", stats.p50_ms,
+             stats.p99_ms);
+    println!("exec       : mean {:.2} ms/batch", stats.mean_exec_ms);
+    println!("throughput : {:.0} req/s", stats.throughput_rps);
+    Ok(())
+}

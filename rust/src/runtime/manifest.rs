@@ -1,0 +1,254 @@
+//! `artifacts/manifest.json` schema — the contract written by
+//! `python/compile/aot.py` and consumed by the runtime and coordinator.
+//! Parsed with the in-tree JSON substrate (`util::json`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One tensor in the flat input/output layout.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|x| x.as_usize().context("bad shape entry"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.req_str("dtype")?.to_string();
+        if dtype != "f32" && dtype != "i32" {
+            bail!("unsupported dtype {dtype:?}");
+        }
+        Ok(TensorSpec { name: v.req_str("name")?.to_string(), shape,
+                        dtype })
+    }
+}
+
+/// Static bucket dims, mirroring `python/compile/buckets.py::Bucket`.
+#[derive(Debug, Clone)]
+pub struct BucketSpec {
+    pub name: String,
+    pub n_pad: usize,
+    pub f_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub levels: usize,
+    pub l_pad: usize,
+    pub bands: Vec<(usize, usize)>,
+    pub br: usize,
+    pub lvl_block: usize,
+    pub g_pad: usize,
+    /// Band segment-sum implementation: "mxu" (Pallas one-hot matmul,
+    /// the TPU-shaped path) or "scatter" (XLA scatter-add, CPU-optimal
+    /// — see EXPERIMENTS.md §Perf).
+    pub impl_: String,
+}
+
+impl BucketSpec {
+    pub fn m_pad(&self) -> usize {
+        self.n_pad + self.levels * self.l_pad + 1
+    }
+
+    pub fn is_graph_cls(&self) -> bool {
+        self.g_pad > 0
+    }
+
+    /// Does a lowered [`ExecutionPlan`](crate::hag::ExecutionPlan) fit
+    /// this bucket exactly? (Plans are built to the bucket; this guards
+    /// drift between `emit-buckets` output and a later search run.)
+    pub fn fits(&self, plan: &crate::hag::ExecutionPlan) -> bool {
+        self.n_pad == plan.n_pad
+            && self.levels == plan.levels
+            && self.l_pad == plan.l_pad
+            && self.br == plan.br
+            && self.bands.len() == plan.bands.len()
+            && self.bands.iter().zip(&plan.bands)
+                .all(|(a, b)| a == b)
+    }
+
+    pub fn from_json(v: &Value) -> Result<BucketSpec> {
+        let bands = v
+            .req_arr("bands")?
+            .iter()
+            .map(|b| {
+                let p = b.as_arr().filter(|p| p.len() == 2)
+                    .context("band must be [nb, nnzb]")?;
+                Ok((p[0].as_usize().context("bad nb")?,
+                    p[1].as_usize().context("bad nnzb")?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BucketSpec {
+            name: v.req_str("name")?.to_string(),
+            n_pad: v.req_usize("n_pad")?,
+            f_in: v.req_usize("f_in")?,
+            hidden: v.req_usize("hidden")?,
+            classes: v.req_usize("classes")?,
+            levels: v.req_usize("levels")?,
+            l_pad: v.req_usize("l_pad")?,
+            bands,
+            br: v.req_usize("br")?,
+            lvl_block: v.req_usize("lvl_block")?,
+            g_pad: v.req_usize("g_pad")?,
+            impl_: v.get("impl").and_then(|x| x.as_str())
+                .unwrap_or("mxu").to_string(),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::str_(self.name.clone())),
+            ("n_pad", json::num(self.n_pad as f64)),
+            ("f_in", json::num(self.f_in as f64)),
+            ("hidden", json::num(self.hidden as f64)),
+            ("classes", json::num(self.classes as f64)),
+            ("levels", json::num(self.levels as f64)),
+            ("l_pad", json::num(self.l_pad as f64)),
+            ("bands", Value::Arr(
+                self.bands.iter()
+                    .map(|&(nb, nnzb)| Value::Arr(vec![
+                        json::num(nb as f64), json::num(nnzb as f64)]))
+                    .collect())),
+            ("br", json::num(self.br as f64)),
+            ("lvl_block", json::num(self.lvl_block as f64)),
+            ("g_pad", json::num(self.g_pad as f64)),
+            ("impl", json::str_(self.impl_.clone())),
+        ])
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// "gcn" | "sage"
+    pub model: String,
+    /// "train" | "infer"
+    pub kind: String,
+    pub bucket: BucketSpec,
+    pub lr: f64,
+    pub key: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of the named input in the flat layout.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+
+    fn from_json(v: &Value) -> Result<ArtifactSpec> {
+        let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req_arr(key)?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(ArtifactSpec {
+            name: v.req_str("name")?.to_string(),
+            file: v.req_str("file")?.to_string(),
+            model: v.req_str("model")?.to_string(),
+            kind: v.req_str("kind")?.to_string(),
+            bucket: BucketSpec::from_json(v.req("bucket")?)?,
+            lr: v.req_f64("lr")?,
+            key: v.get("key").and_then(|k| k.as_str()).unwrap_or("")
+                .to_string(),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let data = std::fs::read_to_string(path).with_context(|| {
+            format!("reading manifest {} — run `make artifacts`",
+                    path.display())
+        })?;
+        Self::parse(&data)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(data: &str) -> Result<Manifest> {
+        let v = json::parse(data).map_err(anyhow::Error::from)?;
+        let artifacts = v
+            .req_arr("artifacts")?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { version: v.req_usize("version")?, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+          "version": 1,
+          "artifacts": [{
+            "name": "gcn_train_x", "file": "x.hlo.txt",
+            "model": "gcn", "kind": "train",
+            "bucket": {"name": "x", "n_pad": 128, "f_in": 8,
+                       "hidden": 16, "classes": 4, "levels": 0,
+                       "l_pad": 0, "bands": [[16, 16]], "br": 8,
+                       "lvl_block": 128, "g_pad": 0},
+            "lr": 0.01,
+            "inputs": [{"name": "w1", "shape": [8, 16],
+                        "dtype": "f32"}],
+            "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+          }]
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.bucket.m_pad(), 129);
+        assert_eq!(a.input_index("w1"), Some(0));
+        assert_eq!(a.inputs[0].elements(), 128);
+        assert_eq!(a.bucket.bands, vec![(16, 16)]);
+    }
+
+    #[test]
+    fn bucket_json_roundtrip() {
+        let b = BucketSpec {
+            name: "bzr_hag".into(), n_pad: 6528, f_in: 16, hidden: 16,
+            classes: 4, levels: 9, l_pad: 512,
+            bands: vec![(16, 512), (800, 64)], br: 8, lvl_block: 128,
+            g_pad: 0, impl_: "scatter".into(),
+        };
+        let v = b.to_json();
+        let b2 = BucketSpec::from_json(&v).unwrap();
+        assert_eq!(b2.name, b.name);
+        assert_eq!(b2.bands, b.bands);
+        assert_eq!(b2.m_pad(), b.m_pad());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let v = json::parse(r#"{"name": "x", "shape": [2],
+                                "dtype": "f64"}"#).unwrap();
+        assert!(TensorSpec::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute_b`). Text is
+//! the interchange format — the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids cleanly.
+//!
+//! The runtime enforces the manifest contract: every execute call is
+//! checked against the artifact's declared input arity, shapes and
+//! dtypes, so a plan-compiler bug surfaces as a descriptive error rather
+//! than an XLA shape crash.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, BucketSpec, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+/// A host-side tensor heading into (or out of) an executable.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let shape = spec.shape.clone();
+        Ok(match spec.dtype.as_str() {
+            "f32" => HostTensor::F32 { data: lit.to_vec::<f32>()?, shape },
+            "i32" => HostTensor::I32 { data: lit.to_vec::<i32>()?, shape },
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, lazily compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, compiles
+    /// nothing yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let specs = manifest
+            .artifacts
+            .into_iter()
+            .map(|a| (a.name.clone(), a))
+            .collect();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            specs,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs.get(name).ok_or_else(|| {
+            anyhow!("artifact {name:?} not in manifest (have: {:?}). \
+                   Run `repro emit-buckets` then `make artifacts`.",
+                  self.artifact_names())
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn compile(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.spec(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let arc = Arc::new(Executable { spec, exe });
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        eprintln!("[runtime] compiled {name} in {:.2}s",
+                  t0.elapsed().as_secs_f64());
+        Ok(arc)
+    }
+
+    /// Upload a host tensor to a device buffer (reusable across
+    /// executions — upload plan tensors once, not per step).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32 { data, shape } => self
+                .client
+                .buffer_from_host_buffer::<f32>(data, shape, None),
+            HostTensor::I32 { data, shape } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, shape, None),
+        };
+        buf.map_err(|e| anyhow!("uploading buffer: {e:?}"))
+    }
+
+    /// Validate `inputs` against the spec and upload them all.
+    pub fn upload_checked(&self, exe: &Executable, inputs: &[HostTensor])
+                          -> Result<Vec<xla::PjRtBuffer>> {
+        check_inputs(&exe.spec, inputs)?;
+        inputs.iter().map(|t| self.upload(t)).collect()
+    }
+
+    /// Execute with pre-uploaded buffers; returns host tensors per the
+    /// manifest output spec.
+    pub fn execute(&self, exe: &Executable, args: &[&xla::PjRtBuffer])
+                   -> Result<Vec<HostTensor>> {
+        if args.len() != exe.spec.inputs.len() {
+            bail!("{}: got {} args, expected {}", exe.spec.name,
+                  args.len(), exe.spec.inputs.len());
+        }
+        let out = exe
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", exe.spec.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        if parts.len() != exe.spec.outputs.len() {
+            bail!("{}: got {} outputs, manifest says {}", exe.spec.name,
+                  parts.len(), exe.spec.outputs.len());
+        }
+        parts
+            .iter()
+            .zip(&exe.spec.outputs)
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+
+    /// One-shot convenience: upload + execute host tensors.
+    pub fn run(&self, name: &str, inputs: &[HostTensor])
+               -> Result<Vec<HostTensor>> {
+        let exe = self.compile(name)?;
+        let bufs = self.upload_checked(&exe, inputs)?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute(&exe, &refs)
+    }
+}
+
+fn check_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!("{}: got {} inputs, expected {} ({:?})", spec.name,
+              inputs.len(), spec.inputs.len(),
+              spec.inputs.iter().map(|s| s.name.as_str())
+                  .collect::<Vec<_>>());
+    }
+    for (t, s) in inputs.iter().zip(&spec.inputs) {
+        if !t.matches(s) {
+            bail!("{}: input {:?} expects {}{:?}, got {}{:?}", spec.name,
+                  s.name, s.dtype, s.shape, t.dtype(), t.shape());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_opens() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        assert!(rt.artifact_names().iter()
+            .any(|n| n.starts_with("gcn_train")));
+    }
+
+    #[test]
+    fn input_check_catches_wrong_shape() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let name = "gcn_infer_tiny0";
+        let spec = rt.spec(name).unwrap();
+        let mut inputs: Vec<HostTensor> = spec.inputs.iter()
+            .map(|s| match s.dtype.as_str() {
+                "f32" => HostTensor::f32(
+                    vec![0.0; s.shape.iter().product()], &s.shape),
+                _ => HostTensor::i32(
+                    vec![0; s.shape.iter().product()], &s.shape),
+            })
+            .collect();
+        // break one shape
+        inputs[0] = HostTensor::f32(vec![0.0; 4], &[2, 2]);
+        let exe = rt.compile(name).unwrap();
+        assert!(rt.upload_checked(&exe, &inputs).is_err());
+    }
+}

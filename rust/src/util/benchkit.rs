@@ -1,0 +1,121 @@
+//! Micro-benchmark harness (criterion is not vendored here): warmup +
+//! repeated timing with median/mean/min reporting, matching the
+//! `cargo bench` (harness = false) protocol. Results print in a
+//! machine-greppable one-line format used by EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters {:>3}  median {:>12}  mean {:>12}  \
+             min {:>12}",
+            self.name, self.iters, fmt(self.median), fmt(self.mean),
+            fmt(self.min));
+    }
+}
+
+fn fmt(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Configurable runner.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            iters: 10,
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, iters: 5,
+                  max_total: Duration::from_secs(30) }
+    }
+
+    /// Time `f`, discarding its output (use `std::hint::black_box`
+    /// inside if needed).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+            if start.elapsed() > self.max_total && times.len() >= 3 {
+                break;
+            }
+        }
+        times.sort();
+        let sum: Duration = times.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: times.len(),
+            mean: sum / times.len() as u32,
+            median: times[times.len() / 2],
+            min: times[0],
+            max: *times.last().unwrap(),
+        };
+        stats.report();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_orders() {
+        let b = Bencher { warmup: 0, iters: 5,
+                          max_total: Duration::from_secs(5) };
+        let mut n = 0u64;
+        let s = b.run("spin", || {
+            for i in 0..10_000u64 {
+                n = n.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn respects_time_cap() {
+        let b = Bencher { warmup: 0, iters: 1000,
+                          max_total: Duration::from_millis(50) };
+        let s = b.run("sleepy", || {
+            std::thread::sleep(Duration::from_millis(20));
+        });
+        assert!(s.iters < 1000);
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,146 @@
+//! Minimal CLI argument parser (clap is not vendored here).
+//!
+//! Grammar: `prog <subcommand> [--key value | --key=value | --flag]...`
+//! Values that begin with `-` (e.g. negative numbers) must use the
+//! `--key=value` form. Unknown keys are surfaced as errors by
+//! [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(it: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = it.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                args.opts.entry(k.to_string()).or_default()
+                    .push(v.to_string());
+            } else if it.peek().is_some_and(|n| !n.starts_with('-')) {
+                args.opts.entry(key.to_string()).or_default()
+                    .push(it.next().unwrap());
+            } else {
+                args.opts.entry(key.to_string()).or_default()
+                    .push("true".to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Last occurrence of `--key`, parsed.
+    pub fn get<T: std::str::FromStr>(&self, key: &str)
+                                     -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.opts.get(key).and_then(|v| v.last()) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|e| {
+                anyhow::anyhow!("--{key} {s:?}: {e}")
+            }),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str,
+                                        default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    /// All occurrences of `--key` (repeatable options).
+    pub fn get_all(&self, key: &str) -> Vec<String> {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_default()
+    }
+
+    /// Boolean flag (`--flag` or `--flag true/false`).
+    pub fn flag(&self, key: &str) -> Result<bool> {
+        Ok(self.get::<bool>(key)?.unwrap_or(false))
+    }
+
+    /// Error on any option that no handler consumed.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&String> = self.opts.keys()
+            .filter(|k| !seen.contains(k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --dataset BZR --epochs 20 --scale=0.05");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get::<String>("dataset").unwrap().unwrap(), "BZR");
+        assert_eq!(a.get_or::<usize>("epochs", 1).unwrap(), 20);
+        assert_eq!(a.get_or::<f64>("scale", 1.0).unwrap(), 0.05);
+        assert_eq!(a.get_or::<u64>("seed", 7).unwrap(), 7);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flags_and_repeats() {
+        let a = parse("x --verbose --datasets BZR --datasets PPI");
+        assert!(a.flag("verbose").unwrap());
+        assert!(!a.flag("quiet").unwrap());
+        assert_eq!(a.get_all("datasets"), vec!["BZR", "PPI"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_for_negatives() {
+        let a = parse("x --offset=-3");
+        assert_eq!(a.get::<i32>("offset").unwrap().unwrap(), -3);
+    }
+
+    #[test]
+    fn unknown_options_fail_finish() {
+        let a = parse("x --oops 1");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("x --epochs banana");
+        assert!(a.get::<usize>("epochs").is_err());
+    }
+}

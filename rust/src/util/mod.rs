@@ -1,0 +1,13 @@
+//! Self-contained substrates for facilities that would normally come
+//! from crates.io (only the `xla` dependency closure is vendored in
+//! this environment): JSON, PRNG, CLI parsing, and a micro-benchmark
+//! harness.
+
+pub mod benchkit;
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use rng::Rng;

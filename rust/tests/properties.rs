@@ -1,0 +1,256 @@
+//! Randomized property tests over the HAG core (seeded, deterministic;
+//! the proptest crate is not vendored here, so cases are generated with
+//! the in-tree RNG — shrinkage is traded for a printed failing seed).
+//!
+//! Invariants covered, per random graph:
+//! * Theorem 1: the searched HAG is equivalent (exact cover check);
+//! * validity: topological agg-node order, no duplicate in-slots;
+//! * cost model: search never increases cost; cost is monotone in
+//!   capacity; every merge saves at least one aggregation;
+//! * plan compiler: simulated plan execution reproduces CSR
+//!   aggregation exactly (all padding/permutation/banding correct);
+//! * determinism: search and plans are bit-identical across runs.
+
+use repro::datasets::{community_graph, ego_clique_set, CommunityCfg,
+                      EgoCliqueCfg};
+use repro::graph::{Graph, GraphBuilder};
+use repro::hag::{build_plan, check_equivalence,
+                 check_equivalence_probabilistic, hag_search,
+                 AggregateKind, ExecutionPlan, Hag, PlanConfig,
+                 SearchConfig};
+use repro::util::Rng;
+
+const CASES: usize = 30;
+
+/// Random graph families exercised by every property.
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.range_usize(0, 4) {
+        0 => {
+            // Erdos-Renyi-ish
+            let n = rng.range_usize(2, 120);
+            let mut b = GraphBuilder::new(n);
+            let e = rng.range_usize(0, n * 6 + 1);
+            for _ in 0..e {
+                let u = rng.range_usize(0, n) as u32;
+                let v = rng.range_usize(0, n) as u32;
+                if u != v {
+                    b.edge(u, v);
+                }
+            }
+            b.build()
+        }
+        1 => {
+            // community (the HAG-friendly regime)
+            let n = rng.range_usize(50, 400);
+            let cfg = CommunityCfg {
+                n,
+                e: n * rng.range_usize(2, 12),
+                communities: rng.range_usize(2, 9),
+                intra_frac: rng.range_f64(0.6, 1.0),
+                zipf_exp: rng.range_f64(0.5, 1.3),
+                clone_frac: rng.range_f64(0.0, 0.9),
+            };
+            community_graph(&cfg, rng.next_u64()).0
+        }
+        2 => {
+            // batched cliques (graph classification shape)
+            let cfg = EgoCliqueCfg {
+                num_graphs: rng.range_usize(2, 12),
+                total_nodes: rng.range_usize(30, 200),
+                total_edges: rng.range_usize(100, 2000),
+                classes: 2,
+            };
+            let (gs, _) = ego_clique_set(&cfg, rng.next_u64());
+            Graph::disjoint_union(&gs).0
+        }
+        _ => {
+            // adversarial: star + chain + duplicate-heavy
+            let n = rng.range_usize(3, 60);
+            let mut b = GraphBuilder::new(n);
+            for v in 1..n as u32 {
+                b.edge(0, v);
+                if v > 1 {
+                    b.edge(v - 1, v);
+                }
+            }
+            b.build()
+        }
+    }
+}
+
+fn cfg_for(rng: &mut Rng, g: &Graph, kind: AggregateKind) -> SearchConfig {
+    SearchConfig {
+        capacity: match rng.range_usize(0, 3) {
+            0 => g.n() / 4,
+            1 => g.n(),
+            _ => usize::MAX,
+        },
+        kind,
+        pair_cap: match rng.range_usize(0, 3) {
+            0 => 8,
+            1 => 64,
+            _ => usize::MAX,
+        },
+    }
+}
+
+#[test]
+fn prop_search_result_is_equivalent_and_valid() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + case as u64);
+        let g = random_graph(&mut rng);
+        for kind in [AggregateKind::Set, AggregateKind::Sequential] {
+            let cfg = cfg_for(&mut rng, &g, kind);
+            let (hag, stats) = hag_search(&g, &cfg);
+            hag.validate().unwrap_or_else(|e| {
+                panic!("case {case} {kind:?}: invalid HAG: {e}")
+            });
+            check_equivalence(&g, &hag).unwrap_or_else(|e| {
+                panic!("case {case} {kind:?}: not equivalent: {e}")
+            });
+            check_equivalence_probabilistic(&g, &hag, case as u64)
+                .unwrap();
+            assert!(hag.agg_nodes.len() <= cfg.capacity,
+                    "case {case}: capacity violated");
+            assert!(stats.aggregations_after
+                    <= stats.aggregations_before,
+                    "case {case}: aggregations increased");
+            // every merge must pay for itself under the cost model
+            let trivial = Hag::from_graph(&g, kind);
+            assert!(hag.cost_core() <= trivial.cost_core(),
+                    "case {case}: cost increased");
+        }
+    }
+}
+
+#[test]
+fn prop_cost_monotone_in_capacity() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + case as u64);
+        let g = random_graph(&mut rng);
+        let mut last = usize::MAX;
+        for cap in [0usize, 2, 8, 32, 128, usize::MAX] {
+            let cfg = SearchConfig {
+                capacity: cap,
+                kind: AggregateKind::Set,
+                pair_cap: usize::MAX,
+            };
+            let (hag, _) = hag_search(&g, &cfg);
+            let c = hag.cost_core();
+            assert!(c <= last,
+                    "case {case}: cost rose from {last} to {c} at \
+                     capacity {cap}");
+            last = c;
+        }
+    }
+}
+
+#[test]
+fn prop_search_deterministic() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(3000 + case as u64);
+        let g = random_graph(&mut rng);
+        let cfg = SearchConfig::paper_default(g.n());
+        let (h1, _) = hag_search(&g, &cfg);
+        let (h2, _) = hag_search(&g, &cfg);
+        assert_eq!(h1.agg_nodes, h2.agg_nodes, "case {case}");
+        assert_eq!(h1.in_edges, h2.in_edges, "case {case}");
+    }
+}
+
+/// f64 simulation of exactly what the XLA artifact computes from the
+/// plan tensors (levels then block-CSR bands, zero-slot padding).
+fn simulate_plan(plan: &ExecutionPlan, x_old: &[f64]) -> Vec<f64> {
+    let m = plan.m_pad();
+    let mut buf = vec![0f64; m];
+    for new in 0..plan.n {
+        buf[new] = x_old[plan.perm[new] as usize];
+    }
+    for l in 0..plan.levels {
+        let base = plan.n_pad + l * plan.l_pad;
+        for j in 0..plan.l_pad {
+            let li = plan.lvl_left[l * plan.l_pad + j] as usize;
+            let ri = plan.lvl_right[l * plan.l_pad + j] as usize;
+            buf[base + j] = buf[li] + buf[ri];
+        }
+    }
+    let mut out_new = vec![0f64; plan.n_pad];
+    let mut row0 = 0usize;
+    for (bi, &(nb, nnzb)) in plan.bands.iter().enumerate() {
+        for b in 0..nb {
+            for j in 0..nnzb {
+                let col = plan.band_cols[bi][b * nnzb + j] as usize;
+                let r = plan.band_rows[bi][b * nnzb + j] as usize;
+                out_new[row0 + b * plan.br + r] += buf[col];
+            }
+        }
+        row0 += nb * plan.br;
+    }
+    let mut out = vec![0f64; plan.n];
+    for new in 0..plan.n {
+        out[plan.perm[new] as usize] = out_new[new];
+    }
+    out
+}
+
+#[test]
+fn prop_plan_execution_matches_csr() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(4000 + case as u64);
+        let g = random_graph(&mut rng);
+        let cfg = cfg_for(&mut rng, &g, AggregateKind::Set);
+        let (hag, _) = hag_search(&g, &cfg);
+        let pc = PlanConfig {
+            br: [4, 8, 16][rng.range_usize(0, 3)],
+            lvl_block: [32, 128][rng.range_usize(0, 2)],
+            max_bands: rng.range_usize(1, 5),
+            nnzb_round: [8, 32][rng.range_usize(0, 2)],
+        };
+        let plan = build_plan(&g, &hag, &pc);
+        assert_eq!(plan.bands.iter().map(|b| b.0).sum::<usize>()
+                   * plan.br, plan.n_pad, "case {case}: bands tile");
+        let x: Vec<f64> =
+            (0..g.n()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let got = simulate_plan(&plan, &x);
+        for (v, ns) in g.iter() {
+            let want: f64 = ns.iter().map(|&u| x[u as usize]).sum();
+            assert!((got[v as usize] - want).abs() < 1e-9,
+                    "case {case} node {v}: {} vs {want}",
+                    got[v as usize]);
+        }
+    }
+}
+
+#[test]
+fn prop_plans_deterministic() {
+    for case in 0..10 {
+        let mut rng = Rng::seed_from_u64(5000 + case as u64);
+        let g = random_graph(&mut rng);
+        let cfg = SearchConfig::paper_default(g.n());
+        let (hag, _) = hag_search(&g, &cfg);
+        let p1 = build_plan(&g, &hag, &PlanConfig::default());
+        let p2 = build_plan(&g, &hag, &PlanConfig::default());
+        assert_eq!(p1.lvl_left, p2.lvl_left);
+        assert_eq!(p1.band_cols, p2.band_cols);
+        assert_eq!(p1.perm, p2.perm);
+    }
+}
+
+#[test]
+fn prop_sequential_prefix_merges_preserve_order() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(6000 + case as u64);
+        let g = random_graph(&mut rng);
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Sequential,
+            pair_cap: usize::MAX,
+        };
+        let (hag, _) = hag_search(&g, &cfg);
+        // exact ordered-cover equivalence (the probabilistic checker
+        // cannot see order; this is the authoritative check)
+        check_equivalence(&g, &hag).unwrap_or_else(|e| {
+            panic!("case {case}: sequential order broken: {e}")
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! Failure-injection tests for the runtime layer: malformed manifests,
+//! missing artifacts, and contract violations must produce descriptive
+//! errors, never XLA crashes or silent wrong answers.
+
+use std::path::{Path, PathBuf};
+
+use repro::runtime::{HostTensor, Manifest, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("repro_rt_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let d = tmp_dir("nomanifest");
+    let err = match Runtime::open(&d) {
+        Err(e) => e,
+        Ok(_) => panic!("open must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "unhelpful error: {msg}");
+    assert!(msg.contains("make artifacts"), "no hint: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_a_parse_error() {
+    let d = tmp_dir("corrupt");
+    std::fs::write(d.join("manifest.json"), "{\"version\": 1,").unwrap();
+    assert!(Runtime::open(&d).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    assert!(Manifest::parse(r#"{"version": 1}"#).is_err());
+    assert!(Manifest::parse(
+        r#"{"version": 1, "artifacts": [{"name": "x"}]}"#).is_err());
+}
+
+#[test]
+fn unknown_artifact_lists_alternatives() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let err = match rt.compile("gcn_train_nonexistent") {
+        Err(e) => e,
+        Ok(_) => panic!("compile must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not in manifest"), "{msg}");
+    assert!(msg.contains("emit-buckets"), "no remediation hint: {msg}");
+}
+
+#[test]
+fn missing_hlo_file_fails_at_compile() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let d = tmp_dir("missingfile");
+    // copy the manifest but none of the HLO files
+    std::fs::copy(artifacts_dir().join("manifest.json"),
+                  d.join("manifest.json")).unwrap();
+    let rt = Runtime::open(&d).unwrap();
+    let name = rt.artifact_names()[0].to_string();
+    assert!(rt.compile(&name).is_err());
+}
+
+#[test]
+fn wrong_arity_and_dtype_rejected_before_execution() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.compile("gcn_infer_tiny0").unwrap();
+    // too few inputs
+    assert!(rt.upload_checked(&exe, &[]).is_err());
+    // right arity, one wrong dtype
+    let mut inputs: Vec<HostTensor> = exe.spec.inputs.iter()
+        .map(|s| match s.dtype.as_str() {
+            "f32" => HostTensor::f32(vec![0.0; s.elements()], &s.shape),
+            _ => HostTensor::i32(vec![0; s.elements()], &s.shape),
+        })
+        .collect();
+    let flipped = match &inputs[0] {
+        HostTensor::F32 { shape, .. } =>
+            HostTensor::i32(vec![0; inputs[0].shape().iter().product()],
+                            &shape.clone()),
+        HostTensor::I32 { shape, .. } =>
+            HostTensor::f32(vec![0.0; inputs[0].shape().iter().product()],
+                            &shape.clone()),
+    };
+    inputs[0] = flipped;
+    let err = match rt.upload_checked(&exe, &inputs) {
+        Err(e) => e,
+        Ok(_) => panic!("upload_checked must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("expects"), "{msg}");
+}
+
+#[test]
+fn valid_inputs_execute_and_match_spec() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.compile("gcn_infer_tiny0").unwrap();
+    let zero_slot = (exe.spec.bucket.m_pad() - 1) as i32;
+    let inputs: Vec<HostTensor> = exe.spec.inputs.iter()
+        .map(|s| match s.dtype.as_str() {
+            "f32" => HostTensor::f32(vec![0.0; s.elements()], &s.shape),
+            // index tensors: point padding at the zero slot so gathers
+            // stay in range
+            _ if s.name.contains("col") || s.name.starts_with("lvl_") =>
+                HostTensor::i32(vec![zero_slot; s.elements()], &s.shape),
+            _ => HostTensor::i32(vec![0; s.elements()], &s.shape),
+        })
+        .collect();
+    let outs = rt.run("gcn_infer_tiny0", &inputs).unwrap();
+    assert_eq!(outs.len(), exe.spec.outputs.len());
+    for (o, s) in outs.iter().zip(&exe.spec.outputs) {
+        assert_eq!(o.shape(), s.shape.as_slice());
+    }
+    // zero inputs -> finite logits (bias-only path)
+    assert!(outs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
