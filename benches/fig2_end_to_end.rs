@@ -36,7 +36,7 @@ fn main() {
         for (ri, repr) in
             [Repr::GnnGraph, Repr::Hag].into_iter().enumerate()
         {
-            let lowered = lower_dataset(&ds, repr, None,
+            let lowered = lower_dataset(&ds, repr, None, None,
                                         &PlanConfig::default())
                 .expect("lowering");
             let tname = coordinator::artifact_name("gcn", "train",

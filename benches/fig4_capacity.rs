@@ -23,7 +23,7 @@ fn main() {
         b.run(&format!("fig4_capacity_search/{capacity}"), || {
             std::hint::black_box(
                 lower_dataset(&ds, Repr::Hag, Some(capacity),
-                              &PlanConfig::default())
+                              None, &PlanConfig::default())
                     .unwrap());
         });
     }

@@ -1,9 +1,12 @@
 //! HAG-search scaling bench (L3 hot path): edges/second across graph
-//! sizes and pair-cap settings — the input to the §Perf iteration log.
-//! Run: `cargo bench --bench search_throughput`.
+//! sizes and pair-cap settings, plus the partitioned-search variant
+//! (wall-clock speedup *and* cost gap per shard count — the speedup is
+//! measured, not asserted; the partition-quality tradeoff is printed
+//! next to it). Run: `cargo bench --bench search_throughput`.
 
 use repro::datasets::{community_graph, CommunityCfg};
 use repro::hag::{hag_search, AggregateKind, SearchConfig};
+use repro::partition::search_sharded;
 use repro::util::benchkit::Bencher;
 
 fn main() {
@@ -51,5 +54,38 @@ fn main() {
             std::hint::black_box(hag_search(&g, &sc));
         });
         println!("  -> cost |E|-|VA| = {}", hag.cost_core());
+    }
+
+    // sharded search: wall-clock speedup + cost gap vs shard count
+    // (the partition subsystem's headline tradeoff; the `1` row is the
+    // single-threaded whole-graph baseline).
+    let cfg = CommunityCfg {
+        n: 16_000,
+        e: 320_000,
+        communities: 100,
+        intra_frac: 0.9,
+        zipf_exp: 0.9,
+        clone_frac: 0.5,
+    };
+    let (g, _) = community_graph(&cfg, 17);
+    let sc = SearchConfig::paper_default(g.n());
+    let (single, _) = hag_search(&g, &sc);
+    let base = b.run("search_sharded/1", || {
+        std::hint::black_box(hag_search(&g, &sc));
+    });
+    for &k in &[2usize, 4, 8] {
+        let (hag, stats) = search_sharded(&g, k, &sc);
+        let run = b.run(&format!("search_sharded/{k}"), || {
+            std::hint::black_box(search_sharded(&g, k, &sc));
+        });
+        let speedup = base.median.as_secs_f64()
+            / run.median.as_secs_f64().max(1e-12);
+        println!(
+            "  -> {k} shards ({} threads): cost {} vs {} \
+             ({:+.2}% gap), cut {:.1}%, speedup {speedup:.2}x",
+            stats.threads, hag.cost_core(), single.cost_core(),
+            100.0 * (hag.cost_core() as f64
+                / single.cost_core().max(1) as f64 - 1.0),
+            100.0 * stats.report.cut_frac);
     }
 }

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     for repr in [Repr::GnnGraph, Repr::Hag] {
         let lowered =
-            lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+            lower_dataset(&ds, repr, None, None, &PlanConfig::default())?;
         let name = coordinator::artifact_name("gcn", "infer",
                                               &lowered.bucket);
         let workload =

@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let mut reports = Vec::new();
     for repr in [Repr::GnnGraph, Repr::Hag] {
         let lowered =
-            lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+            lower_dataset(&ds, repr, None, None, &PlanConfig::default())?;
         println!("\n=== {:?} ===", repr);
         println!("aggregations/layer: {}   transfers/layer: {}",
                  lowered.hag.aggregations(),

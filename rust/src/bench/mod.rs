@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::coordinator::{self, lower_dataset, pack_workload, Repr};
 use crate::datasets::{self, Dataset};
 use crate::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
+use crate::runtime::xla;
 use crate::runtime::Runtime;
 
 /// Per-dataset scale multiplier: REDDIT/COLLAB are far larger than the
@@ -144,7 +145,7 @@ pub fn fig2_row(artifacts: &Path, ds: &Dataset, seed: u64,
     let mut infer_ms = [0f64; 2];
     for (i, repr) in [Repr::GnnGraph, Repr::Hag].into_iter().enumerate() {
         let lowered =
-            lower_dataset(ds, repr, None, &PlanConfig::default())?;
+            lower_dataset(ds, repr, None, None, &PlanConfig::default())?;
         let workload = pack_workload(ds, &lowered.plan, &lowered.bucket)?;
         // training
         let tname =
@@ -274,7 +275,7 @@ pub fn fig4_rows(artifacts: &Path, base_scale: f64, seed: u64,
     for &frac in FIG4_FRACTIONS {
         let capacity = (ds.graph.n() as f64 * frac) as usize;
         let lowered = lower_dataset(&ds, Repr::Hag, Some(capacity),
-                                    &PlanConfig::default())?;
+                                    None, &PlanConfig::default())?;
         let mut bucket = lowered.bucket.clone();
         bucket.name = fig4_bucket_name(frac);
         let tname = coordinator::artifact_name("gcn", "train", &bucket);
@@ -311,7 +312,7 @@ pub fn fig4_buckets(base_scale: f64, seed: u64)
     for &frac in FIG4_FRACTIONS {
         let capacity = (ds.graph.n() as f64 * frac) as usize;
         let lowered = lower_dataset(&ds, Repr::Hag, Some(capacity),
-                                    &PlanConfig::default())?;
+                                    None, &PlanConfig::default())?;
         let mut bucket = lowered.bucket;
         bucket.name = fig4_bucket_name(frac);
         out.push(bucket);

@@ -50,8 +50,17 @@ pub struct Lowered {
 pub const HIDDEN: usize = 16;
 
 /// Search + lower `ds` under `repr`. Deterministic in the dataset (the
-/// search itself takes no RNG).
+/// search takes no RNG; the sharded path uses the fixed
+/// [`DEFAULT_PARTITION_SEED`](crate::partition::DEFAULT_PARTITION_SEED)).
+///
+/// `shards: Some(k)` with `k >= 2` routes the HAG search through the
+/// partitioned parallel driver
+/// ([`partition::search_sharded`](crate::partition::search_sharded)):
+/// per-shard searches on a worker pool, cross-shard edges falling back
+/// to direct aggregation. `None` / `Some(1)` is the single-threaded
+/// whole-graph search.
 pub fn lower_dataset(ds: &Dataset, repr: Repr, capacity: Option<usize>,
+                     shards: Option<usize>,
                      plan_cfg: &PlanConfig) -> Result<Lowered> {
     let hag = match repr {
         Repr::GnnGraph => Hag::from_graph(&ds.graph, AggregateKind::Set),
@@ -59,7 +68,12 @@ pub fn lower_dataset(ds: &Dataset, repr: Repr, capacity: Option<usize>,
             let cfg = SearchConfig::paper_default(ds.graph.n())
                 .with_capacity(capacity
                     .unwrap_or(ds.graph.n() / 4));
-            hag_search(&ds.graph, &cfg).0
+            match shards {
+                Some(k) if k >= 2 => {
+                    crate::partition::search_sharded(&ds.graph, k, &cfg).0
+                }
+                _ => hag_search(&ds.graph, &cfg).0,
+            }
         }
     };
     let plan = build_plan(&ds.graph, &hag, plan_cfg);
@@ -107,12 +121,16 @@ pub fn artifact_name(model: &str, kind: &str, bucket: &BucketSpec)
 
 /// Emit `artifacts/buckets.json` for a set of datasets (both
 /// representations each) — phase 1 of the two-phase AOT build.
-pub fn emit_buckets(datasets: &[Dataset], plan_cfg: &PlanConfig,
+/// `shards` must match the value later passed to `lower_dataset` at
+/// train/infer time, or the plan will not fit the compiled bucket.
+pub fn emit_buckets(datasets: &[Dataset], shards: Option<usize>,
+                    plan_cfg: &PlanConfig,
                     out: &std::path::Path) -> Result<Vec<BucketSpec>> {
     let mut buckets = Vec::new();
     for ds in datasets {
         for repr in [Repr::GnnGraph, Repr::Hag] {
-            let lowered = lower_dataset(ds, repr, None, plan_cfg)?;
+            let lowered = lower_dataset(ds, repr, None, shards,
+                                        plan_cfg)?;
             buckets.push(lowered.bucket);
         }
     }
@@ -189,8 +207,10 @@ mod tests {
     fn lower_both_reprs() {
         let ds = datasets::load("BZR", 0.02, 3);
         let cfg = PlanConfig::default();
-        let base = lower_dataset(&ds, Repr::GnnGraph, None, &cfg).unwrap();
-        let hag = lower_dataset(&ds, Repr::Hag, None, &cfg).unwrap();
+        let base = lower_dataset(&ds, Repr::GnnGraph, None, None, &cfg)
+            .unwrap();
+        let hag = lower_dataset(&ds, Repr::Hag, None, None, &cfg)
+            .unwrap();
         assert_eq!(base.plan.levels, 0);
         check_equivalence(&ds.graph, &hag.hag).unwrap();
         assert!(hag.hag.aggregations() <= base.hag.aggregations());
@@ -198,6 +218,25 @@ mod tests {
         assert_eq!(hag.bucket.name, "bzr_hag");
         assert!(base.bucket.fits(&base.plan));
         assert!(hag.bucket.fits(&hag.plan));
+    }
+
+    #[test]
+    fn lower_sharded_repr_is_equivalent() {
+        let ds = datasets::load("BZR", 0.02, 3);
+        let cfg = PlanConfig::default();
+        let sharded =
+            lower_dataset(&ds, Repr::Hag, None, Some(4), &cfg).unwrap();
+        sharded.hag.validate().unwrap();
+        check_equivalence(&ds.graph, &sharded.hag).unwrap();
+        // sharding can only miss merges, never add aggregations
+        assert!(sharded.hag.cost_core() <= ds.graph.e());
+        assert!(sharded.bucket.fits(&sharded.plan));
+        // Some(1) and None take the identical single-shard path
+        let one = lower_dataset(&ds, Repr::Hag, None, Some(1), &cfg)
+            .unwrap();
+        let none = lower_dataset(&ds, Repr::Hag, None, None, &cfg)
+            .unwrap();
+        assert_eq!(one.hag.agg_nodes, none.hag.agg_nodes);
     }
 
     #[test]
@@ -221,7 +260,8 @@ mod tests {
         let path = dir.join("buckets.json");
         let ds = datasets::load("BZR", 0.01, 3);
         let buckets =
-            emit_buckets(&[ds], &PlanConfig::default(), &path).unwrap();
+            emit_buckets(&[ds], None, &PlanConfig::default(), &path)
+                .unwrap();
         assert_eq!(buckets.len(), 2);
         let text = std::fs::read_to_string(&path).unwrap();
         let v = crate::util::json::parse(&text).unwrap();

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::hag::ExecutionPlan;
+use crate::runtime::xla;
 use crate::runtime::{Executable, HostTensor, Runtime};
 
 use super::packing::PackedWorkload;

@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::Rng;
 
+use crate::runtime::xla;
 use crate::runtime::{Executable, HostTensor, Runtime, TensorSpec};
 
 use super::packing::PackedWorkload;

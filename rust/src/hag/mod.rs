@@ -14,7 +14,7 @@ pub mod search;
 
 pub use equivalence::{check_equivalence, check_equivalence_probabilistic};
 pub use schedule::{build_plan, ExecutionPlan, PlanConfig};
-pub use search::{hag_search, SearchConfig};
+pub use search::{hag_search, SearchConfig, SearchStats};
 
 use crate::graph::Graph;
 

@@ -19,8 +19,10 @@ use anyhow::{bail, Context, Result};
 use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
 use repro::datasets;
 use repro::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
+use repro::partition::{partition_bfs, search_partitioned,
+                       PartitionConfig};
 use repro::runtime::Runtime;
-use repro::util::cli::Args;
+use repro::util::cli::{partition_opts, shards_opt, Args};
 use repro::util::Rng;
 
 const USAGE: &str = "\
@@ -31,6 +33,8 @@ USAGE: repro <subcommand> [options]
 SUBCOMMANDS
   stats          Table 2: dataset stand-in statistics
   search         run Algorithm 3, report savings + equivalence
+  partition-stats  shard the graph, report edge-cut/halo/balance and
+                 per-shard redundancy elimination vs single-shard
   emit-buckets   write artifacts/buckets.json (AOT build phase 1)
   train          train a 2-layer GCN (gnn-graph or hag repr)
   infer          one-shot full-graph inference latency
@@ -50,6 +54,10 @@ COMMON OPTIONS
   --model M         gcn | sage                [gcn]
   --capacity-frac F search capacity / |V|     [0.25]
   --kind K          set | seq (bench-fig3 / search)
+  --shards N        partitioned parallel search (search /
+                    partition-stats / emit-buckets / train / infer /
+                    serve; N>=2 shards, 1 = whole-graph)
+  --partition-seed S BFS partitioner seed (search / partition-stats)
   --fig4            (emit-buckets) include Fig-4 sweep buckets
   --requests N --max-batch N --concurrency N  (serve)
   --report-memory   (bench-fig4) print §3.2 memory accounting
@@ -65,6 +73,7 @@ fn main() -> Result<()> {
     let r = match sub.as_str() {
         "stats" => cmd_stats(scale, seed),
         "search" => cmd_search(&args, scale, seed),
+        "partition-stats" => cmd_partition_stats(&args, scale, seed),
         "emit-buckets" => cmd_emit_buckets(&args, &artifacts, scale,
                                            seed),
         "train" => cmd_train(&args, &artifacts, scale, seed),
@@ -132,10 +141,30 @@ fn cmd_search(args: &Args, scale: f64, seed: u64) -> Result<()> {
     let ds = datasets::load(&name, scale, seed);
     let kind = parse_kind(args)?;
     let frac = args.get_or("capacity-frac", 0.25)?;
+    let (shards, pseed) = partition_opts(args)?;
     let cfg = SearchConfig::paper_default(ds.graph.n())
         .with_capacity((ds.graph.n() as f64 * frac) as usize)
         .with_kind(kind);
-    let (hag, stats) = hag_search(&ds.graph, &cfg);
+    let (hag, stats) = match shards {
+        Some(k) if k >= 2 => {
+            let (hag, sh) = repro::partition::search_sharded_seeded(
+                &ds.graph, k, &cfg, pseed);
+            if sh.per_shard.len() > 1 {
+                println!("sharding      : {k} shards, {} cut edges \
+                          ({:.1}%), {} threads",
+                         sh.report.cut_edges,
+                         100.0 * sh.report.cut_frac, sh.threads);
+            } else {
+                // sequential AGGREGATE does not decompose across a
+                // cut; the driver ran one whole-graph search instead
+                println!("sharding      : requested {k} shards, but \
+                          {kind:?} AGGREGATE does not shard — ran \
+                          whole-graph search");
+            }
+            (hag, sh.total)
+        }
+        _ => hag_search(&ds.graph, &cfg),
+    };
     repro::hag::check_equivalence_probabilistic(&ds.graph, &hag, seed)
         .map_err(|e| anyhow::anyhow!(e))?;
     println!("dataset       : {} (n={}, e={})", ds.name, ds.n(), ds.e());
@@ -155,6 +184,73 @@ fn cmd_search(args: &Args, scale: f64, seed: u64) -> Result<()> {
     Ok(())
 }
 
+fn cmd_partition_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let ds = datasets::load(&name, scale, seed);
+    let kind = parse_kind(args)?;
+    let frac = args.get_or("capacity-frac", 0.25)?;
+    let (shards, pseed) = partition_opts(args)?;
+    let k = shards.unwrap_or(4);
+    let t_part = std::time::Instant::now();
+    let part = partition_bfs(
+        &ds.graph, &PartitionConfig::new(k).with_seed(pseed));
+    let partition_ms = t_part.elapsed().as_secs_f64() * 1e3;
+
+    // Per-shard redundancy elimination + stitched vs single-shard.
+    // (search_partitioned computes the partition report itself —
+    // print from its copy instead of paying the O(n+e) pass twice.)
+    let cfg = SearchConfig::paper_default(ds.graph.n())
+        .with_capacity((ds.graph.n() as f64 * frac) as usize)
+        .with_kind(kind);
+    let (sharded, sh) = search_partitioned(&ds.graph, &part, &cfg);
+    let report = &sh.report;
+    repro::hag::check_equivalence_probabilistic(&ds.graph, &sharded,
+                                                seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    println!("dataset   : {} (n={}, e={})", ds.name, ds.n(), ds.e());
+    println!("partition : {k} shards, seed {pseed}");
+    println!("{:>6} {:>8} {:>12} {:>8} {:>10}", "shard", "nodes",
+             "intra edges", "halo", "weight");
+    for s in 0..report.n_shards {
+        println!("{:>6} {:>8} {:>12} {:>8} {:>10.0}", s,
+                 report.shard_nodes[s], report.shard_intra_edges[s],
+                 report.shard_halo[s], report.shard_weight[s]);
+    }
+    println!("edge cut  : {} / {} ({:.2}%)", report.cut_edges, ds.e(),
+             100.0 * report.cut_frac);
+    println!("balance   : {:.3} (max shard weight / ideal {:.0})",
+             report.balance, report.ideal_weight);
+    if sh.per_shard.len() == 1 && k > 1 {
+        println!("\nNOTE: {kind:?} AGGREGATE does not shard (ordered \
+                  covers cannot cross the cut); stats below are one \
+                  whole-graph search.");
+    }
+    println!("\nper-shard redundancy elimination ({kind:?}, capacity \
+              {}):", cfg.capacity);
+    println!("{:>6} {:>12} {:>12} {:>10} {:>10}", "shard", "aggs gnn",
+             "aggs hag", "agg nodes", "ms");
+    for (s, st) in sh.per_shard.iter().enumerate() {
+        println!("{:>6} {:>12} {:>12} {:>10} {:>10.1}", s,
+                 st.aggregations_before, st.aggregations_after,
+                 st.agg_nodes, st.elapsed_ms);
+    }
+    let (single, ss) = hag_search(&ds.graph, &cfg);
+    println!("\nstitched vs single-shard:");
+    println!("  cost |E|-|VA| : {} vs {} ({:+.2}% gap)",
+             sharded.cost_core(), single.cost_core(),
+             100.0 * (sharded.cost_core() as f64
+                 / single.cost_core().max(1) as f64 - 1.0));
+    println!("  aggregations  : {} vs {}", sharded.aggregations(),
+             single.aggregations());
+    println!("  wall time     : {:.1} ms search + {:.1} ms partition \
+              ({} threads) vs {:.1} ms single ({:.2}x speedup)",
+             sh.wall_ms, partition_ms, sh.threads, ss.elapsed_ms,
+             ss.elapsed_ms / (sh.wall_ms + partition_ms).max(1e-9));
+    println!("  equivalence   : OK (probabilistic, Theorem 1)");
+    Ok(())
+}
+
 fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
                     seed: u64) -> Result<()> {
     let mut names = args.get_all("datasets");
@@ -167,9 +263,10 @@ fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
         eprintln!("[emit-buckets] generating {name} at scale {s:.4}");
         sets.push(datasets::load(name, s, seed));
     }
+    let shards = shards_opt(args)?;
     let out = artifacts.join("buckets.json");
     let mut buckets = coordinator::emit_buckets(
-        &sets, &PlanConfig::default(), &out)?;
+        &sets, shards, &PlanConfig::default(), &out)?;
     if args.flag("fig4")? {
         eprintln!("[emit-buckets] adding Fig-4 capacity sweep buckets");
         buckets.extend(repro::bench::fig4_buckets(
@@ -187,10 +284,11 @@ fn cmd_train(args: &Args, artifacts: &PathBuf, scale: f64,
     let repr = parse_repr(args)?;
     let epochs = args.get_or("epochs", 20usize)?;
     let model = args.get_or::<String>("model", "gcn".into())?;
+    let shards = shards_opt(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
     let lowered =
-        lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+        lower_dataset(&ds, repr, None, shards, &PlanConfig::default())?;
     let runtime = Arc::new(Runtime::open(artifacts)?);
     let aname = coordinator::artifact_name(&model, "train",
                                            &lowered.bucket);
@@ -212,10 +310,11 @@ fn cmd_infer(args: &Args, artifacts: &PathBuf, scale: f64,
     let repr = parse_repr(args)?;
     let repeats = args.get_or("repeats", 10usize)?;
     let model = args.get_or::<String>("model", "gcn".into())?;
+    let shards = shards_opt(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
     let lowered =
-        lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+        lower_dataset(&ds, repr, None, shards, &PlanConfig::default())?;
     let runtime = Arc::new(Runtime::open(artifacts)?);
     let aname = coordinator::artifact_name(&model, "infer",
                                            &lowered.bucket);
@@ -234,10 +333,11 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let requests = args.get_or("requests", 500usize)?;
     let max_batch = args.get_or("max-batch", 64usize)?;
     let concurrency = args.get_or("concurrency", 8usize)?;
+    let shards = shards_opt(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
     let lowered =
-        lower_dataset(&ds, repr, None, &PlanConfig::default())?;
+        lower_dataset(&ds, repr, None, shards, &PlanConfig::default())?;
     let aname = coordinator::artifact_name("gcn", "infer",
                                            &lowered.bucket);
     let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;

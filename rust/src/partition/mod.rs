@@ -1,0 +1,318 @@
+//! Partitioned HAG search: graph sharding + parallel per-shard search.
+//!
+//! Algorithm 3 is a global greedy pass — single-threaded, whole-graph
+//! state — which caps both search throughput and the graph sizes the
+//! coordinator can lower. This subsystem trades a bounded amount of
+//! search quality for near-linear parallel speedup:
+//!
+//! 1. [`partition_bfs`] grows degree-balanced, locality-greedy BFS
+//!    shards and reports the edge cut ([`PartitionReport`]);
+//! 2. [`search_sharded`] runs [`hag_search`] *independently* per shard
+//!    on a `std::thread` worker pool (shard-local candidate sets — the
+//!    restricted-candidate regime under which greedy hierarchical
+//!    aggregation degrades gracefully);
+//! 3. [`stitch_hags`] lifts the shard HAGs into one global [`Hag`]:
+//!    local slots are remapped into the global slot space and every
+//!    cross-shard edge falls back to direct aggregation.
+//!
+//! The stitched HAG is always valid and Theorem-1 equivalent, and its
+//! `cost_core` is `sum_s cost_core(shard_s) + cut_edges <= |E|`:
+//! sharding can only *miss* merges (those straddling the cut), never
+//! add cost. The quality gap is therefore governed by the partitioner's
+//! cut fraction, which `repro partition-stats` reports per shard.
+//!
+//! This module is also the seam future scale work plugs into:
+//! per-shard plan caching, distributed per-shard training, and
+//! multi-device execution all consume the same
+//! `Partition -> [subgraph] -> stitch` contract.
+
+pub mod partitioner;
+pub mod stitch;
+
+pub use partitioner::{partition_bfs, Partition, PartitionConfig,
+                      PartitionReport, DEFAULT_PARTITION_SEED};
+pub use stitch::{stitch_hags, subgraph};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::Graph;
+use crate::hag::{hag_search, AggregateKind, Hag, SearchConfig,
+                 SearchStats};
+
+/// Statistics for one sharded search run.
+#[derive(Debug, Clone)]
+pub struct ShardedStats {
+    /// Per-shard search stats, shard order. A single entry when the
+    /// driver fell back to whole-graph search (see [`search_sharded`]).
+    pub per_shard: Vec<SearchStats>,
+    /// Partition quality (edge cut, halo, balance).
+    pub report: PartitionReport,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// End-to-end wall time: per-shard searches + stitch (+ the
+    /// partitioning itself when driven via [`search_sharded`] /
+    /// [`search_sharded_seeded`]).
+    pub wall_ms: f64,
+    /// Whole-run totals in [`SearchStats`] shape (before/after counts
+    /// are for the stitched HAG vs the input graph).
+    pub total: SearchStats,
+}
+
+/// Partition `g` into `n_shards` BFS shards (default partition seed)
+/// and search each in parallel. See [`search_partitioned`].
+pub fn search_sharded(g: &Graph, n_shards: usize, cfg: &SearchConfig)
+                      -> (Hag, ShardedStats) {
+    search_sharded_seeded(g, n_shards, cfg, DEFAULT_PARTITION_SEED)
+}
+
+/// [`search_sharded`] with an explicit partition seed
+/// (`--partition-seed`). Unlike calling [`search_partitioned`] with a
+/// prebuilt partition, the reported `wall_ms` here *includes* the
+/// partitioning step, so speedup-vs-single comparisons are honest
+/// end-to-end numbers.
+pub fn search_sharded_seeded(g: &Graph, n_shards: usize,
+                             cfg: &SearchConfig, seed: u64)
+                             -> (Hag, ShardedStats) {
+    if n_shards <= 1 || cfg.kind == AggregateKind::Sequential {
+        // Whole-graph fallback (see search_partitioned): don't pay
+        // for a BFS partition that would be discarded.
+        return search_partitioned(g, &Partition::single(g.n()), cfg);
+    }
+    let t0 = std::time::Instant::now();
+    let part = partition_bfs(
+        g, &PartitionConfig::new(n_shards).with_seed(seed));
+    let (hag, mut stats) = search_partitioned(g, &part, cfg);
+    stats.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    stats.total.elapsed_ms = stats.wall_ms;
+    (hag, stats)
+}
+
+/// Run the per-shard searches over an existing partition and stitch.
+///
+/// Fallback: with a single shard, or under sequential AGGREGATE
+/// (ordered-prefix covers do not decompose across a cut — cross-shard
+/// operands would have to interleave back into the canonical order),
+/// this degrades to one whole-graph [`hag_search`]; `stats.per_shard`
+/// then has a single entry and `stats.threads == 1`.
+pub fn search_partitioned(g: &Graph, part: &Partition,
+                          cfg: &SearchConfig) -> (Hag, ShardedStats) {
+    let t0 = std::time::Instant::now();
+    let report = part.report(g);
+
+    if part.n_shards <= 1 || cfg.kind == AggregateKind::Sequential {
+        let (hag, stats) = hag_search(g, cfg);
+        let mut total = stats.clone();
+        total.elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let wall_ms = total.elapsed_ms;
+        return (hag, ShardedStats {
+            per_shard: vec![stats],
+            report,
+            threads: 1,
+            wall_ms,
+            total,
+        });
+    }
+
+    let k = part.n_shards;
+    let local = part.local_ids();
+    let subs: Vec<Graph> =
+        (0..k).map(|s| subgraph(g, part, &local, s)).collect();
+    let caps = split_capacity(cfg.capacity, &subs);
+    let cfgs: Vec<SearchConfig> = caps
+        .into_iter()
+        .map(|c| cfg.clone().with_capacity(c))
+        .collect();
+
+    let threads = k
+        .min(std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1))
+        .max(1);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<(Hag, SearchStats)>>> =
+        (0..k).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|sc| {
+        for _ in 0..threads {
+            sc.spawn(|| loop {
+                let s = next.fetch_add(1, Ordering::Relaxed);
+                if s >= k {
+                    break;
+                }
+                let r = hag_search(&subs[s], &cfgs[s]);
+                *results[s].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    let mut locals = Vec::with_capacity(k);
+    let mut per_shard = Vec::with_capacity(k);
+    for cell in results {
+        let (h, s) = cell.into_inner().unwrap()
+            .expect("worker completed every shard");
+        locals.push(h);
+        per_shard.push(s);
+    }
+    let hag = stitch_hags(g, part, &locals);
+
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let total = SearchStats {
+        iterations: per_shard.iter().map(|s| s.iterations).sum(),
+        agg_nodes: hag.agg_nodes.len(),
+        aggregations_before: g
+            .iter()
+            .map(|(_, ns)| ns.len().saturating_sub(1))
+            .sum(),
+        aggregations_after: hag.aggregations(),
+        transfers_before: g.e(),
+        transfers_after: hag.data_transfers(),
+        elapsed_ms: wall_ms,
+    };
+    (hag, ShardedStats { per_shard, report, threads, wall_ms, total })
+}
+
+/// Split a global `|V_A|` budget across shards proportionally to their
+/// intra-shard edge counts (search opportunity is edge-proportional);
+/// the floored remainder goes to the edge-heaviest shards. The split
+/// never exceeds the global budget.
+fn split_capacity(capacity: usize, subs: &[Graph]) -> Vec<usize> {
+    let k = subs.len();
+    if capacity == usize::MAX {
+        return vec![usize::MAX; k];
+    }
+    let e_tot: usize = subs.iter().map(|g| g.e()).sum();
+    if e_tot == 0 || k == 0 {
+        return vec![capacity; k.max(1)];
+    }
+    let mut caps: Vec<usize> = subs
+        .iter()
+        .map(|g| {
+            ((capacity as u128 * g.e() as u128) / e_tot as u128) as usize
+        })
+        .collect();
+    let mut rem = capacity - caps.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&s| std::cmp::Reverse(subs[s].e()));
+    let mut i = 0;
+    while rem > 0 {
+        caps[order[i % k]] += 1;
+        rem -= 1;
+        i += 1;
+    }
+    caps
+}
+
+/// Shared test-graph generators for the partition submodule tests.
+#[cfg(test)]
+pub(crate) mod test_graphs {
+    use crate::graph::Graph;
+
+    /// `cliques` directed K_`size` blocks, consecutive blocks joined
+    /// by one directed ring edge between their base nodes.
+    pub(crate) fn clique_ring(cliques: usize, size: usize) -> Graph {
+        let n = cliques * size;
+        let mut edges = Vec::new();
+        for c in 0..cliques {
+            let b = (c * size) as u32;
+            for i in 0..size as u32 {
+                for j in 0..size as u32 {
+                    if i != j {
+                        edges.push((b + i, b + j));
+                    }
+                }
+            }
+            let nxt = (((c + 1) % cliques) * size) as u32;
+            edges.push((b, nxt));
+        }
+        Graph::from_edges(n, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_graphs::clique_ring;
+    use super::*;
+    use crate::hag::check_equivalence;
+
+    #[test]
+    fn sharded_search_valid_and_equivalent() {
+        let g = clique_ring(8, 6);
+        let cfg = SearchConfig::paper_default(g.n());
+        let (hag, stats) = search_sharded(&g, 4, &cfg);
+        hag.validate().unwrap();
+        check_equivalence(&g, &hag).unwrap();
+        assert_eq!(stats.per_shard.len(), 4);
+        assert!(hag.cost_core() <= g.e());
+        assert!(stats.total.aggregations_after
+                <= stats.total.aggregations_before);
+    }
+
+    #[test]
+    fn sharded_matches_single_on_disjoint_cliques() {
+        // No ring edges -> zero cut -> sharded must find everything the
+        // whole-graph search finds (clique HAGs are shard-local).
+        let mut edges = Vec::new();
+        for c in 0..4 {
+            let b = (c * 5) as u32;
+            for i in 0..5u32 {
+                for j in 0..5u32 {
+                    if i != j {
+                        edges.push((b + i, b + j));
+                    }
+                }
+            }
+        }
+        let g = Graph::from_edges(20, &edges);
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (single, _) = hag_search(&g, &cfg);
+        let (sharded, stats) = search_sharded(&g, 4, &cfg);
+        assert_eq!(stats.report.cut_edges, 0);
+        check_equivalence(&g, &sharded).unwrap();
+        assert_eq!(sharded.cost_core(), single.cost_core());
+    }
+
+    #[test]
+    fn one_shard_equals_plain_search() {
+        let g = clique_ring(3, 5);
+        let cfg = SearchConfig::paper_default(g.n());
+        let (a, _) = hag_search(&g, &cfg);
+        let (b, stats) = search_sharded(&g, 1, &cfg);
+        assert_eq!(stats.threads, 1);
+        assert_eq!(a.cost_core(), b.cost_core());
+        assert_eq!(a.agg_nodes, b.agg_nodes);
+    }
+
+    #[test]
+    fn sequential_falls_back_to_whole_graph() {
+        let g = clique_ring(3, 4);
+        let cfg = SearchConfig::paper_default(g.n())
+            .with_kind(AggregateKind::Sequential);
+        let (hag, stats) = search_sharded(&g, 4, &cfg);
+        assert_eq!(stats.per_shard.len(), 1);
+        assert_eq!(stats.threads, 1);
+        check_equivalence(&g, &hag).unwrap();
+    }
+
+    #[test]
+    fn capacity_split_respects_budget() {
+        let g = clique_ring(6, 5);
+        let cfg = SearchConfig::paper_default(g.n()).with_capacity(7);
+        let (hag, _) = search_sharded(&g, 3, &cfg);
+        assert!(hag.agg_nodes.len() <= 7,
+                "global capacity violated: {}", hag.agg_nodes.len());
+    }
+
+    #[test]
+    fn sharded_search_is_deterministic() {
+        let g = clique_ring(5, 6);
+        let cfg = SearchConfig::paper_default(g.n());
+        let (a, _) = search_sharded(&g, 4, &cfg);
+        let (b, _) = search_sharded(&g, 4, &cfg);
+        assert_eq!(a.agg_nodes, b.agg_nodes);
+        assert_eq!(a.in_edges, b.in_edges);
+    }
+}

@@ -1,0 +1,430 @@
+//! Edge-locality graph partitioner: BFS-grown, degree-balanced shards.
+//!
+//! The growth rule is locality-greedy BFS (a lightweight cousin of
+//! Fennel/LDG streaming partitioners): shards are grown one at a time
+//! from a high-degree seed, and the frontier is expanded in order of
+//! *affinity* — the number of already-claimed neighbors a candidate
+//! has — so tightly-knit regions (the communities whose shared
+//! neighborhoods Algorithm 3 harvests) are swallowed whole before the
+//! shard crosses into the next region. Balance is degree-weighted
+//! (`w(v) = 1 + deg_total(v)`), since HAG-search work is edge-, not
+//! node-, proportional.
+//!
+//! Guarantees (asserted by `rust/tests/partition.rs`):
+//! * every node lands in **exactly one** shard;
+//! * every shard's weight is `<= max(ideal * balance, ideal + w_max)`
+//!   where `ideal = total_weight / n_shards` and `w_max` is the
+//!   heaviest single node (one node can always overshoot by itself);
+//! * deterministic in `(graph, config)` — the seed only perturbs seed-
+//!   node choice, never introduces nondeterminism.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::Graph;
+use crate::util::{FxHashSet, Rng};
+
+/// Default `--partition-seed` (any fixed value; exposed so the CLI,
+/// coordinator and tests agree on it).
+pub const DEFAULT_PARTITION_SEED: u64 = 0x9a61;
+
+/// Partitioner knobs.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// Number of shards to grow.
+    pub n_shards: usize,
+    /// Seed-node selection seed (`--partition-seed`).
+    pub seed: u64,
+    /// Hard cap on shard weight relative to the ideal (`>= 1.0`);
+    /// growth skips nodes that would push a shard past
+    /// `ideal * balance`.
+    pub balance: f64,
+}
+
+impl PartitionConfig {
+    pub fn new(n_shards: usize) -> Self {
+        PartitionConfig {
+            n_shards: n_shards.max(1),
+            seed: DEFAULT_PARTITION_SEED,
+            balance: 1.25,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_balance(mut self, balance: f64) -> Self {
+        self.balance = balance.max(1.0);
+        self
+    }
+}
+
+/// A disjoint, exhaustive node partition.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub n_shards: usize,
+    /// `shard_of[v]` in `0..n_shards`.
+    pub shard_of: Vec<u32>,
+    /// Per shard: member node ids, ascending.
+    pub members: Vec<Vec<u32>>,
+}
+
+/// Edge-cut / balance / halo accounting for a partition — the "is this
+/// sharding any good" report behind `repro partition-stats`.
+#[derive(Debug, Clone)]
+pub struct PartitionReport {
+    pub n_shards: usize,
+    /// Nodes per shard.
+    pub shard_nodes: Vec<usize>,
+    /// Intra-shard aggregation edges per shard (both endpoints inside).
+    pub shard_intra_edges: Vec<usize>,
+    /// Distinct out-of-shard in-neighbors referenced per shard (the
+    /// halo a distributed execution would have to replicate).
+    pub shard_halo: Vec<usize>,
+    /// Degree weight per shard (`sum of 1 + deg_total`).
+    pub shard_weight: Vec<f64>,
+    /// Edges whose endpoints live in different shards; these fall back
+    /// to direct aggregation in the stitched HAG.
+    pub cut_edges: usize,
+    /// `cut_edges / |E|`.
+    pub cut_frac: f64,
+    /// `total_weight / n_shards`.
+    pub ideal_weight: f64,
+    /// `max(shard_weight) / ideal_weight` — the achieved imbalance.
+    pub balance: f64,
+}
+
+impl Partition {
+    /// The trivial one-shard partition (whole-graph fallback).
+    pub fn single(n: usize) -> Partition {
+        Partition {
+            n_shards: 1,
+            shard_of: vec![0; n],
+            members: vec![(0..n as u32).collect()],
+        }
+    }
+
+    /// Local (within-shard) index of every node; inverse of
+    /// `members[shard_of[v]][local_id[v]] == v`.
+    pub fn local_ids(&self) -> Vec<u32> {
+        let n = self.shard_of.len();
+        let mut local = vec![0u32; n];
+        for mem in &self.members {
+            for (i, &v) in mem.iter().enumerate() {
+                local[v as usize] = i as u32;
+            }
+        }
+        local
+    }
+
+    /// Compute the edge-cut / halo / balance report against `g`.
+    pub fn report(&self, g: &Graph) -> PartitionReport {
+        let k = self.n_shards;
+        let mut intra = vec![0usize; k];
+        let mut halo_sets: Vec<FxHashSet<u32>> =
+            (0..k).map(|_| FxHashSet::default()).collect();
+        let mut cut = 0usize;
+        for (v, ns) in g.iter() {
+            let sv = self.shard_of[v as usize] as usize;
+            for &u in ns {
+                if self.shard_of[u as usize] as usize == sv {
+                    intra[sv] += 1;
+                } else {
+                    cut += 1;
+                    halo_sets[sv].insert(u);
+                }
+            }
+        }
+        // Same weight metric the growth loop balances: 1 + total
+        // (in + out) degree.
+        let mut tdeg = vec![0u32; g.n()];
+        for (v, ns) in g.iter() {
+            tdeg[v as usize] += ns.len() as u32;
+            for &u in ns {
+                tdeg[u as usize] += 1;
+            }
+        }
+        let weights: Vec<f64> = (0..k)
+            .map(|s| {
+                self.members[s]
+                    .iter()
+                    .map(|&v| 1.0 + tdeg[v as usize] as f64)
+                    .sum()
+            })
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let ideal = total / k as f64;
+        let max_w = weights.iter().cloned().fold(0.0f64, f64::max);
+        PartitionReport {
+            n_shards: k,
+            shard_nodes: self.members.iter().map(|m| m.len()).collect(),
+            shard_intra_edges: intra,
+            shard_halo: halo_sets.iter().map(|h| h.len()).collect(),
+            shard_weight: weights,
+            cut_edges: cut,
+            cut_frac: if g.e() == 0 {
+                0.0
+            } else {
+                cut as f64 / g.e() as f64
+            },
+            ideal_weight: ideal,
+            balance: if ideal > 0.0 { max_w / ideal } else { 1.0 },
+        }
+    }
+}
+
+/// Symmetrized adjacency in flat CSR form: for every aggregation edge
+/// `u -> v`, both `u in adj(v)` and `v in adj(u)`. May contain
+/// duplicates when the input already has both directions — harmless
+/// for BFS/affinity (a mutual edge simply counts double).
+fn build_adjacency(g: &Graph) -> (Vec<u32>, Vec<u32>) {
+    let n = g.n();
+    let mut deg = vec![0u32; n];
+    for (v, ns) in g.iter() {
+        deg[v as usize] += ns.len() as u32;
+        for &u in ns {
+            deg[u as usize] += 1;
+        }
+    }
+    let mut offsets = vec![0u32; n + 1];
+    for v in 0..n {
+        offsets[v + 1] = offsets[v] + deg[v];
+    }
+    let mut fill = offsets.clone();
+    let mut flat = vec![0u32; offsets[n] as usize];
+    for (v, ns) in g.iter() {
+        for &u in ns {
+            flat[fill[v as usize] as usize] = u;
+            fill[v as usize] += 1;
+            flat[fill[u as usize] as usize] = v;
+            fill[u as usize] += 1;
+        }
+    }
+    (offsets, flat)
+}
+
+/// Grow `cfg.n_shards` BFS shards over `g`. Every node is assigned to
+/// exactly one shard; see the module docs for the balance guarantee.
+pub fn partition_bfs(g: &Graph, cfg: &PartitionConfig) -> Partition {
+    let n = g.n();
+    let k = cfg.n_shards.max(1);
+    let mut shard_of = vec![u32::MAX; n];
+    if n == 0 {
+        return Partition {
+            n_shards: k,
+            shard_of,
+            members: vec![Vec::new(); k],
+        };
+    }
+
+    let (adj_off, adj) = build_adjacency(g);
+    let adj_of = |v: u32| -> &[u32] {
+        &adj[adj_off[v as usize] as usize..adj_off[v as usize + 1] as usize]
+    };
+    let weight = |v: u32| -> f64 {
+        1.0 + (adj_off[v as usize + 1] - adj_off[v as usize]) as f64
+    };
+    let total_weight: f64 = (n + adj.len()) as f64;
+    let ideal = total_weight / k as f64;
+    let cap = ideal * cfg.balance.max(1.0);
+
+    // Seed candidates: nodes by adjacency degree descending (ties: id
+    // ascending). The rng picks among the first few unassigned so
+    // different `--partition-seed`s explore different growth orders.
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_by_key(|&v| {
+        (Reverse(adj_off[v as usize + 1] - adj_off[v as usize]), v)
+    });
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+
+    let mut weights = vec![0f64; k];
+    // Affinity of an unassigned node to the currently growing shard,
+    // epoch-stamped so no per-shard reset pass is needed.
+    let mut gain = vec![0u32; n];
+    let mut stamp = vec![0u32; n];
+    // Monotone cursor into `by_degree` for reseeding: assignment is
+    // permanent, so skipped-assigned prefix entries never need a
+    // rescan. Keeps many-component graphs (disjoint-union batching)
+    // at amortized O(n) reseed cost instead of O(components * n).
+    let mut seed_cursor = 0usize;
+
+    for s in 0..k {
+        let epoch = s as u32 + 1;
+        let mut heap: BinaryHeap<(u32, Reverse<u32>)> = BinaryHeap::new();
+        while weights[s] < ideal {
+            // Pop the highest-affinity live frontier node; reseed from
+            // the degree list when the frontier is exhausted
+            // (disconnected graphs, or all frontier nodes claimed).
+            let (v, reseeded) = loop {
+                match heap.pop() {
+                    Some((c, Reverse(v))) => {
+                        if shard_of[v as usize] != u32::MAX {
+                            continue; // claimed meanwhile
+                        }
+                        if stamp[v as usize] != epoch
+                            || gain[v as usize] != c
+                        {
+                            continue; // stale entry
+                        }
+                        break (Some(v), false);
+                    }
+                    None => {
+                        while seed_cursor < n
+                            && shard_of[by_degree[seed_cursor] as usize]
+                                != u32::MAX
+                        {
+                            seed_cursor += 1;
+                        }
+                        // Candidates: up to 8 unassigned nodes from a
+                        // bounded window past the cursor (the window
+                        // caps per-reseed cost; entry 0 is always
+                        // unassigned when any node remains).
+                        let cands: Vec<u32> = by_degree[seed_cursor..]
+                            .iter()
+                            .copied()
+                            .take(64)
+                            .filter(|&v| shard_of[v as usize] == u32::MAX)
+                            .take(8)
+                            .collect();
+                        // A shard's *first* seed is deterministically
+                        // the heaviest unassigned node (hubs anchor
+                        // their community; an rng pick could start at
+                        // a bridge and drag two regions into one
+                        // shard). Later reseeds — the remainder is
+                        // disconnected from everything claimed so far
+                        // — are where `--partition-seed` explores
+                        // different component orders.
+                        let pick = if weights[s] == 0.0 {
+                            cands.first().copied()
+                        } else {
+                            rng.choose(&cands).copied()
+                        };
+                        break (pick, true);
+                    }
+                }
+            };
+            let Some(v) = v else { break }; // no unassigned nodes left
+            let w = weight(v);
+            if weights[s] > 0.0 && weights[s] + w > cap {
+                // Would blow the balance cap: leave the node for a
+                // later shard (or the leftover pass). Frontier entries
+                // are finite, so skipping them terminates; a *fresh
+                // seed* failing the cap means nothing left fits this
+                // shard — close it out rather than reseeding forever.
+                if reseeded {
+                    break;
+                }
+                continue;
+            }
+            shard_of[v as usize] = s as u32;
+            weights[s] += w;
+            for &u in adj_of(v) {
+                if shard_of[u as usize] != u32::MAX {
+                    continue;
+                }
+                if stamp[u as usize] != epoch {
+                    stamp[u as usize] = epoch;
+                    gain[u as usize] = 0;
+                }
+                gain[u as usize] += 1;
+                heap.push((gain[u as usize], Reverse(u)));
+            }
+        }
+    }
+
+    // Leftover pass: nodes skipped by every cap (or unreachable after
+    // all shards filled) go to the lightest shard. The lightest shard
+    // is always <= ideal, so this keeps the balance bound.
+    for v in 0..n as u32 {
+        if shard_of[v as usize] == u32::MAX {
+            let s = (0..k)
+                .min_by(|&a, &b| {
+                    weights[a].partial_cmp(&weights[b]).unwrap()
+                })
+                .unwrap();
+            shard_of[v as usize] = s as u32;
+            weights[s] += weight(v);
+        }
+    }
+
+    let mut members = vec![Vec::new(); k];
+    for v in 0..n as u32 {
+        members[shard_of[v as usize] as usize].push(v);
+    }
+    Partition { n_shards: k, shard_of, members }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cliques() -> Graph {
+        // two K5s joined by a single bridge edge — the partitioner must
+        // find the obvious 2-cut.
+        let mut edges = Vec::new();
+        for base in [0u32, 5] {
+            for i in 0..5 {
+                for j in 0..5 {
+                    if i != j {
+                        edges.push((base + i, base + j));
+                    }
+                }
+            }
+        }
+        edges.push((4, 5));
+        edges.push((5, 4));
+        Graph::from_edges(10, &edges)
+    }
+
+    #[test]
+    fn exhaustive_and_disjoint() {
+        let g = two_cliques();
+        let p = partition_bfs(&g, &PartitionConfig::new(2));
+        assert!(p.shard_of.iter().all(|&s| s < 2));
+        let total: usize = p.members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, g.n());
+        for (s, mem) in p.members.iter().enumerate() {
+            for &v in mem {
+                assert_eq!(p.shard_of[v as usize], s as u32);
+            }
+            assert!(mem.windows(2).all(|w| w[0] < w[1]), "sorted");
+        }
+    }
+
+    #[test]
+    fn finds_the_obvious_cut() {
+        let g = two_cliques();
+        let p = partition_bfs(&g, &PartitionConfig::new(2));
+        let r = p.report(&g);
+        // only the bridge (2 directed edges) should be cut
+        assert_eq!(r.cut_edges, 2, "{r:?}");
+        assert_eq!(r.shard_nodes, vec![5, 5]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = two_cliques();
+        let a = partition_bfs(&g, &PartitionConfig::new(3).with_seed(9));
+        let b = partition_bfs(&g, &PartitionConfig::new(3).with_seed(9));
+        assert_eq!(a.shard_of, b.shard_of);
+    }
+
+    #[test]
+    fn more_shards_than_nodes() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        let p = partition_bfs(&g, &PartitionConfig::new(8));
+        assert_eq!(p.members.iter().map(|m| m.len()).sum::<usize>(), 3);
+        assert_eq!(p.members.len(), 8);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, &[]);
+        let p = partition_bfs(&g, &PartitionConfig::new(4));
+        assert_eq!(p.n_shards, 4);
+        let r = p.report(&g);
+        assert_eq!(r.cut_edges, 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Shard extraction and HAG stitching.
+//!
+//! `subgraph` projects one shard's *intra-shard* edges into a local
+//! node space; `stitch_hags` lifts the per-shard search results back
+//! into one global [`Hag`]:
+//!
+//! * shard-local original ids map through `members[s]`;
+//! * shard-local aggregation slots are remapped into a global slot
+//!   space, shard blocks concatenated in shard order — creation order
+//!   stays topological because a shard's agg nodes only ever reference
+//!   that shard's earlier slots (or original nodes, which all precede
+//!   every agg slot);
+//! * cross-shard edges fall back to direct aggregation: each is
+//!   appended verbatim to its consumer's in-list.
+//!
+//! Cost accounting: the stitched HAG's `cost_core` is exactly
+//! `sum_s cost_core(shard_s) + cut_edges`. Since per-shard search never
+//! increases a shard's cost above its trivial `|E_s|` (every merge pays
+//! for itself), the stitched cost is never worse than the input
+//! graph's `|E|` — partitioning can only *miss* merges, never add
+//! aggregations. `rust/tests/partition.rs` asserts this property over
+//! the seeded generator families.
+
+use crate::graph::Graph;
+use crate::hag::{AggNode, AggregateKind, Hag, Slot};
+
+use super::partitioner::Partition;
+
+/// Extract shard `s` of `part` as a standalone graph over local ids
+/// `0..members[s].len()` (ascending-id order preserved), keeping only
+/// intra-shard edges. `local_ids` must come from
+/// [`Partition::local_ids`].
+pub fn subgraph(g: &Graph, part: &Partition, local_ids: &[u32],
+                s: usize) -> Graph {
+    let mem = &part.members[s];
+    let mut offsets = Vec::with_capacity(mem.len() + 1);
+    let mut neighbors = Vec::new();
+    offsets.push(0u32);
+    for &v in mem {
+        for &u in g.neighbors(v) {
+            if part.shard_of[u as usize] == s as u32 {
+                neighbors.push(local_ids[u as usize]);
+            }
+        }
+        offsets.push(neighbors.len() as u32);
+    }
+    // Input lists are ascending and local ids are order-preserving
+    // within a shard, so the CSR invariant holds without a sort.
+    Graph::from_csr(offsets, neighbors)
+}
+
+/// Stitch per-shard HAGs (one per `part.members` entry, over the
+/// corresponding [`subgraph`]) into a single HAG over `g`. Cross-shard
+/// edges are appended as direct aggregation edges.
+///
+/// Only `AggregateKind::Set` decomposes this way — ordered (sequential)
+/// covers cannot interleave cross-shard operands back into the
+/// canonical order — so the caller must not pass sequential shard HAGs.
+pub fn stitch_hags(g: &Graph, part: &Partition, locals: &[Hag]) -> Hag {
+    assert_eq!(locals.len(), part.n_shards, "one HAG per shard");
+    assert!(locals.iter().all(|h| h.kind == AggregateKind::Set),
+            "sharded stitching is Set-AGGREGATE only");
+    let n = g.n();
+    let total_agg: usize =
+        locals.iter().map(|h| h.agg_nodes.len()).sum();
+    let mut agg_nodes = Vec::with_capacity(total_agg);
+    let mut in_edges: Vec<Vec<Slot>> = vec![Vec::new(); n];
+
+    let mut base = n; // first global slot of the current shard's block
+    for (s, lh) in locals.iter().enumerate() {
+        let mem = &part.members[s];
+        assert_eq!(lh.n, mem.len(), "shard {s}: HAG/member mismatch");
+        let remap = |slot: Slot| -> Slot {
+            if (slot as usize) < lh.n {
+                mem[slot as usize]
+            } else {
+                (base + (slot as usize - lh.n)) as Slot
+            }
+        };
+        for a in &lh.agg_nodes {
+            agg_nodes.push(AggNode {
+                left: remap(a.left),
+                right: remap(a.right),
+            });
+        }
+        for (lv, list) in lh.in_edges.iter().enumerate() {
+            let v = mem[lv] as usize;
+            in_edges[v] = list.iter().map(|&x| remap(x)).collect();
+        }
+        base += lh.agg_nodes.len();
+    }
+
+    // Cross-shard edges: direct aggregation from the original node.
+    for (v, ns) in g.iter() {
+        let sv = part.shard_of[v as usize];
+        for &u in ns {
+            if part.shard_of[u as usize] != sv {
+                in_edges[v as usize].push(u);
+            }
+        }
+    }
+
+    Hag { n, agg_nodes, in_edges, kind: AggregateKind::Set }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::{check_equivalence, hag_search, SearchConfig};
+    use crate::partition::partitioner::{partition_bfs, PartitionConfig};
+    use crate::partition::test_graphs::clique_ring as ring_of_cliques;
+
+    #[test]
+    fn subgraph_keeps_only_intra_edges() {
+        let g = ring_of_cliques(4, 5);
+        let p = partition_bfs(&g, &PartitionConfig::new(4));
+        let local = p.local_ids();
+        let mut total_local_edges = 0;
+        for s in 0..4 {
+            let sg = subgraph(&g, &p, &local, s);
+            assert_eq!(sg.n(), p.members[s].len());
+            total_local_edges += sg.e();
+        }
+        let r = p.report(&g);
+        assert_eq!(total_local_edges + r.cut_edges, g.e());
+    }
+
+    #[test]
+    fn stitched_trivial_hags_equal_graph() {
+        // Stitching un-searched shard HAGs must reproduce the input
+        // graph exactly (cover-wise).
+        let g = ring_of_cliques(3, 4);
+        let p = partition_bfs(&g, &PartitionConfig::new(3));
+        let local = p.local_ids();
+        let locals: Vec<Hag> = (0..3)
+            .map(|s| Hag::from_graph(&subgraph(&g, &p, &local, s),
+                                     AggregateKind::Set))
+            .collect();
+        let h = stitch_hags(&g, &p, &locals);
+        assert_eq!(h.agg_nodes.len(), 0);
+        assert_eq!(h.e_hat(), g.e());
+        h.validate().unwrap();
+        check_equivalence(&g, &h).unwrap();
+    }
+
+    #[test]
+    fn stitched_searched_hags_are_equivalent() {
+        let g = ring_of_cliques(4, 6);
+        let p = partition_bfs(&g, &PartitionConfig::new(2));
+        let local = p.local_ids();
+        let locals: Vec<Hag> = (0..2)
+            .map(|s| {
+                let sg = subgraph(&g, &p, &local, s);
+                hag_search(&sg, &SearchConfig {
+                    capacity: usize::MAX,
+                    kind: AggregateKind::Set,
+                    pair_cap: usize::MAX,
+                }).0
+            })
+            .collect();
+        let h = stitch_hags(&g, &p, &locals);
+        h.validate().unwrap();
+        check_equivalence(&g, &h).unwrap();
+        assert!(h.cost_core() <= g.e(), "partitioning added cost");
+    }
+}

@@ -12,8 +12,25 @@
 //! than an XLA shape crash.
 
 mod manifest;
+#[cfg(not(feature = "xla"))]
+pub(crate) mod xla_stub;
 
 pub use manifest::{ArtifactSpec, BucketSpec, Manifest, TensorSpec};
+
+// Single switch point between the real PJRT bindings and the CPU
+// stub; everything else in the crate imports `crate::runtime::xla`.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature needs the real PJRT bindings, which are not \
+     wired up yet: vendor the xla crate (e.g. at rust/vendor/xla), \
+     add `xla = { path = \"vendor/xla\", optional = true }` to \
+     [dependencies], change the feature to `xla = [\"dep:xla\"]` in \
+     rust/Cargo.toml, and delete this compile_error."
+);
+#[cfg(feature = "xla")]
+pub(crate) use ::xla;
+#[cfg(not(feature = "xla"))]
+pub(crate) use self::xla_stub as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -98,6 +98,36 @@ impl Args {
     }
 }
 
+/// Shared partition flags (`search`, `partition-stats`):
+/// * `--shards N` — route HAG search through the partitioned parallel
+///   driver ([`crate::partition::search_sharded`]); `N >= 2` shards,
+///   `1` (or absent) keeps the single-threaded whole-graph search;
+/// * `--partition-seed S` — seed for the BFS partitioner's shard-seed
+///   selection (defaults to
+///   [`crate::partition::DEFAULT_PARTITION_SEED`]).
+///
+/// Subcommands that only lower through the coordinator (`train`,
+/// `infer`, `serve`, `emit-buckets`) take `--shards` alone: their
+/// sharded path pins the default partition seed so bucket shapes stay
+/// reproducible across runs.
+pub fn partition_opts(args: &Args) -> Result<(Option<usize>, u64)> {
+    let shards = shards_opt(args)?;
+    let seed = args.get_or("partition-seed",
+                           crate::partition::DEFAULT_PARTITION_SEED)?;
+    Ok((shards, seed))
+}
+
+/// Just the validated `--shards` flag — the subcommands that lower
+/// through the coordinator (`train`, `infer`, `serve`, `emit-buckets`)
+/// take it without `--partition-seed` (see [`partition_opts`]).
+pub fn shards_opt(args: &Args) -> Result<Option<usize>> {
+    let shards = args.get::<usize>("shards")?;
+    if shards == Some(0) {
+        bail!("--shards must be >= 1");
+    }
+    Ok(shards)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +172,17 @@ mod tests {
     fn bad_value_errors() {
         let a = parse("x --epochs banana");
         assert!(a.get::<usize>("epochs").is_err());
+    }
+
+    #[test]
+    fn partition_opts_parse_and_default() {
+        let a = parse("search --shards 4 --partition-seed 11");
+        assert_eq!(partition_opts(&a).unwrap(), (Some(4), 11));
+        let b = parse("search");
+        assert_eq!(
+            partition_opts(&b).unwrap(),
+            (None, crate::partition::DEFAULT_PARTITION_SEED));
+        let c = parse("search --shards 0");
+        assert!(partition_opts(&c).is_err());
     }
 }

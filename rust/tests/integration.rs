@@ -34,7 +34,7 @@ fn training_trajectories_identical_across_reprs() {
     let mut finals = Vec::new();
     for repr in [Repr::GnnGraph, Repr::Hag] {
         let lowered =
-            lower_dataset(&ds, repr, None, &PlanConfig::default())
+            lower_dataset(&ds, repr, None, None, &PlanConfig::default())
                 .unwrap();
         check_equivalence(&ds.graph, &lowered.hag).unwrap();
         let name = coordinator::artifact_name("gcn", "train",
@@ -64,7 +64,7 @@ fn training_converges_on_ppi() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = datasets::load("PPI", 0.05, 7);
     let lowered =
-        lower_dataset(&ds, Repr::Hag, None, &PlanConfig::default())
+        lower_dataset(&ds, Repr::Hag, None, None, &PlanConfig::default())
             .unwrap();
     let name =
         coordinator::artifact_name("gcn", "train", &lowered.bucket);
@@ -94,7 +94,7 @@ fn inference_logits_equivalent_across_reprs() {
     let mut outputs: Vec<Vec<f32>> = Vec::new();
     for repr in [Repr::GnnGraph, Repr::Hag] {
         let lowered =
-            lower_dataset(&ds, repr, None, &PlanConfig::default())
+            lower_dataset(&ds, repr, None, None, &PlanConfig::default())
                 .unwrap();
         let name = coordinator::artifact_name("gcn", "infer",
                                               &lowered.bucket);
@@ -148,7 +148,7 @@ fn graph_classification_trains() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = datasets::load("IMDB", 0.05, 7);
     let lowered =
-        lower_dataset(&ds, Repr::Hag, None, &PlanConfig::default())
+        lower_dataset(&ds, Repr::Hag, None, None, &PlanConfig::default())
             .unwrap();
     let name =
         coordinator::artifact_name("gcn", "train", &lowered.bucket);
@@ -173,7 +173,7 @@ fn serving_path_round_trips() {
     }
     let ds = datasets::load("BZR", 0.05, 7);
     let lowered =
-        lower_dataset(&ds, Repr::Hag, None, &PlanConfig::default())
+        lower_dataset(&ds, Repr::Hag, None, None, &PlanConfig::default())
             .unwrap();
     let name =
         coordinator::artifact_name("gcn", "infer", &lowered.bucket);
@@ -227,9 +227,9 @@ fn wrong_bucket_is_rejected_cleanly() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = datasets::load("BZR", 0.05, 7);
     // lower under HAG but address the GNN artifact: shapes differ
-    let hag = lower_dataset(&ds, Repr::Hag, None,
+    let hag = lower_dataset(&ds, Repr::Hag, None, None,
                             &PlanConfig::default()).unwrap();
-    let gnn = lower_dataset(&ds, Repr::GnnGraph, None,
+    let gnn = lower_dataset(&ds, Repr::GnnGraph, None, None,
                             &PlanConfig::default()).unwrap();
     let gnn_name =
         coordinator::artifact_name("gcn", "train", &gnn.bucket);

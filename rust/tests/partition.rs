@@ -1,0 +1,290 @@
+//! Partition subsystem tests: partitioner invariants, stitched-HAG
+//! validity/equivalence against the unpartitioned graph, and the cost
+//! property (partitioning can only miss merges, never add
+//! aggregations) over the seeded generator families from
+//! `datasets/generators.rs`.
+//!
+//! Same convention as `properties.rs`: cases are seeded and
+//! deterministic; a failure prints the case/seed it came from.
+
+use repro::datasets::{community_graph, ego_clique_set, CommunityCfg,
+                      EgoCliqueCfg};
+use repro::graph::{Graph, GraphBuilder};
+use repro::hag::{check_equivalence, check_equivalence_probabilistic,
+                 hag_search, AggregateKind, Hag, SearchConfig};
+use repro::partition::{partition_bfs, search_partitioned,
+                       search_sharded, search_sharded_seeded,
+                       PartitionConfig};
+use repro::util::Rng;
+
+const CASES: usize = 20;
+
+/// Random graph families (mirrors `properties.rs::random_graph`).
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.range_usize(0, 4) {
+        0 => {
+            let n = rng.range_usize(2, 120);
+            let mut b = GraphBuilder::new(n);
+            let e = rng.range_usize(0, n * 6 + 1);
+            for _ in 0..e {
+                let u = rng.range_usize(0, n) as u32;
+                let v = rng.range_usize(0, n) as u32;
+                if u != v {
+                    b.edge(u, v);
+                }
+            }
+            b.build()
+        }
+        1 => {
+            let n = rng.range_usize(50, 400);
+            let cfg = CommunityCfg {
+                n,
+                e: n * rng.range_usize(2, 12),
+                communities: rng.range_usize(2, 9),
+                intra_frac: rng.range_f64(0.6, 1.0),
+                zipf_exp: rng.range_f64(0.5, 1.3),
+                clone_frac: rng.range_f64(0.0, 0.9),
+            };
+            community_graph(&cfg, rng.next_u64()).0
+        }
+        2 => {
+            let cfg = EgoCliqueCfg {
+                num_graphs: rng.range_usize(2, 12),
+                total_nodes: rng.range_usize(30, 200),
+                total_edges: rng.range_usize(100, 2000),
+                classes: 2,
+            };
+            let (gs, _) = ego_clique_set(&cfg, rng.next_u64());
+            Graph::disjoint_union(&gs).0
+        }
+        _ => {
+            // star + chain (hub-heavy, BFS-adversarial)
+            let n = rng.range_usize(3, 60);
+            let mut b = GraphBuilder::new(n);
+            for v in 1..n as u32 {
+                b.edge(0, v);
+                if v > 1 {
+                    b.edge(v - 1, v);
+                }
+            }
+            b.build()
+        }
+    }
+}
+
+#[test]
+fn prop_every_node_in_exactly_one_shard() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7000 + case as u64);
+        let g = random_graph(&mut rng);
+        for k in [1usize, 2, 3, 4, 7] {
+            let cfg = PartitionConfig::new(k)
+                .with_seed(rng.next_u64());
+            let p = partition_bfs(&g, &cfg);
+            assert_eq!(p.members.len(), k.max(1));
+            // shard_of is total and in-range
+            assert_eq!(p.shard_of.len(), g.n());
+            assert!(p.shard_of.iter()
+                        .all(|&s| (s as usize) < k.max(1)),
+                    "case {case} k={k}: out-of-range shard id");
+            // members lists are a disjoint exhaustive cover
+            let mut seen = vec![false; g.n()];
+            for (s, mem) in p.members.iter().enumerate() {
+                for &v in mem {
+                    assert!(!seen[v as usize],
+                            "case {case} k={k}: node {v} in 2 shards");
+                    seen[v as usize] = true;
+                    assert_eq!(p.shard_of[v as usize], s as u32);
+                }
+            }
+            assert!(seen.iter().all(|&x| x),
+                    "case {case} k={k}: unassigned node");
+        }
+    }
+}
+
+#[test]
+fn prop_shard_weights_within_balance_factor() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7100 + case as u64);
+        let g = random_graph(&mut rng);
+        if g.n() == 0 {
+            continue;
+        }
+        let balance = 1.25;
+        for k in [2usize, 4] {
+            let cfg = PartitionConfig::new(k)
+                .with_seed(rng.next_u64())
+                .with_balance(balance);
+            let p = partition_bfs(&g, &cfg);
+            let r = p.report(&g);
+            // Bound from the partitioner contract: a shard stops at
+            // `ideal`, never admits a node past `ideal * balance`
+            // (unless it is that node's only possible home), and the
+            // leftover pass only tops up the lightest shard — so one
+            // node of weight w_max is the worst overshoot. Node weight
+            // is 1 + total (in + out) degree, computed exactly here.
+            let mut tdeg = vec![0usize; g.n()];
+            for (v, ns) in g.iter() {
+                tdeg[v as usize] += ns.len();
+                for &u in ns {
+                    tdeg[u as usize] += 1;
+                }
+            }
+            let w_max = tdeg.iter().map(|&d| 1.0 + d as f64)
+                .fold(0.0f64, f64::max);
+            let bound = r.ideal_weight * balance + w_max;
+            for (s, &w) in r.shard_weight.iter().enumerate() {
+                assert!(w <= bound + 1e-6,
+                        "case {case} k={k} shard {s}: weight {w} > \
+                         bound {bound} (ideal {})", r.ideal_weight);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stitched_hag_valid_and_equivalent() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7200 + case as u64);
+        let g = random_graph(&mut rng);
+        for k in [2usize, 3, 4] {
+            let cfg = SearchConfig {
+                capacity: match rng.range_usize(0, 3) {
+                    0 => g.n() / 4,
+                    1 => g.n(),
+                    _ => usize::MAX,
+                },
+                kind: AggregateKind::Set,
+                pair_cap: match rng.range_usize(0, 3) {
+                    0 => 8,
+                    1 => 64,
+                    _ => usize::MAX,
+                },
+            };
+            let (hag, stats) =
+                search_sharded_seeded(&g, k, &cfg, 7200 + case as u64);
+            hag.validate().unwrap_or_else(|e| {
+                panic!("case {case} k={k}: invalid stitched HAG: {e}")
+            });
+            check_equivalence(&g, &hag).unwrap_or_else(|e| {
+                panic!("case {case} k={k}: not equivalent: {e}")
+            });
+            check_equivalence_probabilistic(&g, &hag, case as u64)
+                .unwrap();
+            assert!(hag.agg_nodes.len() <= cfg.capacity,
+                    "case {case} k={k}: global capacity violated");
+            assert_eq!(stats.per_shard.len(), k);
+        }
+    }
+}
+
+/// Satellite property: the stitched HAG's `cost_core` is never worse
+/// than the original graph's — partitioning can only miss merges,
+/// never add aggregations.
+#[test]
+fn prop_stitched_cost_never_worse_than_graph() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7300 + case as u64);
+        let g = random_graph(&mut rng);
+        let trivial = Hag::from_graph(&g, AggregateKind::Set);
+        for k in [2usize, 4, 6] {
+            let cfg = SearchConfig::paper_default(g.n());
+            let (hag, _) =
+                search_sharded_seeded(&g, k, &cfg, case as u64);
+            assert!(hag.cost_core() <= trivial.cost_core(),
+                    "case {case} k={k}: stitched cost {} > graph {}",
+                    hag.cost_core(), trivial.cost_core());
+            // and per-layer aggregations cannot increase either
+            assert!(hag.aggregations() <= trivial.aggregations(),
+                    "case {case} k={k}: aggregations increased");
+        }
+    }
+}
+
+/// Acceptance check: on a clique-structured generator graph (the
+/// COLLAB/IMDB regime) 4-way sharding stays within 10% of the
+/// single-shard search cost — the partitioner aligns shard boundaries
+/// with the block structure, so almost no merge straddles the cut.
+#[test]
+fn sharded_cost_within_10pct_on_clique_generator() {
+    let cfg = EgoCliqueCfg {
+        num_graphs: 60,
+        total_nodes: 1200,
+        total_edges: 14_000,
+        classes: 2,
+    };
+    let (gs, _) = ego_clique_set(&cfg, 7);
+    let (g, _) = Graph::disjoint_union(&gs);
+    let sc = SearchConfig::paper_default(g.n());
+    let (single, _) = hag_search(&g, &sc);
+    let (sharded, stats) = search_sharded(&g, 4, &sc);
+    sharded.validate().unwrap();
+    check_equivalence(&g, &sharded).unwrap();
+    let gap = sharded.cost_core() as f64
+        / single.cost_core().max(1) as f64;
+    assert!(gap <= 1.10,
+            "sharded cost {} vs single {} (gap {:.3}, cut {:.2}%)",
+            sharded.cost_core(), single.cost_core(), gap,
+            100.0 * stats.report.cut_frac);
+}
+
+/// Community graphs (the node-classification regime): the
+/// locality-greedy partitioner must keep the cut small enough that the
+/// sharded search retains most of the redundancy win.
+#[test]
+fn sharded_cost_close_on_community_generator() {
+    let cfg = CommunityCfg {
+        n: 2_000,
+        e: 40_000,
+        communities: 16,
+        intra_frac: 0.9,
+        zipf_exp: 0.9,
+        clone_frac: 0.5,
+    };
+    let (g, _) = community_graph(&cfg, 42);
+    let sc = SearchConfig::paper_default(g.n());
+    let (single, _) = hag_search(&g, &sc);
+    let (sharded, stats) = search_sharded(&g, 4, &sc);
+    check_equivalence_probabilistic(&g, &sharded, 42).unwrap();
+    let gap = sharded.cost_core() as f64
+        / single.cost_core().max(1) as f64;
+    // looser than the clique case: ~10% of edges are inter-community
+    // by construction and a fraction of those must land in the cut
+    assert!(gap <= 1.25,
+            "sharded cost {} vs single {} (gap {:.3}, cut {:.2}%)",
+            sharded.cost_core(), single.cost_core(), gap,
+            100.0 * stats.report.cut_frac);
+    // sharding must still beat the no-search baseline by a wide margin
+    assert!(sharded.cost_core() < g.e(),
+            "sharded search found no redundancy at all");
+}
+
+#[test]
+fn search_partitioned_respects_custom_partition() {
+    // two disconnected K6s: a precomputed partition must cut nothing,
+    // and the per-shard searches must find everything the whole-graph
+    // search finds
+    let mut edges = Vec::new();
+    for base in [0u32, 6] {
+        for i in 0..6 {
+            for j in 0..6 {
+                if i != j {
+                    edges.push((base + i, base + j));
+                }
+            }
+        }
+    }
+    let g = Graph::from_edges(12, &edges);
+    let part = partition_bfs(&g, &PartitionConfig::new(2));
+    let cfg = SearchConfig {
+        capacity: usize::MAX,
+        kind: AggregateKind::Set,
+        pair_cap: usize::MAX,
+    };
+    let (hag, stats) = search_partitioned(&g, &part, &cfg);
+    check_equivalence(&g, &hag).unwrap();
+    assert_eq!(stats.report.cut_edges, 0, "cliques are disconnected");
+    let (single, _) = hag_search(&g, &cfg);
+    assert_eq!(hag.cost_core(), single.cost_core());
+}

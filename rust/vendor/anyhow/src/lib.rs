@@ -1,0 +1,223 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! Vendored (like the JSON / RNG / CLI substrates under `util/`) so the
+//! tier-1 build runs with zero registry access. API-compatible with the
+//! subset this repo uses:
+//!
+//! * [`Error`] — a context chain of messages; `Display` prints the
+//!   outermost message, `{:#}` the full `outer: ...: root` chain, and
+//!   `Debug` (what `fn main() -> Result<()>` prints on exit) the
+//!   message plus a `Caused by:` list.
+//! * [`Result<T>`] with the error type defaulted.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (any std error, or an existing [`Error`]) and on `Option`.
+//! * [`anyhow!`] / [`bail!`] macros.
+//!
+//! Source chains are flattened to strings eagerly, which keeps `Error`
+//! trivially `Send + Sync` (the serving path moves errors across
+//! threads) at the cost of downcasting — nothing in-tree downcasts.
+
+use std::fmt;
+
+/// Error: a non-empty chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket impls below coherent (same design as the
+// real crate).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Anything convertible into [`Error`]: std errors and `Error` itself.
+pub trait ToError {
+    fn to_error(self) -> Error;
+}
+
+impl ToError for Error {
+    fn to_error(self) -> Error {
+        self
+    }
+}
+
+impl<E> ToError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn to_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Context attachment for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: ToError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(t) => Ok(t),
+            Err(e) => Err(e.to_error().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        match self {
+            Ok(t) => Ok(t),
+            Err(e) => Err(e.to_error().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest x — run `make artifacts`")
+            .unwrap_err();
+        assert_eq!(format!("{e}"),
+                   "reading manifest x — run `make artifacts`");
+        let full = format!("{e:#}");
+        assert!(full.contains("make artifacts") && full.contains("gone"),
+                "{full}");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer") && d.contains("Caused by")
+                && d.contains("root"), "{d}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.context("missing")?;
+            if v == 0 {
+                bail!("zero: {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(format!("{}", f(None).unwrap_err()), "missing");
+        assert_eq!(format!("{}", f(Some(0)).unwrap_err()), "zero: 0");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(format!("{from_string}"), "plain");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
