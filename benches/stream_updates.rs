@@ -1,0 +1,108 @@
+//! Streaming-maintenance bench (`rust/src/incremental/`): per-update
+//! repair latency vs a full Algorithm-3 re-search, and the cost gap
+//! the repaired HAG carries after a long random update stream, swept
+//! over drift thresholds (the policy's rebuild-rate/quality tradeoff).
+//!
+//! Run: `cargo bench --bench stream_updates`
+//! CI smoke (bounded sizes): `cargo bench --bench stream_updates -- --smoke`
+
+use repro::datasets::{community_graph, CommunityCfg};
+use repro::hag::hag_search;
+use repro::incremental::{random_delta, StreamConfig, StreamEngine};
+use repro::util::benchkit::Bencher;
+use repro::util::Rng;
+
+fn community(n: usize, e: usize, seed: u64) -> repro::graph::Graph {
+    let cfg = CommunityCfg {
+        n,
+        e,
+        communities: (n / 160).max(4),
+        intra_frac: 0.9,
+        zipf_exp: 0.9,
+        clone_frac: 0.5,
+    };
+    community_graph(&cfg, seed).0
+}
+
+/// Drive `updates` random deltas through an engine, returning sorted
+/// per-apply latencies (us) and the engine.
+fn drive(g: &repro::graph::Graph, cfg: StreamConfig, updates: usize,
+         seed: u64) -> (Vec<f64>, StreamEngine) {
+    let mut eng = StreamEngine::new(g, cfg);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut lat = Vec::with_capacity(updates);
+    for _ in 0..updates {
+        let d = random_delta(&mut rng, eng.overlay(), 0.5, 0.01);
+        let t = std::time::Instant::now();
+        eng.apply(d);
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    eng.finish_rebuild();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lat, eng)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = Bencher::quick();
+    let sizes: &[(usize, usize, usize)] = if smoke {
+        &[(1_000, 20_000, 2_000)]
+    } else {
+        &[(4_000, 80_000, 10_000), (16_000, 320_000, 10_000)]
+    };
+
+    // repair latency vs full re-search
+    for &(n, e, updates) in sizes {
+        let g = community(n, e, 19);
+        let (lat, eng) = drive(&g, StreamConfig::default(), updates, 19);
+        let g_now = eng.graph();
+        let sc = eng.search_config();
+        let full = b.run(&format!("stream_updates/full_search/n{n}"),
+                         || {
+                             std::hint::black_box(
+                                 hag_search(&g_now, &sc));
+                         });
+        let (fresh, _) = hag_search(&g_now, &sc);
+        let full_us = full.median.as_secs_f64() * 1e6;
+        let p50 = lat[lat.len() / 2];
+        let p99 = lat[(lat.len() as f64 * 0.99) as usize - 1];
+        let s = eng.stats();
+        println!(
+            "  -> n{n}: {updates} updates; repair p50 {p50:.1} us \
+             p99 {p99:.1} us; full re-search {:.1} ms = {:.0}x \
+             median repair; {} fallbacks, {} re-merges, {} rebuilds",
+            full_us / 1e3, full_us / p50.max(1e-9), s.fallbacks,
+            s.remerge_merges, s.rebuild_swaps);
+        println!(
+            "  -> n{n}: cost maintained {} vs fresh {} ({:+.2}% gap)",
+            eng.cost_core(), fresh.cost_core(),
+            100.0 * (eng.cost_core() as f64
+                / fresh.cost_core().max(1) as f64 - 1.0));
+    }
+
+    // cost-gap-after-stream sweep over drift thresholds (rebuild rate
+    // vs quality; INFINITY = repair + re-merge only, never re-search)
+    let (n, e, updates) = if smoke {
+        (1_000usize, 20_000usize, 2_000usize)
+    } else {
+        (8_000, 160_000, 10_000)
+    };
+    let g = community(n, e, 23);
+    println!("\ndrift-threshold sweep (n{n}, {updates} updates):");
+    for &thr in &[0.02f64, 0.05, 0.10, f64::INFINITY] {
+        let mut cfg = StreamConfig::default();
+        cfg.policy.threshold = thr;
+        let t0 = std::time::Instant::now();
+        let (_, eng) = drive(&g, cfg, updates, 23);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let g_now = eng.graph();
+        let (fresh, _) = hag_search(&g_now, &eng.search_config());
+        println!(
+            "  -> threshold {thr:>8.2}: cost {} vs fresh {} \
+             ({:+.2}% gap), {} rebuilds, {:.0} ms total",
+            eng.cost_core(), fresh.cost_core(),
+            100.0 * (eng.cost_core() as f64
+                / fresh.cost_core().max(1) as f64 - 1.0),
+            eng.stats().rebuild_swaps, wall_ms);
+    }
+}

@@ -1,10 +1,11 @@
 //! HAG explorer: the paper's §4 algorithmics on any dataset — runs the
 //! search at several capacities and pair-cap settings, prints the cost
 //! landscape, validates Theorem 1 at every point, compares against the
-//! random-merge ablation baseline, and finishes with the partitioned
-//! search (`repro partition-stats` path): per-shard
-//! redundancy-elimination stats, edge cut, and the sharded-vs-single
-//! cost gap and wall-clock speedup.
+//! random-merge ablation baseline, shows the partitioned search
+//! (`repro partition-stats` path): per-shard redundancy-elimination
+//! stats, edge cut, and the sharded-vs-single cost gap and wall-clock
+//! speedup — and closes with the incremental engine maintaining the
+//! HAG through a random update stream (`repro stream` path).
 //!
 //! ```bash
 //! cargo run --release --example hag_explorer -- BZR 0.05
@@ -15,7 +16,9 @@ use repro::coordinator::random_merge_hag;
 use repro::datasets;
 use repro::hag::{check_equivalence_probabilistic, hag_search,
                  AggregateKind, SearchConfig};
+use repro::incremental::{random_delta, StreamConfig, StreamEngine};
 use repro::partition::search_sharded;
+use repro::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
@@ -93,5 +96,39 @@ fn main() -> anyhow::Result<()> {
              100.0 * (sharded.cost_core() as f64
                  / greedy.cost_core().max(1) as f64 - 1.0),
              sh.wall_ms, sh.threads, gstats.elapsed_ms);
+
+    println!("\nstreaming maintenance (2000 random updates; `repro \
+              stream` for the full report):");
+    let mut scfg = StreamConfig::default();
+    scfg.shards = 2;
+    let mut eng = StreamEngine::new(&ds.graph, scfg);
+    let mut rng = Rng::seed_from_u64(31);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(2000);
+    for _ in 0..2000 {
+        let d = random_delta(&mut rng, eng.overlay(), 0.5, 0.01);
+        let t = std::time::Instant::now();
+        eng.apply(d);
+        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    eng.finish_rebuild();
+    let g_now = eng.graph();
+    let maintained = eng.to_hag();
+    check_equivalence_probabilistic(&g_now, &maintained, 6)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let t = std::time::Instant::now();
+    let (fresh2, _) = hag_search(&g_now, &eng.search_config());
+    let full_ms = t.elapsed().as_secs_f64() * 1e3;
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let s = eng.stats();
+    println!("  {} fallbacks, {} re-merge merges, {} rebuilds; \
+              repair p50 {:.1} us vs full re-search {:.1} ms",
+             s.fallbacks, s.remerge_merges, s.rebuild_swaps,
+             lat_us[lat_us.len() / 2], full_ms);
+    println!("  cost {} vs fresh {} ({:+.2}%), graph now n={} e={}; \
+              equivalence OK",
+             maintained.cost_core(), fresh2.cost_core(),
+             100.0 * (maintained.cost_core() as f64
+                 / fresh2.cost_core().max(1) as f64 - 1.0),
+             g_now.n(), g_now.e());
     Ok(())
 }

@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             "artifacts", &name, &workload, &lowered.plan,
             BatchPolicy { max_batch: 64,
                           max_wait: Duration::from_millis(2) },
-            SEED)?;
+            SEED, None)?;
         let n = ds.n() as u32;
         let f_in = ds.f_in;
         let classes = ds.classes;
@@ -56,7 +56,9 @@ fn main() -> anyhow::Result<()> {
                         reply: otx,
                         submitted: Instant::now(),
                     };
-                    if tx.send(req).is_err() {
+                    if tx.send(coordinator::ServerMsg::Score(req))
+                        .is_err()
+                    {
                         break;
                     }
                     let resp = orx.recv().expect("reply");

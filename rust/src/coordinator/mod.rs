@@ -7,7 +7,8 @@ pub mod trainer;
 
 pub use packing::{pack_workload, unpermute_rows, PackedWorkload};
 pub use server::{BatchPolicy, InferenceServer, ScoreRequest,
-                 ScoreResponse, ServeStats};
+                 ScoreResponse, ServeStats, ServerMsg, UpdateRequest,
+                 UpdateResponse};
 pub use trainer::{EpochStats, TrainReport, Trainer};
 
 use anyhow::Result;

@@ -17,6 +17,17 @@
 //! cross the thread boundary. Built on std::sync primitives (tokio is
 //! not vendored here; a blocking XLA worker gains nothing from an async
 //! runtime anyway).
+//!
+//! Online topology updates: the queue carries [`ServerMsg`], either a
+//! scoring request or an [`UpdateRequest`] (a
+//! [`GraphDelta`](crate::incremental::GraphDelta) for the optional
+//! resident [`StreamEngine`]). Updates are repaired inline between
+//! batches — local repair is microseconds, and drift-triggered
+//! re-searches run on the engine's background thread — so scoring
+//! traffic keeps flowing while the HAG is maintained. The *compiled*
+//! artifact stays pinned to its bucket; the maintained HAG is what the
+//! next emit-buckets/compile cycle lowers, i.e. the serving plan
+//! trails the live topology by one plan swap (DESIGN.md §6).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError,
@@ -26,6 +37,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::hag::ExecutionPlan;
+use crate::incremental::{ApplyOutcome, GraphDelta, RebuildEvent,
+                         StreamEngine};
 use crate::runtime::xla;
 use crate::runtime::{Executable, HostTensor, Runtime};
 
@@ -57,6 +70,39 @@ pub fn oneshot() -> (SyncSender<ScoreResponse>,
     sync_channel(1)
 }
 
+/// Everything the serving queue carries.
+pub enum ServerMsg {
+    Score(ScoreRequest),
+    Update(UpdateRequest),
+}
+
+/// One topology update for the resident [`StreamEngine`].
+pub struct UpdateRequest {
+    pub delta: GraphDelta,
+    /// Optional reply channel (fire-and-forget updates pass `None`).
+    pub reply: Option<SyncSender<UpdateResponse>>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct UpdateResponse {
+    /// Engine sequence number; `0` when the server has no stream
+    /// engine (the update was dropped).
+    pub seq: u64,
+    pub outcome: ApplyOutcome,
+    pub rebuild: RebuildEvent,
+    /// `cost_core` of the maintained HAG after this update.
+    pub cost_core: usize,
+    /// Queue + repair time.
+    pub latency: Duration,
+}
+
+/// Create a reply channel pair for an [`UpdateRequest`].
+pub fn update_oneshot() -> (SyncSender<UpdateResponse>,
+                            Receiver<UpdateResponse>) {
+    sync_channel(1)
+}
+
 /// Batching policy.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
@@ -80,11 +126,15 @@ pub struct ServeStats {
     pub p99_ms: f64,
     pub mean_exec_ms: f64,
     pub throughput_rps: f64,
+    /// Topology updates repaired while serving.
+    pub updates: usize,
+    /// Drift-triggered HAG rebuilds swapped in while serving.
+    pub rebuild_swaps: usize,
 }
 
 /// The inference server over one prepared (graph, plan, artifact).
 pub struct InferenceServer {
-    tx: SyncSender<ScoreRequest>,
+    tx: SyncSender<ServerMsg>,
     handle: std::thread::JoinHandle<ServeStats>,
 }
 
@@ -92,9 +142,14 @@ impl InferenceServer {
     /// Spawn the batcher thread and block until its PJRT state is
     /// ready. `workload` supplies the resident graph tensors; params
     /// are initialized (a full deployment would load a checkpoint).
+    /// `stream` (optional) is the incremental-maintenance engine that
+    /// [`UpdateRequest`]s feed; pass
+    /// `StreamEngine::new(&ds.graph, ..)` with a background drift
+    /// policy so re-searches never stall the batcher.
     pub fn spawn(artifacts_dir: impl Into<PathBuf>, artifact: &str,
                  workload: &PackedWorkload, plan: &ExecutionPlan,
-                 policy: BatchPolicy, seed: u64)
+                 policy: BatchPolicy, seed: u64,
+                 stream: Option<StreamEngine>)
                  -> Result<InferenceServer> {
         let dir = artifacts_dir.into();
         let artifact = artifact.to_string();
@@ -111,7 +166,7 @@ impl InferenceServer {
             .collect();
         let inv_perm = plan.inv_perm.clone();
 
-        let (tx, rx) = sync_channel::<ScoreRequest>(4096);
+        let (tx, rx) = sync_channel::<ServerMsg>(4096);
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
         let handle = std::thread::spawn(move || {
             let setup = Worker::setup(&dir, &artifact, statics, h0,
@@ -119,7 +174,7 @@ impl InferenceServer {
             match setup {
                 Ok(mut w) => {
                     let _ = ready_tx.send(Ok(()));
-                    w.batcher_loop(rx, &inv_perm, policy)
+                    w.batcher_loop(rx, &inv_perm, policy, stream)
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -140,7 +195,9 @@ impl InferenceServer {
         }
     }
 
-    pub fn client(&self) -> SyncSender<ScoreRequest> {
+    /// Queue handle: send [`ServerMsg::Score`] to score,
+    /// [`ServerMsg::Update`] to stream a topology delta.
+    pub fn client(&self) -> SyncSender<ServerMsg> {
         self.tx.clone()
     }
 
@@ -208,20 +265,63 @@ impl Worker {
                     f_in, classes })
     }
 
-    fn batcher_loop(&mut self, rx: Receiver<ScoreRequest>,
-                    inv_perm: &[u32], policy: BatchPolicy) -> ServeStats {
+    /// Repair one topology update against the resident engine (local
+    /// repair is microseconds; rebuilds go to the engine's background
+    /// thread), replying if the client asked for one.
+    fn handle_update(stream: &mut Option<StreamEngine>,
+                     req: UpdateRequest) {
+        let resp = match stream.as_mut() {
+            Some(eng) => {
+                let rep = eng.apply(req.delta);
+                UpdateResponse {
+                    seq: rep.seq,
+                    outcome: rep.outcome,
+                    rebuild: rep.rebuild,
+                    cost_core: rep.cost_core,
+                    latency: req.submitted.elapsed(),
+                }
+            }
+            None => UpdateResponse {
+                seq: 0,
+                outcome: ApplyOutcome::NoOp,
+                rebuild: RebuildEvent::None,
+                cost_core: 0,
+                latency: req.submitted.elapsed(),
+            },
+        };
+        if let Some(tx) = req.reply {
+            let _ = tx.send(resp);
+        }
+    }
+
+    fn batcher_loop(&mut self, rx: Receiver<ServerMsg>,
+                    inv_perm: &[u32], policy: BatchPolicy,
+                    mut stream: Option<StreamEngine>) -> ServeStats {
         let mut stats_lat: Vec<f64> = Vec::new();
         let mut stats_exec: Vec<f64> = Vec::new();
         let mut batches = 0usize;
         let mut requests = 0usize;
+        let mut updates = 0usize;
         let t_start = Instant::now();
-        loop {
-            // Collect a batch: first request blocks, the rest race the
-            // deadline.
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break,
-            };
+        'serve: loop {
+            // Collect a batch: first scoring request blocks, the rest
+            // race the deadline. Updates are repaired inline as they
+            // arrive — they never block scoring and never count
+            // toward the batch.
+            let first;
+            loop {
+                match rx.recv() {
+                    Ok(ServerMsg::Score(r)) => {
+                        first = r;
+                        break;
+                    }
+                    Ok(ServerMsg::Update(u)) => {
+                        updates += 1;
+                        Self::handle_update(&mut stream, u);
+                    }
+                    Err(_) => break 'serve,
+                }
+            }
             let mut batch = vec![first];
             let deadline = Instant::now() + policy.max_wait;
             while batch.len() < policy.max_batch {
@@ -231,10 +331,18 @@ impl Worker {
                     break;
                 }
                 match rx.recv_timeout(left) {
-                    Ok(r) => batch.push(r),
+                    Ok(ServerMsg::Score(r)) => batch.push(r),
+                    Ok(ServerMsg::Update(u)) => {
+                        updates += 1;
+                        Self::handle_update(&mut stream, u);
+                    }
                     Err(RecvTimeoutError::Timeout)
                     | Err(RecvTimeoutError::Disconnected) => break,
                 }
+            }
+            // Land any finished background re-search between batches.
+            if let Some(eng) = stream.as_mut() {
+                eng.poll_rebuild();
             }
             // Apply feature updates to the resident (permuted) h0.
             for r in &batch {
@@ -271,8 +379,10 @@ impl Worker {
                 }
             }
         }
+        let rebuild_swaps =
+            stream.as_ref().map_or(0, |e| e.stats().rebuild_swaps);
         finalize_stats(stats_lat, stats_exec, batches, requests,
-                       t_start.elapsed())
+                       updates, rebuild_swaps, t_start.elapsed())
     }
 
     fn run_batch(&self) -> Result<Vec<f32>> {
@@ -295,8 +405,68 @@ impl Worker {
     }
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::incremental::StreamConfig;
+
+    // The scoring path needs compiled artifacts (tests/integration.rs
+    // covers it, self-skipping without them); the update path is pure
+    // engine work and is testable here without XLA.
+
+    #[test]
+    fn handle_update_replies_with_engine_state() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let mut stream =
+            Some(StreamEngine::new(&g, StreamConfig::default()));
+        let (tx, rx) = update_oneshot();
+        Worker::handle_update(&mut stream, UpdateRequest {
+            delta: GraphDelta::EdgeInsert { src: 0, dst: 2 },
+            reply: Some(tx),
+            submitted: Instant::now(),
+        });
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.seq, 1);
+        assert_eq!(resp.outcome, ApplyOutcome::Inserted);
+        assert_eq!(resp.rebuild, RebuildEvent::None);
+        let eng = stream.as_ref().unwrap();
+        assert_eq!(resp.cost_core, eng.cost_core());
+        assert_eq!(eng.e(), g.e() + 1);
+    }
+
+    #[test]
+    fn handle_update_without_engine_replies_sentinel() {
+        let mut stream: Option<StreamEngine> = None;
+        let (tx, rx) = update_oneshot();
+        Worker::handle_update(&mut stream, UpdateRequest {
+            delta: GraphDelta::NodeAdd,
+            reply: Some(tx),
+            submitted: Instant::now(),
+        });
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.seq, 0, "no-engine sentinel");
+        assert_eq!(resp.outcome, ApplyOutcome::NoOp);
+    }
+
+    #[test]
+    fn handle_update_fire_and_forget_does_not_block() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        let mut stream =
+            Some(StreamEngine::new(&g, StreamConfig::default()));
+        Worker::handle_update(&mut stream, UpdateRequest {
+            delta: GraphDelta::EdgeDelete { src: 0, dst: 1 },
+            reply: None,
+            submitted: Instant::now(),
+        });
+        assert_eq!(stream.as_ref().unwrap().e(), g.e() - 1);
+    }
+}
+
 fn finalize_stats(mut lat: Vec<f64>, exec: Vec<f64>, batches: usize,
-                  requests: usize, elapsed: Duration) -> ServeStats {
+                  requests: usize, updates: usize,
+                  rebuild_swaps: usize,
+                  elapsed: Duration) -> ServeStats {
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| -> f64 {
         if lat.is_empty() {
@@ -321,5 +491,7 @@ fn finalize_stats(mut lat: Vec<f64>, exec: Vec<f64>, batches: usize,
             exec.iter().sum::<f64>() / exec.len() as f64
         },
         throughput_rps: requests as f64 / elapsed.as_secs_f64().max(1e-9),
+        updates,
+        rebuild_swaps,
     }
 }

@@ -15,18 +15,36 @@ use crate::util::json::{self, Value};
 use super::{Graph, GraphBuilder};
 
 /// Load a whitespace-separated edge list (`src dst` per line, `#`
-/// comments). Node count is `max id + 1` unless `n` is given.
-/// `undirected` mirrors every edge.
+/// comments). Node count resolution, in priority order: the `n`
+/// argument, a `# n=<count>` header on the **first line only** (what
+/// [`save_edge_list`] writes — this is what lets graphs with trailing
+/// isolated nodes round-trip, which the incremental overlay depends
+/// on; later comments are never interpreted, so external files with
+/// incidental `n=` tokens in annotations load untouched), else
+/// `max id + 1`. Duplicate lines are deduped by the CSR builder,
+/// matching [`GraphSet`] JSON loading. `undirected` mirrors every
+/// edge.
 pub fn load_edge_list(path: &Path, n: Option<usize>,
                       undirected: bool) -> Result<Graph> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut edges = Vec::new();
     let mut max_id = 0u32;
+    let mut header_n: Option<usize> = None;
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
+            // Header convention: first line, first token is `n=<N>`.
+            if lineno == 0 {
+                if let Some(rest) = t.strip_prefix('#') {
+                    header_n = rest
+                        .split_whitespace()
+                        .next()
+                        .and_then(|tok| tok.strip_prefix("n="))
+                        .and_then(|v| v.parse::<usize>().ok());
+                }
+            }
             continue;
         }
         let mut it = t.split_whitespace();
@@ -39,7 +57,10 @@ pub fn load_edge_list(path: &Path, n: Option<usize>,
         max_id = max_id.max(u).max(v);
         edges.push((u, v));
     }
-    let n = n.unwrap_or(max_id as usize + 1);
+    let inferred = if edges.is_empty() { 0 } else { max_id as usize + 1 };
+    // An explicit count (argument or header) must still cover every
+    // edge endpoint; take the max so malformed headers fail soft.
+    let n = n.or(header_n).map_or(inferred, |c| c.max(inferred));
     Ok(if undirected {
         Graph::from_undirected_edges(n, &edges)
     } else {
@@ -160,6 +181,65 @@ mod tests {
     }
 
     #[test]
+    fn edge_list_roundtrips_isolated_nodes_via_header() {
+        // Node 4 is isolated and node 0 has no in-edges; without the
+        // `# n=` header a reload would shrink the graph to max id + 1.
+        let dir = std::env::temp_dir().join("repro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("isolated.edges");
+        let g = Graph::from_edges(5, &[(0, 1), (2, 1), (0, 3)]);
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, None, false).unwrap();
+        assert_eq!(g, g2, "header `# n=` must preserve node count");
+        // an explicit argument still wins over the header
+        let g3 = load_edge_list(&p, Some(7), false).unwrap();
+        assert_eq!(g3.n(), 7);
+        assert_eq!(g3.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn edge_list_duplicate_edges_dedup_consistently() {
+        let dir = std::env::temp_dir().join("repro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dups.edges");
+        std::fs::write(&p, "# n=4\n0 1\n0 1\n2 1\n0 1\n").unwrap();
+        let g = load_edge_list(&p, None, false).unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.e(), 2, "duplicates collapse like from_edges");
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        // and the same edges through the builder agree exactly
+        assert_eq!(g, Graph::from_edges(
+            4, &[(0, 1), (0, 1), (2, 1), (0, 1)]));
+    }
+
+    #[test]
+    fn edge_list_ignores_non_header_comments() {
+        // `n=` tokens outside the first-line header position must not
+        // change the node count (external files annotate freely).
+        let dir = std::env::temp_dir().join("repro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("annotated.edges");
+        std::fs::write(
+            &p, "# sample n=500 of 7000\n0 1\n# subset n=900\n2 1\n")
+            .unwrap();
+        let g = load_edge_list(&p, None, false).unwrap();
+        // first-line comment's first token is "sample", not "n=..."
+        assert_eq!(g.n(), 3, "annotation comments must not set n");
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn edge_list_header_smaller_than_ids_fails_soft() {
+        let dir = std::env::temp_dir().join("repro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("small_header.edges");
+        std::fs::write(&p, "# n=2\n0 5\n").unwrap();
+        let g = load_edge_list(&p, None, false).unwrap();
+        assert_eq!(g.n(), 6, "edge endpoints extend a short header");
+        assert_eq!(g.neighbors(5), &[0]);
+    }
+
+    #[test]
     fn graphset_roundtrip() {
         let dir = std::env::temp_dir().join("repro_io_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -175,5 +255,30 @@ mod tests {
         assert_eq!(set2.graphs[0].label, 1);
         let gs = set2.to_graphs();
         assert_eq!(gs[0].neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn graphset_roundtrips_isolated_nodes_and_dups() {
+        // The JSON container carries `n` explicitly, so isolated nodes
+        // survive; duplicate edges must collapse exactly like the
+        // edge-list loader (both feed the same CSR builder).
+        let dir = std::env::temp_dir().join("repro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("iso_dup.json");
+        let set = GraphSet {
+            name: "iso".into(),
+            graphs: vec![GraphRecord {
+                n: 6,
+                edges: vec![(0, 1), (0, 1), (2, 1), (0, 3)],
+                label: 0,
+            }],
+        };
+        set.save(&p).unwrap();
+        let gs = GraphSet::load(&p).unwrap().to_graphs();
+        assert_eq!(gs[0].n(), 6, "isolated nodes 4, 5 kept");
+        assert_eq!(gs[0].e(), 3, "duplicate edge collapsed");
+        assert_eq!(gs[0],
+                   Graph::from_edges(6, &[(0, 1), (2, 1), (0, 3)]));
+        assert_eq!(gs[0].neighbors(5), &[] as &[u32]);
     }
 }

@@ -103,9 +103,11 @@ pub fn hag_search(g: &Graph, cfg: &SearchConfig) -> (Hag, SearchStats) {
     (hag, stats)
 }
 
-/// Normalize an unordered pair to `(lo, hi)`.
+/// Normalize an unordered pair to `(lo, hi)`. Shared with the
+/// incremental-repair re-merge pass (`incremental/repair.rs`), which
+/// applies the same pair-redundancy rule over stream-dirtied finals.
 #[inline]
-fn norm(a: Slot, b: Slot) -> (Slot, Slot) {
+pub(crate) fn norm(a: Slot, b: Slot) -> (Slot, Slot) {
     if a < b { (a, b) } else { (b, a) }
 }
 

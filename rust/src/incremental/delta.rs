@@ -1,0 +1,264 @@
+//! Delta log + mutable overlay over the CSR graph substrate.
+//!
+//! [`Graph`](crate::graph::Graph) is an immutable CSR — the right
+//! layout for search and plan compilation, the wrong one for a stream
+//! of edge updates. [`OverlayGraph`] keeps the CSR as a frozen base and
+//! materializes a private sorted in-neighbor row only for nodes the
+//! stream has touched, so a long-lived serving graph pays O(dirty rows)
+//! extra memory instead of a full copy, and `to_graph()` re-freezes the
+//! current state into a fresh CSR for the drift-triggered re-search.
+//!
+//! Invariants mirrored from the CSR builder so the two stay
+//! interchangeable: rows are sorted ascending and duplicate-free
+//! (`Graph::from_edges` dedups; the overlay refuses duplicate inserts),
+//! and isolated nodes are first-class (`graph::io` round-trips them via
+//! the `# n=` header).
+
+use crate::graph::Graph;
+use crate::util::FxHashMap;
+
+/// One streaming update. `src -> dst` is an aggregation edge ("src's
+/// activations are aggregated into dst"), matching
+/// [`Graph::from_edges`] orientation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphDelta {
+    EdgeInsert { src: u32, dst: u32 },
+    EdgeDelete { src: u32, dst: u32 },
+    /// Append one isolated node (id = current `n`); subsequent inserts
+    /// wire it in.
+    NodeAdd,
+}
+
+/// Sequence-stamped delta log. Retained only while a background
+/// re-search is in flight (the snapshot + replay window); otherwise the
+/// engine clears it eagerly.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaLog {
+    entries: Vec<(u64, GraphDelta)>,
+}
+
+impl DeltaLog {
+    pub fn push(&mut self, seq: u64, delta: GraphDelta) {
+        debug_assert!(self.entries.last().map_or(true, |&(s, _)| s < seq),
+                      "log sequence must be strictly increasing");
+        self.entries.push((seq, delta));
+    }
+
+    pub fn entries(&self) -> &[(u64, GraphDelta)] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// A CSR base plus per-row copy-on-write overrides.
+#[derive(Debug, Clone)]
+pub struct OverlayGraph {
+    base: Graph,
+    /// Overridden in-neighbor rows (sorted ascending, duplicate-free).
+    rows: FxHashMap<u32, Vec<u32>>,
+    n: usize,
+    e: usize,
+}
+
+impl OverlayGraph {
+    pub fn new(base: Graph) -> Self {
+        let (n, e) = (base.n(), base.e());
+        OverlayGraph { base, rows: FxHashMap::default(), n, e }
+    }
+
+    /// Current node count (base nodes + `NodeAdd`s).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Current aggregation-edge count.
+    pub fn e(&self) -> usize {
+        self.e
+    }
+
+    /// Number of rows diverged from the base CSR.
+    pub fn dirty_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Current in-neighbors of `v`, sorted ascending.
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        match self.rows.get(&v) {
+            Some(row) => row.as_slice(),
+            None if (v as usize) < self.base.n() => self.base.neighbors(v),
+            None => &[],
+        }
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.neighbors(v).len()
+    }
+
+    pub fn has_edge(&self, src: u32, dst: u32) -> bool {
+        self.neighbors(dst).binary_search(&src).is_ok()
+    }
+
+    fn row_mut(&mut self, v: u32) -> &mut Vec<u32> {
+        if !self.rows.contains_key(&v) {
+            let init = if (v as usize) < self.base.n() {
+                self.base.neighbors(v).to_vec()
+            } else {
+                Vec::new()
+            };
+            self.rows.insert(v, init);
+        }
+        self.rows.get_mut(&v).unwrap()
+    }
+
+    /// Insert `src -> dst`; `false` if the edge already exists (the
+    /// CSR substrate is duplicate-free, so the overlay is too).
+    pub fn insert_edge(&mut self, src: u32, dst: u32) -> bool {
+        debug_assert!((src as usize) < self.n && (dst as usize) < self.n);
+        let row = self.row_mut(dst);
+        match row.binary_search(&src) {
+            Ok(_) => false,
+            Err(i) => {
+                row.insert(i, src);
+                self.e += 1;
+                true
+            }
+        }
+    }
+
+    /// Delete `src -> dst`; `false` if absent.
+    pub fn delete_edge(&mut self, src: u32, dst: u32) -> bool {
+        debug_assert!((src as usize) < self.n && (dst as usize) < self.n);
+        // Don't materialize a row just to discover the edge is absent.
+        if !self.has_edge(src, dst) {
+            return false;
+        }
+        let row = self.row_mut(dst);
+        match row.binary_search(&src) {
+            Ok(i) => {
+                row.remove(i);
+                self.e -= 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Append one isolated node, returning its id.
+    pub fn add_node(&mut self) -> u32 {
+        let id = self.n as u32;
+        self.n += 1;
+        id
+    }
+
+    /// Apply one delta; `true` if it changed the graph (an insert of an
+    /// existing edge / delete of a missing edge is a no-op).
+    pub fn apply(&mut self, delta: GraphDelta) -> bool {
+        match delta {
+            GraphDelta::EdgeInsert { src, dst } => {
+                self.insert_edge(src, dst)
+            }
+            GraphDelta::EdgeDelete { src, dst } => {
+                self.delete_edge(src, dst)
+            }
+            GraphDelta::NodeAdd => {
+                self.add_node();
+                true
+            }
+        }
+    }
+
+    /// Freeze the current state into a fresh CSR [`Graph`].
+    pub fn to_graph(&self) -> Graph {
+        let mut offsets = Vec::with_capacity(self.n + 1);
+        let mut neighbors = Vec::with_capacity(self.e);
+        offsets.push(0u32);
+        for v in 0..self.n as u32 {
+            neighbors.extend_from_slice(self.neighbors(v));
+            offsets.push(neighbors.len() as u32);
+        }
+        Graph::from_csr(offsets, neighbors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Graph {
+        Graph::from_edges(4, &[(1, 0), (2, 0), (0, 2), (3, 2)])
+    }
+
+    #[test]
+    fn passthrough_before_any_delta() {
+        let ov = OverlayGraph::new(base());
+        assert_eq!(ov.n(), 4);
+        assert_eq!(ov.e(), 4);
+        assert_eq!(ov.neighbors(0), &[1, 2]);
+        assert_eq!(ov.neighbors(1), &[] as &[u32]);
+        assert_eq!(ov.dirty_rows(), 0);
+        assert_eq!(ov.to_graph(), base());
+    }
+
+    #[test]
+    fn insert_delete_roundtrip() {
+        let mut ov = OverlayGraph::new(base());
+        assert!(ov.insert_edge(3, 0));
+        assert!(!ov.insert_edge(3, 0), "duplicate insert must no-op");
+        assert_eq!(ov.neighbors(0), &[1, 2, 3]);
+        assert_eq!(ov.e(), 5);
+        assert!(ov.delete_edge(3, 0));
+        assert!(!ov.delete_edge(3, 0), "double delete must no-op");
+        assert_eq!(ov.e(), 4);
+        assert_eq!(ov.to_graph(), base());
+    }
+
+    #[test]
+    fn node_add_and_wire() {
+        let mut ov = OverlayGraph::new(base());
+        let v = ov.add_node();
+        assert_eq!(v, 4);
+        assert_eq!(ov.n(), 5);
+        assert_eq!(ov.neighbors(v), &[] as &[u32]);
+        assert!(ov.insert_edge(0, v));
+        assert!(ov.insert_edge(v, 0));
+        assert_eq!(ov.neighbors(v), &[0]);
+        assert_eq!(ov.neighbors(0), &[1, 2, 4]);
+        let g = ov.to_graph();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.neighbors(4), &[0]);
+    }
+
+    #[test]
+    fn to_graph_matches_builder_semantics() {
+        // The overlay must agree with Graph::from_edges on the same
+        // final edge set (sorted, deduped, isolated nodes kept).
+        let mut ov = OverlayGraph::new(Graph::from_edges(3, &[(0, 1)]));
+        ov.add_node(); // node 3, isolated
+        ov.insert_edge(2, 1);
+        ov.insert_edge(0, 2);
+        let want = Graph::from_edges(4, &[(0, 1), (2, 1), (0, 2)]);
+        assert_eq!(ov.to_graph(), want);
+    }
+
+    #[test]
+    fn delta_log_orders() {
+        let mut log = DeltaLog::default();
+        log.push(1, GraphDelta::NodeAdd);
+        log.push(2, GraphDelta::EdgeInsert { src: 0, dst: 1 });
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.entries()[1].0, 2);
+        log.clear();
+        assert!(log.is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! Cost-drift tracking and the re-search trigger.
+//!
+//! Local repair (repair.rs) keeps the HAG *valid* under a stream of
+//! deltas but slowly leaks *quality*: every covered-edge delete falls a
+//! final back to direct aggregation, and the windowed re-merge only
+//! sees the dirty region. The policy quantifies the leak as **drift**:
+//!
+//! ```text
+//! drift = cost_core(current) / est_fresh - 1
+//! est_fresh = ratio * |E_now|,  ratio = EWMA of cost_core/|E| over
+//!                                       past full searches
+//! ```
+//!
+//! The ratio is a decayed estimate of what a fresh Algorithm-3 search
+//! would achieve on the current graph: search cost scales with edge
+//! count for a stationary-ish structure, and the EWMA (`decay` toward
+//! past observations) smooths generator noise across rebuilds. When
+//! drift exceeds `threshold`, the engine re-runs the full search —
+//! through `partition::search_sharded` when sharding is configured —
+//! and swaps the rebuilt HAG in (inline, or on a background thread
+//! with delta replay; see `StreamEngine`).
+
+/// Re-search policy knobs.
+#[derive(Debug, Clone)]
+pub struct DriftPolicy {
+    /// Drift fraction that triggers a re-search (e.g. `0.08` = rebuild
+    /// once local repair has leaked 8% over the fresh-search estimate).
+    /// `f64::INFINITY` disables re-search entirely.
+    pub threshold: f64,
+    /// EWMA weight kept by old observations when a new full-search
+    /// ratio is recorded (`0.0` = always trust the newest).
+    pub decay: f64,
+    /// Policy check cadence, in applied deltas.
+    pub check_every: usize,
+    /// Rebuild on a background thread (snapshot + delta replay +
+    /// atomic swap) instead of inline.
+    pub background: bool,
+}
+
+impl Default for DriftPolicy {
+    fn default() -> Self {
+        DriftPolicy {
+            threshold: 0.08,
+            decay: 0.5,
+            check_every: 64,
+            background: false,
+        }
+    }
+}
+
+impl DriftPolicy {
+    pub fn with_threshold(mut self, threshold: f64) -> Self {
+        self.threshold = threshold;
+        self
+    }
+
+    pub fn with_background(mut self, background: bool) -> Self {
+        self.background = background;
+        self
+    }
+}
+
+/// EWMA of observed fresh-search cost ratios.
+#[derive(Debug, Clone)]
+pub struct DriftTracker {
+    decay: f64,
+    ratio: f64,
+    observations: usize,
+}
+
+impl DriftTracker {
+    pub fn new(decay: f64) -> Self {
+        DriftTracker { decay: decay.clamp(0.0, 1.0), ratio: 1.0,
+                       observations: 0 }
+    }
+
+    /// Record the outcome of a full search: `cost_core` on a graph
+    /// with `e` edges.
+    pub fn record_search(&mut self, cost_core: usize, e: usize) {
+        let r = cost_core as f64 / e.max(1) as f64;
+        self.ratio = if self.observations == 0 {
+            r
+        } else {
+            self.decay * self.ratio + (1.0 - self.decay) * r
+        };
+        self.observations += 1;
+    }
+
+    pub fn observations(&self) -> usize {
+        self.observations
+    }
+
+    /// Decayed estimate of `cost_core(fresh search)` on a graph with
+    /// `e_now` edges.
+    pub fn estimated_fresh(&self, e_now: usize) -> f64 {
+        self.ratio * e_now as f64
+    }
+
+    /// Relative cost excess of the repaired HAG over the fresh-search
+    /// estimate; `0.0` until a search has been recorded.
+    pub fn drift(&self, cost_now: usize, e_now: usize) -> f64 {
+        if self.observations == 0 {
+            return 0.0;
+        }
+        let est = self.estimated_fresh(e_now).max(1.0);
+        cost_now as f64 / est - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_sets_ratio() {
+        let mut t = DriftTracker::new(0.5);
+        assert_eq!(t.drift(100, 100), 0.0, "no observation yet");
+        t.record_search(75, 100);
+        assert!((t.estimated_fresh(200) - 150.0).abs() < 1e-9);
+        assert!((t.drift(165, 200) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_blends_observations() {
+        let mut t = DriftTracker::new(0.5);
+        t.record_search(80, 100); // ratio 0.8
+        t.record_search(60, 100); // ratio 0.5*0.8 + 0.5*0.6 = 0.7
+        assert!((t.estimated_fresh(100) - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_decay_trusts_newest() {
+        let mut t = DriftTracker::new(0.0);
+        t.record_search(80, 100);
+        t.record_search(50, 100);
+        assert!((t.estimated_fresh(100) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_negative_when_better_than_estimate() {
+        let mut t = DriftTracker::new(0.5);
+        t.record_search(90, 100);
+        assert!(t.drift(45, 100) < 0.0);
+    }
+
+    #[test]
+    fn empty_graph_does_not_divide_by_zero() {
+        let mut t = DriftTracker::new(0.5);
+        t.record_search(0, 0);
+        assert!(t.drift(0, 0).is_finite());
+        assert!(t.drift(5, 0).is_finite());
+    }
+}

@@ -1,0 +1,638 @@
+//! Localized HAG repair under streaming deltas.
+//!
+//! [`IncrementalHag`] is a mutable, reference-counted twin of
+//! [`Hag`](crate::hag::Hag) built for point updates. The packed `Hag`
+//! numbers aggregation slots `n..n+|V_A|`, so a single `NodeAdd` would
+//! renumber every aggregation slot; here aggregation nodes instead live
+//! in their own id space (bit 31 tags a slot as an aggregation id), so
+//! node growth, merges, and garbage collection are all O(local).
+//!
+//! Repair invariant (what keeps Theorem 1 true under every delta):
+//! `cover(v)` is a function of `in_edges[v]` alone — an edge update
+//! `(u, v)` only changes `N(v)`, so only `v`'s in-list needs repair:
+//! * insert `(u, v)` — append the direct slot `u` (it cannot already be
+//!   covered, the HAG was equivalent to a graph without the edge);
+//! * delete `(u, v)` — if `u` is a direct slot, drop it; otherwise `u`
+//!   hides inside an aggregation cover shared with other consumers, and
+//!   `v` *falls back to direct aggregation* over its new neighbor list.
+//!   Released aggregation nodes are garbage-collected by refcount
+//!   cascade, never mutated — other consumers keep their covers intact.
+//!
+//! Fallback costs redundancy, not correctness. [`local_remerge`]
+//! (the windowed pass over stream-dirtied finals) re-harvests shared
+//! pairs with the same pair-redundancy rule as Algorithm 3
+//! (`hag/search.rs`), and the drift policy (`policy.rs`) re-runs the
+//! full search when local repair has leaked too much cost.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::hag::search::norm;
+use crate::hag::{AggNode, AggregateKind, Hag};
+use crate::util::FxHashMap;
+
+/// Bit 31 tags an internal slot as an aggregation id.
+const AGG: u32 = 1 << 31;
+
+#[inline]
+pub(crate) fn is_agg(s: u32) -> bool {
+    s & AGG != 0
+}
+
+#[inline]
+pub(crate) fn agg_id(s: u32) -> usize {
+    (s & !AGG) as usize
+}
+
+#[inline]
+pub(crate) fn agg_slot(i: usize) -> u32 {
+    debug_assert!((i as u32) < AGG);
+    AGG | i as u32
+}
+
+/// Lazy max-heap entry: (count, pair) with smallest-pair tie-break,
+/// same shape as `search_set`'s heap.
+type PairHeap = BinaryHeap<(u32, Reverse<(u32, u32)>)>;
+
+/// Count every windowed pair of `list` into the re-merge map, pushing
+/// heap candidates as counts reach 2+ (mirror of `search.rs::
+/// add_window_pairs`, over whole fresh lists instead of one appended
+/// slot).
+fn add_window_pairs(pc: &mut FxHashMap<(u32, u32), u32>,
+                    heap: &mut PairHeap, list: &[u32],
+                    pair_cap: usize) {
+    let w = list.len().min(pair_cap);
+    for i in 0..w {
+        for j in (i + 1)..w {
+            let p = norm(list[i], list[j]);
+            let c = pc.entry(p).or_insert(0);
+            *c += 1;
+            if *c >= 2 {
+                heap.push((*c, Reverse(p)));
+            }
+        }
+    }
+}
+
+/// Remove every windowed pair of `list` from the re-merge map;
+/// zero-count entries are dropped so stale heap entries die on pop
+/// (mirror of `search.rs::remove_window_pairs`).
+fn sub_window_pairs(pc: &mut FxHashMap<(u32, u32), u32>, list: &[u32],
+                    pair_cap: usize) {
+    let w = list.len().min(pair_cap);
+    for i in 0..w {
+        for j in (i + 1)..w {
+            let p = norm(list[i], list[j]);
+            if let Some(c) = pc.get_mut(&p) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    pc.remove(&p);
+                }
+            }
+        }
+    }
+}
+
+/// A repairable HAG: set-AGGREGATE only (ordered covers do not admit
+/// local point repair — the sequential fallback is a full re-search).
+#[derive(Debug, Clone)]
+pub struct IncrementalHag {
+    n: usize,
+    /// Aggregation nodes by id; `None` = garbage-collected. Operands
+    /// use the internal encoding. Ids are append-only, so id order is
+    /// creation order and therefore topological.
+    aggs: Vec<Option<AggNode>>,
+    /// Per aggregation id: live references from final in-lists plus
+    /// from other live aggregation nodes.
+    refs: Vec<u32>,
+    /// Per original node: in-list in internal encoding. Unordered
+    /// (set AGGREGATE), duplicate-free.
+    in_edges: Vec<Vec<u32>>,
+    live: usize,
+    /// Maintained `sum |in_edges[v]|`.
+    final_edges: usize,
+}
+
+impl IncrementalHag {
+    /// Import a searched (packed) HAG. Unreferenced aggregation nodes
+    /// are collected immediately.
+    pub fn from_hag(h: &Hag) -> Self {
+        assert_eq!(h.kind, AggregateKind::Set,
+                   "incremental repair is set-AGGREGATE only");
+        let n = h.n;
+        let enc = |s: u32| -> u32 {
+            if (s as usize) < n { s } else { agg_slot(s as usize - n) }
+        };
+        let aggs: Vec<Option<AggNode>> = h
+            .agg_nodes
+            .iter()
+            .map(|a| Some(AggNode { left: enc(a.left),
+                                    right: enc(a.right) }))
+            .collect();
+        let in_edges: Vec<Vec<u32>> = h
+            .in_edges
+            .iter()
+            .map(|l| l.iter().map(|&s| enc(s)).collect())
+            .collect();
+        let mut refs = vec![0u32; aggs.len()];
+        for a in aggs.iter().flatten() {
+            for op in [a.left, a.right] {
+                if is_agg(op) {
+                    refs[agg_id(op)] += 1;
+                }
+            }
+        }
+        for l in &in_edges {
+            for &s in l {
+                if is_agg(s) {
+                    refs[agg_id(s)] += 1;
+                }
+            }
+        }
+        let final_edges = in_edges.iter().map(|l| l.len()).sum();
+        let live = aggs.len();
+        let mut ih = IncrementalHag { n, aggs, refs, in_edges, live,
+                                      final_edges };
+        // Collect anything the search left unreferenced (defensive;
+        // Algorithm 3 only materializes referenced nodes).
+        for i in 0..ih.aggs.len() {
+            if ih.refs[i] == 0 && ih.aggs[i].is_some() {
+                if let Some(a) = ih.aggs[i].take() {
+                    ih.live -= 1;
+                    ih.release(a.left);
+                    ih.release(a.right);
+                }
+            }
+        }
+        ih
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Live aggregation-node count `|V_A|`.
+    pub fn live_aggs(&self) -> usize {
+        self.live
+    }
+
+    /// `|Ê| = 2|V_A| + final edges`.
+    pub fn e_hat(&self) -> usize {
+        2 * self.live + self.final_edges
+    }
+
+    /// The quantity Algorithm 3 minimizes: `|Ê| - |V_A|`.
+    pub fn cost_core(&self) -> usize {
+        self.live + self.final_edges
+    }
+
+    /// Drop one reference to `s`, cascading into operands when an
+    /// aggregation node dies.
+    fn release(&mut self, s: u32) {
+        if !is_agg(s) {
+            return;
+        }
+        let mut stack = vec![agg_id(s)];
+        while let Some(i) = stack.pop() {
+            debug_assert!(self.refs[i] > 0, "refcount underflow");
+            self.refs[i] -= 1;
+            if self.refs[i] == 0 {
+                if let Some(a) = self.aggs[i].take() {
+                    self.live -= 1;
+                    for op in [a.left, a.right] {
+                        if is_agg(op) {
+                            stack.push(agg_id(op));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn acquire(&mut self, s: u32) {
+        if is_agg(s) {
+            debug_assert!(self.aggs[agg_id(s)].is_some(),
+                          "acquiring a dead aggregation node");
+            self.refs[agg_id(s)] += 1;
+        }
+    }
+
+    /// Repair for `EdgeInsert { src: u, dst: v }` (the overlay already
+    /// accepted the edge as new).
+    pub fn insert_edge(&mut self, u: u32, v: u32) {
+        debug_assert!(!self.in_edges[v as usize].contains(&u),
+                      "insert of an already-covered neighbor");
+        self.in_edges[v as usize].push(u);
+        self.final_edges += 1;
+    }
+
+    /// Repair for `EdgeDelete { src: u, dst: v }`. `new_neighbors` is
+    /// `N(v)` *after* the delete (from the overlay). Returns `true`
+    /// when `v` fell back to direct aggregation (the deleted neighbor
+    /// was hidden inside an aggregation cover).
+    pub fn delete_edge(&mut self, u: u32, v: u32,
+                       new_neighbors: &[u32]) -> bool {
+        let list = &mut self.in_edges[v as usize];
+        if let Some(pos) = list.iter().position(|&s| s == u) {
+            list.swap_remove(pos);
+            self.final_edges -= 1;
+            return false;
+        }
+        // u is inside some aggregation cover: rebuild v's in-list as
+        // direct edges and release every slot it held.
+        let old = std::mem::take(&mut self.in_edges[v as usize]);
+        self.final_edges -= old.len();
+        for s in old {
+            self.release(s);
+        }
+        self.in_edges[v as usize] = new_neighbors.to_vec();
+        self.final_edges += new_neighbors.len();
+        true
+    }
+
+    /// Repair for `NodeAdd`: one isolated final.
+    pub fn add_node(&mut self) {
+        self.in_edges.push(Vec::new());
+        self.n += 1;
+    }
+
+    /// Windowed local re-merge over `dirty` finals (sorted, deduped by
+    /// the caller): greedily materialize the pair of slots co-consumed
+    /// by the most dirty finals — the same redundancy rule, and the
+    /// same round / lazy-heap / incremental-count structure, as
+    /// Algorithm 3's `search_set` in `hag/search.rs`, restricted to
+    /// the dirty region. A decrement can orphan a still-mergeable pair
+    /// from the heap (exactly as in `search_set_round`); the outer
+    /// round loop recovers coverage by rebuilding, and terminates when
+    /// a round makes no progress. `pair_cap` bounds per-consumer pair
+    /// enumeration exactly like `SearchConfig::pair_cap`, and
+    /// `capacity` bounds live `|V_A|` exactly like
+    /// `SearchConfig::capacity` (the §3.2 a-hat memory budget must
+    /// hold for the maintained HAG too, even when the drift policy
+    /// never rebuilds). Returns merges made.
+    pub fn local_remerge(&mut self, dirty: &[u32], pair_cap: usize,
+                         max_merges: usize, capacity: usize) -> usize {
+        debug_assert!(dirty.windows(2).all(|w| w[0] < w[1]));
+        let mut total = 0usize;
+        while total < max_merges && self.live < capacity {
+            let made = self.remerge_round(dirty, pair_cap,
+                                          max_merges - total, capacity);
+            total += made;
+            if made == 0 {
+                break;
+            }
+        }
+        total
+    }
+
+    /// One re-merge round: build windowed pair counts over the dirty
+    /// finals, then drain the lazy heap, maintaining counts
+    /// incrementally as consumers are rewired.
+    fn remerge_round(&mut self, dirty: &[u32], pair_cap: usize,
+                     budget: usize, capacity: usize) -> usize {
+        let mut count: FxHashMap<(u32, u32), u32> = FxHashMap::default();
+        let mut heap = PairHeap::new();
+        for &v in dirty {
+            add_window_pairs(&mut count, &mut heap,
+                             &self.in_edges[v as usize], pair_cap);
+        }
+        let mut merges = 0usize;
+        while merges < budget && self.live < capacity {
+            // Pop the highest-redundancy non-stale pair (ties break to
+            // the smallest pair, so the pass is deterministic).
+            let (a, b) = loop {
+                match heap.pop() {
+                    None => return merges,
+                    Some((c, Reverse(p))) => {
+                        let cur =
+                            count.get(&p).copied().unwrap_or(0);
+                        if cur == c && c >= 2 {
+                            break p;
+                        }
+                        // stale: a still-counted pair was re-pushed on
+                        // its last update; just drop this entry
+                    }
+                }
+            };
+            // `contains` rechecks whole lists, so this can only find
+            // *more* users than the windowed count promised, never
+            // fewer.
+            let users: Vec<u32> = dirty
+                .iter()
+                .copied()
+                .filter(|&v| {
+                    let l = &self.in_edges[v as usize];
+                    l.contains(&a) && l.contains(&b)
+                })
+                .collect();
+            if users.len() < 2 {
+                // Defensive (see above: unreachable): drop the entry
+                // so the heap cannot yield it again.
+                count.remove(&norm(a, b));
+                continue;
+            }
+            let w = agg_slot(self.aggs.len());
+            self.aggs.push(Some(AggNode { left: a, right: b }));
+            self.refs.push(0);
+            self.live += 1;
+            // The new node's operand references must exist before any
+            // consumer releases a/b, so a cascade can never reap them.
+            self.acquire(a);
+            self.acquire(b);
+            for &v in &users {
+                sub_window_pairs(&mut count,
+                                 &self.in_edges[v as usize], pair_cap);
+                {
+                    let l = &mut self.in_edges[v as usize];
+                    l.retain(|&s| s != a && s != b);
+                    l.push(w);
+                }
+                add_window_pairs(&mut count, &mut heap,
+                                 &self.in_edges[v as usize], pair_cap);
+                self.final_edges -= 1; // two slots out, one in
+                self.refs[agg_id(w)] += 1;
+                self.release(a);
+                self.release(b);
+            }
+            merges += 1;
+        }
+        merges
+    }
+
+    /// Export as a packed [`Hag`]: live aggregation nodes compacted in
+    /// id (= creation = topological) order into slots `n..n+live`.
+    pub fn to_hag(&self) -> Hag {
+        let mut slot_of = vec![u32::MAX; self.aggs.len()];
+        let mut agg_nodes = Vec::with_capacity(self.live);
+        let n = self.n;
+        for (i, a) in self.aggs.iter().enumerate() {
+            if let Some(a) = a {
+                let dec = |s: u32| -> u32 {
+                    if is_agg(s) {
+                        let p = slot_of[agg_id(s)];
+                        debug_assert!(p != u32::MAX,
+                                      "live agg references dead operand");
+                        p
+                    } else {
+                        s
+                    }
+                };
+                let packed = AggNode { left: dec(a.left),
+                                       right: dec(a.right) };
+                slot_of[i] = (n + agg_nodes.len()) as u32;
+                agg_nodes.push(packed);
+            }
+        }
+        let in_edges: Vec<Vec<u32>> = self
+            .in_edges
+            .iter()
+            .map(|l| {
+                l.iter()
+                    .map(|&s| {
+                        if is_agg(s) { slot_of[agg_id(s)] } else { s }
+                    })
+                    .collect()
+            })
+            .collect();
+        Hag { n, agg_nodes, in_edges, kind: AggregateKind::Set }
+    }
+
+    /// Internal consistency: refcounts exact, live count exact, live
+    /// operands alive, finals reference live nodes, in-lists
+    /// duplicate-free, maintained edge count exact.
+    pub fn check(&self) -> Result<(), String> {
+        let mut want_refs = vec![0u32; self.aggs.len()];
+        let mut live = 0usize;
+        for (i, a) in self.aggs.iter().enumerate() {
+            if let Some(a) = a {
+                live += 1;
+                for op in [a.left, a.right] {
+                    if is_agg(op) {
+                        if self.aggs[agg_id(op)].is_none() {
+                            return Err(format!(
+                                "agg {i} references dead agg {}",
+                                agg_id(op)));
+                        }
+                        if agg_id(op) >= i {
+                            return Err(format!(
+                                "agg {i} references non-earlier agg {}",
+                                agg_id(op)));
+                        }
+                        want_refs[agg_id(op)] += 1;
+                    } else if (op as usize) >= self.n {
+                        return Err(format!(
+                            "agg {i} references missing node {op}"));
+                    }
+                }
+            }
+        }
+        let mut final_edges = 0usize;
+        for (v, l) in self.in_edges.iter().enumerate() {
+            final_edges += l.len();
+            let mut sorted = l.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != l.len() {
+                return Err(format!("node {v} has duplicate in-slots"));
+            }
+            for &s in l {
+                if is_agg(s) {
+                    if self.aggs[agg_id(s)].is_none() {
+                        return Err(format!(
+                            "node {v} references dead agg {}",
+                            agg_id(s)));
+                    }
+                    want_refs[agg_id(s)] += 1;
+                } else if (s as usize) >= self.n {
+                    return Err(format!(
+                        "node {v} references missing node {s}"));
+                }
+            }
+        }
+        if live != self.live {
+            return Err(format!("live count {} != {}", self.live, live));
+        }
+        if final_edges != self.final_edges {
+            return Err(format!("final edge count {} != {}",
+                               self.final_edges, final_edges));
+        }
+        for (i, (&got, &want)) in
+            self.refs.iter().zip(want_refs.iter()).enumerate()
+        {
+            if self.aggs[i].is_some() && got != want {
+                return Err(format!(
+                    "agg {i}: refcount {got} != actual {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::hag::{check_equivalence, hag_search, SearchConfig};
+
+    fn searched(g: &Graph) -> IncrementalHag {
+        let cfg = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Set,
+            pair_cap: usize::MAX,
+        };
+        let (h, _) = hag_search(g, &cfg);
+        IncrementalHag::from_hag(&h)
+    }
+
+    fn k5() -> Graph {
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in 0..5u32 {
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Graph::from_edges(5, &edges)
+    }
+
+    #[test]
+    fn import_export_roundtrip() {
+        let g = k5();
+        let ih = searched(&g);
+        ih.check().unwrap();
+        let h = ih.to_hag();
+        h.validate().unwrap();
+        check_equivalence(&g, &h).unwrap();
+        assert_eq!(h.cost_core(), ih.cost_core());
+        assert_eq!(h.e_hat(), ih.e_hat());
+    }
+
+    #[test]
+    fn insert_keeps_equivalence() {
+        // K5 minus one edge; insert it back, expect cover == K5.
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in 0..5u32 {
+                if u != v && !(u == 4 && v == 0) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let g = Graph::from_edges(5, &edges);
+        let mut ih = searched(&g);
+        ih.insert_edge(4, 0);
+        ih.check().unwrap();
+        check_equivalence(&k5(), &ih.to_hag()).unwrap();
+    }
+
+    #[test]
+    fn delete_direct_edge_no_fallback() {
+        let g = Graph::from_edges(3, &[(1, 0), (2, 0)]);
+        // trivial HAG (no redundancy): both slots direct
+        let mut ih = searched(&g);
+        let nn = [2u32];
+        assert!(!ih.delete_edge(1, 0, &nn), "direct slot: no fallback");
+        ih.check().unwrap();
+        let want = Graph::from_edges(3, &[(2, 0)]);
+        check_equivalence(&want, &ih.to_hag()).unwrap();
+    }
+
+    #[test]
+    fn delete_covered_edge_falls_back_and_gc_runs() {
+        let g = k5();
+        let mut ih = searched(&g);
+        let before_live = ih.live_aggs();
+        assert!(before_live > 0, "K5 search must merge");
+        // Find a consumer whose in-list holds an aggregation slot and
+        // delete one neighbor hidden inside it.
+        let v = (0..5u32)
+            .find(|&v| ih.in_edges[v as usize].iter()
+                  .any(|&s| is_agg(s)))
+            .expect("some final consumes an agg node");
+        let covered = ih.to_hag().node_cover(v);
+        let direct: Vec<u32> = ih.in_edges[v as usize]
+            .iter().copied().filter(|&s| !is_agg(s)).collect();
+        let u = covered.iter().copied()
+            .find(|&c| !direct.contains(&c)).unwrap();
+        let nn: Vec<u32> = covered.iter().copied()
+            .filter(|&c| c != u).collect();
+        assert!(ih.delete_edge(u, v, &nn), "covered slot: fallback");
+        ih.check().unwrap();
+        // equivalence against the graph minus that one edge
+        let mut edges = Vec::new();
+        for a in 0..5u32 {
+            for b in 0..5u32 {
+                if a != b && !(a == u && b == v) {
+                    edges.push((a, b));
+                }
+            }
+        }
+        check_equivalence(&Graph::from_edges(5, &edges),
+                          &ih.to_hag()).unwrap();
+    }
+
+    #[test]
+    fn remerge_recovers_shared_pair() {
+        // 4 consumers share {0, 1}; trivial HAG, then remerge.
+        let mut edges = Vec::new();
+        for v in 2..6u32 {
+            edges.push((0, v));
+            edges.push((1, v));
+        }
+        let g = Graph::from_edges(6, &edges);
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        let mut ih = IncrementalHag::from_hag(&h);
+        let before = ih.cost_core();
+        let dirty: Vec<u32> = (2..6).collect();
+        let merges = ih.local_remerge(&dirty, 64, 16, usize::MAX);
+        assert_eq!(merges, 1, "one shared pair to merge");
+        ih.check().unwrap();
+        assert!(ih.cost_core() < before,
+                "{} !< {before}", ih.cost_core());
+        check_equivalence(&g, &ih.to_hag()).unwrap();
+    }
+
+    #[test]
+    fn remerge_respects_capacity() {
+        // finals 3,4,5 share {0,1,2}: two chained merges are possible
+        // ((0,1) -> w, then (w,2) -> w2), but capacity must cap |V_A|
+        // exactly like SearchConfig::capacity does for the full search.
+        let mut edges = Vec::new();
+        for v in 3..6u32 {
+            for u in 0..3u32 {
+                edges.push((u, v));
+            }
+        }
+        let g = Graph::from_edges(6, &edges);
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        let dirty: Vec<u32> = (3..6).collect();
+
+        let mut capped = IncrementalHag::from_hag(&h);
+        assert_eq!(capped.local_remerge(&dirty, 64, 16, 0), 0);
+        assert_eq!(capped.live_aggs(), 0, "capacity 0 forbids merges");
+        assert_eq!(capped.local_remerge(&dirty, 64, 16, 1), 1);
+        assert_eq!(capped.live_aggs(), 1);
+        capped.check().unwrap();
+        check_equivalence(&g, &capped.to_hag()).unwrap();
+
+        let mut free = IncrementalHag::from_hag(&h);
+        assert_eq!(free.local_remerge(&dirty, 64, 16, usize::MAX), 2);
+        check_equivalence(&g, &free.to_hag()).unwrap();
+    }
+
+    #[test]
+    fn node_add_extends_finals() {
+        let g = k5();
+        let mut ih = searched(&g);
+        ih.add_node();
+        ih.insert_edge(0, 5);
+        ih.insert_edge(5, 0);
+        ih.check().unwrap();
+        let h = ih.to_hag();
+        h.validate().unwrap();
+        assert_eq!(h.n, 6);
+        assert_eq!(h.node_cover(5), vec![0]);
+        assert!(h.node_cover(0).contains(&5));
+    }
+}

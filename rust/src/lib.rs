@@ -8,7 +8,8 @@
 //! Architecture (three layers, Python never on the hot path):
 //! * **L3 (this crate)** — graph substrate, the HAG search algorithm
 //!   (paper Algorithm 3), the partitioned/parallel search subsystem
-//!   ([`partition`]), plan compiler, PJRT runtime, training
+//!   ([`partition`]), the streaming incremental-maintenance subsystem
+//!   ([`incremental`]), plan compiler, PJRT runtime, training
 //!   coordinator and inference server, dataset generators, benches.
 //! * **L2 (python/compile/model.py)** — GCN / GraphSAGE-P fwd+bwd in
 //!   JAX, AOT-lowered to HLO text per shape bucket.
@@ -22,6 +23,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod graph;
 pub mod hag;
+pub mod incremental;
 pub mod partition;
 pub mod runtime;
 pub mod util;

@@ -19,6 +19,8 @@ use anyhow::{bail, Context, Result};
 use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
 use repro::datasets;
 use repro::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
+use repro::incremental::{random_delta, OverlayGraph, StreamConfig,
+                         StreamEngine};
 use repro::partition::{partition_bfs, search_partitioned,
                        PartitionConfig};
 use repro::runtime::Runtime;
@@ -35,10 +37,15 @@ SUBCOMMANDS
   search         run Algorithm 3, report savings + equivalence
   partition-stats  shard the graph, report edge-cut/halo/balance and
                  per-shard redundancy elimination vs single-shard
+  stream         apply a random update stream through the incremental
+                 engine; report repair latency + cost gap vs re-search
+  stream-stats   drift trajectory table (cost vs decayed fresh-search
+                 estimate, re-merge and rebuild activity)
   emit-buckets   write artifacts/buckets.json (AOT build phase 1)
   train          train a 2-layer GCN (gnn-graph or hag repr)
   infer          one-shot full-graph inference latency
   serve          batched scoring server with latency percentiles
+                 (--updates N streams topology deltas while serving)
   bench-fig2     Fig 2: end-to-end train + inference comparison
   bench-fig3     Fig 3: aggregation/data-transfer reductions
   bench-fig4     Fig 4: capacity sweep on COLLAB
@@ -60,6 +67,12 @@ COMMON OPTIONS
   --partition-seed S BFS partitioner seed (search / partition-stats)
   --fig4            (emit-buckets) include Fig-4 sweep buckets
   --requests N --max-batch N --concurrency N  (serve)
+  --updates N       update stream length (stream / stream-stats /
+                    serve)                  [10000 / 2000 / 0]
+  --insert-frac F   insert share of edge updates  [0.5]
+  --node-add-frac F NodeAdd share of updates      [0.01]
+  --drift-threshold F  re-search trigger          [0.08]
+  --background      rebuild on a background thread (stream)
   --report-memory   (bench-fig4) print §3.2 memory accounting
 ";
 
@@ -74,6 +87,8 @@ fn main() -> Result<()> {
         "stats" => cmd_stats(scale, seed),
         "search" => cmd_search(&args, scale, seed),
         "partition-stats" => cmd_partition_stats(&args, scale, seed),
+        "stream" => cmd_stream(&args, scale, seed),
+        "stream-stats" => cmd_stream_stats(&args, scale, seed),
         "emit-buckets" => cmd_emit_buckets(&args, &artifacts, scale,
                                            seed),
         "train" => cmd_train(&args, &artifacts, scale, seed),
@@ -251,6 +266,117 @@ fn cmd_partition_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Shared stream-option parsing for `stream` / `stream-stats`.
+fn stream_config(args: &Args) -> Result<(StreamConfig, f64, f64)> {
+    let insert_frac = args.get_or("insert-frac", 0.5)?;
+    let node_add_frac = args.get_or("node-add-frac", 0.01)?;
+    let shards = shards_opt(args)?;
+    let mut cfg = StreamConfig::default();
+    cfg.shards = shards.unwrap_or(1);
+    cfg.policy.threshold = args.get_or("drift-threshold", 0.08)?;
+    cfg.policy.background = args.flag("background")?;
+    Ok((cfg, insert_frac, node_add_frac))
+}
+
+fn cmd_stream(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let updates = args.get_or("updates", 10_000usize)?;
+    let (cfg, insert_frac, node_add_frac) = stream_config(args)?;
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let mut eng = StreamEngine::new(&ds.graph, cfg);
+    println!("dataset      : {} (n={}, e={})", ds.name, ds.n(), ds.e());
+    println!("initial HAG  : cost {} vs trivial {}  ({:.1} ms search)",
+             eng.cost_core(), ds.e(), eng.stats().init_search_ms);
+
+    let mut rng = Rng::seed_from_u64(seed ^ 0x57e4);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(updates);
+    for _ in 0..updates {
+        let d = random_delta(&mut rng, eng.overlay(), insert_frac,
+                             node_add_frac);
+        let t = std::time::Instant::now();
+        eng.apply(d);
+        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    eng.finish_rebuild(); // land any in-flight background re-search
+
+    let g_now = eng.graph();
+    let hag = eng.to_hag();
+    hag.validate().map_err(|e| anyhow::anyhow!(e))?;
+    repro::hag::check_equivalence_probabilistic(&g_now, &hag, seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let t = std::time::Instant::now();
+    let (fresh, _) = hag_search(&g_now, &eng.search_config());
+    let full_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let s = eng.stats();
+    println!("updates      : {} applied ({} ins, {} del, {} node-add, \
+              {} noop)",
+             s.applied, s.inserts, s.deletes, s.node_adds, s.noops);
+    println!("repair       : {} fallbacks; {} re-merge passes \
+              ({} merges); {} rebuilds ({} swapped)",
+             s.fallbacks, s.remerge_passes, s.remerge_merges,
+             s.rebuild_starts, s.rebuild_swaps);
+    if !lat_us.is_empty() {
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            lat_us[((lat_us.len() as f64 - 1.0) * p) as usize]
+        };
+        println!("repair lat   : p50 {:.1} us  p99 {:.1} us  \
+                  (full re-search: {:.1} ms, {:.0}x median)",
+                 pct(0.5), pct(0.99), full_ms,
+                 full_ms * 1e3 / pct(0.5).max(1e-9));
+    }
+    println!("graph now    : n={} e={}", g_now.n(), g_now.e());
+    println!("cost         : maintained {} vs fresh search {} \
+              ({:+.2}% gap)",
+             hag.cost_core(), fresh.cost_core(),
+             100.0 * (hag.cost_core() as f64
+                 / fresh.cost_core().max(1) as f64 - 1.0));
+    println!("equivalence  : OK (probabilistic, Theorem 1)");
+    Ok(())
+}
+
+fn cmd_stream_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    let name = req_dataset(args)?;
+    let updates = args.get_or("updates", 2_000usize)?;
+    let (cfg, insert_frac, node_add_frac) = stream_config(args)?;
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let threshold = cfg.policy.threshold;
+    let mut eng = StreamEngine::new(&ds.graph, cfg);
+    println!("dataset : {} (n={}, e={}); drift threshold {:.3}",
+             ds.name, ds.n(), ds.e(), threshold);
+    println!("{:>8} {:>8} {:>10} {:>10} {:>12} {:>8} {:>7} {:>8}",
+             "seq", "n", "e", "cost", "est fresh", "drift%", "dirty",
+             "rebuilds");
+    let mut rng = Rng::seed_from_u64(seed ^ 0x57e4);
+    let every = (updates / 20).max(1);
+    for i in 0..updates {
+        let d = random_delta(&mut rng, eng.overlay(), insert_frac,
+                             node_add_frac);
+        eng.apply(d);
+        if (i + 1) % every == 0 || i + 1 == updates {
+            println!("{:>8} {:>8} {:>10} {:>10} {:>12.0} {:>8.2} \
+                      {:>7} {:>8}",
+                     eng.seq(), eng.n(), eng.e(), eng.cost_core(),
+                     eng.estimated_fresh(), 100.0 * eng.drift(),
+                     eng.dirty_len(), eng.stats().rebuild_swaps);
+        }
+    }
+    eng.finish_rebuild();
+    let s = eng.stats();
+    println!("\ntotals  : {} fallbacks, {} re-merge merges, \
+              {} rebuilds started / {} swapped",
+             s.fallbacks, s.remerge_merges, s.rebuild_starts,
+             s.rebuild_swaps);
+    repro::hag::check_equivalence_probabilistic(
+        &eng.graph(), &eng.to_hag(), seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("equivalence: OK (probabilistic, Theorem 1)");
+    Ok(())
+}
+
 fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
                     seed: u64) -> Result<()> {
     let mut names = args.get_all("datasets");
@@ -333,6 +459,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let requests = args.get_or("requests", 500usize)?;
     let max_batch = args.get_or("max-batch", 64usize)?;
     let concurrency = args.get_or("concurrency", 8usize)?;
+    let updates = args.get_or("updates", 0usize)?;
     let shards = shards_opt(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
@@ -341,13 +468,27 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let aname = coordinator::artifact_name("gcn", "infer",
                                            &lowered.bucket);
     let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
+    // With --updates N the server also maintains the HAG online:
+    // scoring runs against the compiled (pinned) plan while the
+    // resident engine repairs the HAG the *next* plan compile will
+    // lower; rebuilds always go to a background thread so the batcher
+    // never stalls (DESIGN.md §6). The shared stream knobs
+    // (--drift-threshold, --insert-frac, --node-add-frac) apply here
+    // exactly as on `stream`/`stream-stats`.
+    let (mut scfg, insert_frac, node_add_frac) = stream_config(args)?;
+    scfg.policy.background = true;
+    let stream = if updates > 0 {
+        Some(StreamEngine::new(&ds.graph, scfg))
+    } else {
+        None
+    };
     let server = coordinator::InferenceServer::spawn(
         artifacts.clone(), &aname, &workload, &lowered.plan,
         coordinator::BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_millis(2),
         },
-        seed)?;
+        seed, stream)?;
     let n = ds.n() as u32;
     let f_in = ds.f_in;
     let mut handles = Vec::new();
@@ -365,10 +506,35 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
                     reply: otx,
                     submitted: std::time::Instant::now(),
                 };
-                if tx.send(req).is_err() {
+                if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
                     break;
                 }
                 let _ = orx.recv();
+            }
+        }));
+    }
+    if updates > 0 {
+        // Topology updater: generates deltas against a local mirror
+        // (the engine's overlay lives on the batcher thread) and
+        // streams them interleaved with the scoring traffic.
+        let tx = server.client();
+        let g = ds.graph.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut mirror = OverlayGraph::new(g);
+            let mut rng = Rng::seed_from_u64(seed ^ 0xde17a);
+            for _ in 0..updates {
+                let d = random_delta(&mut rng, &mirror, insert_frac,
+                                     node_add_frac);
+                mirror.apply(d);
+                let req = coordinator::UpdateRequest {
+                    delta: d,
+                    reply: None,
+                    submitted: std::time::Instant::now(),
+                };
+                if tx.send(coordinator::ServerMsg::Update(req)).is_err()
+                {
+                    break;
+                }
             }
         }));
     }
@@ -383,5 +549,10 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
              stats.p99_ms);
     println!("exec       : mean {:.2} ms/batch", stats.mean_exec_ms);
     println!("throughput : {:.0} req/s", stats.throughput_rps);
+    if updates > 0 {
+        println!("updates    : {} repaired while serving ({} HAG \
+                  rebuilds swapped)",
+                 stats.updates, stats.rebuild_swaps);
+    }
     Ok(())
 }

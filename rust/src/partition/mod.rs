@@ -74,6 +74,10 @@ pub fn search_sharded(g: &Graph, n_shards: usize, cfg: &SearchConfig)
 pub fn search_sharded_seeded(g: &Graph, n_shards: usize,
                              cfg: &SearchConfig, seed: u64)
                              -> (Hag, ShardedStats) {
+    // Clamp here, not just at the CLI boundary: library callers (the
+    // coordinator, the incremental engine's rebuild path) may compute
+    // shard counts and 0 must mean "whole-graph", never a panic.
+    let n_shards = n_shards.max(1);
     if n_shards <= 1 || cfg.kind == AggregateKind::Sequential {
         // Whole-graph fallback (see search_partitioned): don't pay
         // for a BFS partition that would be discarded.
@@ -124,11 +128,7 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
         .map(|c| cfg.clone().with_capacity(c))
         .collect();
 
-    let threads = k
-        .min(std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1))
-        .max(1);
+    let threads = k.min(worker_parallelism()).max(1);
     let next = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<(Hag, SearchStats)>>> =
         (0..k).map(|_| Mutex::new(None)).collect();
@@ -169,6 +169,21 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
         elapsed_ms: wall_ms,
     };
     (hag, ShardedStats { per_shard, report, threads, wall_ms, total })
+}
+
+/// Worker-pool width when `available_parallelism()` errors (sandboxes
+/// and some cgroup configurations return `Err`, not `1`): falling all
+/// the way back to a single worker would silently serialize the whole
+/// sharded path, so degrade to a modest fixed pool instead. Per-shard
+/// searches are independent, so oversubscription only costs scheduling.
+const FALLBACK_WORKERS: usize = 4;
+
+/// `available_parallelism()` with the graceful
+/// [`FALLBACK_WORKERS`] degradation.
+fn worker_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(FALLBACK_WORKERS)
 }
 
 /// Split a global `|V_A|` budget across shards proportionally to their
@@ -284,6 +299,20 @@ mod tests {
         assert_eq!(stats.threads, 1);
         assert_eq!(a.cost_core(), b.cost_core());
         assert_eq!(a.agg_nodes, b.agg_nodes);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_whole_graph() {
+        // Regression: library callers may pass 0; it must behave as 1
+        // (whole-graph fallback), not panic or divide by zero.
+        let g = clique_ring(3, 5);
+        let cfg = SearchConfig::paper_default(g.n());
+        let (a, _) = hag_search(&g, &cfg);
+        let (b, stats) = search_sharded(&g, 0, &cfg);
+        assert_eq!(stats.per_shard.len(), 1);
+        assert_eq!(stats.threads, 1);
+        assert_eq!(a.agg_nodes, b.agg_nodes);
+        check_equivalence(&g, &b).unwrap();
     }
 
     #[test]

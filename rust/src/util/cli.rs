@@ -185,4 +185,18 @@ mod tests {
         let c = parse("search --shards 0");
         assert!(partition_opts(&c).is_err());
     }
+
+    #[test]
+    fn shards_boundary_values() {
+        // Regression for the `--shards 0` / `--shards 1` boundary:
+        // 0 is a loud CLI error, 1 is the explicit single-shard path
+        // (the library side additionally clamps 0 to 1 — see
+        // `partition::search_sharded_seeded`).
+        let one = parse("search --shards 1");
+        assert_eq!(shards_opt(&one).unwrap(), Some(1));
+        let zero = parse("train --shards 0");
+        assert!(shards_opt(&zero).is_err());
+        let none = parse("train");
+        assert_eq!(shards_opt(&none).unwrap(), None);
+    }
 }

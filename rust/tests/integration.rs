@@ -188,7 +188,7 @@ fn serving_path_round_trips() {
         pack_workload(&ds, &lowered.plan, &lowered.bucket).unwrap();
     let server = coordinator::InferenceServer::spawn(
         artifacts_dir(), &name, &workload, &lowered.plan,
-        coordinator::BatchPolicy::default(), 7).unwrap();
+        coordinator::BatchPolicy::default(), 7, None).unwrap();
     let n = ds.n() as u32;
     let f_in = ds.f_in;
     let classes = ds.classes;
@@ -199,13 +199,15 @@ fn serving_path_round_trips() {
             let mut rng = repro::util::Rng::seed_from_u64(c);
             for _ in 0..25 {
                 let (otx, orx) = coordinator::server::oneshot();
-                tx.send(coordinator::ScoreRequest {
-                    node: rng.range_u32(0, n),
-                    features: (0..f_in)
-                        .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
-                    reply: otx,
-                    submitted: std::time::Instant::now(),
-                }).unwrap();
+                tx.send(coordinator::ServerMsg::Score(
+                    coordinator::ScoreRequest {
+                        node: rng.range_u32(0, n),
+                        features: (0..f_in)
+                            .map(|_| rng.range_f32(-1.0, 1.0))
+                            .collect(),
+                        reply: otx,
+                        submitted: std::time::Instant::now(),
+                    })).unwrap();
                 let resp = orx.recv().unwrap();
                 assert_eq!(resp.logits.len(), classes);
                 assert!(resp.logits.iter().all(|x| x.is_finite()));
