@@ -8,10 +8,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 use repro::bench::{effective_scale, measure_inference};
-use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
+use repro::coordinator::{self, pack_workload, Repr};
 use repro::datasets;
-use repro::hag::PlanConfig;
 use repro::runtime::Runtime;
+use repro::session::{LowerSpec, Session};
 use repro::util::benchkit::Bencher;
 
 const SCALE: f64 = 0.05;
@@ -36,9 +36,8 @@ fn main() {
         for (ri, repr) in
             [Repr::GnnGraph, Repr::Hag].into_iter().enumerate()
         {
-            let lowered = lower_dataset(&ds, repr, None, None,
-                                        &PlanConfig::default())
-                .expect("lowering");
+            let lowered = Session::new(&ds, LowerSpec::default()
+                .with_repr(repr)).lower().expect("lowering");
             let tname = coordinator::artifact_name("gcn", "train",
                                                    &lowered.bucket);
             if runtime.spec(&tname).is_err() {

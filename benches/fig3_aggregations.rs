@@ -5,7 +5,8 @@
 
 use repro::bench::effective_scale;
 use repro::datasets;
-use repro::hag::{hag_search, AggregateKind, SearchConfig};
+use repro::hag::{hag_search, AggregateKind};
+use repro::session::LowerSpec;
 use repro::util::benchkit::Bencher;
 
 fn main() {
@@ -15,8 +16,10 @@ fn main() {
         for name in datasets::names() {
             let ds =
                 datasets::load(name, effective_scale(name, base), 7);
-            let cfg = SearchConfig::paper_default(ds.graph.n())
-                .with_kind(kind);
+            // knob derivation through the canonical spec, so the
+            // bench measures exactly what `repro search` lowers
+            let cfg = LowerSpec::default().with_kind(kind)
+                .search_config(ds.graph.n());
             let (_, stats) = hag_search(&ds.graph, &cfg);
             println!(
                 "[fig3 {kind:?} {name}] aggs {} -> {} ({:.2}x), tx {} \

@@ -6,9 +6,8 @@
 use std::path::Path;
 
 use repro::bench::{effective_scale, fig4_rows, FIG4_FRACTIONS};
-use repro::coordinator::{lower_dataset, Repr};
 use repro::datasets;
-use repro::hag::PlanConfig;
+use repro::session::{LowerSpec, Session};
 use repro::util::benchkit::Bencher;
 
 const SCALE: f64 = 0.02;
@@ -20,11 +19,12 @@ fn main() {
     let b = Bencher::quick();
     for &frac in FIG4_FRACTIONS {
         let capacity = (ds.graph.n() as f64 * frac) as usize;
+        let spec = LowerSpec::default().with_capacity(capacity);
         b.run(&format!("fig4_capacity_search/{capacity}"), || {
+            // a fresh session per iteration: this row measures the
+            // cold search+plan cost, not the session cache
             std::hint::black_box(
-                lower_dataset(&ds, Repr::Hag, Some(capacity),
-                              None, &PlanConfig::default())
-                    .unwrap());
+                Session::new(&ds, spec.clone()).lower().unwrap());
         });
     }
 

@@ -9,6 +9,7 @@
 use repro::datasets::{community_graph, CommunityCfg};
 use repro::hag::hag_search;
 use repro::incremental::{random_delta, StreamConfig, StreamEngine};
+use repro::session::{LowerSpec, Session};
 use repro::util::benchkit::Bencher;
 use repro::util::Rng;
 
@@ -105,4 +106,44 @@ fn main() {
                 / fresh.cost_core().max(1) as f64 - 1.0),
             eng.stats().rebuild_swaps, wall_ms);
     }
+
+    // session plan cache over a live stream: the engine repairs per
+    // delta, the session re-plans only dirty shards on a cadence and
+    // the engine adopts the spliced result (the ROADMAP-1 path that
+    // replaces whole-graph rebuilds). The cached re-plan must stay
+    // identical to the from-scratch comparator.
+    let plan_every = if smoke { 250 } else { 500 };
+    println!("\nsession plan cache (n{n}, 4 shards, {updates} updates, \
+              re-plan every {plan_every}):");
+    let g = community(n, e, 29);
+    let spec = LowerSpec::default().with_shards(4);
+    let mut session = Session::from_graph(&g, spec.clone());
+    let mut ecfg = spec.stream_config();
+    ecfg.policy.threshold = f64::INFINITY; // session owns re-planning
+    let mut eng = StreamEngine::new(&g, ecfg);
+    let mut rng = Rng::seed_from_u64(29);
+    let mut replan_ms: Vec<f64> = Vec::new();
+    for i in 0..updates {
+        let d = random_delta(&mut rng, eng.overlay(), 0.5, 0.01);
+        eng.apply(d);
+        session.apply(d);
+        if (i + 1) % plan_every == 0 {
+            let t = std::time::Instant::now();
+            let (hag, _plan) = session.plan();
+            replan_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            assert!(eng.install_hag(&hag));
+        }
+    }
+    let (hag_c, plan_c) = session.plan();
+    let (hag_f, plan_f) = session.plan_fresh();
+    assert!(*hag_c == hag_f && *plan_c == plan_f,
+            "cached dirty-shard re-plan != from-scratch build_plan");
+    replan_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let st = session.stats();
+    println!(
+        "  -> {} plans; {} shard re-searches vs {updates} updates; \
+         {} shard cache hits; median dirty re-plan {:.1} ms; \
+         cached == from-scratch OK",
+        st.plans, st.shard_searches, st.shard_cache_hits,
+        replan_ms[replan_ms.len() / 2]);
 }

@@ -16,8 +16,10 @@ use repro::coordinator::random_merge_hag;
 use repro::datasets;
 use repro::hag::{check_equivalence_probabilistic, hag_search,
                  AggregateKind, SearchConfig};
-use repro::incremental::{random_delta, StreamConfig, StreamEngine};
+use repro::incremental::{random_delta, OverlayGraph, StreamConfig,
+                         StreamEngine};
 use repro::partition::search_sharded;
+use repro::session::{LowerSpec, Session};
 use repro::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -130,5 +132,37 @@ fn main() -> anyhow::Result<()> {
              100.0 * (maintained.cost_core() as f64
                  / fresh2.cost_core().max(1) as f64 - 1.0),
              g_now.n(), g_now.e());
+
+    println!("\nlowering session (4 shards; per-shard plan cache — \
+              `repro stream --shards 4` for the full report):");
+    let mut session =
+        Session::new(&ds, LowerSpec::default().with_shards(4));
+    let t = std::time::Instant::now();
+    session.lower()?; // cold: search every shard + compile the plan
+    let cold_ms = t.elapsed().as_secs_f64() * 1e3;
+    // a short burst of updates, then a cached dirty-shard re-plan
+    let mut mirror = OverlayGraph::new(ds.graph.clone());
+    let mut srng = Rng::seed_from_u64(37);
+    for _ in 0..16 {
+        let d = random_delta(&mut srng, &mirror, 0.5, 0.0);
+        mirror.apply(d);
+        session.apply(d);
+    }
+    let dirty = session.dirty_shards();
+    let t = std::time::Instant::now();
+    let (hag_cached, plan_cached) = session.plan();
+    let warm_ms = t.elapsed().as_secs_f64() * 1e3;
+    let (hag_fresh, plan_fresh) = session.plan_fresh();
+    let st = session.stats();
+    println!("  cold lower {cold_ms:.1} ms; 16 updates left {dirty}/4 \
+              shards dirty; re-plan {warm_ms:.1} ms \
+              ({} shard searches total, {} cache hits)",
+             st.shard_searches, st.shard_cache_hits);
+    println!("  cached re-plan == from-scratch: {}",
+             if *hag_cached == hag_fresh && *plan_cached == plan_fresh {
+                 "OK"
+             } else {
+                 "MISMATCH"
+             });
     Ok(())
 }

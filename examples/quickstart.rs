@@ -10,9 +10,9 @@ use std::sync::Arc;
 
 use repro::coordinator::trainer::init_params;
 use repro::graph::Graph;
-use repro::hag::{build_plan, check_equivalence, hag_search, PlanConfig,
-                 SearchConfig};
+use repro::hag::{check_equivalence, AggregateKind, Hag, PlanConfig};
 use repro::runtime::{HostTensor, Runtime};
+use repro::session::{LowerSpec, Session};
 
 fn main() -> anyhow::Result<()> {
     // --- 1. the paper's Fig 1 input graph -----------------------------
@@ -28,15 +28,21 @@ fn main() -> anyhow::Result<()> {
     );
     println!("input graph: {} nodes, {} aggregation edges", g.n(), g.e());
 
-    // --- 2. Algorithm 3 ------------------------------------------------
-    let (hag, stats) = hag_search(&g, &SearchConfig {
-        capacity: usize::MAX,
-        kind: repro::hag::AggregateKind::Set,
-        pair_cap: usize::MAX,
-    });
+    // --- 2. Algorithm 3, through a lowering session --------------------
+    // The session owns search -> plan; `LowerSpec` is the one canonical
+    // knob set (exact search here: unbounded capacity + pair window).
+    let spec = LowerSpec::default()
+        .with_capacity(usize::MAX)
+        .with_pair_cap(usize::MAX)
+        .with_plan(PlanConfig {
+            br: 8, lvl_block: 128, max_bands: 1, nnzb_round: 16,
+        });
+    let mut session = Session::from_graph(&g, spec);
+    let (hag, plan) = session.plan();
+    let trivial = Hag::from_graph(&g, AggregateKind::Set);
     println!("HAG search: {} aggregation nodes, aggregations {} -> {}",
-             stats.agg_nodes, stats.aggregations_before,
-             stats.aggregations_after);
+             hag.agg_nodes.len(), trivial.aggregations(),
+             hag.aggregations());
 
     // --- 3. Theorem 1 equivalence --------------------------------------
     check_equivalence(&g, &hag).map_err(|e| anyhow::anyhow!(e))?;
@@ -44,9 +50,6 @@ fn main() -> anyhow::Result<()> {
 
     // --- 4. execute through the AOT artifact ---------------------------
     // The `tiny4` bucket (n_pad=128, 4 levels) fits this plan.
-    let plan = build_plan(&g, &hag, &PlanConfig {
-        br: 8, lvl_block: 128, max_bands: 1, nnzb_round: 16,
-    });
     let runtime = Arc::new(Runtime::open("artifacts")?);
     let exe = runtime.compile("gcn_infer_tiny4")?;
     let b = &exe.spec.bucket;

@@ -12,10 +12,9 @@
 use std::time::{Duration, Instant};
 
 use repro::bench::effective_scale;
-use repro::coordinator::{self, lower_dataset, pack_workload,
-                         BatchPolicy, Repr};
+use repro::coordinator::{self, BatchPolicy, Repr};
 use repro::datasets;
-use repro::hag::PlanConfig;
+use repro::session::{LowerSpec, Session};
 use repro::util::Rng;
 
 const SCALE: f64 = 0.05;
@@ -28,14 +27,10 @@ fn main() -> anyhow::Result<()> {
     println!("serving {} ({} nodes, {} edges)", ds.name, ds.n(), ds.e());
 
     for repr in [Repr::GnnGraph, Repr::Hag] {
-        let lowered =
-            lower_dataset(&ds, repr, None, None, &PlanConfig::default())?;
-        let name = coordinator::artifact_name("gcn", "infer",
-                                              &lowered.bucket);
-        let workload =
-            pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
-        let server = coordinator::InferenceServer::spawn(
-            "artifacts", &name, &workload, &lowered.plan,
+        let lowered = Session::new(&ds, LowerSpec::default()
+            .with_repr(repr)).lower()?;
+        let server = coordinator::InferenceServer::for_lowered(
+            "artifacts", "gcn", &ds, &lowered,
             BatchPolicy { max_batch: 64,
                           max_wait: Duration::from_millis(2) },
             SEED, None)?;

@@ -14,10 +14,10 @@
 use std::sync::Arc;
 
 use repro::bench::effective_scale;
-use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
+use repro::coordinator::{self, Repr};
 use repro::datasets;
-use repro::hag::PlanConfig;
 use repro::runtime::Runtime;
+use repro::session::{LowerSpec, Session};
 
 const SCALE: f64 = 0.05;
 const SEED: u64 = 7;
@@ -31,18 +31,14 @@ fn main() -> anyhow::Result<()> {
 
     let mut reports = Vec::new();
     for repr in [Repr::GnnGraph, Repr::Hag] {
-        let lowered =
-            lower_dataset(&ds, repr, None, None, &PlanConfig::default())?;
+        let lowered = Session::new(&ds, LowerSpec::default()
+            .with_repr(repr)).lower()?;
         println!("\n=== {:?} ===", repr);
         println!("aggregations/layer: {}   transfers/layer: {}",
                  lowered.hag.aggregations(),
                  lowered.hag.data_transfers());
-        let name = coordinator::artifact_name("gcn", "train",
-                                              &lowered.bucket);
-        let workload =
-            pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
-        let mut trainer = coordinator::Trainer::new(
-            runtime.clone(), &name, &workload, SEED)?;
+        let mut trainer = coordinator::Trainer::for_lowered(
+            runtime.clone(), "gcn", &ds, &lowered, SEED)?;
         let report = trainer.train(EPOCHS, 10)?;
         println!("loss curve (every 10): {:?}",
                  report.epochs.iter().step_by(10)

@@ -19,11 +19,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{self, lower_dataset, pack_workload, Repr};
+use crate::coordinator::{self, pack_workload, Repr};
 use crate::datasets::{self, Dataset};
-use crate::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
+use crate::hag::{hag_search, AggregateKind, SearchConfig};
 use crate::runtime::xla;
 use crate::runtime::Runtime;
+use crate::session::{LowerSpec, Session};
 
 /// Per-dataset scale multiplier: REDDIT/COLLAB are far larger than the
 /// rest; on the CPU testbed they run at a further-reduced scale so the
@@ -144,8 +145,8 @@ pub fn fig2_row(artifacts: &Path, ds: &Dataset, seed: u64,
     let mut train_ms = [0f64; 2];
     let mut infer_ms = [0f64; 2];
     for (i, repr) in [Repr::GnnGraph, Repr::Hag].into_iter().enumerate() {
-        let lowered =
-            lower_dataset(ds, repr, None, None, &PlanConfig::default())?;
+        let lowered = Session::new(ds, LowerSpec::default()
+            .with_repr(repr)).lower()?;
         let workload = pack_workload(ds, &lowered.plan, &lowered.bucket)?;
         // training
         let tname =
@@ -274,8 +275,8 @@ pub fn fig4_rows(artifacts: &Path, base_scale: f64, seed: u64,
     let mut rows = Vec::new();
     for &frac in FIG4_FRACTIONS {
         let capacity = (ds.graph.n() as f64 * frac) as usize;
-        let lowered = lower_dataset(&ds, Repr::Hag, Some(capacity),
-                                    None, &PlanConfig::default())?;
+        let lowered = Session::new(&ds, LowerSpec::default()
+            .with_capacity(capacity)).lower()?;
         let mut bucket = lowered.bucket.clone();
         bucket.name = fig4_bucket_name(frac);
         let tname = coordinator::artifact_name("gcn", "train", &bucket);
@@ -311,8 +312,8 @@ pub fn fig4_buckets(base_scale: f64, seed: u64)
     let mut out = Vec::new();
     for &frac in FIG4_FRACTIONS {
         let capacity = (ds.graph.n() as f64 * frac) as usize;
-        let lowered = lower_dataset(&ds, Repr::Hag, Some(capacity),
-                                    None, &PlanConfig::default())?;
+        let lowered = Session::new(&ds, LowerSpec::default()
+            .with_capacity(capacity)).lower()?;
         let mut bucket = lowered.bucket;
         bucket.name = fig4_bucket_name(frac);
         out.push(bucket);

@@ -1,5 +1,13 @@
 //! L3 coordinator: ties search -> plan -> runtime into training and
 //! serving workflows, and emits bucket specs for the AOT build.
+//!
+//! Lowering entry points live in [`crate::session`] (a `LowerSpec` +
+//! `Session` own the search/plan/bucket pipeline and its per-shard
+//! plan cache); the `lower_dataset` / `emit_buckets` functions here
+//! are deprecated one-shot wrappers kept for external callers
+//! mid-migration. This module keeps the runtime-facing pieces: data
+//! packing, the trainer, the inference server, and the bucket/artifact
+//! naming contract.
 
 pub mod packing;
 pub mod server;
@@ -15,8 +23,7 @@ use anyhow::Result;
 
 use crate::datasets::{Dataset, Task};
 use crate::graph::Graph;
-use crate::hag::{build_plan, hag_search, AggregateKind, ExecutionPlan,
-                 Hag, PlanConfig, SearchConfig};
+use crate::hag::{AggregateKind, ExecutionPlan, Hag, PlanConfig};
 use crate::runtime::BucketSpec;
 
 /// Which graph representation a workload runs under (the paper's
@@ -50,54 +57,56 @@ pub struct Lowered {
 /// Hidden dim used across the paper's eval (§5.3: 16 hidden dims).
 pub const HIDDEN: usize = 16;
 
-/// Search + lower `ds` under `repr`. Deterministic in the dataset (the
-/// search takes no RNG; the sharded path uses the fixed
-/// [`DEFAULT_PARTITION_SEED`](crate::partition::DEFAULT_PARTITION_SEED)).
+/// Search + lower `ds` under `repr`.
 ///
-/// `shards: Some(k)` with `k >= 2` routes the HAG search through the
-/// partitioned parallel driver
-/// ([`partition::search_sharded`](crate::partition::search_sharded)):
-/// per-shard searches on a worker pool, cross-shard edges falling back
-/// to direct aggregation. `None` / `Some(1)` is the single-threaded
-/// whole-graph search.
+/// Deprecated positional-knob entry point: the five knobs here are a
+/// strict subset of [`LowerSpec`](crate::session::LowerSpec), and this
+/// wrapper simply builds the equivalent spec and runs a one-shot
+/// [`Session`](crate::session::Session). Migrate to
+/// `Session::new(ds, spec).lower()` — a session also caches per-shard
+/// searches across re-plans, which this wrapper throws away.
+#[deprecated(since = "0.1.0",
+             note = "use session::Session::new(ds, spec).lower(); \
+                     this wrapper re-searches from scratch every call")]
 pub fn lower_dataset(ds: &Dataset, repr: Repr, capacity: Option<usize>,
                      shards: Option<usize>,
                      plan_cfg: &PlanConfig) -> Result<Lowered> {
-    let hag = match repr {
-        Repr::GnnGraph => Hag::from_graph(&ds.graph, AggregateKind::Set),
-        Repr::Hag => {
-            let cfg = SearchConfig::paper_default(ds.graph.n())
-                .with_capacity(capacity
-                    .unwrap_or(ds.graph.n() / 4));
-            match shards {
-                Some(k) if k >= 2 => {
-                    crate::partition::search_sharded(&ds.graph, k, &cfg).0
-                }
-                _ => hag_search(&ds.graph, &cfg).0,
-            }
-        }
-    };
-    let plan = build_plan(&ds.graph, &hag, plan_cfg);
-    let bucket = bucket_for(ds, &plan, repr);
-    Ok(Lowered { repr, hag, plan, bucket })
+    let mut spec = crate::session::LowerSpec::default()
+        .with_repr(repr)
+        .with_shards(shards.unwrap_or(1))
+        .with_plan(plan_cfg.clone());
+    if let Some(c) = capacity {
+        spec = spec.with_capacity(c);
+    }
+    crate::session::Session::new(ds, spec).lower()
 }
 
 /// Bucket spec for a lowered dataset (name convention:
 /// `<dataset>_<repr>`; aot.py compiles `gcn_{train,infer}_<name>`).
 pub fn bucket_for(ds: &Dataset, plan: &ExecutionPlan,
                   repr: Repr) -> BucketSpec {
-    let g_pad = match ds.task {
+    bucket_for_parts(&ds.name, ds.f_in, ds.classes, ds.task,
+                     ds.num_graphs, plan, repr)
+}
+
+/// [`bucket_for`] over the dataset fields it actually reads — the
+/// session subsystem keeps these (not the whole feature matrix) as its
+/// dataset metadata.
+pub fn bucket_for_parts(name: &str, f_in: usize, classes: usize,
+                        task: Task, num_graphs: usize,
+                        plan: &ExecutionPlan, repr: Repr) -> BucketSpec {
+    let g_pad = match task {
         Task::NodeClassification => 0,
         Task::GraphClassification => {
-            (ds.num_graphs + 1).next_multiple_of(16)
+            (num_graphs + 1).next_multiple_of(16)
         }
     };
     BucketSpec {
-        name: format!("{}_{}", ds.name.to_lowercase(), repr.tag()),
+        name: format!("{}_{}", name.to_lowercase(), repr.tag()),
         n_pad: plan.n_pad,
-        f_in: ds.f_in,
+        f_in,
         hidden: HIDDEN,
-        classes: ds.classes,
+        classes,
         levels: plan.levels,
         l_pad: plan.l_pad,
         bands: plan.bands.clone(),
@@ -122,21 +131,23 @@ pub fn artifact_name(model: &str, kind: &str, bucket: &BucketSpec)
 
 /// Emit `artifacts/buckets.json` for a set of datasets (both
 /// representations each) — phase 1 of the two-phase AOT build.
-/// `shards` must match the value later passed to `lower_dataset` at
-/// train/infer time, or the plan will not fit the compiled bucket.
+///
+/// Deprecated: this wrapper cannot express a capacity, so it pins the
+/// default — the historical foot-gun where a bucket emitted here could
+/// disagree with a capacity-bearing plan trained against it. Migrate
+/// to [`session::emit_buckets`](crate::session::emit_buckets), whose
+/// [`LowerSpec`](crate::session::LowerSpec) carries capacity (and
+/// every other knob) end-to-end.
+#[deprecated(since = "0.1.0",
+             note = "use session::emit_buckets(datasets, &spec, out); \
+                     this wrapper cannot carry a capacity")]
 pub fn emit_buckets(datasets: &[Dataset], shards: Option<usize>,
                     plan_cfg: &PlanConfig,
                     out: &std::path::Path) -> Result<Vec<BucketSpec>> {
-    let mut buckets = Vec::new();
-    for ds in datasets {
-        for repr in [Repr::GnnGraph, Repr::Hag] {
-            let lowered = lower_dataset(ds, repr, None, shards,
-                                        plan_cfg)?;
-            buckets.push(lowered.bucket);
-        }
-    }
-    write_buckets_json(&buckets, out)?;
-    Ok(buckets)
+    let spec = crate::session::LowerSpec::default()
+        .with_shards(shards.unwrap_or(1))
+        .with_plan(plan_cfg.clone());
+    crate::session::emit_buckets(datasets, &spec, out)
 }
 
 /// Serialize bucket specs as the `buckets.json` document aot.py reads.
@@ -202,16 +213,16 @@ pub fn random_merge_hag(g: &Graph, capacity: usize, seed: u64) -> Hag {
 mod tests {
     use super::*;
     use crate::datasets;
-    use crate::hag::check_equivalence;
+    use crate::hag::{check_equivalence, hag_search, SearchConfig};
+    use crate::session::{LowerSpec, Session};
 
     #[test]
     fn lower_both_reprs() {
         let ds = datasets::load("BZR", 0.02, 3);
-        let cfg = PlanConfig::default();
-        let base = lower_dataset(&ds, Repr::GnnGraph, None, None, &cfg)
-            .unwrap();
-        let hag = lower_dataset(&ds, Repr::Hag, None, None, &cfg)
-            .unwrap();
+        let base = Session::new(&ds, LowerSpec::default()
+            .with_repr(Repr::GnnGraph)).lower().unwrap();
+        let hag = Session::new(&ds, LowerSpec::default())
+            .lower().unwrap();
         assert_eq!(base.plan.levels, 0);
         check_equivalence(&ds.graph, &hag.hag).unwrap();
         assert!(hag.hag.aggregations() <= base.hag.aggregations());
@@ -221,23 +232,41 @@ mod tests {
         assert!(hag.bucket.fits(&hag.plan));
     }
 
+    /// The deprecated wrappers must delegate exactly (they exist only
+    /// for external callers mid-migration; `-D deprecated` CI keeps
+    /// them out of this crate).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_delegate_to_sessions() {
+        let ds = datasets::load("BZR", 0.02, 3);
+        let cfg = PlanConfig::default();
+        let old = lower_dataset(&ds, Repr::Hag, None, Some(4), &cfg)
+            .unwrap();
+        let new = Session::new(&ds, LowerSpec::default()
+            .with_shards(4)).lower().unwrap();
+        assert_eq!(old.hag, new.hag);
+        assert_eq!(old.plan, new.plan);
+        assert_eq!(old.bucket.name, new.bucket.name);
+        assert!(old.bucket.fits(&new.plan));
+    }
+
     #[test]
     fn lower_sharded_repr_is_equivalent() {
         let ds = datasets::load("BZR", 0.02, 3);
-        let cfg = PlanConfig::default();
-        let sharded =
-            lower_dataset(&ds, Repr::Hag, None, Some(4), &cfg).unwrap();
+        let sharded = Session::new(&ds, LowerSpec::default()
+            .with_shards(4)).lower().unwrap();
         sharded.hag.validate().unwrap();
         check_equivalence(&ds.graph, &sharded.hag).unwrap();
         // sharding can only miss merges, never add aggregations
         assert!(sharded.hag.cost_core() <= ds.graph.e());
         assert!(sharded.bucket.fits(&sharded.plan));
-        // Some(1) and None take the identical single-shard path
-        let one = lower_dataset(&ds, Repr::Hag, None, Some(1), &cfg)
-            .unwrap();
-        let none = lower_dataset(&ds, Repr::Hag, None, None, &cfg)
-            .unwrap();
-        assert_eq!(one.hag.agg_nodes, none.hag.agg_nodes);
+        // shards = 1 and the (clamped) 0 take the identical
+        // single-shard path
+        let one = Session::new(&ds, LowerSpec::default()
+            .with_shards(1)).lower().unwrap();
+        let zero = Session::new(&ds, LowerSpec::default()
+            .with_shards(0)).lower().unwrap();
+        assert_eq!(one.hag.agg_nodes, zero.hag.agg_nodes);
     }
 
     #[test]
@@ -260,9 +289,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("buckets.json");
         let ds = datasets::load("BZR", 0.01, 3);
-        let buckets =
-            emit_buckets(&[ds], None, &PlanConfig::default(), &path)
-                .unwrap();
+        let buckets = crate::session::emit_buckets(
+            &[ds], &LowerSpec::default(), &path).unwrap();
         assert_eq!(buckets.len(), 2);
         let text = std::fs::read_to_string(&path).unwrap();
         let v = crate::util::json::parse(&text).unwrap();

@@ -139,6 +139,24 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
+    /// Spawn straight from a lowered session workload: derives the
+    /// infer-artifact name from the bucket and packs the dataset
+    /// against the plan. `lowered` should come from
+    /// [`Session::lower`](crate::session::Session::lower) on the same
+    /// dataset.
+    pub fn for_lowered(artifacts_dir: impl Into<PathBuf>, model: &str,
+                       ds: &crate::datasets::Dataset,
+                       lowered: &super::Lowered, policy: BatchPolicy,
+                       seed: u64, stream: Option<StreamEngine>)
+                       -> Result<InferenceServer> {
+        let artifact =
+            super::artifact_name(model, "infer", &lowered.bucket);
+        let workload = super::pack_workload(ds, &lowered.plan,
+                                            &lowered.bucket)?;
+        Self::spawn(artifacts_dir, &artifact, &workload, &lowered.plan,
+                    policy, seed, stream)
+    }
+
     /// Spawn the batcher thread and block until its PJRT state is
     /// ready. `workload` supplies the resident graph tensors; params
     /// are initialized (a full deployment would load a checkpoint).

@@ -97,6 +97,22 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Trainer straight from a lowered session workload: derives the
+    /// artifact name from the bucket and packs the dataset against the
+    /// plan. `lowered` should come from
+    /// [`Session::lower`](crate::session::Session::lower) on the same
+    /// dataset.
+    pub fn for_lowered(runtime: Arc<Runtime>, model: &str,
+                       ds: &crate::datasets::Dataset,
+                       lowered: &super::Lowered,
+                       seed: u64) -> Result<Self> {
+        let artifact =
+            super::artifact_name(model, "train", &lowered.bucket);
+        let workload = super::pack_workload(ds, &lowered.plan,
+                                            &lowered.bucket)?;
+        Trainer::new(runtime, &artifact, &workload, seed)
+    }
+
     pub fn new(runtime: Arc<Runtime>, artifact: &str,
                workload: &PackedWorkload, seed: u64) -> Result<Self> {
         let exe = runtime.compile(artifact)?;

@@ -42,7 +42,7 @@ pub enum AggregateKind {
 }
 
 /// A HAG equivalent to some input GNN-graph.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Hag {
     /// Original node count `|V|`.
     pub n: usize,

@@ -47,7 +47,10 @@ impl Default for PlanConfig {
 }
 
 /// The lowered plan: everything the runtime needs to pack literals.
-#[derive(Debug, Clone)]
+/// `PartialEq` compares every field — the plan-cache correctness
+/// contract ("dirty-shard re-planning is identical to from-scratch")
+/// is asserted with full structural equality, index tensors included.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
     /// Real node count.
     pub n: usize,

@@ -141,6 +141,11 @@ pub struct StreamStats {
     pub remerge_merges: usize,
     pub rebuild_starts: usize,
     pub rebuild_swaps: usize,
+    /// Externally planned HAGs adopted via
+    /// [`StreamEngine::install_hag`] (counted in `rebuild_swaps` too —
+    /// an install *is* a swap, sourced from a session's dirty-shard
+    /// re-plan instead of a whole-graph re-search).
+    pub installs: usize,
     /// Wall time of the initial full search, ms.
     pub init_search_ms: f64,
 }
@@ -320,6 +325,33 @@ impl StreamEngine {
         self.stats.remerge_passes += 1;
         self.stats.remerge_merges += merges;
         merges
+    }
+
+    /// Adopt an externally planned HAG — e.g. a
+    /// [`Session`](crate::session::Session)'s dirty-shard re-plan —
+    /// as the maintained HAG, the per-shard alternative to
+    /// [`Self::rebuild_now`]'s whole-graph re-search (ROADMAP item 1:
+    /// re-search only the shards a delta touched and splice). `hag`
+    /// must be over the engine's *current* graph. Returns `false`
+    /// (and installs nothing) while a background rebuild is in
+    /// flight — the in-flight swap owns the delta log, and racing it
+    /// would replay stale deltas onto the installed HAG.
+    pub fn install_hag(&mut self, hag: &Hag) -> bool {
+        if self.rebuild.is_some() {
+            return false;
+        }
+        assert_eq!(hag.n, self.overlay.n(),
+                   "installed HAG is not over the current graph");
+        self.tracker.record_search(hag.cost_core(), self.overlay.e());
+        self.hag = IncrementalHag::from_hag(hag);
+        self.dirty.clear();
+        self.log.clear();
+        // an install is a start + swap in one step, so the
+        // starts >= swaps ledger invariant holds
+        self.stats.rebuild_starts += 1;
+        self.stats.rebuild_swaps += 1;
+        self.stats.installs += 1;
+        true
     }
 
     /// Inline full re-search + swap.
@@ -620,6 +652,34 @@ mod tests {
         let h = eng.to_hag();
         h.validate().unwrap();
         check_equivalence(&now, &h).unwrap();
+    }
+
+    #[test]
+    fn install_hag_swaps_and_repair_continues() {
+        let g = small_community();
+        let mut cfg = StreamConfig::default();
+        cfg.policy.threshold = f64::INFINITY; // engine never self-rebuilds
+        let mut eng = StreamEngine::new(&g, cfg);
+        let mut rng = Rng::seed_from_u64(29);
+        for _ in 0..300 {
+            let d = random_delta(&mut rng, eng.overlay(), 0.4, 0.01);
+            eng.apply(d);
+        }
+        let g_now = eng.graph();
+        let (fresh, _) = hag_search(&g_now, &eng.search_config());
+        assert!(eng.install_hag(&fresh));
+        assert_eq!(eng.cost_core(), fresh.cost_core());
+        assert_eq!(eng.stats().installs, 1);
+        assert_eq!(eng.stats().rebuild_swaps, 1);
+        check_equivalence(&g_now, &eng.to_hag()).unwrap();
+        // repair keeps working on top of the installed HAG
+        for _ in 0..200 {
+            let d = random_delta(&mut rng, eng.overlay(), 0.5, 0.01);
+            eng.apply(d);
+        }
+        let h = eng.to_hag();
+        h.validate().unwrap();
+        check_equivalence(&eng.graph(), &h).unwrap();
     }
 
     #[test]

@@ -58,6 +58,27 @@ impl DriftPolicy {
         self.background = background;
         self
     }
+
+    pub fn with_check_every(mut self, check_every: usize) -> Self {
+        self.check_every = check_every;
+        self
+    }
+
+    /// Deterministic fingerprint over every policy field, folded into
+    /// [`LowerSpec::fingerprint`](crate::session::LowerSpec::fingerprint)
+    /// — the policy is part of the lowering spec, so two sessions that
+    /// differ only in drift policy must not share cache entries. Kept
+    /// next to the fields so adding a knob without extending the hash
+    /// is a local diff review, not an action at a distance.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hasher;
+        let mut h = crate::util::fxhash::FxHasher::default();
+        h.write_u64(self.threshold.to_bits());
+        h.write_u64(self.decay.to_bits());
+        h.write_u64(self.check_every as u64);
+        h.write_u64(self.background as u64);
+        h.finish()
+    }
 }
 
 /// EWMA of observed fresh-search cost ratios.
@@ -141,6 +162,20 @@ mod tests {
         let mut t = DriftTracker::new(0.5);
         t.record_search(90, 100);
         assert!(t.drift(45, 100) < 0.0);
+    }
+
+    #[test]
+    fn fingerprint_separates_policies() {
+        let a = DriftPolicy::default();
+        assert_eq!(a.fingerprint(), DriftPolicy::default().fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_threshold(0.5).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_threshold(f64::INFINITY).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_background(true).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_check_every(1).fingerprint());
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! * **L3 (this crate)** — graph substrate, the HAG search algorithm
 //!   (paper Algorithm 3), the partitioned/parallel search subsystem
 //!   ([`partition`]), the streaming incremental-maintenance subsystem
-//!   ([`incremental`]), plan compiler, PJRT runtime, training
+//!   ([`incremental`]), the unified lowering [`session`] (spec +
+//!   per-shard plan cache), plan compiler, PJRT runtime, training
 //!   coordinator and inference server, dataset generators, benches.
 //! * **L2 (python/compile/model.py)** — GCN / GraphSAGE-P fwd+bwd in
 //!   JAX, AOT-lowered to HLO text per shape bucket.
@@ -26,4 +27,5 @@ pub mod hag;
 pub mod incremental;
 pub mod partition;
 pub mod runtime;
+pub mod session;
 pub mod util;

@@ -10,21 +10,27 @@
 //! repro serve --dataset BZR --requests 500
 //! repro bench-fig2 / bench-fig3 / bench-fig4
 //! ```
+//!
+//! Every lowering subcommand parses the same spec flags
+//! ([`SpecArgs`]) into a [`LowerSpec`], so `--capacity` / `--shards` /
+//! `--partition-seed` mean the same thing everywhere and the bucket a
+//! spec emits is exactly the bucket the same spec trains or serves
+//! against.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
+use repro::coordinator::{self, pack_workload};
 use repro::datasets;
-use repro::hag::{hag_search, AggregateKind, PlanConfig, SearchConfig};
-use repro::incremental::{random_delta, OverlayGraph, StreamConfig,
-                         StreamEngine};
+use repro::hag::hag_search;
+use repro::incremental::{random_delta, OverlayGraph, StreamEngine};
 use repro::partition::{partition_bfs, search_partitioned,
                        PartitionConfig};
 use repro::runtime::Runtime;
-use repro::util::cli::{partition_opts, shards_opt, Args};
+use repro::session::{LowerSpec, Session};
+use repro::util::cli::{Args, SpecArgs};
 use repro::util::Rng;
 
 const USAGE: &str = "\
@@ -38,9 +44,11 @@ SUBCOMMANDS
   partition-stats  shard the graph, report edge-cut/halo/balance and
                  per-shard redundancy elimination vs single-shard
   stream         apply a random update stream through the incremental
-                 engine; report repair latency + cost gap vs re-search
+                 engine + lowering session; report repair latency,
+                 per-shard plan-cache activity, and the dirty-shard
+                 re-plan == from-scratch check
   stream-stats   drift trajectory table (cost vs decayed fresh-search
-                 estimate, re-merge and rebuild activity)
+                 estimate, dirty shards, session re-plan activity)
   emit-buckets   write artifacts/buckets.json (AOT build phase 1)
   train          train a 2-layer GCN (gnn-graph or hag repr)
   infer          one-shot full-graph inference latency
@@ -50,29 +58,38 @@ SUBCOMMANDS
   bench-fig3     Fig 3: aggregation/data-transfer reductions
   bench-fig4     Fig 4: capacity sweep on COLLAB
 
+SPEC OPTIONS (shared by search / partition-stats / stream /
+stream-stats / emit-buckets / train / infer / serve)
+  --repr R          gnn | hag                 [hag]
+  --kind K          set | seq                 [set]
+  --capacity N      explicit |V_A| budget (overrides --capacity-frac;
+                    carried end-to-end through buckets.json)
+  --capacity-frac F search capacity / |V|     [0.25]
+  --shards N        partitioned parallel search; N>=2 shards,
+                    1 = whole-graph
+  --partition-seed S BFS partitioner seed
+  --drift-threshold F  re-plan trigger           [0.08]
+  --background      whole-graph rebuilds on a background thread; on
+                    stream/stream-stats this keeps the engine's own
+                    drift rebuilds instead of the session's inline
+                    dirty-shard re-plan installs
+
 COMMON OPTIONS
   --artifacts DIR   artifact directory        [artifacts]
   --dataset NAME    BZR | PPI | REDDIT | IMDB | COLLAB
   --datasets NAME   (repeatable) subset for emit-buckets / bench-fig2
   --scale F         dataset scale factor      [0.05]
   --seed N          generator seed            [7]
-  --repr R          gnn | hag                 [hag]
   --epochs N        training epochs           [20]
   --model M         gcn | sage                [gcn]
-  --capacity-frac F search capacity / |V|     [0.25]
-  --kind K          set | seq (bench-fig3 / search)
-  --shards N        partitioned parallel search (search /
-                    partition-stats / emit-buckets / train / infer /
-                    serve; N>=2 shards, 1 = whole-graph)
-  --partition-seed S BFS partitioner seed (search / partition-stats)
   --fig4            (emit-buckets) include Fig-4 sweep buckets
   --requests N --max-batch N --concurrency N  (serve)
   --updates N       update stream length (stream / stream-stats /
                     serve)                  [10000 / 2000 / 0]
+  --plan-every N    session re-plan cadence, in updates (stream)
+                    [1000]
   --insert-frac F   insert share of edge updates  [0.5]
   --node-add-frac F NodeAdd share of updates      [0.01]
-  --drift-threshold F  re-search trigger          [0.08]
-  --background      rebuild on a background thread (stream)
   --report-memory   (bench-fig4) print §3.2 memory accounting
 ";
 
@@ -97,8 +114,8 @@ fn main() -> Result<()> {
         "bench-fig2" => repro::bench::fig2(
             &artifacts, args.get_all("datasets"), scale, seed,
             args.get_or("epochs", 10usize)?),
-        "bench-fig3" => repro::bench::fig3(parse_kind(&args)?, scale,
-                                           seed),
+        "bench-fig3" => repro::bench::fig3(
+            SpecArgs::parse(&args)?.spec.kind, scale, seed),
         "bench-fig4" => repro::bench::fig4(
             &artifacts, args.get_or("scale", 0.02)?, seed,
             args.get_or("epochs", 5usize)?,
@@ -111,22 +128,6 @@ fn main() -> Result<()> {
     };
     args.finish()?;
     r
-}
-
-fn parse_kind(args: &Args) -> Result<AggregateKind> {
-    Ok(match args.get_or::<String>("kind", "set".into())?.as_str() {
-        "set" => AggregateKind::Set,
-        "seq" | "sequential" => AggregateKind::Sequential,
-        other => bail!("--kind must be set|seq, got {other:?}"),
-    })
-}
-
-fn parse_repr(args: &Args) -> Result<Repr> {
-    Ok(match args.get_or::<String>("repr", "hag".into())?.as_str() {
-        "gnn" | "gnn-graph" => Repr::GnnGraph,
-        "hag" => Repr::Hag,
-        other => bail!("--repr must be gnn|hag, got {other:?}"),
-    })
 }
 
 fn req_dataset(args: &Args) -> Result<String> {
@@ -154,16 +155,13 @@ fn cmd_stats(scale: f64, seed: u64) -> Result<()> {
 fn cmd_search(args: &Args, scale: f64, seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
     let ds = datasets::load(&name, scale, seed);
-    let kind = parse_kind(args)?;
-    let frac = args.get_or("capacity-frac", 0.25)?;
-    let (shards, pseed) = partition_opts(args)?;
-    let cfg = SearchConfig::paper_default(ds.graph.n())
-        .with_capacity((ds.graph.n() as f64 * frac) as usize)
-        .with_kind(kind);
-    let (hag, stats) = match shards {
-        Some(k) if k >= 2 => {
+    let spec = SpecArgs::parse(args)?.spec;
+    let kind = spec.kind;
+    let cfg = spec.search_config(ds.graph.n());
+    let (hag, stats) = match spec.shards {
+        k if k >= 2 => {
             let (hag, sh) = repro::partition::search_sharded_seeded(
-                &ds.graph, k, &cfg, pseed);
+                &ds.graph, k, &cfg, spec.partition_seed);
             if sh.per_shard.len() > 1 {
                 println!("sharding      : {k} shards, {} cut edges \
                           ({:.1}%), {} threads",
@@ -202,10 +200,12 @@ fn cmd_search(args: &Args, scale: f64, seed: u64) -> Result<()> {
 fn cmd_partition_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
     let ds = datasets::load(&name, scale, seed);
-    let kind = parse_kind(args)?;
-    let frac = args.get_or("capacity-frac", 0.25)?;
-    let (shards, pseed) = partition_opts(args)?;
-    let k = shards.unwrap_or(4);
+    let spec = SpecArgs::parse(args)?.spec;
+    let kind = spec.kind;
+    // partition-stats is about sharding, so absent --shards means a
+    // representative 4, not the lowering default of 1
+    let k = args.get::<usize>("shards")?.unwrap_or(4).max(1);
+    let pseed = spec.partition_seed;
     let t_part = std::time::Instant::now();
     let part = partition_bfs(
         &ds.graph, &PartitionConfig::new(k).with_seed(pseed));
@@ -214,9 +214,7 @@ fn cmd_partition_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
     // Per-shard redundancy elimination + stitched vs single-shard.
     // (search_partitioned computes the partition report itself —
     // print from its copy instead of paying the O(n+e) pass twice.)
-    let cfg = SearchConfig::paper_default(ds.graph.n())
-        .with_capacity((ds.graph.n() as f64 * frac) as usize)
-        .with_kind(kind);
+    let cfg = spec.search_config(ds.graph.n());
     let (sharded, sh) = search_partitioned(&ds.graph, &part, &cfg);
     let report = &sh.report;
     repro::hag::check_equivalence_probabilistic(&ds.graph, &sharded,
@@ -266,39 +264,105 @@ fn cmd_partition_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
     Ok(())
 }
 
-/// Shared stream-option parsing for `stream` / `stream-stats`.
-fn stream_config(args: &Args) -> Result<(StreamConfig, f64, f64)> {
+/// Shared stream-option parsing for `stream` / `stream-stats`:
+/// the lowering spec plus the delta-generator knobs.
+fn stream_opts(args: &Args) -> Result<(LowerSpec, f64, f64)> {
+    let spec = SpecArgs::parse(args)?.spec;
     let insert_frac = args.get_or("insert-frac", 0.5)?;
     let node_add_frac = args.get_or("node-add-frac", 0.01)?;
-    let shards = shards_opt(args)?;
-    let mut cfg = StreamConfig::default();
-    cfg.shards = shards.unwrap_or(1);
-    cfg.policy.threshold = args.get_or("drift-threshold", 0.08)?;
-    cfg.policy.background = args.flag("background")?;
-    Ok((cfg, insert_frac, node_add_frac))
+    Ok((spec, insert_frac, node_add_frac))
+}
+
+/// Engine + session lockstep for `stream` / `stream-stats`. Owns the
+/// two invariants the commands would otherwise each re-encode:
+///
+/// * every delta is applied to *both* objects (the session's
+///   graph must match the engine's for `install_hag`);
+/// * exactly one party owns re-planning. By default the session does
+///   (`repro::incremental`'s whole-graph drift rebuild is disabled and
+///   drift past the threshold swaps in the session's spliced
+///   dirty-shard re-plan — ROADMAP item 1). With `--background`, or
+///   under the GNN baseline (whose session "plan" is the trivial HAG
+///   and must never replace the engine's repaired one), the engine
+///   keeps its own drift policy and the session only measures the
+///   plan cache.
+struct SessionStream {
+    eng: StreamEngine,
+    session: Session,
+    installs: bool,
+    threshold: f64,
+}
+
+impl SessionStream {
+    fn new(g: &repro::graph::Graph, spec: &LowerSpec) -> SessionStream {
+        // Set-AGGREGATE HAG sessions only: the GNN baseline's "plan"
+        // is the trivial HAG, and IncrementalHag::from_hag rejects
+        // sequential HAGs (ordered covers don't admit point repair).
+        let installs = spec.repr == repro::coordinator::Repr::Hag
+            && spec.kind == repro::hag::AggregateKind::Set
+            && !spec.drift.background;
+        let mut ecfg = spec.stream_config();
+        if installs {
+            ecfg.policy.threshold = f64::INFINITY;
+        }
+        SessionStream {
+            eng: StreamEngine::new(g, ecfg),
+            session: Session::from_graph(g, spec.clone()),
+            installs,
+            threshold: spec.drift.threshold,
+        }
+    }
+
+    fn apply(&mut self, d: repro::incremental::GraphDelta) {
+        self.eng.apply(d);
+        self.session.apply(d);
+    }
+
+    /// Cadenced re-plan: cached dirty-shard plan; the engine adopts it
+    /// when the session owns re-planning and drift crossed the
+    /// threshold.
+    fn replan(&mut self) {
+        let (hag, _plan) = self.session.plan();
+        if self.installs
+            && self.eng.drift() > self.threshold
+            && !self.eng.rebuild_in_flight()
+        {
+            self.eng.install_hag(&hag);
+        }
+    }
 }
 
 fn cmd_stream(args: &Args, scale: f64, seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
     let updates = args.get_or("updates", 10_000usize)?;
-    let (cfg, insert_frac, node_add_frac) = stream_config(args)?;
+    let plan_every = args.get_or("plan-every", 1_000usize)?;
+    let (spec, insert_frac, node_add_frac) = stream_opts(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
-    let mut eng = StreamEngine::new(&ds.graph, cfg);
+    // The engine repairs the HAG per delta; the session re-plans only
+    // dirty shards on the --plan-every cadence (and, by default,
+    // supplies the drift rebuilds — see SessionStream).
+    let mut ss = SessionStream::new(&ds.graph, &spec);
     println!("dataset      : {} (n={}, e={})", ds.name, ds.n(), ds.e());
     println!("initial HAG  : cost {} vs trivial {}  ({:.1} ms search)",
-             eng.cost_core(), ds.e(), eng.stats().init_search_ms);
+             ss.eng.cost_core(), ds.e(),
+             ss.eng.stats().init_search_ms);
 
     let mut rng = Rng::seed_from_u64(seed ^ 0x57e4);
     let mut lat_us: Vec<f64> = Vec::with_capacity(updates);
-    for _ in 0..updates {
-        let d = random_delta(&mut rng, eng.overlay(), insert_frac,
+    for i in 0..updates {
+        let d = random_delta(&mut rng, ss.eng.overlay(), insert_frac,
                              node_add_frac);
         let t = std::time::Instant::now();
-        eng.apply(d);
+        ss.eng.apply(d);
         lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        ss.session.apply(d);
+        if plan_every > 0 && (i + 1) % plan_every == 0 {
+            ss.replan();
+        }
     }
-    eng.finish_rebuild(); // land any in-flight background re-search
+    ss.eng.finish_rebuild(); // land any in-flight background re-search
+    let SessionStream { eng, mut session, .. } = ss;
 
     let g_now = eng.graph();
     let hag = eng.to_hag();
@@ -314,9 +378,10 @@ fn cmd_stream(args: &Args, scale: f64, seed: u64) -> Result<()> {
               {} noop)",
              s.applied, s.inserts, s.deletes, s.node_adds, s.noops);
     println!("repair       : {} fallbacks; {} re-merge passes \
-              ({} merges); {} rebuilds ({} swapped)",
+              ({} merges); {} rebuilds ({} swapped, {} of them \
+              session installs)",
              s.fallbacks, s.remerge_passes, s.remerge_merges,
-             s.rebuild_starts, s.rebuild_swaps);
+             s.rebuild_starts, s.rebuild_swaps, s.installs);
     if !lat_us.is_empty() {
         lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| -> f64 {
@@ -334,42 +399,69 @@ fn cmd_stream(args: &Args, scale: f64, seed: u64) -> Result<()> {
              100.0 * (hag.cost_core() as f64
                  / fresh.cost_core().max(1) as f64 - 1.0));
     println!("equivalence  : OK (probabilistic, Theorem 1)");
+
+    // Per-shard plan-cache acceptance: the cached dirty-shard-only
+    // re-plan must be identical to a from-scratch build_plan over the
+    // session's maintained HAG.
+    let (hag_c, plan_c) = session.plan();
+    let (hag_f, plan_f) = session.plan_fresh();
+    let st = session.stats();
+    println!("plan cache   : {} plans; {} shard re-searches vs {} \
+              updates; {} shard cache hits; {} cross-shard deltas",
+             st.plans, st.shard_searches, updates,
+             st.shard_cache_hits, st.cross_shard_deltas);
+    if *hag_c == hag_f && *plan_c == plan_f {
+        println!("replan check : OK (cached dirty-shard re-plan == \
+                  from-scratch build_plan)");
+    } else {
+        bail!("plan cache MISMATCH: cached re-plan differs from the \
+               from-scratch build_plan");
+    }
     Ok(())
 }
 
 fn cmd_stream_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
     let updates = args.get_or("updates", 2_000usize)?;
-    let (cfg, insert_frac, node_add_frac) = stream_config(args)?;
+    let (spec, insert_frac, node_add_frac) = stream_opts(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
-    let threshold = cfg.policy.threshold;
-    let mut eng = StreamEngine::new(&ds.graph, cfg);
+    let threshold = spec.drift.threshold;
+    let mut ss = SessionStream::new(&ds.graph, &spec);
     println!("dataset : {} (n={}, e={}); drift threshold {:.3}",
              ds.name, ds.n(), ds.e(), threshold);
-    println!("{:>8} {:>8} {:>10} {:>10} {:>12} {:>8} {:>7} {:>8}",
+    println!("{:>8} {:>8} {:>10} {:>10} {:>12} {:>8} {:>7} {:>8} {:>8}",
              "seq", "n", "e", "cost", "est fresh", "drift%", "dirty",
-             "rebuilds");
+             "replans", "installs");
     let mut rng = Rng::seed_from_u64(seed ^ 0x57e4);
     let every = (updates / 20).max(1);
     for i in 0..updates {
-        let d = random_delta(&mut rng, eng.overlay(), insert_frac,
+        let d = random_delta(&mut rng, ss.eng.overlay(), insert_frac,
                              node_add_frac);
-        eng.apply(d);
+        ss.apply(d);
         if (i + 1) % every == 0 || i + 1 == updates {
+            let dirty = ss.session.dirty_shards();
+            ss.replan();
             println!("{:>8} {:>8} {:>10} {:>10} {:>12.0} {:>8.2} \
-                      {:>7} {:>8}",
-                     eng.seq(), eng.n(), eng.e(), eng.cost_core(),
-                     eng.estimated_fresh(), 100.0 * eng.drift(),
-                     eng.dirty_len(), eng.stats().rebuild_swaps);
+                      {:>7} {:>8} {:>8}",
+                     ss.eng.seq(), ss.eng.n(), ss.eng.e(),
+                     ss.eng.cost_core(), ss.eng.estimated_fresh(),
+                     100.0 * ss.eng.drift(), dirty,
+                     ss.session.stats().shard_searches,
+                     ss.eng.stats().installs);
         }
     }
-    eng.finish_rebuild();
+    ss.eng.finish_rebuild();
+    let SessionStream { eng, session, .. } = ss;
     let s = eng.stats();
+    let st = session.stats();
     println!("\ntotals  : {} fallbacks, {} re-merge merges, \
-              {} rebuilds started / {} swapped",
+              {} rebuilds started / {} swapped ({} session installs); \
+              {} session plans, {} shard re-searches (vs {} updates), \
+              {} shard cache hits",
              s.fallbacks, s.remerge_merges, s.rebuild_starts,
-             s.rebuild_swaps);
+             s.rebuild_swaps, s.installs, st.plans,
+             st.shard_searches, updates, st.shard_cache_hits);
     repro::hag::check_equivalence_probabilistic(
         &eng.graph(), &eng.to_hag(), seed)
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -389,10 +481,9 @@ fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
         eprintln!("[emit-buckets] generating {name} at scale {s:.4}");
         sets.push(datasets::load(name, s, seed));
     }
-    let shards = shards_opt(args)?;
+    let spec = SpecArgs::parse(args)?.spec;
     let out = artifacts.join("buckets.json");
-    let mut buckets = coordinator::emit_buckets(
-        &sets, shards, &PlanConfig::default(), &out)?;
+    let mut buckets = repro::session::emit_buckets(&sets, &spec, &out)?;
     if args.flag("fig4")? {
         eprintln!("[emit-buckets] adding Fig-4 capacity sweep buckets");
         buckets.extend(repro::bench::fig4_buckets(
@@ -407,20 +498,15 @@ fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
 fn cmd_train(args: &Args, artifacts: &PathBuf, scale: f64,
              seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
-    let repr = parse_repr(args)?;
+    let spec = SpecArgs::parse(args)?.spec;
     let epochs = args.get_or("epochs", 20usize)?;
     let model = args.get_or::<String>("model", "gcn".into())?;
-    let shards = shards_opt(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
-    let lowered =
-        lower_dataset(&ds, repr, None, shards, &PlanConfig::default())?;
+    let lowered = Session::new(&ds, spec).lower()?;
     let runtime = Arc::new(Runtime::open(artifacts)?);
-    let aname = coordinator::artifact_name(&model, "train",
-                                           &lowered.bucket);
-    let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
-    let mut trainer = coordinator::Trainer::new(runtime, &aname,
-                                                &workload, seed)?;
+    let mut trainer = coordinator::Trainer::for_lowered(
+        runtime, &model, &ds, &lowered, seed)?;
     let report = trainer.train(epochs, 1.max(epochs / 10))?;
     println!("artifact      : {}", report.artifact);
     println!("epochs        : {}", report.epochs.len());
@@ -433,14 +519,12 @@ fn cmd_train(args: &Args, artifacts: &PathBuf, scale: f64,
 fn cmd_infer(args: &Args, artifacts: &PathBuf, scale: f64,
              seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
-    let repr = parse_repr(args)?;
+    let spec = SpecArgs::parse(args)?.spec;
     let repeats = args.get_or("repeats", 10usize)?;
     let model = args.get_or::<String>("model", "gcn".into())?;
-    let shards = shards_opt(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
-    let lowered =
-        lower_dataset(&ds, repr, None, shards, &PlanConfig::default())?;
+    let lowered = Session::new(&ds, spec).lower()?;
     let runtime = Arc::new(Runtime::open(artifacts)?);
     let aname = coordinator::artifact_name(&model, "infer",
                                            &lowered.bucket);
@@ -455,35 +539,30 @@ fn cmd_infer(args: &Args, artifacts: &PathBuf, scale: f64,
 fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
              seed: u64) -> Result<()> {
     let name = req_dataset(args)?;
-    let repr = parse_repr(args)?;
     let requests = args.get_or("requests", 500usize)?;
     let max_batch = args.get_or("max-batch", 64usize)?;
     let concurrency = args.get_or("concurrency", 8usize)?;
     let updates = args.get_or("updates", 0usize)?;
-    let shards = shards_opt(args)?;
+    let (spec, insert_frac, node_add_frac) = stream_opts(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
-    let lowered =
-        lower_dataset(&ds, repr, None, shards, &PlanConfig::default())?;
-    let aname = coordinator::artifact_name("gcn", "infer",
-                                           &lowered.bucket);
-    let workload = pack_workload(&ds, &lowered.plan, &lowered.bucket)?;
+    let lowered = Session::new(&ds, spec.clone()).lower()?;
     // With --updates N the server also maintains the HAG online:
     // scoring runs against the compiled (pinned) plan while the
     // resident engine repairs the HAG the *next* plan compile will
     // lower; rebuilds always go to a background thread so the batcher
-    // never stalls (DESIGN.md §6). The shared stream knobs
+    // never stalls (DESIGN.md §6). The shared spec/stream knobs
     // (--drift-threshold, --insert-frac, --node-add-frac) apply here
     // exactly as on `stream`/`stream-stats`.
-    let (mut scfg, insert_frac, node_add_frac) = stream_config(args)?;
+    let mut scfg = spec.stream_config();
     scfg.policy.background = true;
     let stream = if updates > 0 {
         Some(StreamEngine::new(&ds.graph, scfg))
     } else {
         None
     };
-    let server = coordinator::InferenceServer::spawn(
-        artifacts.clone(), &aname, &workload, &lowered.plan,
+    let server = coordinator::InferenceServer::for_lowered(
+        artifacts.clone(), "gcn", &ds, &lowered,
         coordinator::BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_millis(2),

@@ -179,8 +179,9 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
 const FALLBACK_WORKERS: usize = 4;
 
 /// `available_parallelism()` with the graceful
-/// [`FALLBACK_WORKERS`] degradation.
-fn worker_parallelism() -> usize {
+/// [`FALLBACK_WORKERS`] degradation. Shared with the session
+/// subsystem's dirty-shard re-search pool.
+pub(crate) fn worker_parallelism() -> usize {
     std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(FALLBACK_WORKERS)
@@ -190,24 +191,33 @@ fn worker_parallelism() -> usize {
 /// intra-shard edge counts (search opportunity is edge-proportional);
 /// the floored remainder goes to the edge-heaviest shards. The split
 /// never exceeds the global budget.
-fn split_capacity(capacity: usize, subs: &[Graph]) -> Vec<usize> {
-    let k = subs.len();
+pub fn split_capacity(capacity: usize, subs: &[Graph]) -> Vec<usize> {
+    let edges: Vec<usize> = subs.iter().map(|g| g.e()).collect();
+    split_capacity_by_edges(capacity, &edges)
+}
+
+/// [`split_capacity`] over bare intra-edge counts — for callers (the
+/// session subsystem pinning its creation-time split) that know the
+/// per-shard edge counts without materializing the subgraphs.
+pub fn split_capacity_by_edges(capacity: usize,
+                               intra_edges: &[usize]) -> Vec<usize> {
+    let k = intra_edges.len();
     if capacity == usize::MAX {
         return vec![usize::MAX; k];
     }
-    let e_tot: usize = subs.iter().map(|g| g.e()).sum();
+    let e_tot: usize = intra_edges.iter().sum();
     if e_tot == 0 || k == 0 {
         return vec![capacity; k.max(1)];
     }
-    let mut caps: Vec<usize> = subs
+    let mut caps: Vec<usize> = intra_edges
         .iter()
-        .map(|g| {
-            ((capacity as u128 * g.e() as u128) / e_tot as u128) as usize
+        .map(|&e| {
+            ((capacity as u128 * e as u128) / e_tot as u128) as usize
         })
         .collect();
     let mut rem = capacity - caps.iter().sum::<usize>();
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by_key(|&s| std::cmp::Reverse(subs[s].e()));
+    order.sort_by_key(|&s| std::cmp::Reverse(intra_edges[s]));
     let mut i = 0;
     while rem > 0 {
         caps[order[i % k]] += 1;

@@ -106,6 +106,26 @@ impl Partition {
         }
     }
 
+    /// Append a brand-new node (id = current node count) to `shard`.
+    /// New ids are maximal, so the ascending-members invariant holds
+    /// without a sort. Used by the session subsystem to keep the
+    /// partition covering a growing graph.
+    pub fn push_node(&mut self, shard: usize) -> u32 {
+        assert!(shard < self.n_shards, "shard {shard} out of range");
+        let v = self.shard_of.len() as u32;
+        self.shard_of.push(shard as u32);
+        self.members[shard].push(v);
+        v
+    }
+
+    /// The shard with the fewest member nodes (ties: lowest id) — the
+    /// deterministic destination for nodes added after partitioning.
+    pub fn lightest_shard(&self) -> usize {
+        (0..self.n_shards)
+            .min_by_key(|&s| (self.members[s].len(), s))
+            .unwrap_or(0)
+    }
+
     /// Local (within-shard) index of every node; inverse of
     /// `members[shard_of[v]][local_id[v]] == v`.
     pub fn local_ids(&self) -> Vec<u32> {

@@ -56,18 +56,24 @@ pub fn subgraph(g: &Graph, part: &Partition, local_ids: &[u32],
 /// Only `AggregateKind::Set` decomposes this way — ordered (sequential)
 /// covers cannot interleave cross-shard operands back into the
 /// canonical order — so the caller must not pass sequential shard HAGs.
-pub fn stitch_hags(g: &Graph, part: &Partition, locals: &[Hag]) -> Hag {
+///
+/// Generic over `Borrow<Hag>` so the session subsystem can splice
+/// cache-shared `Arc<Hag>`s without cloning each shard's HAG.
+pub fn stitch_hags<H: std::borrow::Borrow<Hag>>(
+    g: &Graph, part: &Partition, locals: &[H]) -> Hag {
     assert_eq!(locals.len(), part.n_shards, "one HAG per shard");
-    assert!(locals.iter().all(|h| h.kind == AggregateKind::Set),
+    assert!(locals.iter()
+                .all(|h| h.borrow().kind == AggregateKind::Set),
             "sharded stitching is Set-AGGREGATE only");
     let n = g.n();
     let total_agg: usize =
-        locals.iter().map(|h| h.agg_nodes.len()).sum();
+        locals.iter().map(|h| h.borrow().agg_nodes.len()).sum();
     let mut agg_nodes = Vec::with_capacity(total_agg);
     let mut in_edges: Vec<Vec<Slot>> = vec![Vec::new(); n];
 
     let mut base = n; // first global slot of the current shard's block
     for (s, lh) in locals.iter().enumerate() {
+        let lh = lh.borrow();
         let mem = &part.members[s];
         assert_eq!(lh.n, mem.len(), "shard {s}: HAG/member mismatch");
         let remap = |slot: Slot| -> Slot {

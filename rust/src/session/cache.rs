@@ -1,0 +1,196 @@
+//! Per-shard plan cache.
+//!
+//! Two tiers, both keyed off the spec fingerprint
+//! ([`LowerSpec::fingerprint`](super::LowerSpec::fingerprint)):
+//!
+//! * **shard tier** — searched per-shard HAGs keyed by
+//!   `(spec fingerprint, shard id, topology version)`, where the
+//!   topology version is the shard's last-dirtying delta sequence
+//!   number. A shard untouched since its last search is a cache hit;
+//!   only dirty shards pay a re-search. Inserting a shard entry evicts
+//!   that shard's stale versions (a shard can never be consistent at
+//!   two versions at once), so the tier holds at most one entry per
+//!   `(spec, shard)`.
+//! * **plan tier** — the last stitched `(Hag, ExecutionPlan)` memoized
+//!   at `(spec fingerprint, global version)`, so repeated
+//!   [`Session::plan`](super::Session::plan) calls with no interleaved
+//!   deltas are free.
+//!
+//! Invalidation rules (see DESIGN.md §7): any intra-shard edge delta
+//! or node addition bumps its shard's version (shard-tier miss); any
+//! applied delta — including cross-shard edges, which live only in the
+//! stitch — bumps the global version (plan-tier miss).
+
+use std::sync::Arc;
+
+use crate::hag::{ExecutionPlan, Hag};
+use crate::util::FxHashMap;
+
+/// Shard-tier cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// [`LowerSpec::fingerprint`](super::LowerSpec::fingerprint),
+    /// mixed with the session's base-graph fingerprint.
+    pub spec: u64,
+    pub shard: u32,
+    /// Sequence number of the delta that last dirtied the shard
+    /// (0 = the base graph).
+    pub version: u64,
+}
+
+/// Hit/miss counters (also surfaced through
+/// [`SessionStats`](super::SessionStats)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub shard_hits: usize,
+    pub shard_misses: usize,
+    pub plan_hits: usize,
+    pub plan_misses: usize,
+}
+
+/// The cache itself. Owned by one [`Session`](super::Session); shared
+/// handles are `Arc`s so a hit never copies a HAG or an index tensor.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    shards: FxHashMap<PlanKey, Arc<Hag>>,
+    plan: Option<(u64, u64, Arc<Hag>, Arc<ExecutionPlan>)>,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shard-tier lookup; counts a hit or a miss.
+    pub fn shard_hag(&mut self, key: PlanKey) -> Option<Arc<Hag>> {
+        match self.shards.get(&key) {
+            Some(h) => {
+                self.stats.shard_hits += 1;
+                Some(h.clone())
+            }
+            None => {
+                self.stats.shard_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly searched shard HAG, evicting stale versions of
+    /// the same `(spec, shard)`.
+    pub fn insert_shard(&mut self, key: PlanKey, hag: Arc<Hag>) {
+        self.shards.retain(|k, _| {
+            k.spec != key.spec || k.shard != key.shard
+        });
+        self.shards.insert(key, hag);
+    }
+
+    /// Plan-tier lookup at `(spec, global version)`.
+    pub fn plan_at(&mut self, spec: u64, version: u64)
+                   -> Option<(Arc<Hag>, Arc<ExecutionPlan>)> {
+        match &self.plan {
+            Some((s, v, hag, plan)) if *s == spec && *v == version => {
+                self.stats.plan_hits += 1;
+                Some((hag.clone(), plan.clone()))
+            }
+            _ => {
+                self.stats.plan_misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert_plan(&mut self, spec: u64, version: u64,
+                       hag: Arc<Hag>, plan: Arc<ExecutionPlan>) {
+        self.plan = Some((spec, version, hag, plan));
+    }
+
+    /// Does the shard tier hold `key` right now? (No hit/miss
+    /// accounting — used to report dirty-shard counts.)
+    pub fn contains_shard(&self, key: &PlanKey) -> bool {
+        self.shards.contains_key(key)
+    }
+
+    /// Live shard-tier entries.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop everything (spec change, explicit reset).
+    pub fn clear(&mut self) {
+        self.shards.clear();
+        self.plan = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::AggregateKind;
+
+    fn dummy_hag(n: usize) -> Arc<Hag> {
+        Arc::new(Hag {
+            n,
+            agg_nodes: Vec::new(),
+            in_edges: vec![Vec::new(); n],
+            kind: AggregateKind::Set,
+        })
+    }
+
+    #[test]
+    fn shard_tier_hits_and_evicts_stale_versions() {
+        let mut c = PlanCache::new();
+        let k0 = PlanKey { spec: 1, shard: 0, version: 0 };
+        assert!(c.shard_hag(k0).is_none());
+        c.insert_shard(k0, dummy_hag(3));
+        assert!(c.shard_hag(k0).is_some());
+        // same shard at a newer version evicts the old entry
+        let k1 = PlanKey { spec: 1, shard: 0, version: 5 };
+        c.insert_shard(k1, dummy_hag(3));
+        assert!(!c.contains_shard(&k0));
+        assert!(c.contains_shard(&k1));
+        assert_eq!(c.len(), 1);
+        // a different shard coexists
+        let other = PlanKey { spec: 1, shard: 1, version: 5 };
+        c.insert_shard(other, dummy_hag(4));
+        assert_eq!(c.len(), 2);
+        let s = c.stats();
+        assert_eq!(s.shard_hits, 1);
+        assert_eq!(s.shard_misses, 1);
+    }
+
+    #[test]
+    fn different_specs_do_not_collide() {
+        let mut c = PlanCache::new();
+        let a = PlanKey { spec: 1, shard: 0, version: 0 };
+        let b = PlanKey { spec: 2, shard: 0, version: 0 };
+        c.insert_shard(a, dummy_hag(3));
+        c.insert_shard(b, dummy_hag(3));
+        assert_eq!(c.len(), 2, "spec is part of the key");
+    }
+
+    #[test]
+    fn plan_tier_memoizes_one_version() {
+        let mut c = PlanCache::new();
+        assert!(c.plan_at(1, 0).is_none());
+        let plan = Arc::new(crate::hag::build_plan(
+            &crate::graph::Graph::from_edges(2, &[(0, 1)]),
+            &dummy_hag(2).as_ref().clone(),
+            &crate::hag::PlanConfig::default()));
+        c.insert_plan(1, 0, dummy_hag(2), plan.clone());
+        assert!(c.plan_at(1, 0).is_some());
+        assert!(c.plan_at(1, 1).is_none(), "version mismatch");
+        assert!(c.plan_at(2, 0).is_none(), "spec mismatch");
+        let s = c.stats();
+        assert_eq!(s.plan_hits, 1);
+        assert_eq!(s.plan_misses, 3);
+    }
+}

@@ -1,0 +1,652 @@
+//! Unified lowering sessions: one owning object for
+//! graph + partition + per-shard HAGs + plans.
+//!
+//! The paper's pipeline is search → plan → execute (Algorithm 3 + §4);
+//! the old entry points re-ran the whole pipeline from scratch at
+//! every lowering. A [`Session`] instead *owns* the moving parts:
+//!
+//! * the current topology (a copy-on-write [`OverlayGraph`] fed by
+//!   [`GraphDelta`]s through [`Session::apply`]);
+//! * the node [`Partition`] (BFS shards, maintained incrementally as
+//!   nodes are added);
+//! * pinned per-shard `|V_A|` budgets (split once at creation, so a
+//!   clean shard's cached search can never be invalidated by another
+//!   shard's growth);
+//! * a two-tier [`PlanCache`] keyed by the
+//!   [`LowerSpec::fingerprint`] — searched per-shard HAGs at
+//!   `(spec, shard, topology version)` plus the last stitched plan.
+//!
+//! Deltas mark shards dirty through `Partition::shard_of`:
+//! an intra-shard edge update bumps that shard's version, a node
+//! addition bumps its assigned shard, and a cross-shard edge bumps
+//! only the global version (cross edges live in the stitch, not in
+//! any shard's subgraph). [`Session::plan`] then re-searches *only*
+//! the dirty shards — in parallel, with the same worker pool shape as
+//! [`search_partitioned`](crate::partition::search_partitioned) —
+//! splices the cached clean shards back in with
+//! [`stitch_hags`], and compiles the plan. This replaces the
+//! whole-graph replan the old `coordinator::lower_dataset` paid on
+//! every call (ROADMAP items 1 and 3).
+//!
+//! Correctness contract (asserted by `rust/tests/session.rs`): after
+//! any applied delta sequence, the cached dirty-shard-only
+//! [`Session::plan`] is **identical** — level/band structure and
+//! every index tensor — to [`Session::plan_fresh`], which re-searches
+//! every shard from scratch on the current graph. This holds because
+//! a clean shard's subgraph is unchanged by construction (all
+//! intra-shard mutations dirty it), budgets are pinned, and
+//! `hag_search` / `build_plan` are deterministic.
+
+pub mod cache;
+pub mod spec;
+
+pub use cache::{CacheStats, PlanCache, PlanKey};
+pub use spec::LowerSpec;
+
+use std::hash::Hasher;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{self, Lowered, Repr};
+use crate::datasets::{Dataset, Task};
+use crate::graph::Graph;
+use crate::hag::{build_plan, hag_search, ExecutionPlan, Hag,
+                 SearchConfig};
+use crate::incremental::{GraphDelta, OverlayGraph};
+use crate::partition::{partition_bfs, split_capacity_by_edges,
+                       stitch_hags, subgraph, worker_parallelism,
+                       Partition, PartitionConfig};
+use crate::runtime::BucketSpec;
+use crate::util::fxhash::FxHasher;
+
+/// What a session needs from a [`Dataset`] beyond the graph (bucket
+/// naming and padding); graph-only sessions
+/// ([`Session::from_graph`]) have none and cannot [`Session::lower`].
+#[derive(Debug, Clone)]
+struct DatasetMeta {
+    name: String,
+    f_in: usize,
+    classes: usize,
+    task: Task,
+    num_graphs: usize,
+}
+
+/// Lifetime counters for one session.
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    /// Deltas that changed the graph.
+    pub deltas: usize,
+    /// Deltas that were no-ops (duplicate insert, missing delete,
+    /// out-of-range ids).
+    pub noops: usize,
+    /// Applied edge deltas whose endpoints live in different shards
+    /// (no shard re-search needed — only the stitch changes).
+    pub cross_shard_deltas: usize,
+    /// [`Session::plan`] calls.
+    pub plans: usize,
+    /// Plans served entirely from the memoized plan tier.
+    pub plan_cache_hits: usize,
+    /// Per-shard searches actually run (the re-plan count the stream
+    /// CLI reports; compare against `deltas`).
+    pub shard_searches: usize,
+    /// Per-shard searches avoided by the cache.
+    pub shard_cache_hits: usize,
+}
+
+/// A lowering session: owns the graph, the partition, the per-shard
+/// HAGs and the plan cache for one [`LowerSpec`].
+pub struct Session {
+    spec: LowerSpec,
+    /// Spec fingerprint mixed with the base graph (and dataset name)
+    /// fingerprint — the `spec` component of every [`PlanKey`].
+    fp: u64,
+    meta: Option<DatasetMeta>,
+    graph: OverlayGraph,
+    part: Partition,
+    /// Pinned per-shard capacity budgets (creation-time split).
+    budgets: Vec<usize>,
+    /// Per shard: sequence number of the last dirtying delta.
+    shard_version: Vec<u64>,
+    /// Global topology version (== applied-delta count).
+    version: u64,
+    cache: PlanCache,
+    stats: SessionStats,
+}
+
+impl Session {
+    /// Session over a dataset (the usual entry: can emit buckets and
+    /// [`Lowered`] workloads).
+    pub fn new(ds: &Dataset, spec: LowerSpec) -> Session {
+        let mut s = Session::from_graph(&ds.graph, spec);
+        let mut h = FxHasher::default();
+        h.write_u64(s.fp);
+        h.write(ds.name.as_bytes());
+        s.fp = h.finish();
+        s.meta = Some(DatasetMeta {
+            name: ds.name.clone(),
+            f_in: ds.f_in,
+            classes: ds.classes,
+            task: ds.task,
+            num_graphs: ds.num_graphs,
+        });
+        s
+    }
+
+    /// Graph-only session (tests, streaming drivers, library callers
+    /// that pack their own workloads).
+    pub fn from_graph(g: &Graph, spec: LowerSpec) -> Session {
+        let n = g.n();
+        let k = spec.effective_shards();
+        let part = if k <= 1 {
+            Partition::single(n)
+        } else {
+            partition_bfs(g, &PartitionConfig::new(k)
+                .with_seed(spec.partition_seed))
+        };
+        let capacity = spec.resolved_capacity(n);
+        let budgets = if spec.repr == Repr::GnnGraph {
+            Vec::new()
+        } else if part.n_shards <= 1 {
+            vec![capacity]
+        } else {
+            // One O(n + e) counting pass — the split only needs
+            // intra-edge counts, not materialized subgraphs (those
+            // are extracted lazily, per dirty shard, at plan time).
+            let mut intra = vec![0usize; part.n_shards];
+            for (v, ns) in g.iter() {
+                let sv = part.shard_of[v as usize];
+                for &u in ns {
+                    if part.shard_of[u as usize] == sv {
+                        intra[sv as usize] += 1;
+                    }
+                }
+            }
+            split_capacity_by_edges(capacity, &intra)
+        };
+        let mut h = FxHasher::default();
+        h.write_u64(spec.fingerprint());
+        h.write_u64(n as u64);
+        for (_, ns) in g.iter() {
+            h.write_u64(ns.len() as u64);
+            for &u in ns {
+                h.write_u32(u);
+            }
+        }
+        let shard_version = vec![0u64; part.n_shards];
+        Session {
+            spec,
+            fp: h.finish(),
+            meta: None,
+            graph: OverlayGraph::new(g.clone()),
+            part,
+            budgets,
+            shard_version,
+            version: 0,
+            cache: PlanCache::new(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn spec(&self) -> &LowerSpec {
+        &self.spec
+    }
+
+    /// The cache-key fingerprint (spec ⊕ base graph ⊕ dataset name).
+    pub fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    pub fn e(&self) -> usize {
+        self.graph.e()
+    }
+
+    /// Global topology version (applied-delta count).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Shard of a node (nodes added through [`Session::apply`]
+    /// included).
+    pub fn shard_of(&self, v: u32) -> u32 {
+        self.part.shard_of[v as usize]
+    }
+
+    /// Materialize the current topology as a CSR graph.
+    pub fn graph(&self) -> Graph {
+        self.graph.to_graph()
+    }
+
+    fn key(&self, shard: usize) -> PlanKey {
+        PlanKey {
+            spec: self.fp,
+            shard: shard as u32,
+            version: self.shard_version[shard],
+        }
+    }
+
+    /// Shards whose cached search is stale (would re-search on the
+    /// next [`Session::plan`]). Always 0 for the GNN-graph baseline
+    /// (nothing is searched).
+    pub fn dirty_shards(&self) -> usize {
+        if self.spec.repr == Repr::GnnGraph {
+            return 0;
+        }
+        (0..self.part.n_shards)
+            .filter(|&s| !self.cache.contains_shard(&self.key(s)))
+            .count()
+    }
+
+    /// Apply one topology delta, marking the touched shard dirty.
+    /// Returns `false` for no-ops (duplicate insert, missing delete,
+    /// out-of-range ids — same semantics as the stream engine, so an
+    /// engine and a session fed the same delta stream stay in
+    /// lockstep).
+    pub fn apply(&mut self, delta: GraphDelta) -> bool {
+        let n = self.graph.n();
+        let changed = match delta {
+            GraphDelta::EdgeInsert { src, dst } => {
+                if (src as usize) >= n || (dst as usize) >= n
+                    || !self.graph.insert_edge(src, dst)
+                {
+                    false
+                } else {
+                    self.version += 1;
+                    self.touch_edge(src, dst);
+                    true
+                }
+            }
+            GraphDelta::EdgeDelete { src, dst } => {
+                if (src as usize) >= n || (dst as usize) >= n
+                    || !self.graph.delete_edge(src, dst)
+                {
+                    false
+                } else {
+                    self.version += 1;
+                    self.touch_edge(src, dst);
+                    true
+                }
+            }
+            GraphDelta::NodeAdd => {
+                self.graph.add_node();
+                self.version += 1;
+                let s = self.part.lightest_shard();
+                self.part.push_node(s);
+                self.shard_version[s] = self.version;
+                true
+            }
+        };
+        if changed {
+            self.stats.deltas += 1;
+        } else {
+            self.stats.noops += 1;
+        }
+        changed
+    }
+
+    fn touch_edge(&mut self, src: u32, dst: u32) {
+        let a = self.part.shard_of[src as usize] as usize;
+        let b = self.part.shard_of[dst as usize] as usize;
+        if a == b {
+            self.shard_version[a] = self.version;
+        } else {
+            // Cross-shard edges never enter a shard subgraph — they
+            // are appended directly at stitch time from the current
+            // graph — so neither shard's cached search goes stale.
+            self.stats.cross_shard_deltas += 1;
+        }
+    }
+
+    fn shard_config(&self, shard: usize) -> SearchConfig {
+        SearchConfig {
+            capacity: self.budgets[shard],
+            kind: self.spec.kind,
+            pair_cap: self.spec.pair_cap,
+        }
+    }
+
+    /// Build the maintained HAG over `g` (the current graph),
+    /// re-searching only cache misses when `use_cache` holds. With
+    /// `use_cache == false` nothing is read from or written to the
+    /// cache and no stats move (the from-scratch comparator).
+    fn build_hag(&mut self, g: &Graph, use_cache: bool) -> Arc<Hag> {
+        if self.spec.repr == Repr::GnnGraph {
+            return Arc::new(Hag::from_graph(g, self.spec.kind));
+        }
+        let k = self.part.n_shards;
+        if k <= 1 {
+            let key = self.key(0);
+            if use_cache {
+                if let Some(h) = self.cache.shard_hag(key) {
+                    self.stats.shard_cache_hits += 1;
+                    return h;
+                }
+            }
+            let (hag, _) = hag_search(g, &self.shard_config(0));
+            let hag = Arc::new(hag);
+            if use_cache {
+                self.stats.shard_searches += 1;
+                self.cache.insert_shard(key, hag.clone());
+            }
+            return hag;
+        }
+
+        let mut locals: Vec<Option<Arc<Hag>>> = vec![None; k];
+        let mut misses: Vec<usize> = Vec::new();
+        for s in 0..k {
+            if use_cache {
+                let key = self.key(s);
+                if let Some(h) = self.cache.shard_hag(key) {
+                    self.stats.shard_cache_hits += 1;
+                    locals[s] = Some(h);
+                    continue;
+                }
+            }
+            misses.push(s);
+        }
+
+        if !misses.is_empty() {
+            let local = self.part.local_ids();
+            let subs: Vec<Graph> = misses.iter()
+                .map(|&s| subgraph(g, &self.part, &local, s))
+                .collect();
+            let cfgs: Vec<SearchConfig> = misses.iter()
+                .map(|&s| self.shard_config(s))
+                .collect();
+            let m = misses.len();
+            let results: Vec<Mutex<Option<Hag>>> =
+                (0..m).map(|_| Mutex::new(None)).collect();
+            let threads = m.min(worker_parallelism()).max(1);
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|sc| {
+                for _ in 0..threads {
+                    sc.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= m {
+                            break;
+                        }
+                        let (h, _) = hag_search(&subs[i], &cfgs[i]);
+                        *results[i].lock().unwrap() = Some(h);
+                    });
+                }
+            });
+            for (i, cell) in results.into_iter().enumerate() {
+                let hag = Arc::new(cell.into_inner().unwrap()
+                    .expect("worker completed every miss"));
+                let s = misses[i];
+                if use_cache {
+                    self.stats.shard_searches += 1;
+                    let key = self.key(s);
+                    self.cache.insert_shard(key, hag.clone());
+                }
+                locals[s] = Some(hag);
+            }
+        }
+
+        let locals: Vec<Arc<Hag>> = locals.into_iter()
+            .map(|h| h.expect("every shard resolved"))
+            .collect();
+        Arc::new(stitch_hags(g, &self.part, &locals))
+    }
+
+    /// The maintained plan: re-searches dirty shards only, splices
+    /// cached clean shards, compiles the plan. Idempotent between
+    /// deltas (plan-tier memo).
+    pub fn plan(&mut self) -> (Arc<Hag>, Arc<ExecutionPlan>) {
+        self.stats.plans += 1;
+        if let Some(hit) = self.cache.plan_at(self.fp, self.version) {
+            self.stats.plan_cache_hits += 1;
+            return hit;
+        }
+        let g = self.graph.to_graph();
+        let hag = self.build_hag(&g, true);
+        let plan = Arc::new(build_plan(&g, &hag, &self.spec.plan));
+        self.cache.insert_plan(self.fp, self.version, hag.clone(),
+                               plan.clone());
+        (hag, plan)
+    }
+
+    /// From-scratch comparator: re-search **every** shard on the
+    /// current graph, bypassing the cache entirely. The correctness
+    /// contract is `plan() == plan_fresh()` after any delta sequence
+    /// (`rust/tests/session.rs`; `repro stream` re-checks it at the
+    /// end of every run).
+    pub fn plan_fresh(&mut self) -> (Hag, ExecutionPlan) {
+        let g = self.graph.to_graph();
+        let hag = self.build_hag(&g, false);
+        let plan = build_plan(&g, &hag, &self.spec.plan);
+        ((*hag).clone(), plan)
+    }
+
+    /// The maintained HAG alone (same cache path as
+    /// [`Session::plan`]).
+    pub fn hag(&mut self) -> Arc<Hag> {
+        self.plan().0
+    }
+
+    /// Lower into a full workload descriptor (HAG + plan + bucket).
+    /// Requires dataset metadata ([`Session::new`]); the bucket
+    /// carries the spec's capacity end-to-end, so the emitted bucket
+    /// and any later train/infer plan from the same spec can never
+    /// disagree.
+    pub fn lower(&mut self) -> Result<Lowered> {
+        let meta = self.meta.clone().ok_or_else(|| {
+            anyhow!("session was built from a bare graph; use \
+                     Session::new(&dataset, spec) to lower buckets")
+        })?;
+        let (hag, plan) = self.plan();
+        let bucket = coordinator::bucket_for_parts(
+            &meta.name, meta.f_in, meta.classes, meta.task,
+            meta.num_graphs, &plan, self.spec.repr);
+        Ok(Lowered {
+            repr: self.spec.repr,
+            hag: (*hag).clone(),
+            plan: (*plan).clone(),
+            bucket,
+        })
+    }
+}
+
+/// Emit `artifacts/buckets.json` for a set of datasets (both
+/// representations each) — phase 1 of the two-phase AOT build. Every
+/// knob, including capacity, comes from `spec`, so the buckets written
+/// here are exactly the buckets a later `Session` with the same spec
+/// trains or serves against.
+pub fn emit_buckets(datasets: &[Dataset], spec: &LowerSpec,
+                    out: &Path) -> Result<Vec<BucketSpec>> {
+    let mut buckets = Vec::new();
+    for ds in datasets {
+        for repr in [Repr::GnnGraph, Repr::Hag] {
+            let mut session =
+                Session::new(ds, spec.clone().with_repr(repr));
+            buckets.push(session.lower()?.bucket);
+        }
+    }
+    coordinator::write_buckets_json(&buckets, out)?;
+    Ok(buckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::check_equivalence;
+    use crate::partition::search_partitioned;
+    use crate::partition::test_graphs::clique_ring;
+
+    #[test]
+    fn single_shard_matches_direct_pipeline() {
+        let g = clique_ring(4, 5);
+        let mut s = Session::from_graph(&g, LowerSpec::default());
+        let (hag, plan) = s.plan();
+        let cfg = LowerSpec::default().search_config(g.n());
+        let (want, _) = hag_search(&g, &cfg);
+        assert_eq!(*hag, want);
+        let want_plan = build_plan(&g, &want,
+                                   &crate::hag::PlanConfig::default());
+        assert_eq!(*plan, want_plan);
+    }
+
+    #[test]
+    fn sharded_session_matches_search_partitioned() {
+        let g = clique_ring(8, 6);
+        let spec = LowerSpec::default().with_shards(4);
+        let mut s = Session::from_graph(&g, spec.clone());
+        let (hag, _) = s.plan();
+        let part = partition_bfs(&g, &PartitionConfig::new(4)
+            .with_seed(spec.partition_seed));
+        let (want, _) = search_partitioned(
+            &g, &part, &spec.search_config(g.n()));
+        assert_eq!(*hag, want,
+                   "session must reproduce the partitioned driver");
+        check_equivalence(&g, &hag).unwrap();
+    }
+
+    #[test]
+    fn plan_is_memoized_between_deltas() {
+        let g = clique_ring(3, 5);
+        let mut s = Session::from_graph(&g, LowerSpec::default());
+        let (h1, p1) = s.plan();
+        let (h2, p2) = s.plan();
+        assert!(Arc::ptr_eq(&h1, &h2) && Arc::ptr_eq(&p1, &p2));
+        assert_eq!(s.stats().plan_cache_hits, 1);
+        // a delta invalidates the memo
+        assert!(s.apply(GraphDelta::EdgeInsert { src: 0, dst: 7 }));
+        let (h3, _) = s.plan();
+        assert!(!Arc::ptr_eq(&h1, &h3));
+        assert_eq!(s.stats().plan_cache_hits, 1);
+    }
+
+    #[test]
+    fn dirty_shard_only_replan() {
+        let g = clique_ring(8, 6);
+        let spec = LowerSpec::default().with_shards(4);
+        let mut s = Session::from_graph(&g, spec);
+        s.plan();
+        assert_eq!(s.stats().shard_searches, 4);
+        assert_eq!(s.dirty_shards(), 0);
+        // an intra-shard delta: delete an edge inside node 0's shard
+        let shard0 = s.shard_of(0);
+        let mates: Vec<u32> = (0..g.n() as u32)
+            .filter(|&v| v != 0 && s.shard_of(v) == shard0)
+            .collect();
+        let u = *mates.iter()
+            .find(|&&u| g.neighbors(0).contains(&u))
+            .expect("clique mate in shard");
+        assert!(s.apply(GraphDelta::EdgeDelete { src: u, dst: 0 }));
+        assert_eq!(s.dirty_shards(), 1);
+        let (hag, plan) = s.plan();
+        assert_eq!(s.stats().shard_searches, 5,
+                   "exactly one shard re-searched");
+        assert_eq!(s.stats().shard_cache_hits, 3);
+        // identical to the from-scratch pipeline
+        let (fhag, fplan) = s.plan_fresh();
+        assert_eq!(*hag, fhag);
+        assert_eq!(*plan, fplan);
+        check_equivalence(&s.graph(), &hag).unwrap();
+    }
+
+    #[test]
+    fn cross_shard_delta_skips_every_search() {
+        let g = clique_ring(8, 6);
+        let spec = LowerSpec::default().with_shards(4);
+        let mut s = Session::from_graph(&g, spec);
+        s.plan();
+        let base = s.stats().shard_searches;
+        // find two nodes in different shards with no edge between them
+        let (mut a, mut b) = (0u32, 0u32);
+        'outer: for u in 0..g.n() as u32 {
+            for v in 0..g.n() as u32 {
+                if s.shard_of(u) != s.shard_of(v)
+                    && !g.neighbors(v).contains(&u)
+                {
+                    a = u;
+                    b = v;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(s.apply(GraphDelta::EdgeInsert { src: a, dst: b }));
+        assert_eq!(s.stats().cross_shard_deltas, 1);
+        assert_eq!(s.dirty_shards(), 0);
+        let (hag, plan) = s.plan();
+        assert_eq!(s.stats().shard_searches, base,
+                   "cross-shard edges only re-stitch");
+        // ... but the edge is in the plan (direct aggregation)
+        assert!(hag.in_edges[b as usize].contains(&a));
+        let (fhag, fplan) = s.plan_fresh();
+        assert_eq!(*hag, fhag);
+        assert_eq!(*plan, fplan);
+    }
+
+    #[test]
+    fn node_add_dirties_exactly_one_shard() {
+        let g = clique_ring(8, 6);
+        let spec = LowerSpec::default().with_shards(4);
+        let mut s = Session::from_graph(&g, spec);
+        s.plan();
+        assert!(s.apply(GraphDelta::NodeAdd));
+        let v = (s.n() - 1) as u32;
+        let shard = s.shard_of(v);
+        assert_eq!(s.dirty_shards(), 1);
+        // wire it in and re-plan
+        assert!(s.apply(GraphDelta::EdgeInsert { src: 0, dst: v }));
+        let (hag, plan) = s.plan();
+        assert_eq!(hag.n, s.n());
+        assert!(hag.in_edges[v as usize].contains(&0));
+        let (fhag, fplan) = s.plan_fresh();
+        assert_eq!(*hag, fhag);
+        assert_eq!(*plan, fplan);
+        assert!(shard < 4);
+    }
+
+    #[test]
+    fn noop_deltas_do_not_invalidate() {
+        let g = clique_ring(3, 5);
+        let mut s = Session::from_graph(&g, LowerSpec::default());
+        let (_, p1) = s.plan();
+        // duplicate insert / missing delete / out-of-range
+        let u = g.neighbors(0)[0];
+        assert!(!s.apply(GraphDelta::EdgeInsert { src: u, dst: 0 }));
+        assert!(!s.apply(GraphDelta::EdgeDelete { src: 0, dst: 0 }));
+        assert!(!s.apply(GraphDelta::EdgeInsert { src: 999, dst: 0 }));
+        assert_eq!(s.stats().noops, 3);
+        let (_, p2) = s.plan();
+        assert!(Arc::ptr_eq(&p1, &p2), "no-ops keep the memo");
+    }
+
+    #[test]
+    fn gnn_baseline_tracks_the_graph() {
+        let g = clique_ring(3, 4);
+        let spec = LowerSpec::default().with_repr(Repr::GnnGraph);
+        let mut s = Session::from_graph(&g, spec);
+        let (h1, p1) = s.plan();
+        assert_eq!(h1.agg_nodes.len(), 0);
+        assert_eq!(p1.levels, 0);
+        assert!(s.apply(GraphDelta::NodeAdd));
+        let v = (s.n() - 1) as u32;
+        assert!(s.apply(GraphDelta::EdgeInsert { src: 1, dst: v }));
+        let (h2, _) = s.plan();
+        assert_eq!(h2.n, g.n() + 1);
+        assert!(h2.in_edges[v as usize].contains(&1));
+        assert_eq!(s.stats().shard_searches, 0,
+                   "baseline never searches");
+    }
+}

@@ -1,0 +1,273 @@
+//! `LowerSpec` — the one canonical description of a lowering.
+//!
+//! The old entry points (`coordinator::lower_dataset`,
+//! `coordinator::emit_buckets`) grew by positional accretion: five
+//! knobs threaded through every call site, with `emit_buckets` pinning
+//! `capacity = None` so the emitted bucket could silently disagree
+//! with the plan a later train/infer run lowered. `LowerSpec` replaces
+//! the knob thread: every parameter that influences the lowered
+//! artifact — representation, AGGREGATE kind, capacity, sharding,
+//! partition seed, plan layout, drift policy — lives in one struct
+//! with builder setters, and a **deterministic fingerprint** over all
+//! of them keys the per-shard plan cache
+//! ([`PlanCache`](super::PlanCache)).
+//!
+//! Fingerprint contract: two specs hash equal iff every
+//! lowering-relevant field is equal. The hash is the in-tree
+//! [`FxHasher`](crate::util::fxhash::FxHasher) recurrence — fixed
+//! seed, no per-process randomization — so fingerprints are stable
+//! across runs and hosts (they may appear in logs and cache keys, but
+//! are never persisted as a compatibility surface).
+
+use std::hash::Hasher;
+
+use crate::coordinator::Repr;
+use crate::hag::{AggregateKind, PlanConfig, SearchConfig};
+use crate::incremental::{DriftPolicy, StreamConfig};
+use crate::partition::DEFAULT_PARTITION_SEED;
+use crate::util::fxhash::FxHasher;
+
+/// Canonical lowering spec: dataset-independent knobs. Resolved
+/// against a concrete graph by [`Session::new`](super::Session::new)
+/// (capacity defaults are per-`|V|`).
+#[derive(Debug, Clone)]
+pub struct LowerSpec {
+    /// Representation to lower under (paper's central comparison).
+    pub repr: Repr,
+    /// Set or sequential AGGREGATE. Sequential does not shard (the
+    /// session falls back to one whole-graph shard).
+    pub kind: AggregateKind,
+    /// Explicit `|V_A|` budget. `None` resolves to
+    /// `capacity_frac * |V|` at session creation.
+    pub capacity: Option<usize>,
+    /// Capacity as a fraction of `|V|` when `capacity` is `None`
+    /// (paper §5.2 default 0.25 — identical to the old
+    /// `capacity.unwrap_or(n / 4)`).
+    pub capacity_frac: f64,
+    /// Shard count; `1` = single-threaded whole-graph search, `>= 2`
+    /// routes through the partitioned per-shard pipeline. Values of 0
+    /// are clamped to 1 (library callers may compute shard counts).
+    pub shards: usize,
+    /// Seed for the BFS partitioner's shard-seed selection.
+    pub partition_seed: u64,
+    /// Per-consumer candidate-pair window
+    /// (see [`SearchConfig::pair_cap`]).
+    pub pair_cap: usize,
+    /// Plan-compiler layout knobs (must match the compiled bucket).
+    pub plan: PlanConfig,
+    /// Drift policy for streaming sessions (carried here so the
+    /// serving and stream paths derive their re-search behavior from
+    /// the same spec that lowered the plan).
+    pub drift: DriftPolicy,
+}
+
+impl Default for LowerSpec {
+    fn default() -> Self {
+        LowerSpec {
+            repr: Repr::Hag,
+            kind: AggregateKind::Set,
+            capacity: None,
+            capacity_frac: 0.25,
+            shards: 1,
+            partition_seed: DEFAULT_PARTITION_SEED,
+            pair_cap: 64,
+            plan: PlanConfig::default(),
+            drift: DriftPolicy::default(),
+        }
+    }
+}
+
+impl LowerSpec {
+    pub fn with_repr(mut self, repr: Repr) -> Self {
+        self.repr = repr;
+        self
+    }
+
+    pub fn with_kind(mut self, kind: AggregateKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Pin an explicit `|V_A|` budget (overrides `capacity_frac`).
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    pub fn with_capacity_frac(mut self, frac: f64) -> Self {
+        self.capacity_frac = frac;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    pub fn with_partition_seed(mut self, seed: u64) -> Self {
+        self.partition_seed = seed;
+        self
+    }
+
+    pub fn with_pair_cap(mut self, pair_cap: usize) -> Self {
+        self.pair_cap = pair_cap;
+        self
+    }
+
+    pub fn with_plan(mut self, plan: PlanConfig) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    pub fn with_drift(mut self, drift: DriftPolicy) -> Self {
+        self.drift = drift;
+        self
+    }
+
+    /// The `|V_A|` budget this spec grants a graph of `n` nodes.
+    pub fn resolved_capacity(&self, n: usize) -> usize {
+        match self.capacity {
+            Some(c) => c,
+            // n * 0.25 is exact in f64, so this floors to n / 4 —
+            // bit-compatible with the pre-Session default.
+            None => (n as f64 * self.capacity_frac) as usize,
+        }
+    }
+
+    /// The [`SearchConfig`] this spec lowers a graph of `n` nodes
+    /// under (per-shard budgets are split from this capacity).
+    pub fn search_config(&self, n: usize) -> SearchConfig {
+        SearchConfig {
+            capacity: self.resolved_capacity(n),
+            kind: self.kind,
+            pair_cap: self.pair_cap,
+        }
+    }
+
+    /// Shards the session actually runs: sequential AGGREGATE and the
+    /// GNN-graph baseline do not shard.
+    pub fn effective_shards(&self) -> usize {
+        if self.repr == Repr::GnnGraph
+            || self.kind == AggregateKind::Sequential
+        {
+            1
+        } else {
+            self.shards.max(1)
+        }
+    }
+
+    /// Derive the streaming-maintenance config from this spec, so the
+    /// engine repairing the graph and the session planning it agree on
+    /// capacity fraction, pair window, sharding and drift policy.
+    /// (An explicit `capacity` does not propagate — the engine's
+    /// budget tracks the *current* `|V|` by design.)
+    pub fn stream_config(&self) -> StreamConfig {
+        let mut cfg = StreamConfig::default();
+        cfg.capacity_frac = self.capacity_frac;
+        cfg.pair_cap = self.pair_cap;
+        cfg.shards = self.effective_shards();
+        cfg.policy = self.drift.clone();
+        cfg
+    }
+
+    /// Deterministic fingerprint over every lowering-relevant field.
+    /// Stable across runs (fixed-seed FxHash, fixed field order).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FxHasher::default();
+        h.write_u64(match self.repr {
+            Repr::GnnGraph => 0,
+            Repr::Hag => 1,
+        });
+        h.write_u64(match self.kind {
+            AggregateKind::Set => 0,
+            AggregateKind::Sequential => 1,
+        });
+        match self.capacity {
+            None => h.write_u64(0),
+            Some(c) => {
+                h.write_u64(1);
+                h.write_u64(c as u64);
+            }
+        }
+        h.write_u64(self.capacity_frac.to_bits());
+        h.write_u64(self.shards.max(1) as u64);
+        h.write_u64(self.partition_seed);
+        h.write_u64(self.pair_cap as u64);
+        h.write_u64(self.plan.br as u64);
+        h.write_u64(self.plan.lvl_block as u64);
+        h.write_u64(self.plan.max_bands as u64);
+        h.write_u64(self.plan.nnzb_round as u64);
+        h.write_u64(self.drift.fingerprint());
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_pre_session_defaults() {
+        let s = LowerSpec::default();
+        assert_eq!(s.resolved_capacity(1001), 1001 / 4);
+        assert_eq!(s.resolved_capacity(7), 1);
+        let sc = s.search_config(400);
+        assert_eq!(sc.capacity, 100);
+        assert_eq!(sc.pair_cap, 64);
+        assert_eq!(sc.kind, AggregateKind::Set);
+    }
+
+    #[test]
+    fn explicit_capacity_wins() {
+        let s = LowerSpec::default().with_capacity(7);
+        assert_eq!(s.resolved_capacity(10_000), 7);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_field_sensitive() {
+        let a = LowerSpec::default();
+        let b = LowerSpec::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_repr(Repr::GnnGraph).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_capacity(100).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_shards(4).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_partition_seed(1).fingerprint());
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_pair_cap(32).fingerprint());
+        let mut plan = PlanConfig::default();
+        plan.max_bands = 2;
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_plan(plan).fingerprint());
+        let drift = DriftPolicy::default().with_threshold(0.5);
+        assert_ne!(a.fingerprint(),
+                   a.clone().with_drift(drift).fingerprint());
+    }
+
+    #[test]
+    fn sequential_and_gnn_do_not_shard() {
+        let s = LowerSpec::default().with_shards(4);
+        assert_eq!(s.effective_shards(), 4);
+        assert_eq!(s.clone().with_kind(AggregateKind::Sequential)
+                       .effective_shards(), 1);
+        assert_eq!(s.clone().with_repr(Repr::GnnGraph)
+                       .effective_shards(), 1);
+        assert_eq!(LowerSpec::default().with_shards(0)
+                       .effective_shards(), 1);
+    }
+
+    #[test]
+    fn stream_config_tracks_spec() {
+        let s = LowerSpec::default()
+            .with_shards(4)
+            .with_capacity_frac(0.5)
+            .with_drift(DriftPolicy::default().with_threshold(0.2));
+        let c = s.stream_config();
+        assert_eq!(c.shards, 4);
+        assert!((c.capacity_frac - 0.5).abs() < 1e-12);
+        assert!((c.policy.threshold - 0.2).abs() < 1e-12);
+    }
+}

@@ -98,34 +98,66 @@ impl Args {
     }
 }
 
-/// Shared partition flags (`search`, `partition-stats`):
-/// * `--shards N` — route HAG search through the partitioned parallel
-///   driver ([`crate::partition::search_sharded`]); `N >= 2` shards,
-///   `1` (or absent) keeps the single-threaded whole-graph search;
-/// * `--partition-seed S` — seed for the BFS partitioner's shard-seed
-///   selection (defaults to
-///   [`crate::partition::DEFAULT_PARTITION_SEED`]).
+/// The one spec-flag parser every lowering subcommand shares
+/// (`search`, `emit-buckets`, `train`, `infer`, `serve`, `stream`,
+/// `stream-stats`, `partition-stats`), so
+/// `--capacity` / `--shards` / `--partition-seed` and friends are
+/// accepted uniformly instead of per-subcommand:
 ///
-/// Subcommands that only lower through the coordinator (`train`,
-/// `infer`, `serve`, `emit-buckets`) take `--shards` alone: their
-/// sharded path pins the default partition seed so bucket shapes stay
-/// reproducible across runs.
-pub fn partition_opts(args: &Args) -> Result<(Option<usize>, u64)> {
-    let shards = shards_opt(args)?;
-    let seed = args.get_or("partition-seed",
-                           crate::partition::DEFAULT_PARTITION_SEED)?;
-    Ok((shards, seed))
+/// * `--repr gnn|hag` — representation                       \[hag\]
+/// * `--kind set|seq` — AGGREGATE class                      \[set\]
+/// * `--capacity N` — explicit `|V_A|` budget (overrides the
+///   fraction; carried through buckets end-to-end)
+/// * `--capacity-frac F` — budget as a fraction of `|V|`     \[0.25\]
+/// * `--shards N` — partitioned parallel search; `N >= 2` shards, `1`
+///   (or absent) is the whole-graph search; `0` is a loud error
+/// * `--partition-seed S` — BFS partitioner seed (defaults to
+///   [`crate::partition::DEFAULT_PARTITION_SEED`], so bucket shapes
+///   stay reproducible across runs)
+/// * `--drift-threshold F` — streaming re-plan trigger       \[0.08\]
+/// * `--background` — background (snapshot + replay) rebuilds
+///
+/// All flags are consumed whether or not the subcommand acts on them,
+/// so moving a flag between subcommands never trips
+/// [`Args::finish`].
+pub struct SpecArgs {
+    pub spec: crate::session::LowerSpec,
 }
 
-/// Just the validated `--shards` flag — the subcommands that lower
-/// through the coordinator (`train`, `infer`, `serve`, `emit-buckets`)
-/// take it without `--partition-seed` (see [`partition_opts`]).
-pub fn shards_opt(args: &Args) -> Result<Option<usize>> {
-    let shards = args.get::<usize>("shards")?;
-    if shards == Some(0) {
-        bail!("--shards must be >= 1");
+impl SpecArgs {
+    pub fn parse(args: &Args) -> Result<SpecArgs> {
+        use crate::coordinator::Repr;
+        use crate::hag::AggregateKind;
+
+        let mut spec = crate::session::LowerSpec::default();
+        spec.repr =
+            match args.get_or::<String>("repr", "hag".into())?.as_str()
+        {
+            "gnn" | "gnn-graph" => Repr::GnnGraph,
+            "hag" => Repr::Hag,
+            other => bail!("--repr must be gnn|hag, got {other:?}"),
+        };
+        spec.kind =
+            match args.get_or::<String>("kind", "set".into())?.as_str()
+        {
+            "set" => AggregateKind::Set,
+            "seq" | "sequential" => AggregateKind::Sequential,
+            other => bail!("--kind must be set|seq, got {other:?}"),
+        };
+        spec.capacity = args.get::<usize>("capacity")?;
+        spec.capacity_frac = args.get_or("capacity-frac", 0.25)?;
+        match args.get::<usize>("shards")? {
+            Some(0) => bail!("--shards must be >= 1"),
+            Some(k) => spec.shards = k,
+            None => {}
+        }
+        spec.partition_seed =
+            args.get_or("partition-seed",
+                        crate::partition::DEFAULT_PARTITION_SEED)?;
+        spec.drift.threshold = args.get_or("drift-threshold", 0.08)?;
+        spec.drift.background = args.flag("background")?;
+        Ok(SpecArgs { spec })
     }
-    Ok(shards)
 }
 
 #[cfg(test)]
@@ -175,28 +207,64 @@ mod tests {
     }
 
     #[test]
-    fn partition_opts_parse_and_default() {
-        let a = parse("search --shards 4 --partition-seed 11");
-        assert_eq!(partition_opts(&a).unwrap(), (Some(4), 11));
-        let b = parse("search");
-        assert_eq!(
-            partition_opts(&b).unwrap(),
-            (None, crate::partition::DEFAULT_PARTITION_SEED));
-        let c = parse("search --shards 0");
-        assert!(partition_opts(&c).is_err());
+    fn spec_args_parse_and_default() {
+        let a = parse("search --shards 4 --partition-seed 11 \
+                       --capacity 500 --repr gnn --kind seq \
+                       --drift-threshold 0.2 --background");
+        let s = SpecArgs::parse(&a).unwrap().spec;
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.partition_seed, 11);
+        assert_eq!(s.capacity, Some(500));
+        assert_eq!(s.repr, crate::coordinator::Repr::GnnGraph);
+        assert_eq!(s.kind, crate::hag::AggregateKind::Sequential);
+        assert!((s.drift.threshold - 0.2).abs() < 1e-12);
+        assert!(s.drift.background);
+        a.finish().unwrap();
+
+        let b = parse("train");
+        let d = SpecArgs::parse(&b).unwrap().spec;
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.partition_seed,
+                   crate::partition::DEFAULT_PARTITION_SEED);
+        assert_eq!(d.capacity, None);
+        assert!((d.capacity_frac - 0.25).abs() < 1e-12);
+        // parsing consumes every spec flag uniformly
+        b.finish().unwrap();
     }
 
     #[test]
-    fn shards_boundary_values() {
+    fn spec_args_shards_boundary_values() {
         // Regression for the `--shards 0` / `--shards 1` boundary:
         // 0 is a loud CLI error, 1 is the explicit single-shard path
         // (the library side additionally clamps 0 to 1 — see
-        // `partition::search_sharded_seeded`).
+        // `partition::search_sharded_seeded` and
+        // `LowerSpec::with_shards`).
         let one = parse("search --shards 1");
-        assert_eq!(shards_opt(&one).unwrap(), Some(1));
+        assert_eq!(SpecArgs::parse(&one).unwrap().spec.shards, 1);
         let zero = parse("train --shards 0");
-        assert!(shards_opt(&zero).is_err());
-        let none = parse("train");
-        assert_eq!(shards_opt(&none).unwrap(), None);
+        assert!(SpecArgs::parse(&zero).is_err());
+    }
+
+    #[test]
+    fn spec_args_reject_bad_enums() {
+        assert!(SpecArgs::parse(&parse("x --repr banana")).is_err());
+        assert!(SpecArgs::parse(&parse("x --kind banana")).is_err());
+    }
+
+    #[test]
+    fn spec_flags_accepted_on_every_subcommand() {
+        // The historical foot-gun: `--partition-seed` on `train` (or
+        // `--capacity` on `emit-buckets`) was an unknown-option error.
+        // SpecArgs consumes the full flag set everywhere.
+        for sub in ["search", "emit-buckets", "train", "infer",
+                    "serve", "stream", "stream-stats",
+                    "partition-stats"] {
+            let a = parse(&format!(
+                "{sub} --capacity 9 --shards 2 --partition-seed 3"));
+            let s = SpecArgs::parse(&a).unwrap().spec;
+            assert_eq!((s.capacity, s.shards, s.partition_seed),
+                       (Some(9), 2, 3), "{sub}");
+            a.finish().unwrap();
+        }
     }
 }

@@ -6,10 +6,11 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use repro::coordinator::{self, lower_dataset, pack_workload, Repr};
+use repro::coordinator::{self, pack_workload, Repr};
 use repro::datasets;
-use repro::hag::{check_equivalence, PlanConfig};
+use repro::hag::check_equivalence;
 use repro::runtime::Runtime;
+use repro::session::{LowerSpec, Session};
 
 fn artifacts_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -33,9 +34,8 @@ fn training_trajectories_identical_across_reprs() {
     let ds = datasets::load("BZR", 0.05, 7);
     let mut finals = Vec::new();
     for repr in [Repr::GnnGraph, Repr::Hag] {
-        let lowered =
-            lower_dataset(&ds, repr, None, None, &PlanConfig::default())
-                .unwrap();
+        let lowered = Session::new(&ds, LowerSpec::default()
+            .with_repr(repr)).lower().unwrap();
         check_equivalence(&ds.graph, &lowered.hag).unwrap();
         let name = coordinator::artifact_name("gcn", "train",
                                               &lowered.bucket);
@@ -64,8 +64,7 @@ fn training_converges_on_ppi() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = datasets::load("PPI", 0.05, 7);
     let lowered =
-        lower_dataset(&ds, Repr::Hag, None, None, &PlanConfig::default())
-            .unwrap();
+        Session::new(&ds, LowerSpec::default()).lower().unwrap();
     let name =
         coordinator::artifact_name("gcn", "train", &lowered.bucket);
     if rt.spec(&name).is_err() {
@@ -93,9 +92,8 @@ fn inference_logits_equivalent_across_reprs() {
     let ds = datasets::load("BZR", 0.05, 7);
     let mut outputs: Vec<Vec<f32>> = Vec::new();
     for repr in [Repr::GnnGraph, Repr::Hag] {
-        let lowered =
-            lower_dataset(&ds, repr, None, None, &PlanConfig::default())
-                .unwrap();
+        let lowered = Session::new(&ds, LowerSpec::default()
+            .with_repr(repr)).lower().unwrap();
         let name = coordinator::artifact_name("gcn", "infer",
                                               &lowered.bucket);
         if rt.spec(&name).is_err() {
@@ -148,8 +146,7 @@ fn graph_classification_trains() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = datasets::load("IMDB", 0.05, 7);
     let lowered =
-        lower_dataset(&ds, Repr::Hag, None, None, &PlanConfig::default())
-            .unwrap();
+        Session::new(&ds, LowerSpec::default()).lower().unwrap();
     let name =
         coordinator::artifact_name("gcn", "train", &lowered.bucket);
     if rt.spec(&name).is_err() {
@@ -173,8 +170,7 @@ fn serving_path_round_trips() {
     }
     let ds = datasets::load("BZR", 0.05, 7);
     let lowered =
-        lower_dataset(&ds, Repr::Hag, None, None, &PlanConfig::default())
-            .unwrap();
+        Session::new(&ds, LowerSpec::default()).lower().unwrap();
     let name =
         coordinator::artifact_name("gcn", "infer", &lowered.bucket);
     {
@@ -229,10 +225,10 @@ fn wrong_bucket_is_rejected_cleanly() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = datasets::load("BZR", 0.05, 7);
     // lower under HAG but address the GNN artifact: shapes differ
-    let hag = lower_dataset(&ds, Repr::Hag, None, None,
-                            &PlanConfig::default()).unwrap();
-    let gnn = lower_dataset(&ds, Repr::GnnGraph, None, None,
-                            &PlanConfig::default()).unwrap();
+    let hag =
+        Session::new(&ds, LowerSpec::default()).lower().unwrap();
+    let gnn = Session::new(&ds, LowerSpec::default()
+        .with_repr(Repr::GnnGraph)).lower().unwrap();
     let gnn_name =
         coordinator::artifact_name("gcn", "train", &gnn.bucket);
     if rt.spec(&gnn_name).is_err() {

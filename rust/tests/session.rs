@@ -1,0 +1,287 @@
+//! Session-subsystem tests: plan-cache correctness under randomized
+//! delta sequences (ISSUE-3 satellite — cached dirty-shard re-planning
+//! must be *identical* to a from-scratch `build_plan` on the
+//! maintained HAG), the capacity end-to-end round-trip through
+//! `buckets.json`, the golden byte-identity of default-spec buckets
+//! against the primitive search→plan→bucket pipeline (the aot.py
+//! contract), and cache-hit observability under localized streams.
+//!
+//! Same convention as `properties.rs` / `incremental.rs`: cases are
+//! seeded and deterministic; failures print the case they came from.
+
+use repro::coordinator::{bucket_for, write_buckets_json, Repr};
+use repro::datasets::{self, community_graph, CommunityCfg};
+use repro::graph::Graph;
+use repro::hag::{build_plan, check_equivalence, hag_search,
+                 AggregateKind, ExecutionPlan, Hag, PlanConfig,
+                 SearchConfig};
+use repro::incremental::{random_delta, GraphDelta, OverlayGraph};
+use repro::runtime::BucketSpec;
+use repro::session::{emit_buckets, LowerSpec, Session};
+use repro::util::Rng;
+
+fn community(n: usize, e: usize, seed: u64) -> Graph {
+    let cfg = CommunityCfg {
+        n,
+        e,
+        communities: (n / 125).max(4),
+        intra_frac: 0.9,
+        zipf_exp: 0.9,
+        clone_frac: 0.5,
+    };
+    community_graph(&cfg, seed).0
+}
+
+/// `cliques` directed K_`size` blocks joined into a ring — clean shard
+/// structure for cache-hit assertions.
+fn clique_ring(cliques: usize, size: usize) -> Graph {
+    let n = cliques * size;
+    let mut edges = Vec::new();
+    for c in 0..cliques {
+        let b = (c * size) as u32;
+        for i in 0..size as u32 {
+            for j in 0..size as u32 {
+                if i != j {
+                    edges.push((b + i, b + j));
+                }
+            }
+        }
+        let nxt = (((c + 1) % cliques) * size) as u32;
+        edges.push((b, nxt));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+fn assert_plans_identical(case: &str, hag_c: &Hag, plan_c: &ExecutionPlan,
+                          hag_f: &Hag, plan_f: &ExecutionPlan) {
+    assert!(hag_c == hag_f,
+            "{case}: cached HAG != from-scratch HAG \
+             (cost {} vs {}, |V_A| {} vs {})",
+            hag_c.cost_core(), hag_f.cost_core(),
+            hag_c.agg_nodes.len(), hag_f.agg_nodes.len());
+    assert!(plan_c == plan_f,
+            "{case}: cached plan != from-scratch plan \
+             (levels {} vs {}, l_pad {} vs {}, bands {:?} vs {:?})",
+            plan_c.levels, plan_f.levels, plan_c.l_pad, plan_f.l_pad,
+            plan_c.bands, plan_f.bands);
+}
+
+/// ISSUE-3 satellite: after a randomized delta sequence with periodic
+/// re-planning, dirty-shard-only re-planning produces a plan identical
+/// (level/band structure and index tensors) to a from-scratch search
+/// of every shard on the maintained graph.
+#[test]
+fn prop_dirty_shard_replan_identical_to_from_scratch() {
+    for case_seed in [3u64, 11, 29] {
+        let g = community(800, 12_000, case_seed);
+        let spec = LowerSpec::default().with_shards(4);
+        let mut session = Session::from_graph(&g, spec);
+        let mut mirror = OverlayGraph::new(g.clone());
+        let mut rng = Rng::seed_from_u64(case_seed ^ 0xbeef);
+        for i in 0..1_500 {
+            let d = random_delta(&mut rng, &mirror, 0.5, 0.02);
+            let a = mirror.apply(d);
+            let b = session.apply(d);
+            assert_eq!(a, b, "seed {case_seed}: delta {i} \
+                              no-op disagreement on {d:?}");
+            if (i + 1) % 250 == 0 {
+                session.plan(); // interleaved cached re-plans
+            }
+        }
+        let (hag_c, plan_c) = session.plan();
+        let (hag_f, plan_f) = session.plan_fresh();
+        assert_plans_identical(&format!("seed {case_seed}"),
+                               &hag_c, &plan_c, &hag_f, &plan_f);
+        // the maintained HAG is Theorem-1 equivalent to the live graph
+        let g_now = session.graph();
+        assert_eq!(g_now.n(), mirror.n());
+        assert_eq!(g_now.e(), mirror.e());
+        hag_c.validate().unwrap();
+        check_equivalence(&g_now, &hag_c).unwrap();
+        // re-plan work stayed far below one search per update
+        let st = session.stats();
+        assert!(st.shard_searches <= 4 * (st.plans + 1),
+                "seed {case_seed}: {} searches for {} plans",
+                st.shard_searches, st.plans);
+    }
+}
+
+/// Node-add-heavy streams grow the partition and stay identical to
+/// from-scratch (new nodes go to the deterministic lightest shard).
+#[test]
+fn prop_node_add_heavy_stream_stays_identical() {
+    let g = community(400, 6_000, 17);
+    let spec = LowerSpec::default().with_shards(3);
+    let mut session = Session::from_graph(&g, spec);
+    let mut mirror = OverlayGraph::new(g.clone());
+    let mut rng = Rng::seed_from_u64(171);
+    for i in 0..600 {
+        let d = random_delta(&mut rng, &mirror, 0.6, 0.2);
+        mirror.apply(d);
+        session.apply(d);
+        if (i + 1) % 150 == 0 {
+            session.plan();
+        }
+    }
+    assert!(session.n() > g.n(), "stream must have added nodes");
+    let (hag_c, plan_c) = session.plan();
+    let (hag_f, plan_f) = session.plan_fresh();
+    assert_plans_identical("node-add stream", &hag_c, &plan_c,
+                           &hag_f, &plan_f);
+    assert_eq!(hag_c.n, session.n());
+    check_equivalence(&session.graph(), &hag_c).unwrap();
+}
+
+/// Localized delta streams leave the untouched shards' searches
+/// cached — the observable cache-hit win.
+#[test]
+fn localized_deltas_hit_the_cache() {
+    let g = clique_ring(8, 6);
+    let spec = LowerSpec::default().with_shards(4);
+    let mut session = Session::from_graph(&g, spec);
+    session.plan();
+    assert_eq!(session.stats().shard_searches, 4);
+
+    // one intra-shard edge, toggled: only its shard ever re-searches
+    let (mut eu, mut ev) = (u32::MAX, 0u32);
+    'find: for (v, ns) in g.iter() {
+        for &u in ns {
+            if session.shard_of(u) == session.shard_of(v) {
+                eu = u;
+                ev = v;
+                break 'find;
+            }
+        }
+    }
+    assert_ne!(eu, u32::MAX, "clique ring has intra-shard edges");
+    for round in 0..3 {
+        let del = GraphDelta::EdgeDelete { src: eu, dst: ev };
+        let ins = GraphDelta::EdgeInsert { src: eu, dst: ev };
+        assert!(session.apply(del));
+        assert_eq!(session.dirty_shards(), 1, "round {round}");
+        session.plan();
+        assert!(session.apply(ins));
+        session.plan();
+    }
+    let st = session.stats();
+    assert_eq!(st.shard_searches, 4 + 6,
+               "one dirty shard per re-plan: {st:?}");
+    assert_eq!(st.shard_cache_hits, 3 * 6,
+               "three clean shards spliced per re-plan: {st:?}");
+    let (hag_c, plan_c) = session.plan();
+    let (hag_f, plan_f) = session.plan_fresh();
+    assert_plans_identical("localized", &hag_c, &plan_c, &hag_f,
+                           &plan_f);
+}
+
+/// Satellite: a capacity-bearing spec round-trips through buckets.json
+/// and `BucketSpec::fits` — the emitted bucket and the train/infer
+/// plan from the same spec can never disagree.
+#[test]
+fn capacity_spec_round_trips_through_buckets_json() {
+    let dir = std::env::temp_dir().join("repro_session_capacity_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("buckets.json");
+    let ds = datasets::load("BZR", 0.02, 3);
+    let spec = LowerSpec::default().with_capacity(40);
+
+    let written = emit_buckets(&[ds.clone()], &spec, &path).unwrap();
+    assert_eq!(written.len(), 2);
+
+    // aot.py-side parse
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = repro::util::json::parse(&text).unwrap();
+    let parsed: Vec<BucketSpec> = doc.req_arr("buckets").unwrap()
+        .iter()
+        .map(|b| BucketSpec::from_json(b).unwrap())
+        .collect();
+
+    // a later lowering with the *same spec* must fit the parsed bucket
+    for repr in [Repr::GnnGraph, Repr::Hag] {
+        let lowered =
+            Session::new(&ds, spec.clone().with_repr(repr))
+                .lower().unwrap();
+        let bucket = parsed.iter()
+            .find(|b| b.name == lowered.bucket.name)
+            .expect("bucket present in json");
+        assert!(bucket.fits(&lowered.plan),
+                "{}: parsed bucket does not fit the re-lowered plan",
+                bucket.name);
+        if repr == Repr::Hag {
+            assert!(lowered.hag.agg_nodes.len() <= 40,
+                    "capacity not honored: {}",
+                    lowered.hag.agg_nodes.len());
+        }
+    }
+
+    // ... and a *different* capacity must not silently fit: the old
+    // foot-gun emitted one capacity's buckets whatever the caller
+    // later trained with. Capacity 0 forbids every merge, so its plan
+    // has no levels — while the capacity-40 bucket must have some
+    // (the BZR stand-in's cloned neighborhood templates guarantee
+    // mergeable redundancy).
+    let hag_bucket = parsed.iter()
+        .find(|b| b.name == "bzr_hag").unwrap();
+    assert!(hag_bucket.levels >= 1,
+            "premise: capacity-40 search found no merges");
+    let other = Session::new(
+        &ds, LowerSpec::default().with_capacity(0)).lower().unwrap();
+    assert_eq!(other.plan.levels, 0);
+    assert!(!hag_bucket.fits(&other.plan),
+            "capacity-0 plan must not fit the capacity-40 bucket");
+}
+
+/// Golden stability: the default-spec `buckets.json` for BZR is
+/// byte-identical to the primitive search → plan → bucket pipeline the
+/// pre-session entry points ran — protects the aot.py contract across
+/// the migration.
+#[test]
+fn golden_default_buckets_byte_identical() {
+    let dir = std::env::temp_dir().join("repro_session_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = datasets::load("BZR", 0.02, 3);
+
+    // primitive pipeline (what the seed's lower_dataset did)
+    let old_path = dir.join("buckets_old.json");
+    let mut old_buckets = Vec::new();
+    for repr in [Repr::GnnGraph, Repr::Hag] {
+        let hag = match repr {
+            Repr::GnnGraph =>
+                Hag::from_graph(&ds.graph, AggregateKind::Set),
+            Repr::Hag => {
+                let cfg = SearchConfig::paper_default(ds.graph.n());
+                hag_search(&ds.graph, &cfg).0
+            }
+        };
+        let plan = build_plan(&ds.graph, &hag, &PlanConfig::default());
+        old_buckets.push(bucket_for(&ds, &plan, repr));
+    }
+    write_buckets_json(&old_buckets, &old_path).unwrap();
+
+    // session pipeline, default spec
+    let new_path = dir.join("buckets_new.json");
+    emit_buckets(&[ds], &LowerSpec::default(), &new_path).unwrap();
+
+    let old = std::fs::read(&old_path).unwrap();
+    let new = std::fs::read(&new_path).unwrap();
+    assert!(old == new,
+            "default-spec buckets.json changed across the Session \
+             migration ({} vs {} bytes)", old.len(), new.len());
+}
+
+/// Cross-spec isolation: sessions with different specs never share
+/// cache entries (fingerprints differ), and the same spec on the same
+/// graph reproduces the same fingerprint.
+#[test]
+fn fingerprints_isolate_specs_and_graphs() {
+    let g = clique_ring(4, 5);
+    let a = Session::from_graph(&g, LowerSpec::default());
+    let b = Session::from_graph(&g, LowerSpec::default());
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    let c = Session::from_graph(
+        &g, LowerSpec::default().with_capacity(3));
+    assert_ne!(a.fingerprint(), c.fingerprint());
+    let g2 = clique_ring(4, 6);
+    let d = Session::from_graph(&g2, LowerSpec::default());
+    assert_ne!(a.fingerprint(), d.fingerprint());
+}
