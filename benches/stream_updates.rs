@@ -6,9 +6,13 @@
 //! Run: `cargo bench --bench stream_updates`
 //! CI smoke (bounded sizes): `cargo bench --bench stream_updates -- --smoke`
 
+use std::time::Instant;
+
+use repro::coordinator::{self, BatchPolicy, SwapPolicy};
 use repro::datasets::{community_graph, CommunityCfg};
 use repro::hag::hag_search;
-use repro::incremental::{random_delta, StreamConfig, StreamEngine};
+use repro::incremental::{random_delta, DriftPolicy, GraphDelta,
+                         StreamConfig, StreamEngine};
 use repro::session::{LowerSpec, Session};
 use repro::util::benchkit::Bencher;
 use repro::util::Rng;
@@ -146,4 +150,72 @@ fn main() {
          cached == from-scratch OK",
         st.plans, st.shard_searches, st.shard_cache_hits,
         replan_ms[replan_ms.len() / 2]);
+
+    // session-aware serving: a resident session rides in the batcher,
+    // a shard-0-localized update stream is coalesced between scoring
+    // batches, and drift (forced: negative threshold) hot-swaps the
+    // spliced dirty-shard re-plan into the live worker. Runs on the
+    // host reference executor when PJRT artifacts are absent, so the
+    // CI smoke covers the full serving path.
+    let (reqs, upd_every) = if smoke { (200usize, 4usize) } else {
+        (1_000, 4)
+    };
+    println!("\nsession-aware serving (BZR stand-in, 4 shards, \
+              {reqs} requests, localized updates):");
+    let ds = repro::datasets::load("BZR", 0.02, 31);
+    let spec = LowerSpec::default()
+        .with_shards(4)
+        .with_drift(DriftPolicy::default().with_threshold(-1.0));
+    let mut session = Session::new(&ds, spec);
+    let lowered = session.lower().expect("lower");
+    let members: Vec<u32> = (0..ds.n() as u32)
+        .filter(|&v| session.shard_of(v) == 0)
+        .collect();
+    let resident = coordinator::Resident::new(
+        session, &ds.graph, &lowered.hag,
+        SwapPolicy { swap_plans: true, max_pending: 16 });
+    let server = coordinator::InferenceServer::for_lowered(
+        "artifacts", "gcn", &ds, &lowered, BatchPolicy::default(), 31,
+        Some(resident)).expect("spawn");
+    let tx = server.client();
+    let mut rng = Rng::seed_from_u64(31);
+    for i in 0..reqs {
+        if i % upd_every == 0 && members.len() >= 2 {
+            let a = members[rng.range_usize(0, members.len())];
+            let b = members[rng.range_usize(0, members.len())];
+            if a != b {
+                let _ = tx.send(coordinator::ServerMsg::Update(
+                    coordinator::UpdateRequest {
+                        delta: GraphDelta::EdgeInsert { src: a, dst: b },
+                        reply: None,
+                        submitted: Instant::now(),
+                    }));
+            }
+        }
+        let (otx, orx) = coordinator::server::oneshot();
+        let req = coordinator::ScoreRequest {
+            node: rng.range_u32(0, ds.n() as u32),
+            features: (0..ds.f_in)
+                .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+            reply: otx,
+            submitted: Instant::now(),
+        };
+        if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
+            break;
+        }
+        let _ = orx.recv().expect("reply").into_result()
+            .expect("scored");
+    }
+    drop(tx);
+    let out = server.shutdown_outcome();
+    let s = &out.stats;
+    assert_ne!(s.plan_matches_fresh, Some(false),
+               "serving-path plan cache contract violated");
+    println!(
+        "  -> {} ok / {} rejected; p50 {:.2} ms p99 {:.2} ms; \
+         {} updates in {} flushes; {} plan swaps ({} skipped); \
+         {} shard re-searches, {} shard cache hits; replan check {:?}",
+        s.requests, s.rejected, s.p50_ms, s.p99_ms, s.updates,
+        s.update_batches, s.plan_swaps, s.swaps_skipped,
+        s.shard_searches, s.shard_cache_hits, s.plan_matches_fresh);
 }

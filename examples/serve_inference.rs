@@ -1,19 +1,28 @@
 //! Serving example: spin up the inference server over the BZR stand-in
 //! under both representations, drive it with concurrent client threads,
 //! and report latency percentiles + throughput — the serving-path
-//! counterpart of the Fig 2 inference comparison.
+//! counterpart of the Fig 2 inference comparison. A third section runs
+//! **session-aware serving**: a resident `Session` rides in the
+//! batcher, a shard-localized update stream dirties one shard, and the
+//! drifted serving plan is hot-swapped from the per-shard plan cache.
+//!
+//! Runs everywhere: with compiled artifacts the batcher executes XLA;
+//! without them it falls back to the host reference executor, so the
+//! full request path (validation, batching, coalescing, swap) is
+//! exercised on a fresh checkout too.
 //!
 //! ```bash
 //! cargo run --release -- emit-buckets --datasets BZR --scale 0.05
-//! make artifacts
+//! make artifacts            # optional: XLA path
 //! cargo run --release --example serve_inference
 //! ```
 
 use std::time::{Duration, Instant};
 
 use repro::bench::effective_scale;
-use repro::coordinator::{self, BatchPolicy, Repr};
+use repro::coordinator::{self, BatchPolicy, Repr, SwapPolicy};
 use repro::datasets;
+use repro::incremental::{DriftPolicy, GraphDelta};
 use repro::session::{LowerSpec, Session};
 use repro::util::Rng;
 
@@ -56,8 +65,9 @@ fn main() -> anyhow::Result<()> {
                     {
                         break;
                     }
-                    let resp = orx.recv().expect("reply");
-                    assert_eq!(resp.logits.len(), classes);
+                    let ok = orx.recv().expect("reply")
+                        .into_result().expect("scored");
+                    assert_eq!(ok.logits.len(), classes);
                 }
             }));
         }
@@ -72,5 +82,67 @@ fn main() -> anyhow::Result<()> {
                  stats.p50_ms, stats.p99_ms, stats.mean_exec_ms,
                  stats.throughput_rps);
     }
+
+    // ---- session-aware serving: localized updates + hot plan swap.
+    // A negative drift threshold forces the swap check at every
+    // coalesced flush, so the demo is deterministic.
+    println!("\n[session-aware serving] 4 shards, shard-0-localized \
+              update stream");
+    let spec = LowerSpec::default()
+        .with_shards(4)
+        .with_drift(DriftPolicy::default().with_threshold(-1.0));
+    let mut session = Session::new(&ds, spec);
+    let lowered = session.lower()?;
+    let members: Vec<u32> = (0..ds.n() as u32)
+        .filter(|&v| session.shard_of(v) == 0)
+        .collect();
+    let resident = coordinator::Resident::new(
+        session, &ds.graph, &lowered.hag,
+        SwapPolicy { swap_plans: true, max_pending: 8 });
+    let server = coordinator::InferenceServer::for_lowered(
+        "artifacts", "gcn", &ds, &lowered,
+        BatchPolicy::default(), SEED, Some(resident))?;
+    let tx = server.client();
+    let mut rng = Rng::seed_from_u64(SEED ^ 0x5e55);
+    for i in 0..200usize {
+        if i % 4 == 0 && members.len() >= 2 {
+            let a = members[rng.range_usize(0, members.len())];
+            let b = members[rng.range_usize(0, members.len())];
+            if a != b {
+                let _ = tx.send(coordinator::ServerMsg::Update(
+                    coordinator::UpdateRequest {
+                        delta: GraphDelta::EdgeInsert { src: a, dst: b },
+                        reply: None,
+                        submitted: Instant::now(),
+                    }));
+            }
+        }
+        let (otx, orx) = coordinator::server::oneshot();
+        let req = coordinator::ScoreRequest {
+            node: rng.range_u32(0, ds.n() as u32),
+            features: (0..ds.f_in)
+                .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+            reply: otx,
+            submitted: Instant::now(),
+        };
+        if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
+            break;
+        }
+        let _ = orx.recv().expect("reply").into_result()
+            .expect("scored");
+    }
+    drop(tx);
+    let out = server.shutdown_outcome();
+    let s = &out.stats;
+    println!("  {} requests; {} updates in {} flushes; {} plan swaps \
+              ({} skipped)",
+             s.requests, s.updates, s.update_batches, s.plan_swaps,
+             s.swaps_skipped);
+    println!("  session: {} shard re-searches, {} shard cache hits; \
+              replan check {:?}",
+             s.shard_searches, s.shard_cache_hits,
+             s.plan_matches_fresh);
+    assert_ne!(s.plan_matches_fresh, Some(false),
+               "serving-path plan cache contract violated");
     Ok(())
 }

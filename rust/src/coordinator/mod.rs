@@ -13,10 +13,12 @@ pub mod packing;
 pub mod server;
 pub mod trainer;
 
-pub use packing::{pack_workload, unpermute_rows, PackedWorkload};
-pub use server::{BatchPolicy, InferenceServer, ScoreRequest,
-                 ScoreResponse, ServeStats, ServerMsg, UpdateRequest,
-                 UpdateResponse};
+pub use packing::{pack_workload, plan_tensors, unpermute_rows,
+                  PackedWorkload};
+pub use server::{BatchPolicy, InferenceServer, Resident, ScoreError,
+                 ScoreOk, ScoreReject, ScoreRequest, ScoreResponse,
+                 ServeOutcome, ServeStats, ServerMsg, SwapPolicy,
+                 UpdateRequest, UpdateResponse};
 pub use trainer::{EpochStats, TrainReport, Trainer};
 
 use anyhow::Result;

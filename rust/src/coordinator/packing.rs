@@ -36,6 +36,37 @@ impl PackedWorkload {
     }
 }
 
+/// The plan-derived static tensors — `deg`, the level operand tensors
+/// and the per-band gather tensors — exactly as [`pack_workload`] lays
+/// them out. Shared with the serving hot-swap path
+/// ([`InferenceServer`](super::InferenceServer)), which re-derives
+/// them from a freshly spliced plan without re-packing the dataset.
+pub fn plan_tensors(plan: &ExecutionPlan) -> Vec<(String, HostTensor)> {
+    let mut t = Vec::new();
+    t.push(("deg".to_string(),
+            HostTensor::f32(plan.deg.clone(), &[plan.n_pad])));
+    if plan.levels > 0 {
+        t.push(("lvl_left".to_string(),
+                HostTensor::i32(plan.lvl_left.clone(),
+                                &[plan.levels, plan.l_pad])));
+        t.push(("lvl_right".to_string(),
+                HostTensor::i32(plan.lvl_right.clone(),
+                                &[plan.levels, plan.l_pad])));
+    }
+    for (i, (&(nb, nnzb), (cols, rows))) in plan
+        .bands
+        .iter()
+        .zip(plan.band_cols.iter().zip(plan.band_rows.iter()))
+        .enumerate()
+    {
+        t.push((format!("band{i}_col"),
+                HostTensor::i32(cols.clone(), &[nb, nnzb])));
+        t.push((format!("band{i}_row"),
+                HostTensor::i32(rows.clone(), &[nb, nnzb])));
+    }
+    t
+}
+
 /// Pack `ds` lowered through `plan` for `bucket`.
 pub fn pack_workload(ds: &Dataset, plan: &ExecutionPlan,
                      bucket: &BucketSpec) -> Result<PackedWorkload> {
@@ -64,29 +95,10 @@ pub fn pack_workload(ds: &Dataset, plan: &ExecutionPlan,
     }
     t.insert("h0".into(), HostTensor::f32(h0, &[n_pad, f]));
 
-    // ---- deg (already permuted by the plan compiler) ----
-    t.insert("deg".into(),
-             HostTensor::f32(plan.deg.clone(), &[n_pad]));
-
-    // ---- plan tensors ----
-    if plan.levels > 0 {
-        t.insert("lvl_left".into(),
-                 HostTensor::i32(plan.lvl_left.clone(),
-                                 &[plan.levels, plan.l_pad]));
-        t.insert("lvl_right".into(),
-                 HostTensor::i32(plan.lvl_right.clone(),
-                                 &[plan.levels, plan.l_pad]));
-    }
-    for (i, (&(nb, nnzb), (cols, rows))) in plan
-        .bands
-        .iter()
-        .zip(plan.band_cols.iter().zip(plan.band_rows.iter()))
-        .enumerate()
-    {
-        t.insert(format!("band{i}_col"),
-                 HostTensor::i32(cols.clone(), &[nb, nnzb]));
-        t.insert(format!("band{i}_row"),
-                 HostTensor::i32(rows.clone(), &[nb, nnzb]));
+    // ---- plan-derived statics (deg + level + band tensors; shared
+    // with the serving hot-swap path) ----
+    for (name, tensor) in plan_tensors(plan) {
+        t.insert(name, tensor);
     }
 
     // ---- task-specific tensors ----
@@ -236,6 +248,35 @@ mod tests {
         let out = unpermute_rows(&plan, &rows, 1);
         for old in 0..plan.n {
             assert_eq!(out[old], plan.inv_perm[old] as f32);
+        }
+    }
+
+    #[test]
+    fn plan_tensors_match_packed_workload() {
+        let ds = datasets::load("BZR", 0.02, 11);
+        let (hag, _) = crate::hag::hag_search(
+            &ds.graph,
+            &crate::hag::SearchConfig::paper_default(ds.graph.n()));
+        let plan = build_plan(&ds.graph, &hag, &PlanConfig::default());
+        let bucket = bucket_for(&plan, &ds, 0);
+        let w = pack_workload(&ds, &plan, &bucket).unwrap();
+        let tensors = plan_tensors(&plan);
+        // every plan tensor appears in the workload, same shape + data
+        assert!(tensors.iter().any(|(n, _)| n == "deg"));
+        if plan.levels > 0 {
+            assert!(tensors.iter().any(|(n, _)| n == "lvl_left"));
+        }
+        for (name, t) in &tensors {
+            let packed = w.get(name)
+                .unwrap_or_else(|| panic!("workload missing {name}"));
+            assert_eq!(packed.shape(), t.shape(), "{name}");
+            match (packed, t) {
+                (HostTensor::F32 { data: a, .. },
+                 HostTensor::F32 { data: b, .. }) => assert_eq!(a, b),
+                (HostTensor::I32 { data: a, .. },
+                 HostTensor::I32 { data: b, .. }) => assert_eq!(a, b),
+                _ => panic!("{name}: dtype mismatch"),
+            }
         }
     }
 

@@ -1,51 +1,83 @@
-//! Inference serving path: request router + dynamic batcher.
+//! Inference serving path: request router + dynamic batcher, with an
+//! optional resident maintenance pair (engine + session) and a hot
+//! plan-swap protocol.
 //!
 //! Serving model: the graph (and its HAG plan) is resident; clients
 //! submit *feature-update scoring requests* — "these node feature rows
 //! changed, give me fresh logits for them" (the transductive GNN serving
 //! pattern: user/post features refresh continuously, topology changes
-//! slowly). The batcher coalesces concurrent requests into one XLA
+//! slowly). The batcher coalesces concurrent requests into one
 //! execution over the shared graph, amortizing the full-graph
 //! aggregation across the batch — exactly where HAG's reduced
 //! aggregation count pays off in serving latency.
 //!
 //! Flow: client threads -> bounded mpsc queue -> batcher thread
-//! (size- or deadline-triggered) -> XLA execute -> per-request oneshot
+//! (size- or deadline-triggered) -> execute -> per-request oneshot
 //! replies. The `xla` crate's handles are not `Send` (Rc + raw
 //! pointers), so the batcher thread owns its *own* PJRT client,
 //! executable and device buffers end to end; only plain host tensors
-//! cross the thread boundary. Built on std::sync primitives (tokio is
-//! not vendored here; a blocking XLA worker gains nothing from an async
-//! runtime anyway).
+//! cross the thread boundary. When the PJRT backend is unavailable
+//! (default CPU-stub builds, or no compiled artifacts) the worker falls
+//! back to a host **reference executor** that runs the same 2-layer GCN
+//! through the plan's level/band tensors — slower, but the full serving
+//! path (validation, batching, update coalescing, plan swap) is
+//! exercised end to end without any artifacts.
 //!
-//! Online topology updates: the queue carries [`ServerMsg`], either a
-//! scoring request or an [`UpdateRequest`] (a
-//! [`GraphDelta`](crate::incremental::GraphDelta) for the optional
-//! resident [`StreamEngine`]). Updates are repaired inline between
-//! batches — local repair is microseconds, and drift-triggered
-//! re-searches run on the engine's background thread — so scoring
-//! traffic keeps flowing while the HAG is maintained. The *compiled*
-//! artifact stays pinned to its bucket; the maintained HAG is what the
-//! next emit-buckets/compile cycle lowers, i.e. the serving plan
-//! trails the live topology by one plan swap (DESIGN.md §6).
+//! Hardened request path: every [`ScoreRequest`] is validated on
+//! receipt — an out-of-range node id or a wrong-length feature row is
+//! answered with [`ScoreResponse::Err`] instead of indexing out of
+//! bounds inside the batcher, and a failed batch execute replies
+//! [`ScoreReject::ExecFailed`] to every request in the batch rather
+//! than silently dropping the reply channels. The batcher thread
+//! survives all three.
+//!
+//! Online topology maintenance ([`Resident`]): the queue carries
+//! [`ServerMsg::Update`] deltas which the batcher **buffers** and
+//! flushes between scoring batches, coalesced by
+//! `Partition::shard_of` of the touched node (locality-aware update
+//! batching: a skewed stream dirties few shards between re-plans, so
+//! the session's per-shard plan cache hits on the rest). Each flushed
+//! delta flows to *both* the [`StreamEngine`] (per-delta local repair)
+//! and the [`Session`] (dirty-shard bookkeeping). When drift crosses
+//! the spec's threshold, the next serving plan comes from
+//! [`Session::plan`] — a spliced dirty-shard re-plan served from the
+//! per-shard cache — and is **hot-swapped** into the worker: the
+//! resident `h0` is re-derived under the new permutation, the static
+//! `lvl_*`/`band*`/`deg` tensors are rebuilt from the new
+//! [`ExecutionPlan`], and (on the XLA path) the executable is reused
+//! when the plan still fits its bucket or recompiled against a
+//! matching bucket artifact when one is present — all without
+//! restarting the batcher thread. Scoring a node added by `NodeAdd`
+//! returns [`ScoreReject::NodeOutOfRange`] until a swap publishes a
+//! plan that covers it (the serving plan trails the live topology by
+//! one swap, not by a whole emit-buckets/compile cycle; DESIGN.md §8).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError,
                       SyncSender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::hag::ExecutionPlan;
+use crate::graph::Graph;
+use crate::hag::{AggregateKind, ExecutionPlan, Hag};
 use crate::incremental::{ApplyOutcome, GraphDelta, RebuildEvent,
                          StreamEngine};
 use crate::runtime::xla;
-use crate::runtime::{Executable, HostTensor, Runtime};
+use crate::runtime::{BucketSpec, Executable, HostTensor, Runtime,
+                     TensorSpec};
+use crate::session::Session;
 
-use super::packing::PackedWorkload;
+use super::packing::{plan_tensors, PackedWorkload};
 use super::trainer::init_params;
+use super::Repr;
 
 /// One scoring request: overwrite node features, return its logits.
+/// Validated on receipt: `node` must be below the *serving plan's*
+/// real node count and `features` must be empty (keep current) or
+/// exactly `f_in` long — violations are answered with
+/// [`ScoreResponse::Err`], never a panic.
 pub struct ScoreRequest {
     /// Original (un-permuted) node id.
     pub node: u32,
@@ -56,12 +88,69 @@ pub struct ScoreRequest {
     pub submitted: Instant,
 }
 
+/// Successful scoring reply.
 #[derive(Debug, Clone)]
-pub struct ScoreResponse {
+pub struct ScoreOk {
     pub node: u32,
     pub logits: Vec<f32>,
     /// Queue + batch + execute time.
     pub latency: Duration,
+}
+
+/// Why a scoring request was answered with an error outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScoreReject {
+    /// `node >= n` for the currently *served* plan — hostile input, or
+    /// a `NodeAdd` the next plan swap has not yet published.
+    NodeOutOfRange { node: u32, n: usize },
+    /// Feature row length does not match the model's `f_in`.
+    FeatureLen { got: usize, want: usize },
+    /// The batch execute failed; the server is still alive (clients
+    /// can distinguish "server rejected this batch" from a closed
+    /// channel, i.e. "server died").
+    ExecFailed { message: String },
+}
+
+/// Error scoring reply (request-level or batch-level failure).
+#[derive(Debug, Clone)]
+pub struct ScoreError {
+    pub node: u32,
+    pub reject: ScoreReject,
+    pub latency: Duration,
+}
+
+/// Scoring reply: logits, or an explicit error outcome.
+#[derive(Debug, Clone)]
+pub enum ScoreResponse {
+    Ok(ScoreOk),
+    Err(ScoreError),
+}
+
+impl ScoreResponse {
+    pub fn node(&self) -> u32 {
+        match self {
+            ScoreResponse::Ok(r) => r.node,
+            ScoreResponse::Err(e) => e.node,
+        }
+    }
+
+    pub fn latency(&self) -> Duration {
+        match self {
+            ScoreResponse::Ok(r) => r.latency,
+            ScoreResponse::Err(e) => e.latency,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, ScoreResponse::Ok(_))
+    }
+
+    pub fn into_result(self) -> std::result::Result<ScoreOk, ScoreError> {
+        match self {
+            ScoreResponse::Ok(r) => Ok(r),
+            ScoreResponse::Err(e) => Err(e),
+        }
+    }
 }
 
 /// Create a reply channel pair for a [`ScoreRequest`].
@@ -76,7 +165,11 @@ pub enum ServerMsg {
     Update(UpdateRequest),
 }
 
-/// One topology update for the resident [`StreamEngine`].
+/// One topology update for the resident maintenance pair. Buffered on
+/// receipt and applied at the next coalesced flush (between scoring
+/// batches, when the pending buffer fills, or after `max_wait` of
+/// queue idleness), so the reply latency is bounded even on an idle
+/// server.
 pub struct UpdateRequest {
     pub delta: GraphDelta,
     /// Optional reply channel (fire-and-forget updates pass `None`).
@@ -86,14 +179,14 @@ pub struct UpdateRequest {
 
 #[derive(Debug, Clone)]
 pub struct UpdateResponse {
-    /// Engine sequence number; `0` when the server has no stream
-    /// engine (the update was dropped).
+    /// Engine sequence number; `0` when the server has no resident
+    /// maintenance pair (the update was dropped).
     pub seq: u64,
     pub outcome: ApplyOutcome,
     pub rebuild: RebuildEvent,
     /// `cost_core` of the maintained HAG after this update.
     pub cost_core: usize,
-    /// Queue + repair time.
+    /// Queue + coalesce + repair time.
     pub latency: Duration,
 }
 
@@ -116,26 +209,127 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Plan-swap / update-batching policy (`serve --plan-swap`,
+/// `--update-batch`).
+#[derive(Debug, Clone)]
+pub struct SwapPolicy {
+    /// Hot-swap the serving plan from the session's per-shard cache
+    /// when drift crosses the spec threshold. Forced off for the
+    /// GNN-graph baseline and sequential AGGREGATE (no point repair).
+    pub swap_plans: bool,
+    /// Pending-update count that forces a coalesced flush outside the
+    /// batch-collection window (clamped to >= 1).
+    pub max_pending: usize,
+}
+
+impl Default for SwapPolicy {
+    fn default() -> Self {
+        SwapPolicy { swap_plans: false, max_pending: 64 }
+    }
+}
+
+/// The resident maintenance pair the batcher owns: a [`StreamEngine`]
+/// repairing the HAG per delta and a [`Session`] whose per-shard plan
+/// cache supplies the next serving plan. Built with [`Resident::new`]
+/// from the *same* session that lowered the serving workload, so the
+/// first drift re-plan hits the cache for every clean shard.
+pub struct Resident {
+    pub engine: StreamEngine,
+    pub session: Session,
+    pub swap: SwapPolicy,
+    /// Serving-side drift threshold, from the session spec. Negative
+    /// values trigger a swap check at every flush (CI/test forcing
+    /// knob — see `DriftPolicy::threshold`).
+    threshold: f64,
+}
+
+impl Resident {
+    /// Wire a session into serving. `session` must be the session that
+    /// lowered the serving workload (its cache is already warm at the
+    /// current topology version), `g` its base graph, and `hag` the
+    /// lowered HAG (`lowered.hag`) — the engine adopts it instead of
+    /// paying a second initial search.
+    ///
+    /// Exactly one party owns re-planning: with `swap.swap_plans` (and
+    /// a Set-AGGREGATE HAG spec) the engine's own whole-graph drift
+    /// rebuild is disabled and drift installs the session's spliced
+    /// dirty-shard re-plan; otherwise the engine keeps its policy with
+    /// rebuilds forced onto the background thread so the batcher never
+    /// stalls on a search.
+    pub fn new(session: Session, g: &Graph, hag: &Hag,
+               swap: SwapPolicy) -> Resident {
+        let spec = session.spec().clone();
+        let swappable = spec.repr == Repr::Hag
+            && spec.kind == AggregateKind::Set;
+        let swap = SwapPolicy {
+            swap_plans: swap.swap_plans && swappable,
+            max_pending: swap.max_pending.max(1),
+        };
+        let mut cfg = spec.stream_config();
+        if swap.swap_plans {
+            cfg.policy.threshold = f64::INFINITY;
+        } else {
+            cfg.policy.background = true;
+        }
+        let engine = if swappable {
+            StreamEngine::from_hag(g, cfg, hag)
+        } else {
+            StreamEngine::new(g, cfg)
+        };
+        Resident { engine, session, swap,
+                   threshold: spec.drift.threshold }
+    }
+}
+
 /// Aggregated serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Scoring requests admitted to a batch and answered `Ok`.
     pub requests: usize,
+    /// Malformed requests refused with an error reply on receipt.
+    pub rejected: usize,
+    /// Requests answered [`ScoreReject::ExecFailed`].
+    pub failed: usize,
     pub batches: usize,
     pub mean_batch: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_exec_ms: f64,
     pub throughput_rps: f64,
-    /// Topology updates repaired while serving.
+    /// Topology updates applied while serving.
     pub updates: usize,
-    /// Drift-triggered HAG rebuilds swapped in while serving.
+    /// Coalesced update flushes.
+    pub update_batches: usize,
+    /// Engine-side HAG rebuild/install swaps (maintenance state).
     pub rebuild_swaps: usize,
+    /// Session-fed plans hot-swapped into the serving state.
+    pub plan_swaps: usize,
+    /// Drift asked for a swap but no compatible artifact existed
+    /// (XLA path) or the swap errored.
+    pub swaps_skipped: usize,
+    /// Batch executes that failed (each answers its whole batch with
+    /// `ExecFailed`; the worker stays alive).
+    pub exec_failures: usize,
+    /// Per-shard searches the resident session ran.
+    pub shard_searches: usize,
+    /// Per-shard searches the session's plan cache absorbed.
+    pub shard_cache_hits: usize,
+    /// Shutdown contract check (swap-enabled residents only):
+    /// session `plan()` == `plan_fresh()` with full tensor equality.
+    pub plan_matches_fresh: Option<bool>,
+}
+
+/// Final server state: stats plus the resident pair handed back for
+/// inspection (tests assert the serving-path cache contract on it).
+pub struct ServeOutcome {
+    pub stats: ServeStats,
+    pub resident: Option<Resident>,
 }
 
 /// The inference server over one prepared (graph, plan, artifact).
 pub struct InferenceServer {
     tx: SyncSender<ServerMsg>,
-    handle: std::thread::JoinHandle<ServeStats>,
+    handle: std::thread::JoinHandle<ServeOutcome>,
 }
 
 impl InferenceServer {
@@ -143,32 +337,32 @@ impl InferenceServer {
     /// infer-artifact name from the bucket and packs the dataset
     /// against the plan. `lowered` should come from
     /// [`Session::lower`](crate::session::Session::lower) on the same
-    /// dataset.
+    /// dataset — and `resident`, when present, from [`Resident::new`]
+    /// over that same session.
     pub fn for_lowered(artifacts_dir: impl Into<PathBuf>, model: &str,
                        ds: &crate::datasets::Dataset,
                        lowered: &super::Lowered, policy: BatchPolicy,
-                       seed: u64, stream: Option<StreamEngine>)
+                       seed: u64, resident: Option<Resident>)
                        -> Result<InferenceServer> {
         let artifact =
             super::artifact_name(model, "infer", &lowered.bucket);
         let workload = super::pack_workload(ds, &lowered.plan,
                                             &lowered.bucket)?;
         Self::spawn(artifacts_dir, &artifact, &workload, &lowered.plan,
-                    policy, seed, stream)
+                    &lowered.bucket, policy, seed, resident)
     }
 
-    /// Spawn the batcher thread and block until its PJRT state is
-    /// ready. `workload` supplies the resident graph tensors; params
-    /// are initialized (a full deployment would load a checkpoint).
-    /// `stream` (optional) is the incremental-maintenance engine that
-    /// [`UpdateRequest`]s feed; pass
-    /// `StreamEngine::new(&ds.graph, ..)` with a background drift
-    /// policy so re-searches never stall the batcher.
+    /// Spawn the batcher thread and block until its backend is ready.
+    /// `workload` supplies the resident graph tensors; params are
+    /// initialized from `seed` (a full deployment would load a
+    /// checkpoint). When the PJRT runtime or the artifact is
+    /// unavailable, the worker serves on the host reference executor
+    /// instead of failing.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(artifacts_dir: impl Into<PathBuf>, artifact: &str,
                  workload: &PackedWorkload, plan: &ExecutionPlan,
-                 policy: BatchPolicy, seed: u64,
-                 stream: Option<StreamEngine>)
-                 -> Result<InferenceServer> {
+                 bucket: &BucketSpec, policy: BatchPolicy, seed: u64,
+                 resident: Option<Resident>) -> Result<InferenceServer> {
         let dir = artifacts_dir.into();
         let artifact = artifact.to_string();
         // Host-side state crossing into the worker thread (all Send).
@@ -182,21 +376,23 @@ impl InferenceServer {
             .filter(|n| *n != "h0")
             .map(|n| (n.to_string(), workload.get(n).unwrap().clone()))
             .collect();
-        let inv_perm = plan.inv_perm.clone();
+        let plan = Arc::new(plan.clone());
+        let bucket = bucket.clone();
 
         let (tx, rx) = sync_channel::<ServerMsg>(4096);
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
         let handle = std::thread::spawn(move || {
             let setup = Worker::setup(&dir, &artifact, statics, h0,
-                                      seed);
+                                      plan, &bucket, seed);
             match setup {
                 Ok(mut w) => {
                     let _ = ready_tx.send(Ok(()));
-                    w.batcher_loop(rx, &inv_perm, policy, stream)
+                    w.batcher_loop(rx, policy, resident)
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
-                    ServeStats::default()
+                    ServeOutcome { stats: ServeStats::default(),
+                                   resident: None }
                 }
             }
         });
@@ -221,40 +417,199 @@ impl InferenceServer {
 
     /// Close the queue and collect final stats.
     pub fn shutdown(self) -> ServeStats {
+        self.shutdown_outcome().stats
+    }
+
+    /// Close the queue and collect stats plus the resident pair (the
+    /// serving-path cache contract is asserted against its session).
+    pub fn shutdown_outcome(self) -> ServeOutcome {
         drop(self.tx);
-        self.handle.join().unwrap_or_default()
+        self.handle.join().unwrap_or_else(|_| ServeOutcome {
+            stats: ServeStats::default(),
+            resident: None,
+        })
     }
 }
 
-/// Thread-confined XLA state.
-struct Worker {
+/// Application order for a pending update batch: edge deltas are
+/// grouped by the destination node's shard within each
+/// `NodeAdd`-delimited segment, preserving arrival order inside every
+/// group (stable). `NodeAdd`s are barriers — an edge delta referencing
+/// a node id minted by an earlier `NodeAdd` must stay on its side —
+/// and two deltas on the same edge share a destination, hence a group,
+/// so the reorder can never change delta semantics. Returns a
+/// permutation of indices into `deltas`.
+pub fn coalesce_order(deltas: &[GraphDelta],
+                      shard_of: impl Fn(u32) -> u32) -> Vec<usize> {
+    let mut keys: Vec<(u32, u32, usize)> =
+        Vec::with_capacity(deltas.len());
+    let mut seg = 0u32;
+    for (i, d) in deltas.iter().enumerate() {
+        match d {
+            GraphDelta::NodeAdd => {
+                keys.push((seg, u32::MAX, i));
+                seg += 1;
+            }
+            GraphDelta::EdgeInsert { dst, .. }
+            | GraphDelta::EdgeDelete { dst, .. } => {
+                keys.push((seg, shard_of(*dst), i));
+            }
+        }
+    }
+    keys.sort_unstable(); // arrival index breaks ties => stable
+    keys.into_iter().map(|(_, _, i)| i).collect()
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample: the
+/// smallest value whose 1-based rank is `ceil(p * n)`. The previous
+/// truncating index biased small-sample tails low (p99 over 10
+/// samples returned the 9th value, not the max). NaN on empty input.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Re-derive the resident permuted `h0` under a new plan's
+/// permutation: row `old.inv_perm[v]` moves to `new.inv_perm[v]`.
+/// Nodes the old plan did not cover (post-`NodeAdd`) start as zero
+/// rows until a client scores or updates them.
+fn repermute_h0(old: &ExecutionPlan, new: &ExecutionPlan, h0: &[f32],
+                f: usize) -> Vec<f32> {
+    let mut out = vec![0f32; new.n_pad * f];
+    for v in 0..old.n.min(new.n) {
+        let o = old.inv_perm[v] as usize;
+        let n = new.inv_perm[v] as usize;
+        out[n * f..(n + 1) * f].copy_from_slice(&h0[o * f..(o + 1) * f]);
+    }
+    out
+}
+
+fn is_plan_tensor(name: &str) -> bool {
+    name == "deg" || name.starts_with("lvl_") || name.starts_with("band")
+}
+
+/// Thread-confined XLA state (handles are not `Send`; built and used
+/// only on the batcher thread).
+struct XlaState {
     runtime: Runtime,
-    exe: std::sync::Arc<Executable>,
+    exe: Arc<Executable>,
     static_slots: Vec<(usize, xla::PjRtBuffer)>,
     h0_index: usize,
+    /// Host copies of the params, artifact order — re-uploaded when a
+    /// swap recompiles against a different bucket artifact.
+    params: Vec<HostTensor>,
+    /// `"<model>_infer_"` prefix for matching-artifact lookup on swap
+    /// (empty when the artifact name has no such form).
+    prefix: String,
+}
+
+/// Host reference executor: the same 2-layer GCN the `gcn_infer_*`
+/// artifacts compute (model.py `gcn_forward`), run through the plan's
+/// level/band tensors in f32 on the batcher thread.
+struct RefState {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+enum Backend {
+    Xla(XlaState),
+    Reference(RefState),
+    /// Test-only: every execute fails (exercises the error-reply path).
+    #[cfg(test)]
+    Broken,
+}
+
+impl Backend {
+    fn reference(f_in: usize, hidden: usize, classes: usize,
+                 seed: u64) -> Backend {
+        let spec = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            shape,
+            dtype: "f32".to_string(),
+        };
+        let specs = [
+            spec("w1", vec![f_in, hidden]),
+            spec("b1", vec![hidden]),
+            spec("w2", vec![hidden, classes]),
+            spec("b2", vec![classes]),
+        ];
+        let mut params = init_params(&specs, seed).into_iter();
+        let mut take = || -> Vec<f32> {
+            params.next().expect("four params")
+                .as_f32().expect("f32 param").to_vec()
+        };
+        Backend::Reference(RefState {
+            w1: take(),
+            b1: take(),
+            w2: take(),
+            b2: take(),
+        })
+    }
+}
+
+/// The batcher thread's serving state.
+struct Worker {
+    backend: Backend,
+    /// The plan currently being served (validation bound, permutation,
+    /// level/band tensors). Replaced by a hot swap.
+    plan: Arc<ExecutionPlan>,
+    /// Resident features, permuted by `plan`, `[n_pad * f_in]`.
     h0: Vec<f32>,
-    n_pad: usize,
     f_in: usize,
     classes: usize,
+    hidden: usize,
+    /// The served plan is the session's memoized plan (skip re-plan
+    /// checks until a delta bumps the topology version).
+    served_session_plan: bool,
 }
 
 impl Worker {
     fn setup(dir: &PathBuf, artifact: &str,
              statics: Vec<(String, HostTensor)>, h0: Vec<f32>,
+             plan: Arc<ExecutionPlan>, bucket: &BucketSpec,
              seed: u64) -> Result<Worker> {
-        let runtime = Runtime::open(dir)?;
+        // Fall back to the reference executor only when the runtime
+        // itself is unavailable (no manifest / stubbed PJRT client).
+        // Once a runtime opens, artifact problems — wrong kind,
+        // missing tensors, corrupt spec — are configuration errors
+        // and must fail spawn loudly, not silently serve a
+        // random-parameter reference model.
+        let backend = match Runtime::open(dir) {
+            Ok(runtime) => {
+                Self::xla_setup(runtime, artifact, &statics, seed)?
+            }
+            Err(e) => {
+                eprintln!("[serve] PJRT backend unavailable ({e:#}); \
+                           serving on the host reference executor");
+                Backend::reference(bucket.f_in, bucket.hidden,
+                                   bucket.classes, seed)
+            }
+        };
+        Ok(Worker {
+            backend,
+            plan,
+            h0,
+            f_in: bucket.f_in,
+            classes: bucket.classes,
+            hidden: bucket.hidden,
+            served_session_plan: false,
+        })
+    }
+
+    fn xla_setup(runtime: Runtime, artifact: &str,
+                 statics: &[(String, HostTensor)],
+                 seed: u64) -> Result<Backend> {
         let exe = runtime.compile(artifact)?;
         if exe.spec.kind != "infer" {
-            return Err(anyhow!("{artifact} is not an infer artifact"));
+            bail!("{artifact} is not an infer artifact");
         }
-        let bucket = &exe.spec.bucket;
-        let (n_pad, f_in, classes) =
-            (bucket.n_pad, bucket.f_in, bucket.classes);
-
-        let param_specs: Vec<_> = exe.spec.inputs.iter()
-            .filter(|s| !matches!(s.name.as_str(), "h0" | "deg")
-                    && !s.name.starts_with("lvl_")
-                    && !s.name.starts_with("band"))
+        let param_specs: Vec<TensorSpec> = exe.spec.inputs.iter()
+            .filter(|s| s.name != "h0" && !is_plan_tensor(&s.name))
             .cloned().collect();
         let params = init_params(&param_specs, seed);
 
@@ -264,9 +619,7 @@ impl Worker {
         for (i, s) in exe.spec.inputs.iter().enumerate() {
             if s.name == "h0" {
                 h0_index = Some(i);
-            } else if s.name == "deg" || s.name.starts_with("lvl_")
-                || s.name.starts_with("band")
-            {
+            } else if is_plan_tensor(&s.name) {
                 let t = statics.iter().find(|(n, _)| *n == s.name)
                     .map(|(_, t)| t)
                     .ok_or_else(|| anyhow!("workload missing {:?}",
@@ -279,67 +632,238 @@ impl Worker {
         }
         let h0_index =
             h0_index.ok_or_else(|| anyhow!("artifact lacks h0 input"))?;
-        Ok(Worker { runtime, exe, static_slots, h0_index, h0, n_pad,
-                    f_in, classes })
+        let prefix = artifact.find("_infer_")
+            .map(|p| artifact[..p + "_infer_".len()].to_string())
+            .unwrap_or_default();
+        Ok(Backend::Xla(XlaState { runtime, exe, static_slots,
+                                   h0_index, params, prefix }))
     }
 
-    /// Repair one topology update against the resident engine (local
-    /// repair is microseconds; rebuilds go to the engine's background
-    /// thread), replying if the client asked for one.
-    fn handle_update(stream: &mut Option<StreamEngine>,
-                     req: UpdateRequest) {
-        let resp = match stream.as_mut() {
-            Some(eng) => {
-                let rep = eng.apply(req.delta);
-                UpdateResponse {
-                    seq: rep.seq,
-                    outcome: rep.outcome,
-                    rebuild: rep.rebuild,
-                    cost_core: rep.cost_core,
-                    latency: req.submitted.elapsed(),
-                }
-            }
-            None => UpdateResponse {
-                seq: 0,
-                outcome: ApplyOutcome::NoOp,
-                rebuild: RebuildEvent::None,
-                cost_core: 0,
-                latency: req.submitted.elapsed(),
-            },
+    /// Receipt-time validation against the *served* plan.
+    fn validate(&self, r: &ScoreRequest) -> Option<ScoreReject> {
+        if (r.node as usize) >= self.plan.n {
+            return Some(ScoreReject::NodeOutOfRange {
+                node: r.node,
+                n: self.plan.n,
+            });
+        }
+        if !r.features.is_empty() && r.features.len() != self.f_in {
+            return Some(ScoreReject::FeatureLen {
+                got: r.features.len(),
+                want: self.f_in,
+            });
+        }
+        None
+    }
+
+    fn reject(r: ScoreRequest, reject: ScoreReject, c: &mut Counters) {
+        c.rejected += 1;
+        let _ = r.reply.send(ScoreResponse::Err(ScoreError {
+            node: r.node,
+            reject,
+            latency: r.submitted.elapsed(),
+        }));
+    }
+
+    /// Apply the buffered updates, coalesced by shard (see
+    /// [`coalesce_order`]), to both engine and session, replying to
+    /// each; then run the drift/swap check.
+    fn flush_updates(&mut self, resident: &mut Option<Resident>,
+                     pending: &mut Vec<UpdateRequest>,
+                     c: &mut Counters) {
+        if pending.is_empty() {
+            return;
+        }
+        let deltas: Vec<GraphDelta> =
+            pending.iter().map(|u| u.delta).collect();
+        let order = match resident.as_ref() {
+            Some(res) => coalesce_order(&deltas, |v| {
+                res.session.shard_of_checked(v).unwrap_or(u32::MAX)
+            }),
+            None => (0..deltas.len()).collect(),
         };
-        if let Some(tx) = req.reply {
-            let _ = tx.send(resp);
+        let mut reqs: Vec<Option<UpdateRequest>> =
+            pending.drain(..).map(Some).collect();
+        for i in order {
+            let req = reqs[i].take().expect("order is a permutation");
+            let resp = match resident.as_mut() {
+                Some(res) => {
+                    let rep = res.engine.apply(req.delta);
+                    res.session.apply(req.delta);
+                    UpdateResponse {
+                        seq: rep.seq,
+                        outcome: rep.outcome,
+                        rebuild: rep.rebuild,
+                        cost_core: rep.cost_core,
+                        latency: req.submitted.elapsed(),
+                    }
+                }
+                None => UpdateResponse {
+                    seq: 0,
+                    outcome: ApplyOutcome::NoOp,
+                    rebuild: RebuildEvent::None,
+                    cost_core: 0,
+                    latency: req.submitted.elapsed(),
+                },
+            };
+            c.updates += 1;
+            if let Some(tx) = req.reply {
+                let _ = tx.send(resp);
+            }
+        }
+        c.update_batches += 1;
+        self.maybe_swap(resident, c);
+    }
+
+    /// Drift check + session-fed hot swap. The dirty-shard re-plan
+    /// runs synchronously here — it is the cheap per-shard unit of
+    /// work the cache was built for, not a whole-graph search.
+    fn maybe_swap(&mut self, resident: &mut Option<Resident>,
+                  c: &mut Counters) {
+        let Some(res) = resident.as_mut() else { return };
+        if !res.swap.swap_plans || res.engine.rebuild_in_flight() {
+            return;
+        }
+        if res.engine.drift() <= res.threshold {
+            return;
+        }
+        // Nothing changed since the plan we already serve: skip.
+        if self.served_session_plan && res.session.plan_current() {
+            return;
+        }
+        let (hag, plan) = res.session.plan();
+        if Arc::ptr_eq(&plan, &self.plan) {
+            self.served_session_plan = true;
+            return;
+        }
+        if *plan == *self.plan {
+            // Tensor-identical (e.g. the initial lower's plan under a
+            // different Arc): adopt the handle, no serving-state churn.
+            self.plan = plan;
+            self.served_session_plan = true;
+            return;
+        }
+        // Install into the engine only once the serving state actually
+        // swapped: an install resets the drift tracker, and resetting
+        // it while still serving the old plan would stop tracking that
+        // plan's (unbounded) staleness.
+        match self.swap_to(plan) {
+            Ok(true) => {
+                res.engine.install_hag(&hag);
+                c.plan_swaps += 1;
+                self.served_session_plan = true;
+            }
+            Ok(false) => c.swaps_skipped += 1,
+            Err(e) => {
+                eprintln!("[serve] plan swap failed: {e:#}");
+                c.swaps_skipped += 1;
+            }
         }
     }
 
-    fn batcher_loop(&mut self, rx: Receiver<ServerMsg>,
-                    inv_perm: &[u32], policy: BatchPolicy,
-                    mut stream: Option<StreamEngine>) -> ServeStats {
-        let mut stats_lat: Vec<f64> = Vec::new();
-        let mut stats_exec: Vec<f64> = Vec::new();
-        let mut batches = 0usize;
-        let mut requests = 0usize;
-        let mut updates = 0usize;
-        let t_start = Instant::now();
-        'serve: loop {
-            // Collect a batch: first scoring request blocks, the rest
-            // race the deadline. Updates are repaired inline as they
-            // arrive — they never block scoring and never count
-            // toward the batch.
-            let first;
-            loop {
-                match rx.recv() {
-                    Ok(ServerMsg::Score(r)) => {
-                        first = r;
-                        break;
+    /// The swap protocol: re-derive `h0` under the new permutation and
+    /// the plan-derived statics from the new plan, without restarting
+    /// the thread. Reference backend: tensors only. XLA backend: reuse
+    /// the executable when the plan still fits its bucket (re-upload
+    /// `deg`/`lvl_*`/`band*`), else recompile against a matching
+    /// bucket artifact when the manifest has one; `Ok(false)` = no
+    /// compatible artifact, keep serving the old plan.
+    fn swap_to(&mut self, plan: Arc<ExecutionPlan>) -> Result<bool> {
+        let h0_new = repermute_h0(&self.plan, &plan, &self.h0,
+                                  self.f_in);
+        match &mut self.backend {
+            Backend::Reference(_) => {}
+            Backend::Xla(state) => {
+                if state.exe.spec.bucket.fits(&plan) {
+                    // Upload every replacement before touching
+                    // static_slots: a mid-loop failure must not leave
+                    // the executable bound to a mix of old- and
+                    // new-plan tensors.
+                    let tensors = plan_tensors(&plan);
+                    let mut fresh = Vec::new();
+                    for (pos, (i, _)) in
+                        state.static_slots.iter().enumerate()
+                    {
+                        let spec = &state.exe.spec.inputs[*i];
+                        if !is_plan_tensor(&spec.name) {
+                            continue;
+                        }
+                        let t = tensors.iter()
+                            .find(|(n, _)| *n == spec.name)
+                            .map(|(_, t)| t)
+                            .ok_or_else(|| anyhow!(
+                                "swapped plan lacks tensor {:?}",
+                                spec.name))?;
+                        if t.shape() != spec.shape.as_slice() {
+                            bail!("tensor {:?}: plan shape {:?} != \
+                                   artifact shape {:?}",
+                                  spec.name, t.shape(), spec.shape);
+                        }
+                        fresh.push((pos, state.runtime.upload(t)?));
                     }
-                    Ok(ServerMsg::Update(u)) => {
-                        updates += 1;
-                        Self::handle_update(&mut stream, u);
+                    for (pos, buf) in fresh {
+                        state.static_slots[pos].1 = buf;
                     }
-                    Err(_) => break 'serve,
+                } else {
+                    let name = find_matching_artifact(
+                        &state.runtime, &state.prefix, &plan,
+                        &state.exe.spec.name);
+                    let Some(name) = name else {
+                        return Ok(false);
+                    };
+                    rebind_artifact(state, &name, &plan)?;
                 }
             }
+            #[cfg(test)]
+            Backend::Broken => return Ok(false),
+        }
+        self.h0 = h0_new;
+        self.plan = plan;
+        Ok(true)
+    }
+
+    fn batcher_loop(&mut self, rx: Receiver<ServerMsg>,
+                    policy: BatchPolicy,
+                    mut resident: Option<Resident>) -> ServeOutcome {
+        let mut c = Counters::default();
+        let mut pending: Vec<UpdateRequest> = Vec::new();
+        let max_pending = resident.as_ref()
+            .map_or(64, |r| r.swap.max_pending).max(1);
+        let t_start = Instant::now();
+        'serve: loop {
+            // Collect a batch: wait for the first valid scoring
+            // request. With updates pending, wait at most max_wait so
+            // their coalesced flush (and replies) stay bounded; with
+            // nothing buffered, block — an idle server must not
+            // busy-poll.
+            let first = loop {
+                let msg = if pending.is_empty() {
+                    rx.recv()
+                        .map_err(|_| RecvTimeoutError::Disconnected)
+                } else {
+                    rx.recv_timeout(policy.max_wait)
+                };
+                match msg {
+                    Ok(ServerMsg::Score(r)) => {
+                        match self.validate(&r) {
+                            Some(why) => Self::reject(r, why, &mut c),
+                            None => break r,
+                        }
+                    }
+                    Ok(ServerMsg::Update(u)) => {
+                        pending.push(u);
+                        if pending.len() >= max_pending {
+                            self.flush_updates(&mut resident,
+                                               &mut pending, &mut c);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.flush_updates(&mut resident, &mut pending,
+                                           &mut c);
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break 'serve,
+                }
+            };
             let mut batch = vec![first];
             let deadline = Instant::now() + policy.max_wait;
             while batch.len() < policy.max_batch {
@@ -349,167 +873,574 @@ impl Worker {
                     break;
                 }
                 match rx.recv_timeout(left) {
-                    Ok(ServerMsg::Score(r)) => batch.push(r),
-                    Ok(ServerMsg::Update(u)) => {
-                        updates += 1;
-                        Self::handle_update(&mut stream, u);
-                    }
+                    Ok(ServerMsg::Score(r)) => match self.validate(&r) {
+                        Some(why) => Self::reject(r, why, &mut c),
+                        None => batch.push(r),
+                    },
+                    // Buffer only — updates never stretch the
+                    // latency-critical batch window; they flush next.
+                    Ok(ServerMsg::Update(u)) => pending.push(u),
                     Err(RecvTimeoutError::Timeout)
                     | Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            // Land any finished background re-search between batches.
-            if let Some(eng) = stream.as_mut() {
-                eng.poll_rebuild();
+            // Between batches: land any finished background
+            // re-search, then the coalesced flush (+ swap check).
+            if let Some(res) = resident.as_mut() {
+                res.engine.poll_rebuild();
             }
+            self.flush_updates(&mut resident, &mut pending, &mut c);
             // Apply feature updates to the resident (permuted) h0.
+            // Safe: nodes were validated and n only ever grows.
             for r in &batch {
                 if !r.features.is_empty() {
-                    let new = inv_perm[r.node as usize] as usize;
+                    let new = self.plan.inv_perm[r.node as usize]
+                        as usize;
                     self.h0[new * self.f_in..(new + 1) * self.f_in]
                         .copy_from_slice(&r.features);
                 }
             }
             let te = Instant::now();
             let result = self.run_batch();
-            let exec_ms = te.elapsed().as_secs_f64() * 1e3;
-            stats_exec.push(exec_ms);
-            batches += 1;
+            c.exec_ms.push(te.elapsed().as_secs_f64() * 1e3);
+            c.batches += 1;
             match result {
                 Ok(logits) => {
                     for r in batch {
-                        requests += 1;
-                        let new = inv_perm[r.node as usize] as usize;
+                        c.requests += 1;
+                        let new = self.plan.inv_perm[r.node as usize]
+                            as usize;
                         let row = logits[new * self.classes
                             ..(new + 1) * self.classes].to_vec();
                         let latency = r.submitted.elapsed();
-                        stats_lat.push(latency.as_secs_f64() * 1e3);
-                        let _ = r.reply.send(ScoreResponse {
-                            node: r.node,
-                            logits: row,
-                            latency,
-                        });
+                        c.lat_ms.push(latency.as_secs_f64() * 1e3);
+                        let _ = r.reply.send(ScoreResponse::Ok(
+                            ScoreOk { node: r.node, logits: row,
+                                      latency }));
                     }
                 }
                 Err(e) => {
+                    // Explicit error outcome per request: clients can
+                    // tell "server rejected" from "server died".
                     eprintln!("[serve] batch failed: {e:#}");
-                    // drop replies; clients observe a closed channel
+                    c.exec_failures += 1;
+                    let message = format!("{e:#}");
+                    for r in batch {
+                        Self::reject_failed(r, &message, &mut c);
+                    }
                 }
             }
         }
-        let rebuild_swaps =
-            stream.as_ref().map_or(0, |e| e.stats().rebuild_swaps);
-        finalize_stats(stats_lat, stats_exec, batches, requests,
-                       updates, rebuild_swaps, t_start.elapsed())
+        // Drain leftovers, land in-flight rebuilds, and run the
+        // serving-path plan contract check.
+        self.flush_updates(&mut resident, &mut pending, &mut c);
+        let mut plan_matches_fresh = None;
+        if let Some(res) = resident.as_mut() {
+            res.engine.finish_rebuild();
+            if res.swap.swap_plans {
+                let (hag_c, plan_c) = res.session.plan();
+                let (hag_f, plan_f) = res.session.plan_fresh();
+                plan_matches_fresh =
+                    Some(*hag_c == hag_f && *plan_c == plan_f);
+            }
+        }
+        let stats = c.finalize(t_start.elapsed(), resident.as_ref(),
+                               plan_matches_fresh);
+        ServeOutcome { stats, resident }
+    }
+
+    fn reject_failed(r: ScoreRequest, message: &str, c: &mut Counters) {
+        c.failed += 1;
+        let _ = r.reply.send(ScoreResponse::Err(ScoreError {
+            node: r.node,
+            reject: ScoreReject::ExecFailed {
+                message: message.to_string(),
+            },
+            latency: r.submitted.elapsed(),
+        }));
     }
 
     fn run_batch(&self) -> Result<Vec<f32>> {
-        let h0_buf = self.runtime.upload(&HostTensor::f32(
-            self.h0.clone(), &[self.n_pad, self.f_in]))?;
-        let n_inputs = self.exe.spec.inputs.len();
+        match &self.backend {
+            Backend::Xla(state) => self.run_xla(state),
+            Backend::Reference(state) => Ok(self.run_reference(state)),
+            #[cfg(test)]
+            Backend::Broken => Err(anyhow!("broken test backend")),
+        }
+    }
+
+    fn run_xla(&self, state: &XlaState) -> Result<Vec<f32>> {
+        let h0_buf = state.runtime.upload(&HostTensor::f32(
+            self.h0.clone(), &[self.plan.n_pad, self.f_in]))?;
+        let n_inputs = state.exe.spec.inputs.len();
         let mut slots: Vec<Option<&xla::PjRtBuffer>> =
             vec![None; n_inputs];
-        for (i, b) in &self.static_slots {
+        for (i, b) in &state.static_slots {
             slots[*i] = Some(b);
         }
-        slots[self.h0_index] = Some(&h0_buf);
+        slots[state.h0_index] = Some(&h0_buf);
         let args: Vec<&xla::PjRtBuffer> = slots
             .into_iter()
             .enumerate()
             .map(|(i, o)| o.ok_or_else(|| anyhow!("input {i} unbound")))
             .collect::<Result<_>>()?;
-        let outs = self.runtime.execute(&self.exe, &args)?;
+        let outs = state.runtime.execute(&state.exe, &args)?;
         Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    /// model.py `gcn_forward` on the host, entirely in permuted space:
+    /// `z = (agg(h) + h) / (deg + 1)`, two layers, logits last.
+    fn run_reference(&self, state: &RefState) -> Vec<f32> {
+        let p = &*self.plan;
+        let n_pad = p.n_pad;
+        let norm: Vec<f32> =
+            p.deg.iter().map(|&d| 1.0 / (d + 1.0)).collect();
+        let layer_in = |h: &[f32], f: usize| -> Vec<f32> {
+            let a = reference_aggregate(p, h, f);
+            let mut z = vec![0f32; n_pad * f];
+            for v in 0..n_pad {
+                for k in 0..f {
+                    z[v * f + k] = (a[v * f + k] + h[v * f + k])
+                        * norm[v];
+                }
+            }
+            z
+        };
+        let z1 = layer_in(&self.h0, self.f_in);
+        let mut h1 = matmul_bias(&z1, &state.w1, &state.b1, n_pad,
+                                 self.f_in, self.hidden);
+        for x in h1.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        let z2 = layer_in(&h1, self.hidden);
+        matmul_bias(&z2, &state.w2, &state.b2, n_pad, self.hidden,
+                    self.classes)
+    }
+}
+
+/// Execute the plan's sum-aggregation (levels then bands) over
+/// `[n_pad, f]` row-major activations — the host mirror of
+/// model.py `hag_aggregate_sum`.
+fn reference_aggregate(plan: &ExecutionPlan, h: &[f32],
+                       f: usize) -> Vec<f32> {
+    let m = plan.m_pad();
+    let mut buf = vec![0f32; m * f];
+    buf[..plan.n_pad * f].copy_from_slice(&h[..plan.n_pad * f]);
+    for l in 0..plan.levels {
+        let base = plan.n_pad + l * plan.l_pad;
+        for j in 0..plan.l_pad {
+            let li = plan.lvl_left[l * plan.l_pad + j] as usize;
+            let ri = plan.lvl_right[l * plan.l_pad + j] as usize;
+            for k in 0..f {
+                buf[(base + j) * f + k] =
+                    buf[li * f + k] + buf[ri * f + k];
+            }
+        }
+    }
+    let mut out = vec![0f32; plan.n_pad * f];
+    let mut row0 = 0usize;
+    for (bi, &(nb, nnzb)) in plan.bands.iter().enumerate() {
+        for b in 0..nb {
+            for j in 0..nnzb {
+                let col =
+                    plan.band_cols[bi][b * nnzb + j] as usize;
+                let r = plan.band_rows[bi][b * nnzb + j] as usize;
+                let dst = (row0 + b * plan.br + r) * f;
+                for k in 0..f {
+                    out[dst + k] += buf[col * f + k];
+                }
+            }
+        }
+        row0 += nb * plan.br;
+    }
+    out
+}
+
+/// `out[n, m] = x[n, k] @ w[k, m] + b[m]`, row-major f32.
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], n: usize, k: usize,
+               m: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let row = &x[i * k..(i + 1) * k];
+        let dst = &mut out[i * m..(i + 1) * m];
+        dst.copy_from_slice(b);
+        for (t, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[t * m..(t + 1) * m];
+            for (d, &wv) in dst.iter_mut().zip(wrow) {
+                *d += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// A manifest infer artifact (same model prefix) whose bucket fits the
+/// swapped plan — the recompile target when the pinned bucket no
+/// longer matches.
+fn find_matching_artifact(runtime: &Runtime, prefix: &str,
+                          plan: &ExecutionPlan,
+                          current: &str) -> Option<String> {
+    if prefix.is_empty() {
+        return None;
+    }
+    runtime
+        .artifact_names()
+        .into_iter()
+        .filter(|n| *n != current && n.starts_with(prefix))
+        .filter_map(|n| runtime.spec(n).ok())
+        .find(|s| s.kind == "infer" && s.bucket.fits(plan))
+        .map(|s| s.name.clone())
+}
+
+/// Recompile + rebind the XLA state against `artifact` for `plan`:
+/// params re-uploaded from their host copies, plan tensors re-derived.
+fn rebind_artifact(state: &mut XlaState, artifact: &str,
+                   plan: &ExecutionPlan) -> Result<()> {
+    let exe = state.runtime.compile(artifact)?;
+    if exe.spec.kind != "infer" {
+        bail!("{artifact} is not an infer artifact");
+    }
+    let tensors = plan_tensors(plan);
+    let mut static_slots = Vec::new();
+    let mut h0_index = None;
+    let mut pi = 0usize;
+    for (i, s) in exe.spec.inputs.iter().enumerate() {
+        if s.name == "h0" {
+            h0_index = Some(i);
+        } else if is_plan_tensor(&s.name) {
+            let t = tensors.iter().find(|(n, _)| *n == s.name)
+                .map(|(_, t)| t)
+                .ok_or_else(|| anyhow!("swapped plan lacks tensor \
+                                        {:?}", s.name))?;
+            if t.shape() != s.shape.as_slice() {
+                bail!("tensor {:?}: plan shape {:?} != artifact shape \
+                       {:?}", s.name, t.shape(), s.shape);
+            }
+            static_slots.push((i, state.runtime.upload(t)?));
+        } else {
+            let t = state.params.get(pi).ok_or_else(|| {
+                anyhow!("artifact {artifact} wants more params than \
+                         {:?} had", state.exe.spec.name)
+            })?;
+            if t.shape() != s.shape.as_slice() {
+                bail!("param {:?} shape {:?} != {:?} across buckets",
+                      s.name, t.shape(), s.shape);
+            }
+            static_slots.push((i, state.runtime.upload(t)?));
+            pi += 1;
+        }
+    }
+    state.h0_index =
+        h0_index.ok_or_else(|| anyhow!("artifact lacks h0 input"))?;
+    state.static_slots = static_slots;
+    state.exe = exe;
+    Ok(())
+}
+
+/// Batcher-loop accumulators, folded into [`ServeStats`] at shutdown.
+#[derive(Default)]
+struct Counters {
+    requests: usize,
+    rejected: usize,
+    failed: usize,
+    batches: usize,
+    updates: usize,
+    update_batches: usize,
+    plan_swaps: usize,
+    swaps_skipped: usize,
+    exec_failures: usize,
+    lat_ms: Vec<f64>,
+    exec_ms: Vec<f64>,
+}
+
+impl Counters {
+    fn finalize(self, elapsed: Duration, resident: Option<&Resident>,
+                plan_matches_fresh: Option<bool>) -> ServeStats {
+        let mut lat = self.lat_ms;
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (shard_searches, shard_cache_hits, rebuild_swaps) =
+            resident.map_or((0, 0, 0), |r| {
+                (r.session.stats().shard_searches,
+                 r.session.stats().shard_cache_hits,
+                 r.engine.stats().rebuild_swaps)
+            });
+        ServeStats {
+            requests: self.requests,
+            rejected: self.rejected,
+            failed: self.failed,
+            batches: self.batches,
+            mean_batch: if self.batches == 0 {
+                0.0
+            } else {
+                (self.requests + self.failed) as f64
+                    / self.batches as f64
+            },
+            p50_ms: percentile(&lat, 0.5),
+            p99_ms: percentile(&lat, 0.99),
+            mean_exec_ms: if self.exec_ms.is_empty() {
+                f64::NAN
+            } else {
+                self.exec_ms.iter().sum::<f64>()
+                    / self.exec_ms.len() as f64
+            },
+            throughput_rps: self.requests as f64
+                / elapsed.as_secs_f64().max(1e-9),
+            updates: self.updates,
+            update_batches: self.update_batches,
+            rebuild_swaps,
+            plan_swaps: self.plan_swaps,
+            swaps_skipped: self.swaps_skipped,
+            exec_failures: self.exec_failures,
+            shard_searches,
+            shard_cache_hits,
+            plan_matches_fresh,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::Graph;
-    use crate::incremental::StreamConfig;
+    use crate::partition::test_graphs::clique_ring;
+    use crate::session::LowerSpec;
 
-    // The scoring path needs compiled artifacts (tests/integration.rs
-    // covers it, self-skipping without them); the update path is pure
-    // engine work and is testable here without XLA.
+    fn reference_worker(g: &Graph, f_in: usize, hidden: usize,
+                        classes: usize) -> (Worker, Session) {
+        let mut s = Session::from_graph(g, LowerSpec::default());
+        let (_, plan) = s.plan();
+        let h0 = vec![0f32; plan.n_pad * f_in];
+        (Worker {
+            backend: Backend::reference(f_in, hidden, classes, 7),
+            plan,
+            h0,
+            f_in,
+            classes,
+            hidden,
+            served_session_plan: false,
+        }, s)
+    }
 
-    #[test]
-    fn handle_update_replies_with_engine_state() {
-        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
-        let mut stream =
-            Some(StreamEngine::new(&g, StreamConfig::default()));
-        let (tx, rx) = update_oneshot();
-        Worker::handle_update(&mut stream, UpdateRequest {
-            delta: GraphDelta::EdgeInsert { src: 0, dst: 2 },
-            reply: Some(tx),
-            submitted: Instant::now(),
-        });
-        let resp = rx.recv().unwrap();
-        assert_eq!(resp.seq, 1);
-        assert_eq!(resp.outcome, ApplyOutcome::Inserted);
-        assert_eq!(resp.rebuild, RebuildEvent::None);
-        let eng = stream.as_ref().unwrap();
-        assert_eq!(resp.cost_core, eng.cost_core());
-        assert_eq!(eng.e(), g.e() + 1);
+    fn score(node: u32, features: Vec<f32>)
+             -> (ScoreRequest, Receiver<ScoreResponse>) {
+        let (tx, rx) = oneshot();
+        (ScoreRequest { node, features, reply: tx,
+                        submitted: Instant::now() }, rx)
     }
 
     #[test]
-    fn handle_update_without_engine_replies_sentinel() {
-        let mut stream: Option<StreamEngine> = None;
+    fn percentile_is_nearest_rank() {
+        let v: Vec<f64> = (1..=10).map(|x| x as f64).collect();
+        assert_eq!(percentile(&v, 0.5), 5.0);
+        assert_eq!(percentile(&v, 0.99), 10.0, "p99 of 10 is the max");
+        assert_eq!(percentile(&v, 1.0), 10.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        let w: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&w, 0.99), 99.0);
+        assert_eq!(percentile(&w, 0.5), 50.0);
+        assert!(percentile(&[], 0.5).is_nan());
+        assert_eq!(percentile(&[42.0], 0.99), 42.0);
+    }
+
+    #[test]
+    fn coalesce_groups_by_shard_with_node_add_barriers() {
+        use GraphDelta::*;
+        // shard(v) = v % 2
+        let deltas = vec![
+            EdgeInsert { src: 9, dst: 1 }, // shard 1
+            EdgeInsert { src: 9, dst: 2 }, // shard 0
+            EdgeDelete { src: 9, dst: 3 }, // shard 1
+            NodeAdd,                       // barrier
+            EdgeInsert { src: 9, dst: 4 }, // shard 0
+            EdgeInsert { src: 9, dst: 5 }, // shard 1
+        ];
+        let order = coalesce_order(&deltas, |v| v % 2);
+        assert_eq!(order, vec![1, 0, 2, 3, 4, 5]);
+        // same-dst deltas keep arrival order (same group, stable)
+        let same = vec![
+            EdgeInsert { src: 0, dst: 7 },
+            EdgeDelete { src: 0, dst: 7 },
+            EdgeInsert { src: 1, dst: 7 },
+        ];
+        let order = coalesce_order(&same, |_| 3);
+        assert_eq!(order, vec![0, 1, 2]);
+        // empty input
+        assert!(coalesce_order(&[], |v| v).is_empty());
+    }
+
+    #[test]
+    fn flush_applies_to_engine_and_session_and_replies() {
+        let g = clique_ring(4, 5);
+        let mut sess = Session::from_graph(&g, LowerSpec::default());
+        let (hag, _) = sess.plan();
+        let resident = Resident::new(sess, &g, &hag,
+                                     SwapPolicy::default());
+        let mut resident = Some(resident);
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
         let (tx, rx) = update_oneshot();
-        Worker::handle_update(&mut stream, UpdateRequest {
+        let mut pending = vec![UpdateRequest {
+            delta: GraphDelta::EdgeInsert { src: 0, dst: 7 },
+            reply: Some(tx),
+            submitted: Instant::now(),
+        }];
+        let mut c = Counters::default();
+        w.flush_updates(&mut resident, &mut pending, &mut c);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.seq, 1);
+        assert_eq!(resp.outcome, ApplyOutcome::Inserted);
+        let res = resident.as_ref().unwrap();
+        assert_eq!(res.engine.e(), g.e() + 1);
+        assert_eq!(res.session.e(), g.e() + 1);
+        assert_eq!(resp.cost_core, res.engine.cost_core());
+        assert_eq!(c.updates, 1);
+        assert_eq!(c.update_batches, 1);
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn flush_without_resident_replies_sentinel() {
+        let g = clique_ring(3, 4);
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
+        let (tx, rx) = update_oneshot();
+        let mut pending = vec![UpdateRequest {
             delta: GraphDelta::NodeAdd,
             reply: Some(tx),
             submitted: Instant::now(),
-        });
+        }];
+        let mut c = Counters::default();
+        w.flush_updates(&mut None, &mut pending, &mut c);
         let resp = rx.recv().unwrap();
-        assert_eq!(resp.seq, 0, "no-engine sentinel");
+        assert_eq!(resp.seq, 0, "no-resident sentinel");
         assert_eq!(resp.outcome, ApplyOutcome::NoOp);
     }
 
     #[test]
-    fn handle_update_fire_and_forget_does_not_block() {
-        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
-        let mut stream =
-            Some(StreamEngine::new(&g, StreamConfig::default()));
-        Worker::handle_update(&mut stream, UpdateRequest {
-            delta: GraphDelta::EdgeDelete { src: 0, dst: 1 },
+    fn flush_fire_and_forget_does_not_block() {
+        let g = clique_ring(3, 4);
+        let mut sess = Session::from_graph(&g, LowerSpec::default());
+        let (hag, _) = sess.plan();
+        let mut resident = Some(Resident::new(sess, &g, &hag,
+                                              SwapPolicy::default()));
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
+        let u = g.neighbors(0)[0];
+        let mut pending = vec![UpdateRequest {
+            delta: GraphDelta::EdgeDelete { src: u, dst: 0 },
             reply: None,
             submitted: Instant::now(),
-        });
-        assert_eq!(stream.as_ref().unwrap().e(), g.e() - 1);
+        }];
+        let mut c = Counters::default();
+        w.flush_updates(&mut resident, &mut pending, &mut c);
+        assert_eq!(resident.as_ref().unwrap().engine.e(), g.e() - 1);
     }
-}
 
-fn finalize_stats(mut lat: Vec<f64>, exec: Vec<f64>, batches: usize,
-                  requests: usize, updates: usize,
-                  rebuild_swaps: usize,
-                  elapsed: Duration) -> ServeStats {
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| -> f64 {
-        if lat.is_empty() {
-            f64::NAN
-        } else {
-            lat[((lat.len() as f64 - 1.0) * p) as usize]
+    #[test]
+    fn hostile_requests_rejected_and_worker_survives() {
+        let g = clique_ring(4, 5);
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
+        let n = g.n();
+        let (tx, rx) = sync_channel::<ServerMsg>(16);
+        let (r1, rx1) = score(n as u32 + 100, vec![]);
+        let (r2, rx2) = score(0, vec![1.0; 3]); // f_in is 4
+        let (r3, rx3) = score(1, vec![0.5; 4]); // valid
+        tx.send(ServerMsg::Score(r1)).unwrap();
+        tx.send(ServerMsg::Score(r2)).unwrap();
+        tx.send(ServerMsg::Score(r3)).unwrap();
+        drop(tx);
+        let out = w.batcher_loop(rx, BatchPolicy::default(), None);
+        match rx1.recv().unwrap() {
+            ScoreResponse::Err(e) => assert_eq!(
+                e.reject,
+                ScoreReject::NodeOutOfRange { node: n as u32 + 100, n }),
+            r => panic!("expected rejection, got {r:?}"),
         }
-    };
-    ServeStats {
-        requests,
-        batches,
-        mean_batch: if batches == 0 {
-            0.0
-        } else {
-            requests as f64 / batches as f64
-        },
-        p50_ms: pct(0.5),
-        p99_ms: pct(0.99),
-        mean_exec_ms: if exec.is_empty() {
-            f64::NAN
-        } else {
-            exec.iter().sum::<f64>() / exec.len() as f64
-        },
-        throughput_rps: requests as f64 / elapsed.as_secs_f64().max(1e-9),
-        updates,
-        rebuild_swaps,
+        match rx2.recv().unwrap() {
+            ScoreResponse::Err(e) => assert_eq!(
+                e.reject, ScoreReject::FeatureLen { got: 3, want: 4 }),
+            r => panic!("expected rejection, got {r:?}"),
+        }
+        let ok = rx3.recv().unwrap().into_result()
+            .expect("valid request scored after rejects");
+        assert_eq!(ok.logits.len(), 3);
+        assert!(ok.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(out.stats.rejected, 2);
+        assert_eq!(out.stats.requests, 1);
+        assert_eq!(out.stats.exec_failures, 0);
+    }
+
+    #[test]
+    fn exec_failure_replies_error_and_keeps_worker_alive() {
+        let g = clique_ring(3, 4);
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
+        w.backend = Backend::Broken;
+        let (tx, rx) = sync_channel::<ServerMsg>(16);
+        let (r1, rx1) = score(0, vec![0.1; 4]);
+        let (r2, rx2) = score(1, vec![0.2; 4]);
+        tx.send(ServerMsg::Score(r1)).unwrap();
+        tx.send(ServerMsg::Score(r2)).unwrap();
+        drop(tx);
+        // max_batch 1 => two batches => two independent failures, and
+        // the second proves the worker survived the first
+        let out = w.batcher_loop(
+            rx,
+            BatchPolicy { max_batch: 1, ..BatchPolicy::default() },
+            None);
+        for r in [rx1.recv().unwrap(), rx2.recv().unwrap()] {
+            match r {
+                ScoreResponse::Err(e) => assert!(matches!(
+                    e.reject, ScoreReject::ExecFailed { .. })),
+                r => panic!("expected ExecFailed, got {r:?}"),
+            }
+        }
+        assert_eq!(out.stats.exec_failures, 2);
+        assert_eq!(out.stats.failed, 2);
+        assert_eq!(out.stats.requests, 0);
+    }
+
+    #[test]
+    fn reference_aggregate_matches_graph_sums() {
+        let g = clique_ring(3, 5);
+        let (w, _) = reference_worker(&g, 1, 4, 2);
+        let p = &w.plan;
+        // h[new] = old id of that row, one feature column
+        let mut h = vec![0f32; p.n_pad];
+        for new in 0..p.n {
+            h[new] = p.perm[new] as f32;
+        }
+        let a = reference_aggregate(p, &h, 1);
+        for (v, ns) in g.iter() {
+            let want: f32 = ns.iter().map(|&u| u as f32).sum();
+            let got = a[p.inv_perm[v as usize] as usize];
+            assert!((got - want).abs() < 1e-4,
+                    "node {v}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn repermute_h0_moves_rows_and_zeroes_new_nodes() {
+        let g = clique_ring(3, 4);
+        let mut s = Session::from_graph(&g, LowerSpec::default());
+        let (_, old) = s.plan();
+        assert!(s.apply(GraphDelta::NodeAdd));
+        let v = (s.n() - 1) as u32;
+        assert!(s.apply(GraphDelta::EdgeInsert { src: 0, dst: v }));
+        let (_, new) = s.plan();
+        let f = 2usize;
+        let mut h0 = vec![0f32; old.n_pad * f];
+        for vv in 0..old.n {
+            let row = old.inv_perm[vv] as usize;
+            h0[row * f] = vv as f32 + 1.0;
+        }
+        let out = repermute_h0(&old, &new, &h0, f);
+        assert_eq!(out.len(), new.n_pad * f);
+        for vv in 0..old.n {
+            let row = new.inv_perm[vv] as usize;
+            assert_eq!(out[row * f], vv as f32 + 1.0);
+        }
+        let row = new.inv_perm[v as usize] as usize;
+        assert_eq!(out[row * f], 0.0, "added node starts zeroed");
     }
 }

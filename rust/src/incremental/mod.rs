@@ -178,20 +178,29 @@ impl StreamEngine {
     pub fn new(g: &Graph, cfg: StreamConfig) -> Self {
         let t0 = std::time::Instant::now();
         let hag = run_search(g, &cfg);
+        let mut eng = Self::from_hag(g, cfg, &hag);
+        eng.stats.init_search_ms = t0.elapsed().as_secs_f64() * 1e3;
+        eng
+    }
+
+    /// Stand up the engine over `g` adopting an externally searched
+    /// HAG — e.g. the one a [`Session`](crate::session::Session) just
+    /// lowered for serving — instead of paying a second initial
+    /// search. `hag` must be a Set-AGGREGATE HAG over `g`.
+    pub fn from_hag(g: &Graph, cfg: StreamConfig, hag: &Hag) -> Self {
+        assert_eq!(hag.n, g.n(), "adopted HAG is not over this graph");
         let mut tracker = DriftTracker::new(cfg.policy.decay);
         tracker.record_search(hag.cost_core(), g.e());
-        let mut stats = StreamStats::default();
-        stats.init_search_ms = t0.elapsed().as_secs_f64() * 1e3;
         StreamEngine {
             cfg,
             overlay: OverlayGraph::new(g.clone()),
-            hag: IncrementalHag::from_hag(&hag),
+            hag: IncrementalHag::from_hag(hag),
             tracker,
             dirty: FxHashSet::default(),
             seq: 0,
             log: DeltaLog::default(),
             rebuild: None,
-            stats,
+            stats: StreamStats::default(),
         }
     }
 
@@ -271,8 +280,7 @@ impl StreamEngine {
             if self.poll_rebuild() {
                 rebuild = RebuildEvent::Swapped;
             }
-        } else if self.cfg.policy.check_every > 0
-            && self.seq % self.cfg.policy.check_every as u64 == 0
+        } else if self.cfg.policy.due(self.seq)
             && self.drift() > self.cfg.policy.threshold
         {
             if self.cfg.policy.background {
@@ -652,6 +660,28 @@ mod tests {
         let h = eng.to_hag();
         h.validate().unwrap();
         check_equivalence(&now, &h).unwrap();
+    }
+
+    #[test]
+    fn from_hag_adopts_without_initial_search() {
+        let g = small_community();
+        let cfg = StreamConfig::default();
+        let (hag, _) = hag_search(&g, &cfg.search_config(g.n()));
+        let mut eng = StreamEngine::from_hag(&g, cfg, &hag);
+        assert_eq!(eng.cost_core(), hag.cost_core());
+        assert_eq!(eng.stats().init_search_ms, 0.0,
+                   "no initial search was paid");
+        assert!(eng.drift().abs() < 1e-9,
+                "tracker seeded from the adopted HAG");
+        // repair keeps working on top of the adopted HAG
+        let mut rng = Rng::seed_from_u64(31);
+        for _ in 0..200 {
+            let d = random_delta(&mut rng, eng.overlay(), 0.5, 0.01);
+            eng.apply(d);
+        }
+        let h = eng.to_hag();
+        h.validate().unwrap();
+        check_equivalence(&eng.graph(), &h).unwrap();
     }
 
     #[test]

@@ -25,7 +25,10 @@
 pub struct DriftPolicy {
     /// Drift fraction that triggers a re-search (e.g. `0.08` = rebuild
     /// once local repair has leaked 8% over the fresh-search estimate).
-    /// `f64::INFINITY` disables re-search entirely.
+    /// `f64::INFINITY` disables re-search entirely; negative values
+    /// trigger at every check (drift is always `> -1` on a non-empty
+    /// graph — the forcing knob serving tests and the CI serve smoke
+    /// use to exercise the swap path deterministically).
     pub threshold: f64,
     /// EWMA weight kept by old observations when a new full-search
     /// ratio is recorded (`0.0` = always trust the newest).
@@ -62,6 +65,15 @@ impl DriftPolicy {
     pub fn with_check_every(mut self, check_every: usize) -> Self {
         self.check_every = check_every;
         self
+    }
+
+    /// Is a cadenced policy check due at stream sequence `seq`?
+    /// (`check_every == 0` disables cadenced checks entirely.) Shared
+    /// by the engine's apply path; the serving batcher instead checks
+    /// at every coalesced update flush — flushes are already batched,
+    /// so a per-delta cadence would only delay the swap.
+    pub fn due(&self, seq: u64) -> bool {
+        self.check_every > 0 && seq % self.check_every as u64 == 0
     }
 
     /// Deterministic fingerprint over every policy field, folded into
@@ -176,6 +188,16 @@ mod tests {
                    a.clone().with_background(true).fingerprint());
         assert_ne!(a.fingerprint(),
                    a.clone().with_check_every(1).fingerprint());
+    }
+
+    #[test]
+    fn due_respects_cadence_and_zero_disables() {
+        let p = DriftPolicy::default().with_check_every(4);
+        assert!(!p.due(1) && !p.due(3) && p.due(4) && p.due(8));
+        let off = DriftPolicy::default().with_check_every(0);
+        for s in 0..10 {
+            assert!(!off.due(s));
+        }
     }
 
     #[test]

@@ -52,8 +52,12 @@ SUBCOMMANDS
   emit-buckets   write artifacts/buckets.json (AOT build phase 1)
   train          train a 2-layer GCN (gnn-graph or hag repr)
   infer          one-shot full-graph inference latency
-  serve          batched scoring server with latency percentiles
-                 (--updates N streams topology deltas while serving)
+  serve          batched scoring server with latency percentiles;
+                 runs on the host reference executor when PJRT
+                 artifacts are absent (--updates N streams topology
+                 deltas while serving; --plan-swap hot-swaps drifted
+                 serving plans from the resident session's per-shard
+                 plan cache)
   bench-fig2     Fig 2: end-to-end train + inference comparison
   bench-fig3     Fig 3: aggregation/data-transfer reductions
   bench-fig4     Fig 4: capacity sweep on COLLAB
@@ -84,6 +88,12 @@ COMMON OPTIONS
   --model M         gcn | sage                [gcn]
   --fig4            (emit-buckets) include Fig-4 sweep buckets
   --requests N --max-batch N --concurrency N  (serve)
+  --plan-swap       (serve) session-aware serving: drift past the
+                    threshold swaps the session's spliced dirty-shard
+                    re-plan into the live worker (negative
+                    --drift-threshold forces a swap at every flush)
+  --update-batch N  (serve) pending topology deltas coalesced (by
+                    shard) per flush outside the batch window  [64]
   --updates N       update stream length (stream / stream-stats /
                     serve)                  [10000 / 2000 / 0]
   --plan-every N    session re-plan cadence, in updates (stream)
@@ -543,21 +553,29 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let max_batch = args.get_or("max-batch", 64usize)?;
     let concurrency = args.get_or("concurrency", 8usize)?;
     let updates = args.get_or("updates", 0usize)?;
+    let plan_swap = args.flag("plan-swap")?;
+    let update_batch = args.get_or("update-batch", 64usize)?;
     let (spec, insert_frac, node_add_frac) = stream_opts(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
-    let lowered = Session::new(&ds, spec.clone()).lower()?;
-    // With --updates N the server also maintains the HAG online:
-    // scoring runs against the compiled (pinned) plan while the
-    // resident engine repairs the HAG the *next* plan compile will
-    // lower; rebuilds always go to a background thread so the batcher
-    // never stalls (DESIGN.md §6). The shared spec/stream knobs
-    // (--drift-threshold, --insert-frac, --node-add-frac) apply here
-    // exactly as on `stream`/`stream-stats`.
-    let mut scfg = spec.stream_config();
-    scfg.policy.background = true;
-    let stream = if updates > 0 {
-        Some(StreamEngine::new(&ds.graph, scfg))
+    // One session both lowers the serving workload and rides into the
+    // batcher: the per-shard cache its lower() warms is the cache the
+    // first drift re-plan hits. With --updates the server maintains
+    // the HAG online (deltas flow to engine + session, coalesced by
+    // shard between batches); with --plan-swap drift past
+    // --drift-threshold hot-swaps the session's spliced dirty-shard
+    // re-plan into the live worker (DESIGN.md §8). Without
+    // --plan-swap the engine keeps its own drift policy, rebuilds
+    // forced onto a background thread so the batcher never stalls.
+    let mut session = Session::new(&ds, spec.clone());
+    let lowered = session.lower()?;
+    let resident = if updates > 0 || plan_swap {
+        Some(coordinator::Resident::new(
+            session, &ds.graph, &lowered.hag,
+            coordinator::SwapPolicy {
+                swap_plans: plan_swap,
+                max_pending: update_batch,
+            }))
     } else {
         None
     };
@@ -567,9 +585,37 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
             max_batch,
             max_wait: std::time::Duration::from_millis(2),
         },
-        seed, stream)?;
+        seed, resident)?;
     let n = ds.n() as u32;
     let f_in = ds.f_in;
+
+    // Hardened-path probes: malformed requests must come back as
+    // explicit error outcomes, never kill the batcher.
+    let probe = |node: u32, features: Vec<f32>| -> Result<bool> {
+        let tx = server.client();
+        let (otx, orx) = coordinator::server::oneshot();
+        let req = coordinator::ScoreRequest {
+            node,
+            features,
+            reply: otx,
+            submitted: std::time::Instant::now(),
+        };
+        if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
+            bail!("server queue closed during probes");
+        }
+        match orx.recv() {
+            Ok(resp) => Ok(resp.is_ok()),
+            Err(_) => bail!("batcher died on a malformed request"),
+        }
+    };
+    if probe(n + 999, Vec::new())? {
+        bail!("out-of-range node probe was not rejected");
+    }
+    if probe(0, vec![0.0; f_in + 1])? {
+        bail!("wrong-length feature probe was not rejected");
+    }
+    println!("hardened   : 2 malformed probes rejected with error \
+              replies");
     let mut handles = Vec::new();
     for c in 0..concurrency {
         let tx = server.client();
@@ -621,17 +667,32 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
         let _ = h.join();
     }
     let stats = server.shutdown();
-    println!("requests   : {}", stats.requests);
-    println!("batches    : {} (mean size {:.1})", stats.batches,
-             stats.mean_batch);
+    println!("requests   : {} ok, {} rejected, {} failed",
+             stats.requests, stats.rejected, stats.failed);
+    println!("batches    : {} (mean size {:.1}, {} exec failures)",
+             stats.batches, stats.mean_batch, stats.exec_failures);
     println!("latency    : p50 {:.2} ms  p99 {:.2} ms", stats.p50_ms,
              stats.p99_ms);
     println!("exec       : mean {:.2} ms/batch", stats.mean_exec_ms);
     println!("throughput : {:.0} req/s", stats.throughput_rps);
     if updates > 0 {
-        println!("updates    : {} repaired while serving ({} HAG \
-                  rebuilds swapped)",
-                 stats.updates, stats.rebuild_swaps);
+        println!("updates    : {} applied in {} coalesced flushes \
+                  ({} HAG rebuilds/installs swapped)",
+                 stats.updates, stats.update_batches,
+                 stats.rebuild_swaps);
+    }
+    if plan_swap {
+        println!("plan swaps : {} hot-swapped, {} skipped; session \
+                  ran {} shard re-searches, {} shard cache hits",
+                 stats.plan_swaps, stats.swaps_skipped,
+                 stats.shard_searches, stats.shard_cache_hits);
+        match stats.plan_matches_fresh {
+            Some(true) => println!("replan check: OK (session plan == \
+                                    from-scratch on the serving path)"),
+            Some(false) => bail!("serving-path plan cache MISMATCH: \
+                                  session plan != from-scratch"),
+            None => {}
+        }
     }
     Ok(())
 }

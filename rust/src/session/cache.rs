@@ -111,6 +111,14 @@ impl PlanCache {
         self.shards.contains_key(key)
     }
 
+    /// Does the plan tier hold `(spec, version)` right now? (No
+    /// hit/miss accounting — used by
+    /// [`Session::plan_current`](super::Session::plan_current).)
+    pub fn peek_plan(&self, spec: u64, version: u64) -> bool {
+        matches!(&self.plan,
+                 Some((s, v, _, _)) if *s == spec && *v == version)
+    }
+
     /// Live shard-tier entries.
     pub fn len(&self) -> usize {
         self.shards.len()
@@ -192,5 +200,10 @@ mod tests {
         let s = c.stats();
         assert_eq!(s.plan_hits, 1);
         assert_eq!(s.plan_misses, 3);
+        // peek is side-effect free
+        assert!(c.peek_plan(1, 0));
+        assert!(!c.peek_plan(1, 1));
+        assert!(!c.peek_plan(2, 0));
+        assert_eq!(c.stats(), s, "peek_plan must not move the stats");
     }
 }

@@ -230,6 +230,20 @@ impl Session {
         self.part.shard_of[v as usize]
     }
 
+    /// [`Self::shard_of`] that tolerates out-of-range ids (hostile
+    /// serving input): `None` instead of a panic.
+    pub fn shard_of_checked(&self, v: u32) -> Option<u32> {
+        self.part.shard_of.get(v as usize).copied()
+    }
+
+    /// Does the plan tier already hold a plan for the current
+    /// topology version? No cache-stat side effects — serving-path
+    /// introspection (the batcher skips the drift re-plan when the
+    /// plan it serves is still the memoized one).
+    pub fn plan_current(&self) -> bool {
+        self.cache.peek_plan(self.fp, self.version)
+    }
+
     /// Materialize the current topology as a CSR graph.
     pub fn graph(&self) -> Graph {
         self.graph.to_graph()

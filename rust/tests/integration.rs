@@ -184,7 +184,8 @@ fn serving_path_round_trips() {
         pack_workload(&ds, &lowered.plan, &lowered.bucket).unwrap();
     let server = coordinator::InferenceServer::spawn(
         artifacts_dir(), &name, &workload, &lowered.plan,
-        coordinator::BatchPolicy::default(), 7, None).unwrap();
+        &lowered.bucket, coordinator::BatchPolicy::default(), 7,
+        None).unwrap();
     let n = ds.n() as u32;
     let f_in = ds.f_in;
     let classes = ds.classes;
@@ -204,9 +205,10 @@ fn serving_path_round_trips() {
                         reply: otx,
                         submitted: std::time::Instant::now(),
                     })).unwrap();
-                let resp = orx.recv().unwrap();
-                assert_eq!(resp.logits.len(), classes);
-                assert!(resp.logits.iter().all(|x| x.is_finite()));
+                let ok = orx.recv().unwrap().into_result()
+                    .expect("scored");
+                assert_eq!(ok.logits.len(), classes);
+                assert!(ok.logits.iter().all(|x| x.is_finite()));
             }
         }));
     }

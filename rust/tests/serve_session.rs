@@ -1,0 +1,250 @@
+//! Session-aware serving path, end to end on the host reference
+//! executor (no artifacts needed — the artifacts dir deliberately does
+//! not exist, so the worker always falls back): hardened request
+//! validation, coalesced update flushes into the resident
+//! engine+session pair, the session-fed hot plan swap, and the
+//! serving-path plan-cache contract (`plan() == plan_fresh()` with
+//! full tensor equality, `shard_cache_hits > 0` under a localized
+//! stream).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use repro::coordinator::{self, BatchPolicy, Resident, ScoreReject,
+                         ScoreResponse, SwapPolicy};
+use repro::datasets::{self, Dataset};
+use repro::incremental::{DriftPolicy, GraphDelta};
+use repro::session::{LowerSpec, Session};
+use repro::util::Rng;
+
+/// Artifacts dir that does not exist: forces the reference executor
+/// regardless of what the checkout has compiled.
+fn no_artifacts() -> PathBuf {
+    std::env::temp_dir().join("repro-serve-session-no-artifacts")
+}
+
+fn bzr() -> Dataset {
+    datasets::load("BZR", 0.02, 7)
+}
+
+fn spawn(ds: &Dataset, spec: LowerSpec, swap: Option<SwapPolicy>)
+         -> (coordinator::InferenceServer, usize) {
+    let mut session = Session::new(ds, spec);
+    let lowered = session.lower().unwrap();
+    let resident = swap.map(|swap| {
+        Resident::new(session, &ds.graph, &lowered.hag, swap)
+    });
+    let server = coordinator::InferenceServer::for_lowered(
+        no_artifacts(), "gcn", ds, &lowered, BatchPolicy::default(),
+        7, resident).unwrap();
+    (server, ds.classes)
+}
+
+fn send_score(server: &coordinator::InferenceServer, node: u32,
+              features: Vec<f32>) -> ScoreResponse {
+    let (otx, orx) = coordinator::server::oneshot();
+    server.client()
+        .send(coordinator::ServerMsg::Score(coordinator::ScoreRequest {
+            node,
+            features,
+            reply: otx,
+            submitted: Instant::now(),
+        }))
+        .expect("queue open");
+    orx.recv().expect("batcher alive")
+}
+
+fn send_update(server: &coordinator::InferenceServer,
+               delta: GraphDelta) -> coordinator::UpdateResponse {
+    let (otx, orx) = coordinator::server::update_oneshot();
+    server.client()
+        .send(coordinator::ServerMsg::Update(
+            coordinator::UpdateRequest {
+                delta,
+                reply: Some(otx),
+                submitted: Instant::now(),
+            }))
+        .expect("queue open");
+    orx.recv().expect("batcher alive")
+}
+
+#[test]
+fn hostile_requests_get_error_replies_not_panics() {
+    let ds = bzr();
+    let n = ds.n();
+    let (server, classes) = spawn(&ds, LowerSpec::default(), None);
+    // out-of-range node
+    match send_score(&server, n as u32 + 42, Vec::new()) {
+        ScoreResponse::Err(e) => assert_eq!(
+            e.reject,
+            ScoreReject::NodeOutOfRange { node: n as u32 + 42, n }),
+        r => panic!("expected rejection, got ok={}", r.is_ok()),
+    }
+    // wrong-length feature row
+    match send_score(&server, 0, vec![0.0; ds.f_in + 3]) {
+        ScoreResponse::Err(e) => assert_eq!(
+            e.reject,
+            ScoreReject::FeatureLen { got: ds.f_in + 3,
+                                      want: ds.f_in }),
+        r => panic!("expected rejection, got ok={}", r.is_ok()),
+    }
+    // the batcher survived both: valid requests still score
+    let ok = send_score(&server, 0, Vec::new())
+        .into_result().expect("empty features keep current row");
+    assert_eq!(ok.logits.len(), classes);
+    let ok = send_score(&server, 1, vec![0.5; ds.f_in])
+        .into_result().expect("valid request scored");
+    assert!(ok.logits.iter().all(|x| x.is_finite()));
+    let stats = server.shutdown();
+    assert_eq!(stats.rejected, 2);
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.exec_failures, 0);
+}
+
+#[test]
+fn node_add_is_rejected_before_swap() {
+    let ds = bzr();
+    let n = ds.n() as u32;
+    // +INF threshold: the session rides along but never swaps, so the
+    // serving plan stays pinned at the original n.
+    let spec = LowerSpec::default().with_shards(2).with_drift(
+        DriftPolicy::default().with_threshold(f64::INFINITY));
+    let (server, _) = spawn(&ds, spec,
+                            Some(SwapPolicy { swap_plans: true,
+                                              max_pending: 1 }));
+    let resp = send_update(&server, GraphDelta::NodeAdd);
+    assert_eq!(resp.outcome,
+               repro::incremental::ApplyOutcome::NodeAdded);
+    assert_eq!(resp.seq, 1);
+    // the added node exceeds the pinned plan: error outcome, no panic
+    match send_score(&server, n, vec![0.1; ds.f_in]) {
+        ScoreResponse::Err(e) => assert_eq!(
+            e.reject,
+            ScoreReject::NodeOutOfRange { node: n, n: n as usize }),
+        r => panic!("pre-swap NodeAdd score must fail, got ok={}",
+                    r.is_ok()),
+    }
+    let out = server.shutdown_outcome();
+    assert_eq!(out.stats.plan_swaps, 0, "threshold INF never swaps");
+    let res = out.resident.expect("resident handed back");
+    assert_eq!(res.session.n(), n as usize + 1);
+    assert_eq!(res.engine.n(), n as usize + 1);
+}
+
+#[test]
+fn node_add_scores_after_session_fed_swap() {
+    let ds = bzr();
+    let n = ds.n() as u32;
+    // negative threshold: swap at every flush
+    let spec = LowerSpec::default().with_shards(2).with_drift(
+        DriftPolicy::default().with_threshold(-1.0));
+    let (server, classes) = spawn(&ds, spec,
+                                  Some(SwapPolicy { swap_plans: true,
+                                                    max_pending: 1 }));
+    let resp = send_update(&server, GraphDelta::NodeAdd);
+    assert_eq!(resp.outcome,
+               repro::incremental::ApplyOutcome::NodeAdded);
+    // wire the new node in (same flush granularity: max_pending 1)
+    let resp = send_update(&server,
+                           GraphDelta::EdgeInsert { src: 0, dst: n });
+    assert_eq!(resp.outcome,
+               repro::incremental::ApplyOutcome::Inserted);
+    // the swap published a plan covering the added node
+    let ok = send_score(&server, n, vec![0.25; ds.f_in])
+        .into_result().expect("post-swap NodeAdd score succeeds");
+    assert_eq!(ok.logits.len(), classes);
+    assert!(ok.logits.iter().all(|x| x.is_finite()));
+    let out = server.shutdown_outcome();
+    assert!(out.stats.plan_swaps >= 1,
+            "session-fed swap must have landed: {:?}", out.stats);
+    assert_eq!(out.stats.plan_matches_fresh, Some(true));
+    let res = out.resident.unwrap();
+    assert_eq!(res.session.n(), n as usize + 1);
+}
+
+#[test]
+fn localized_stream_serves_post_drift_plan_from_shard_cache() {
+    let ds = bzr();
+    let spec = LowerSpec::default().with_shards(4).with_drift(
+        DriftPolicy::default().with_threshold(-1.0));
+    // shard map from an identically specced session (deterministic
+    // partition seed => same shards as the resident one)
+    let probe = Session::new(&ds, spec.clone());
+    let members: Vec<u32> = (0..ds.n() as u32)
+        .filter(|&v| probe.shard_of(v) == 0)
+        .collect();
+    assert!(members.len() >= 2, "shard 0 too small to localize");
+    let (server, _) = spawn(&ds, spec,
+                            Some(SwapPolicy { swap_plans: true,
+                                              max_pending: 4 }));
+    let mut rng = Rng::seed_from_u64(23);
+    for i in 0..48usize {
+        let a = members[rng.range_usize(0, members.len())];
+        let b = members[rng.range_usize(0, members.len())];
+        if a == b {
+            continue;
+        }
+        let _ = send_update(&server,
+                            GraphDelta::EdgeInsert { src: a, dst: b });
+        if i % 6 == 0 {
+            // interleaved scoring keeps batches (and flushes) moving
+            let node = rng.range_u32(0, ds.n() as u32);
+            send_score(&server, node, vec![0.5; ds.f_in])
+                .into_result().expect("scored");
+        }
+    }
+    let out = server.shutdown_outcome();
+    let stats = &out.stats;
+    assert!(stats.plan_swaps >= 1, "drift must swap: {stats:?}");
+    assert!(stats.shard_cache_hits > 0,
+            "localized stream must hit clean-shard cache: {stats:?}");
+    assert_eq!(stats.plan_matches_fresh, Some(true),
+               "serving-path contract: {stats:?}");
+    // …and the same contract asserted directly on the handed-back
+    // session: full tensor identity of cached vs from-scratch plans.
+    let mut res = out.resident.unwrap();
+    let (hag_c, plan_c) = res.session.plan();
+    let (hag_f, plan_f) = res.session.plan_fresh();
+    assert_eq!(*hag_c, hag_f);
+    assert_eq!(*plan_c, plan_f);
+    // engine and session stayed in lockstep over the coalesced flushes
+    assert_eq!(res.engine.n(), res.session.n());
+    assert_eq!(res.engine.e(), res.session.e());
+    assert_eq!(res.engine.graph(), res.session.graph());
+}
+
+#[test]
+fn update_heavy_stream_with_node_adds_keeps_lockstep() {
+    // Random mixed stream (inserts, deletes, NodeAdds) through the
+    // public queue: coalescing barriers must preserve semantics, and
+    // the swap must keep serving valid logits throughout.
+    let ds = bzr();
+    let spec = LowerSpec::default().with_shards(3).with_drift(
+        DriftPolicy::default().with_threshold(-1.0));
+    let (server, classes) = spawn(&ds, spec,
+                                  Some(SwapPolicy { swap_plans: true,
+                                                    max_pending: 8 }));
+    let mut mirror = repro::incremental::OverlayGraph::new(
+        ds.graph.clone());
+    let mut rng = Rng::seed_from_u64(41);
+    for i in 0..60usize {
+        let d = repro::incremental::random_delta(&mut rng, &mirror,
+                                                 0.6, 0.05);
+        mirror.apply(d);
+        let _ = send_update(&server, d);
+        if i % 10 == 0 {
+            let ok = send_score(&server,
+                                rng.range_u32(0, ds.n() as u32),
+                                vec![0.1; ds.f_in])
+                .into_result().expect("scored mid-stream");
+            assert_eq!(ok.logits.len(), classes);
+        }
+    }
+    let out = server.shutdown_outcome();
+    assert_eq!(out.stats.plan_matches_fresh, Some(true));
+    let res = out.resident.unwrap();
+    assert_eq!(res.engine.n(), mirror.n());
+    assert_eq!(res.engine.e(), mirror.e());
+    assert_eq!(res.session.n(), mirror.n());
+    assert_eq!(res.session.e(), mirror.e());
+}
