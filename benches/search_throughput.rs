@@ -1,19 +1,31 @@
 //! HAG-search scaling bench (L3 hot path): edges/second across graph
-//! sizes and pair-cap settings, plus the partitioned-search variant
-//! (wall-clock speedup *and* cost gap per shard count — the speedup is
-//! measured, not asserted; the partition-quality tradeoff is printed
-//! next to it) and the session plan cache (dirty-shard re-plan vs
-//! cold lowering). Run: `cargo bench --bench search_throughput`.
+//! sizes and pair-cap settings, the flat-kernel vs retained-reference
+//! comparison (the PR-5 rewrite's headline number: same byte-identical
+//! merge order, hash maps and per-round rebuilds gone), plus the
+//! partitioned-search variant (wall-clock speedup *and* cost gap per
+//! shard count — the speedup is measured, not asserted; the
+//! partition-quality tradeoff is printed next to it) and the session
+//! plan cache (dirty-shard re-plan vs cold lowering).
+//!
+//! Run: `cargo bench --bench search_throughput`. Besides the one-line
+//! harness output, results land in `BENCH_search.json` (override the
+//! path with `BENCH_JSON=...`) in the `benchkit-v1` schema, so the
+//! perf trajectory EXPERIMENTS.md tracks is machine-diffable.
+
+use std::path::Path;
 
 use repro::datasets::{community_graph, CommunityCfg};
-use repro::hag::{hag_search, AggregateKind, SearchConfig};
+use repro::hag::{hag_search, hag_search_reference,
+                 hag_search_with_scratch, AggregateKind, SearchConfig,
+                 SearchScratch};
 use repro::incremental::GraphDelta;
 use repro::partition::search_sharded;
 use repro::session::{LowerSpec, Session};
-use repro::util::benchkit::Bencher;
+use repro::util::benchkit::{BenchJson, Bencher};
 
 fn main() {
     let b = Bencher::quick();
+    let mut json = BenchJson::new();
 
     // scaling in |V| (constant average degree 20)
     for &n in &[1_000usize, 4_000, 16_000] {
@@ -36,6 +48,10 @@ fn main() {
             let meps =
                 edges as f64 / stats.median.as_secs_f64() / 1e6;
             println!("  -> {edges} edges, {meps:.2} Medges/s");
+            json.push(&stats);
+            json.derived_num(
+                &format!("search_scaling/{kind:?}/n{n}/medges_per_s"),
+                meps);
         }
     }
 
@@ -53,15 +69,17 @@ fn main() {
         let mut sc = SearchConfig::paper_default(g.n());
         sc.pair_cap = cap;
         let (hag, _) = hag_search(&g, &sc);
-        b.run(&format!("search_pair_cap/{cap}"), || {
+        let stats = b.run(&format!("search_pair_cap/{cap}"), || {
             std::hint::black_box(hag_search(&g, &sc));
         });
         println!("  -> cost |E|-|VA| = {}", hag.cost_core());
+        json.push(&stats);
+        json.derived_num(&format!("search_pair_cap/{cap}/cost_core"),
+                         hag.cost_core() as f64);
     }
 
-    // sharded search: wall-clock speedup + cost gap vs shard count
-    // (the partition subsystem's headline tradeoff; the `1` row is the
-    // single-threaded whole-graph baseline).
+    // The largest generator graph, reused by the kernel comparison
+    // and the sharded sweep below.
     let cfg = CommunityCfg {
         n: 16_000,
         e: 320_000,
@@ -72,10 +90,63 @@ fn main() {
     };
     let (g, _) = community_graph(&cfg, 17);
     let sc = SearchConfig::paper_default(g.n());
+
+    // flat kernel vs retained naive reference (single shard,
+    // paper-default config): the two produce byte-identical HAGs —
+    // asserted here at bench scale on top of the differential tests —
+    // so the ratio is a pure data-layout speedup. Acceptance target:
+    // >= 2x on this graph.
+    let (h_ref, s_ref) = hag_search_reference(&g, &sc);
+    let (h_new, s_new) = hag_search(&g, &sc);
+    assert_eq!(h_ref.agg_nodes, h_new.agg_nodes,
+               "kernel diverged from reference merge order");
+    assert_eq!(h_ref.in_edges, h_new.in_edges,
+               "kernel diverged from reference final lists");
+    let reference = b.run("search_kernel/reference", || {
+        std::hint::black_box(hag_search_reference(&g, &sc));
+    });
+    let flat = b.run("search_kernel/flat", || {
+        std::hint::black_box(hag_search(&g, &sc));
+    });
+    let mut scratch = SearchScratch::new();
+    hag_search_with_scratch(&g, &sc, &mut scratch); // warm the arena
+    let reused = b.run("search_kernel/flat_scratch_reuse", || {
+        std::hint::black_box(
+            hag_search_with_scratch(&g, &sc, &mut scratch));
+    });
+    let speedup = reference.median.as_secs_f64()
+        / flat.median.as_secs_f64().max(1e-12);
+    println!(
+        "  -> flat kernel {speedup:.2}x vs reference (byte-identical \
+         HAG: {} agg nodes); {} rounds, {} pops ({} stale), scratch \
+         {:.1} KiB; reuse {:.2}x vs reference",
+        h_new.agg_nodes.len(), s_new.rounds, s_new.heap_pops,
+        s_new.stale_pops, s_new.peak_scratch_bytes as f64 / 1024.0,
+        reference.median.as_secs_f64()
+            / reused.median.as_secs_f64().max(1e-12));
+    let _ = s_ref;
+    json.push(&reference);
+    json.push(&flat);
+    json.push(&reused);
+    json.derived_num("search_kernel/speedup_vs_reference", speedup);
+    json.derived_num("search_kernel/rounds", s_new.rounds as f64);
+    json.derived_num("search_kernel/heap_pops",
+                     s_new.heap_pops as f64);
+    json.derived_num("search_kernel/stale_pops",
+                     s_new.stale_pops as f64);
+    json.derived_num("search_kernel/peak_scratch_bytes",
+                     s_new.peak_scratch_bytes as f64);
+    json.derived_num("search_kernel/graph_nodes", g.n() as f64);
+    json.derived_num("search_kernel/graph_edges", g.e() as f64);
+
+    // sharded search: wall-clock speedup + cost gap vs shard count
+    // (the partition subsystem's headline tradeoff; the `1` row is the
+    // single-threaded whole-graph baseline).
     let (single, _) = hag_search(&g, &sc);
     let base = b.run("search_sharded/1", || {
         std::hint::black_box(hag_search(&g, &sc));
     });
+    json.push(&base);
     for &k in &[2usize, 4, 8] {
         let (hag, stats) = search_sharded(&g, k, &sc);
         let run = b.run(&format!("search_sharded/{k}"), || {
@@ -83,13 +154,20 @@ fn main() {
         });
         let speedup = base.median.as_secs_f64()
             / run.median.as_secs_f64().max(1e-12);
+        let gap = 100.0 * (hag.cost_core() as f64
+            / single.cost_core().max(1) as f64 - 1.0);
         println!(
             "  -> {k} shards ({} threads): cost {} vs {} \
-             ({:+.2}% gap), cut {:.1}%, speedup {speedup:.2}x",
+             ({gap:+.2}% gap), cut {:.1}%, speedup {speedup:.2}x",
             stats.threads, hag.cost_core(), single.cost_core(),
-            100.0 * (hag.cost_core() as f64
-                / single.cost_core().max(1) as f64 - 1.0),
             100.0 * stats.report.cut_frac);
+        json.push(&run);
+        json.derived_num(&format!("search_sharded/{k}/speedup"),
+                         speedup);
+        json.derived_num(&format!("search_sharded/{k}/cost_gap_pct"),
+                         gap);
+        json.derived_num(&format!("search_sharded/{k}/cut_pct"),
+                         100.0 * stats.report.cut_frac);
     }
 
     // session plan cache: one delta dirties one shard; plan()
@@ -126,10 +204,21 @@ fn main() {
         std::hint::black_box(session.plan());
     });
     let st = session.stats();
+    let replan_speedup = cold.median.as_secs_f64()
+        / warm.median.as_secs_f64().max(1e-12);
     println!(
-        "  -> dirty-shard re-plan: {:.2}x faster than cold lowering \
-         ({} shard re-searches, {} cache hits across {} plans)",
-        cold.median.as_secs_f64()
-            / warm.median.as_secs_f64().max(1e-12),
+        "  -> dirty-shard re-plan: {replan_speedup:.2}x faster than \
+         cold lowering ({} shard re-searches, {} cache hits across \
+         {} plans)",
         st.shard_searches, st.shard_cache_hits, st.plans);
+    json.push(&cold);
+    json.push(&warm);
+    json.derived_num("session_plan/replan_speedup_vs_cold",
+                     replan_speedup);
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_search.json".to_string());
+    json.write(Path::new(&out))
+        .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("wrote {out}");
 }

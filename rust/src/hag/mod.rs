@@ -14,7 +14,9 @@ pub mod search;
 
 pub use equivalence::{check_equivalence, check_equivalence_probabilistic};
 pub use schedule::{build_plan, ExecutionPlan, PlanConfig};
-pub use search::{hag_search, SearchConfig, SearchStats};
+pub use search::{hag_search, hag_search_reference,
+                 hag_search_with_scratch, SearchConfig, SearchScratch,
+                 SearchStats};
 
 use crate::graph::Graph;
 

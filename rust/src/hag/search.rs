@@ -20,6 +20,27 @@
 //!   cap; on hub-heavy graphs this trades a slightly smaller search
 //!   space for near-linear runtime. The window re-fills as merges shrink
 //!   the lists, so coverage recovers as the search progresses.
+//!
+//! Two set-AGGREGATE implementations live here:
+//!
+//! * [`hag_search`] runs the **flat kernel** (`search_set_flat`): a
+//!   [`SearchScratch`] arena holding CSR in-edge/consumer tables over
+//!   single backing buffers, a [`PairTable`] (open-addressing counts
+//!   keyed by `u64`-packed pairs, no tuple hashing), a reusable
+//!   intersection buffer, and a dirty-list bitmap that refreshes only
+//!   rewired lists between windowed rounds instead of re-enumerating
+//!   every list's `O(w^2)` pairs. The scratch is reusable across calls
+//!   ([`hag_search_with_scratch`]) so a worker pays allocation once
+//!   per pool, not once per shard.
+//! * [`hag_search_reference`] retains the original hash-map search
+//!   (`FxHashMap<(Slot, Slot), u32>` counts, per-round consumer-list
+//!   and count rebuilds, a fresh `Vec` per intersection). It is the
+//!   determinism oracle: the kernel's merge order is **byte-identical**
+//!   to it — same lazy heap, same smallest-pair tie-break, same
+//!   windowed-count drift semantics — which the differential tests in
+//!   this module and `tests/properties.rs` pin down. The session
+//!   golden-buckets test and `Session::plan() == plan_fresh()` both
+//!   ride on this contract.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -79,17 +100,54 @@ pub struct SearchStats {
     pub transfers_before: usize,
     pub transfers_after: usize,
     pub elapsed_ms: f64,
+    /// Merge-loop rounds run (always 1 in exact mode; windowed
+    /// searches re-seed the heap per round until no merge lands).
+    pub rounds: usize,
+    /// Total lazy-heap pops (live + stale).
+    pub heap_pops: usize,
+    /// Pops discarded because the entry's count had gone stale.
+    pub stale_pops: usize,
+    /// Resident bytes of the [`SearchScratch`] arena after the run.
+    /// Monotone within a run; when a scratch is shared across shards
+    /// this includes capacity carried over from earlier searches
+    /// (that carried capacity is the point of the reuse). Zero for
+    /// sequential AGGREGATE and for [`hag_search_reference`].
+    pub peak_scratch_bytes: usize,
 }
 
 /// Run Algorithm 3 on `g`, returning the optimized HAG and stats.
+/// Allocates a private [`SearchScratch`]; loops that search many
+/// graphs should hold one scratch and call
+/// [`hag_search_with_scratch`] instead.
 pub fn hag_search(g: &Graph, cfg: &SearchConfig) -> (Hag, SearchStats) {
+    let mut scratch = SearchScratch::default();
+    hag_search_with_scratch(g, cfg, &mut scratch)
+}
+
+/// [`hag_search`] through a caller-owned arena: buffers and tables are
+/// recycled across calls, so per-shard searches stop paying setup
+/// allocations. Output is identical to [`hag_search`] for any scratch
+/// state (the kernel fully re-initializes lengths; only capacity is
+/// reused).
+pub fn hag_search_with_scratch(g: &Graph, cfg: &SearchConfig,
+                               scratch: &mut SearchScratch)
+                               -> (Hag, SearchStats) {
     let t0 = std::time::Instant::now();
     let mut hag = Hag::from_graph(g, cfg.kind);
     let before_aggs = hag.aggregations();
     let before_tx = hag.data_transfers();
+    let mut ks = KernelStats::default();
     let iterations = match cfg.kind {
-        AggregateKind::Set => search_set(&mut hag, cfg),
-        AggregateKind::Sequential => search_sequential(&mut hag, cfg),
+        AggregateKind::Set => {
+            search_set_flat(&mut hag, cfg, scratch, &mut ks)
+        }
+        AggregateKind::Sequential => {
+            search_sequential(&mut hag, cfg, &mut ks)
+        }
+    };
+    let peak = match cfg.kind {
+        AggregateKind::Set => scratch.bytes(),
+        AggregateKind::Sequential => 0,
     };
     let stats = SearchStats {
         iterations,
@@ -99,20 +157,609 @@ pub fn hag_search(g: &Graph, cfg: &SearchConfig) -> (Hag, SearchStats) {
         transfers_before: before_tx,
         transfers_after: hag.data_transfers(),
         elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+        rounds: ks.rounds,
+        heap_pops: ks.heap_pops,
+        stale_pops: ks.stale_pops,
+        peak_scratch_bytes: peak,
     };
     (hag, stats)
 }
 
-/// Normalize an unordered pair to `(lo, hi)`. Shared with the
-/// incremental-repair re-merge pass (`incremental/repair.rs`), which
-/// applies the same pair-redundancy rule over stream-dirtied finals.
+/// The retained naive reference: hash-map pair counts, per-round
+/// consumer-list and count rebuilds, a fresh allocation per
+/// intersection. Kept (not cfg(test)-gated) so the differential tests
+/// and the old-vs-new bench rows can pin the flat kernel's
+/// byte-identical merge order against it. `heap_pops`/`stale_pops`
+/// are reported for comparability; `peak_scratch_bytes` is 0.
+pub fn hag_search_reference(g: &Graph, cfg: &SearchConfig)
+                            -> (Hag, SearchStats) {
+    let t0 = std::time::Instant::now();
+    let mut hag = Hag::from_graph(g, cfg.kind);
+    let before_aggs = hag.aggregations();
+    let before_tx = hag.data_transfers();
+    let mut ks = KernelStats::default();
+    let iterations = match cfg.kind {
+        AggregateKind::Set => {
+            search_set_reference(&mut hag, cfg, &mut ks)
+        }
+        AggregateKind::Sequential => {
+            search_sequential(&mut hag, cfg, &mut ks)
+        }
+    };
+    let stats = SearchStats {
+        iterations,
+        agg_nodes: hag.agg_nodes.len(),
+        aggregations_before: before_aggs,
+        aggregations_after: hag.aggregations(),
+        transfers_before: before_tx,
+        transfers_after: hag.data_transfers(),
+        elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+        rounds: ks.rounds,
+        heap_pops: ks.heap_pops,
+        stale_pops: ks.stale_pops,
+        peak_scratch_bytes: 0,
+    };
+    (hag, stats)
+}
+
+/// Normalize an unordered pair to `(lo, hi)` (tuple form, used by the
+/// retained reference; the kernel and the incremental-repair re-merge
+/// pass go through the packed [`pack_pair`] form).
 #[inline]
 pub(crate) fn norm(a: Slot, b: Slot) -> (Slot, Slot) {
     if a < b { (a, b) } else { (b, a) }
 }
 
+/// Pack an unordered slot pair into the flat table's key:
+/// `(lo << 32) | hi`. A `u64` compares exactly like the lexicographic
+/// `(lo, hi)` tuple, so heap tie-breaks are unchanged versus the
+/// reference. `lo < hi` strictly (a set in-list never holds duplicate
+/// slots), so a packed key is never 0 and 0 serves as the
+/// open-addressing empty sentinel.
+#[inline]
+pub(crate) fn pack_pair(a: Slot, b: Slot) -> u64 {
+    let (lo, hi) = norm(a, b);
+    ((lo as u64) << 32) | hi as u64
+}
+
+/// Lazy max-heap over packed pairs: `(count, Reverse(key))` pops the
+/// highest count first, the smallest pair on ties — the same pop
+/// order as the reference's `(count, Reverse((Slot, Slot)))` heap.
+pub(crate) type PairHeap = BinaryHeap<(u32, Reverse<u64>)>;
+
+/// Kernel observability counters, folded into [`SearchStats`].
+#[derive(Debug, Default)]
+struct KernelStats {
+    rounds: usize,
+    heap_pops: usize,
+    stale_pops: usize,
+}
+
 // ===================================================================
-// Set AGGREGATE
+// Flat pair-count table
+// ===================================================================
+
+/// Smallest non-empty table: 1024 slots (12 KiB) — below the point
+/// where growth churn would show up on real graphs.
+const MIN_TABLE: usize = 1 << 10;
+
+/// Flat open-addressing pair-count table keyed by [`pack_pair`] keys.
+/// Replaces the `FxHashMap<(Slot, Slot), u32>` on the hottest path:
+/// one multiply-mix hash, linear probing over a power-of-two slot
+/// array, no per-entry tuple hashing. Count 0 reads as "absent" (the
+/// reference removes zero-count entries; here they linger in their
+/// slot until the next rehash or [`Self::clear`], which is
+/// observationally identical through [`Self::get`]).
+#[derive(Debug, Clone)]
+pub(crate) struct PairTable {
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    mask: usize,
+    /// Slots holding a key (zero-count entries included until rehash).
+    occupied: usize,
+}
+
+impl Default for PairTable {
+    /// Starts empty (no allocation); the first insert grows to
+    /// [`MIN_TABLE`].
+    fn default() -> Self {
+        PairTable { keys: Vec::new(), vals: Vec::new(), mask: 0,
+                    occupied: 0 }
+    }
+}
+
+impl PairTable {
+    /// Probe for `key`: its slot if present, else the first empty
+    /// slot. The load-factor guard in [`Self::incr`] keeps at least
+    /// one slot empty, so the walk always terminates.
+    #[inline]
+    fn idx(&self, key: u64) -> usize {
+        debug_assert!(key != 0 && !self.keys.is_empty());
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut i = ((h >> 32) ^ h) as usize & self.mask;
+        loop {
+            let k = self.keys[i];
+            if k == key || k == 0 {
+                return i;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    pub(crate) fn get(&self, key: u64) -> u32 {
+        if self.keys.is_empty() {
+            return 0;
+        }
+        let i = self.idx(key);
+        if self.keys[i] == key { self.vals[i] } else { 0 }
+    }
+
+    /// `+= 1`, inserting the key if absent; returns the new count.
+    #[inline]
+    pub(crate) fn incr(&mut self, key: u64) -> u32 {
+        if (self.occupied + 1) * 8 > self.keys.len() * 7 {
+            self.grow();
+        }
+        let i = self.idx(key);
+        if self.keys[i] == 0 {
+            self.keys[i] = key;
+            self.vals[i] = 0;
+            self.occupied += 1;
+        }
+        self.vals[i] += 1;
+        self.vals[i]
+    }
+
+    /// Saturating `-= 1`; absent keys are a no-op (mirrors the
+    /// reference's `get_mut` miss — windowed drift legitimately
+    /// decrements pairs that were never counted).
+    #[inline]
+    pub(crate) fn decr(&mut self, key: u64) {
+        if self.keys.is_empty() {
+            return;
+        }
+        let i = self.idx(key);
+        if self.keys[i] == key {
+            self.vals[i] = self.vals[i].saturating_sub(1);
+        }
+    }
+
+    /// The reference's `remove`: the count drops to 0 and the key
+    /// reads as absent.
+    #[inline]
+    pub(crate) fn zero(&mut self, key: u64) {
+        if self.keys.is_empty() {
+            return;
+        }
+        let i = self.idx(key);
+        if self.keys[i] == key {
+            self.vals[i] = 0;
+        }
+    }
+
+    fn grow(&mut self) {
+        let slots = (self.keys.len() * 2).max(MIN_TABLE);
+        let keys = std::mem::replace(&mut self.keys, vec![0; slots]);
+        let vals = std::mem::replace(&mut self.vals, vec![0; slots]);
+        self.mask = slots - 1;
+        self.occupied = 0;
+        for (k, v) in keys.into_iter().zip(vals) {
+            // zero-count entries die on rehash (reads are unchanged)
+            if k != 0 && v != 0 {
+                let i = self.idx(k);
+                self.keys[i] = k;
+                self.vals[i] = v;
+                self.occupied += 1;
+            }
+        }
+    }
+
+    /// Drop every entry, keeping the allocation.
+    pub(crate) fn clear(&mut self) {
+        self.keys.fill(0);
+        self.occupied = 0;
+    }
+
+    /// Visit every `(key, count)` with `count > 0`, in slot order.
+    /// Callers must not depend on the order (the search heap imposes
+    /// a total order of its own).
+    pub(crate) fn for_each(&self, mut f: impl FnMut(u64, u32)) {
+        for (i, &k) in self.keys.iter().enumerate() {
+            if k != 0 && self.vals[i] > 0 {
+                f(k, self.vals[i]);
+            }
+        }
+    }
+
+    /// Reuse-friendly deep copy (`Vec::clone_from` keeps fitting
+    /// allocations).
+    fn copy_from(&mut self, other: &PairTable) {
+        self.keys.clone_from(&other.keys);
+        self.vals.clone_from(&other.vals);
+        self.mask = other.mask;
+        self.occupied = other.occupied;
+    }
+
+    fn bytes(&self) -> usize {
+        self.keys.capacity() * 8 + self.vals.capacity() * 4
+    }
+}
+
+// ===================================================================
+// Set AGGREGATE — flat kernel
+// ===================================================================
+
+/// Reusable arena for the set-AGGREGATE kernel. One scratch per
+/// worker: `partition::search_sharded` threads one through every
+/// shard a worker drains, and a `Session` holds one for its
+/// single-shard re-searches, so the tables below are allocated once
+/// per pool — not once per shard, and never once per round.
+#[derive(Debug, Default)]
+pub struct SearchScratch {
+    /// Final in-lists as CSR over one backing buffer. Each list keeps
+    /// its initial extent: a merge shrinks a list by exactly one slot
+    /// (two operands out, `w` in), so every rewrite fits in place and
+    /// the freed tail is the per-list slack.
+    in_off: Vec<u32>,
+    in_len: Vec<u32>,
+    in_buf: Vec<Slot>,
+    /// Per-slot consumer lists (finals consuming the slot, sorted
+    /// ascending) as CSR; slots materialized by merges append their
+    /// lists at the buffer tail. Consumer lists only ever shrink, so
+    /// these also rewrite in place.
+    cons_off: Vec<u32>,
+    cons_len: Vec<u32>,
+    cons_buf: Vec<u32>,
+    /// Heap-driving pair counts — the reference's lazily-maintained
+    /// map, with its exact drift semantics.
+    live: PairTable,
+    /// Exact windowed pair counts (windowed mode only), corrected per
+    /// dirty list so the next round seeds without re-enumerating
+    /// every list's `O(w^2)` pairs.
+    base: PairTable,
+    heap: PairHeap,
+    /// Reusable consumer-intersection buffer.
+    shared: Vec<u32>,
+    /// Bitmap over finals: list rewired since the round started.
+    dirty: Vec<u64>,
+    dirty_list: Vec<u32>,
+}
+
+impl SearchScratch {
+    pub fn new() -> SearchScratch {
+        SearchScratch::default()
+    }
+
+    /// Resident arena footprint in bytes (capacities, not lengths).
+    pub fn bytes(&self) -> usize {
+        (self.in_off.capacity() + self.in_len.capacity()
+         + self.in_buf.capacity() + self.cons_off.capacity()
+         + self.cons_len.capacity() + self.cons_buf.capacity()
+         + self.shared.capacity() + self.dirty_list.capacity()) * 4
+            + self.dirty.capacity() * 8
+            + self.live.bytes()
+            + self.base.bytes()
+            + self.heap.capacity()
+                * std::mem::size_of::<(u32, Reverse<u64>)>()
+    }
+}
+
+/// Set a final's dirty bit; returns whether it was already set.
+#[inline]
+fn bit_test_set(words: &mut [u64], v: u32) -> bool {
+    let i = (v >> 6) as usize;
+    let m = 1u64 << (v & 63);
+    let was = words[i] & m != 0;
+    words[i] |= m;
+    was
+}
+
+/// Flat-kernel set-AGGREGATE search. The merge sequence is
+/// byte-identical to [`search_set_reference`]: identical heap entries
+/// (same seeding rule, same incremental pushes), identical stale
+/// semantics, identical windowed-count drift — only the data layout
+/// changed. Between windowed rounds, instead of re-enumerating every
+/// list, the exact `base` table is corrected for just the lists the
+/// round rewired (subtract the round-start window at first touch, add
+/// the final window at round end), then `live` re-seeds from it.
+fn search_set_flat(hag: &mut Hag, cfg: &SearchConfig,
+                   sc: &mut SearchScratch, ks: &mut KernelStats)
+                   -> usize {
+    let n = hag.n;
+    let cap = cfg.pair_cap;
+    let exact = cap == usize::MAX;
+    let windowed = !exact;
+
+    let SearchScratch {
+        in_off, in_len, in_buf, cons_off, cons_len, cons_buf,
+        live, base, heap, shared, dirty, dirty_list,
+    } = sc;
+
+    // ---- arena load -----------------------------------------------
+    let e_total: usize = hag.in_edges.iter().map(|l| l.len()).sum();
+    // Offsets are u32: in entries are bounded by e_total, consumer
+    // entries by 2 * e_total (every appended consumer entry pairs
+    // with a final in-edge the same rewire removes, so total appends
+    // = sum |shared| <= e_total on top of the initial e_total).
+    assert!(e_total <= (u32::MAX / 2) as usize,
+            "graph too large for u32 arena offsets");
+    let slots0 = hag.slots();
+
+    in_off.clear();
+    in_len.clear();
+    in_buf.clear();
+    for l in hag.in_edges.iter() {
+        in_off.push(in_buf.len() as u32);
+        in_len.push(l.len() as u32);
+        in_buf.extend_from_slice(l);
+    }
+
+    // Consumer CSR: count, prefix-sum, then fill with cons_len as the
+    // write cursor (finals ascending => lists sorted ascending).
+    cons_len.clear();
+    cons_len.resize(slots0, 0);
+    for &s in in_buf.iter() {
+        cons_len[s as usize] += 1;
+    }
+    cons_off.clear();
+    cons_off.resize(slots0, 0);
+    let mut acc = 0u32;
+    for s in 0..slots0 {
+        cons_off[s] = acc;
+        acc += cons_len[s];
+        cons_len[s] = 0;
+    }
+    cons_buf.clear();
+    cons_buf.resize(e_total, 0);
+    for v in 0..n {
+        let off = in_off[v] as usize;
+        let len = in_len[v] as usize;
+        for i in off..off + len {
+            let s = in_buf[i] as usize;
+            cons_buf[(cons_off[s] + cons_len[s]) as usize] = v as u32;
+            cons_len[s] += 1;
+        }
+    }
+
+    // ---- initial windowed pair counts + heap seed -----------------
+    live.clear();
+    for v in 0..n {
+        let off = in_off[v] as usize;
+        let len = in_len[v] as usize;
+        let list = &in_buf[off..off + len];
+        let w = len.min(cap);
+        for i in 0..w {
+            for j in (i + 1)..w {
+                live.incr(pack_pair(list[i], list[j]));
+            }
+        }
+    }
+    if windowed {
+        base.copy_from(live);
+    }
+    heap.clear();
+    live.for_each(|k, c| {
+        if c >= 2 {
+            heap.push((c, Reverse(k)));
+        }
+    });
+    shared.clear();
+    dirty.clear();
+    dirty.resize(n.div_ceil(64), 0);
+    dirty_list.clear();
+
+    // ---- merge rounds ---------------------------------------------
+    let mut total = 0usize;
+    'rounds: loop {
+        ks.rounds += 1;
+        let mut made = 0usize;
+        while hag.agg_nodes.len() < cfg.capacity {
+            // Pop the highest-redundancy non-stale pair.
+            let popped = loop {
+                match heap.pop() {
+                    None => break None,
+                    Some((c, Reverse(k))) => {
+                        ks.heap_pops += 1;
+                        if live.get(k) == c && c >= 2 {
+                            break Some(k);
+                        }
+                        // stale: if the current count is still >= 2
+                        // the pair was re-pushed on update; just drop
+                        // this entry.
+                        ks.stale_pops += 1;
+                    }
+                }
+            };
+            let key = match popped {
+                None => break,
+                Some(k) => k,
+            };
+            let v1 = (key >> 32) as Slot;
+            let v2 = key as Slot;
+
+            // The merge is driven by the *live* consumer intersection:
+            // with a finite pair_cap the windowed count can drift
+            // below the true redundancy, so the intersection is the
+            // source of truth.
+            shared.clear();
+            {
+                let a1 = cons_off[v1 as usize] as usize
+                    + cons_len[v1 as usize] as usize;
+                let b1 = cons_off[v2 as usize] as usize
+                    + cons_len[v2 as usize] as usize;
+                let mut i = cons_off[v1 as usize] as usize;
+                let mut j = cons_off[v2 as usize] as usize;
+                while i < a1 && j < b1 {
+                    let (a, b) = (cons_buf[i], cons_buf[j]);
+                    if a < b {
+                        i += 1;
+                    } else if a > b {
+                        j += 1;
+                    } else {
+                        shared.push(a);
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+            if exact {
+                debug_assert_eq!(shared.len() as u32, live.get(key),
+                                 "exact mode: count must match \
+                                  intersection");
+            }
+            live.zero(key);
+            if shared.len() < 2 {
+                // Windowed count drifted: merging would add a node
+                // that saves nothing. Skip.
+                continue;
+            }
+
+            // Materialize w = v1 (+) v2.
+            let w = hag.slots() as Slot;
+            hag.agg_nodes.push(AggNode { left: v1, right: v2 });
+            cons_off.push(cons_buf.len() as u32);
+            cons_len.push(0);
+
+            let shared_v = std::mem::take(shared);
+            for &u in &shared_v {
+                let off = in_off[u as usize] as usize;
+                let len = in_len[u as usize] as usize;
+                let old_w = len.min(cap);
+
+                if windowed && !bit_test_set(dirty, u) {
+                    dirty_list.push(u);
+                    // First touch this round: the list still holds
+                    // its round-start content — retire its windowed
+                    // pairs from the exact base table.
+                    let list = &in_buf[off..off + len];
+                    for i in 0..old_w {
+                        for j in (i + 1)..old_w {
+                            base.decr(pack_pair(list[i], list[j]));
+                        }
+                    }
+                }
+
+                // Pairs inside the old window disappear for v1/v2
+                // entries.
+                {
+                    let list = &in_buf[off..off + len];
+                    for i in 0..old_w {
+                        for j in (i + 1)..old_w {
+                            let (a, b) = (list[i], list[j]);
+                            if a == v1 || a == v2 || b == v1 || b == v2
+                            {
+                                live.decr(pack_pair(a, b));
+                            }
+                        }
+                    }
+                }
+
+                // Rewrite in place: drop v1 and v2, append w. Net
+                // -1 (u consumes both operands), so the write stays
+                // inside the list's extent.
+                let mut out = off;
+                for i in off..off + len {
+                    let s = in_buf[i];
+                    if s != v1 && s != v2 {
+                        in_buf[out] = s;
+                        out += 1;
+                    }
+                }
+                debug_assert_eq!(out, off + len - 2,
+                                 "shared consumer missing an operand");
+                in_buf[out] = w;
+                out += 1;
+                let new_len = out - off;
+                in_len[u as usize] = new_len as u32;
+
+                // Count pairs of the just-appended w inside the
+                // window; if the list outgrew the window the new
+                // element is outside it and no pairs are added (the
+                // tolerated underestimate).
+                if new_len <= cap {
+                    let list = &in_buf[off..off + new_len];
+                    let last = new_len - 1;
+                    for i in 0..last {
+                        let k2 = pack_pair(list[i], list[last]);
+                        let c = live.incr(k2);
+                        if c >= 2 {
+                            heap.push((c, Reverse(k2)));
+                        }
+                    }
+                }
+
+                cons_buf.push(u);
+                cons_len[w as usize] += 1;
+            }
+
+            // The rewired consumers leave v1/v2's consumer lists
+            // (both sides sorted: one linear merge-filter each).
+            for &v in &[v1, v2] {
+                let off = cons_off[v as usize] as usize;
+                let len = cons_len[v as usize] as usize;
+                let mut out = off;
+                let mut r = 0usize;
+                for i in off..off + len {
+                    let c = cons_buf[i];
+                    while r < shared_v.len() && shared_v[r] < c {
+                        r += 1;
+                    }
+                    if r < shared_v.len() && shared_v[r] == c {
+                        continue;
+                    }
+                    cons_buf[out] = c;
+                    out += 1;
+                }
+                cons_len[v as usize] = (out - off) as u32;
+            }
+            *shared = shared_v;
+            made += 1;
+        }
+
+        total += made;
+        if made == 0 || hag.agg_nodes.len() >= cfg.capacity || exact {
+            break 'rounds;
+        }
+
+        // Dirty-round refresh: fold only the rewired lists into the
+        // exact base table, then reseed live + heap from it — what
+        // the reference achieves by re-enumerating *every* list.
+        for &u in dirty_list.iter() {
+            let off = in_off[u as usize] as usize;
+            let len = in_len[u as usize] as usize;
+            let list = &in_buf[off..off + len];
+            let w = len.min(cap);
+            for i in 0..w {
+                for j in (i + 1)..w {
+                    base.incr(pack_pair(list[i], list[j]));
+                }
+            }
+            dirty[(u >> 6) as usize] &= !(1u64 << (u & 63));
+        }
+        dirty_list.clear();
+        live.copy_from(base);
+        heap.clear();
+        live.for_each(|k, c| {
+            if c >= 2 {
+                heap.push((c, Reverse(k)));
+            }
+        });
+    }
+
+    // ---- write the rewired lists back -----------------------------
+    for v in 0..n {
+        let off = in_off[v] as usize;
+        let len = in_len[v] as usize;
+        let dst = &mut hag.in_edges[v];
+        dst.clear();
+        dst.extend_from_slice(&in_buf[off..off + len]);
+    }
+    total
+}
+
+// ===================================================================
+// Set AGGREGATE — retained naive reference
 // ===================================================================
 
 struct SetState {
@@ -124,14 +771,16 @@ struct SetState {
     heap: BinaryHeap<(u32, Reverse<(Slot, Slot)>)>,
 }
 
-fn search_set(hag: &mut Hag, cfg: &SearchConfig) -> usize {
+fn search_set_reference(hag: &mut Hag, cfg: &SearchConfig,
+                        ks: &mut KernelStats) -> usize {
     // With a finite pair_cap the candidate window misses pairs beyond
     // the first `cap` list positions. Merges shrink lists, so
     // re-scanning after the heap drains recovers coverage: run rounds
     // until a round makes no progress or capacity is reached.
     let mut total = 0usize;
     loop {
-        let made = search_set_round(hag, cfg);
+        ks.rounds += 1;
+        let made = search_set_round_reference(hag, cfg, ks);
         total += made;
         if made == 0 || hag.agg_nodes.len() >= cfg.capacity
             || cfg.pair_cap == usize::MAX
@@ -141,7 +790,8 @@ fn search_set(hag: &mut Hag, cfg: &SearchConfig) -> usize {
     }
 }
 
-fn search_set_round(hag: &mut Hag, cfg: &SearchConfig) -> usize {
+fn search_set_round_reference(hag: &mut Hag, cfg: &SearchConfig,
+                              ks: &mut KernelStats) -> usize {
     let slots = hag.slots();
     // Build consumer lists over *all* current slots (merges may pair an
     // aggregation node with anything).
@@ -181,12 +831,14 @@ fn search_set_round(hag: &mut Hag, cfg: &SearchConfig) -> usize {
             match st.heap.pop() {
                 None => return iterations,
                 Some((c, Reverse(p))) => {
+                    ks.heap_pops += 1;
                     let cur = st.pair_count.get(&p).copied().unwrap_or(0);
                     if cur == c && c >= 2 {
                         break (p.0, p.1, c);
                     }
                     // stale: if the current count is still >= 2 the pair
                     // was re-pushed on update; just drop this entry.
+                    ks.stale_pops += 1;
                 }
             }
         };
@@ -216,11 +868,12 @@ fn search_set_round(hag: &mut Hag, cfg: &SearchConfig) -> usize {
             let list = &mut hag.in_edges[u as usize];
             let old_w = list.len().min(cfg.pair_cap);
             // Pairs inside the old window disappear for v1/v2 entries.
-            remove_window_pairs(&mut st.pair_count, list, old_w, v1, v2);
+            remove_window_pairs_ref(&mut st.pair_count, list, old_w,
+                                    v1, v2);
             list.retain(|&s| s != v1 && s != v2);
             list.push(w);
-            add_window_pairs(&mut st.pair_count, &mut st.heap, list,
-                             cfg.pair_cap);
+            add_window_pairs_ref(&mut st.pair_count, &mut st.heap, list,
+                                 cfg.pair_cap);
             st.consumers[w as usize].push(u);
         }
         // Remove the rewired consumers from v1/v2 consumer lists
@@ -239,8 +892,8 @@ fn search_set_round(hag: &mut Hag, cfg: &SearchConfig) -> usize {
 
 /// Remove every windowed pair of `list` that involves `v1` or `v2`
 /// (the entries about to be rewired), decrementing counts.
-fn remove_window_pairs(pc: &mut HashMap<(Slot, Slot), u32>, list: &[Slot],
-                       w: usize, v1: Slot, v2: Slot) {
+fn remove_window_pairs_ref(pc: &mut HashMap<(Slot, Slot), u32>,
+                           list: &[Slot], w: usize, v1: Slot, v2: Slot) {
     for i in 0..w {
         for j in (i + 1)..w {
             let (a, b) = (list[i], list[j]);
@@ -263,9 +916,10 @@ fn remove_window_pairs(pc: &mut HashMap<(Slot, Slot), u32>, list: &[Slot],
 /// may *under*estimate true redundancy (never overestimate it from this
 /// path), which the merge loop tolerates by re-checking the live
 /// intersection.
-fn add_window_pairs(pc: &mut HashMap<(Slot, Slot), u32>,
-                    heap: &mut BinaryHeap<(u32, Reverse<(Slot, Slot)>)>,
-                    list: &[Slot], cap: usize) {
+fn add_window_pairs_ref(pc: &mut HashMap<(Slot, Slot), u32>,
+                        heap: &mut BinaryHeap<(u32,
+                                               Reverse<(Slot, Slot)>)>,
+                        list: &[Slot], cap: usize) {
     if list.len() > cap {
         return; // appended element is outside the window
     }
@@ -301,10 +955,12 @@ fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
 // Sequential AGGREGATE (common-prefix merging, Algorithm 3 line 8)
 // ===================================================================
 
-fn search_sequential(hag: &mut Hag, cfg: &SearchConfig) -> usize {
+fn search_sequential(hag: &mut Hag, cfg: &SearchConfig,
+                     ks: &mut KernelStats) -> usize {
     // Redundancy of (v1, v2) = #consumers whose list starts (v1, v2).
     // A merge replaces that prefix with (w, rest...), so each consumer's
     // first-two pair changes — counts update in O(1) per consumer.
+    ks.rounds = 1;
     let mut pair_count: HashMap<(Slot, Slot), u32> = HashMap::default();
     let mut members: HashMap<(Slot, Slot), Vec<u32>> = HashMap::default();
     for (v, l) in hag.in_edges.iter().enumerate() {
@@ -326,10 +982,12 @@ fn search_sequential(hag: &mut Hag, cfg: &SearchConfig) -> usize {
             match heap.pop() {
                 None => return iterations,
                 Some((c, Reverse(p))) => {
+                    ks.heap_pops += 1;
                     let cur = pair_count.get(&p).copied().unwrap_or(0);
                     if cur == c && c >= 2 {
                         break (p, c);
                     }
+                    ks.stale_pops += 1;
                 }
             }
         };
@@ -378,6 +1036,20 @@ mod tests {
                 (2, 4), (3, 4),
             ],
         )
+    }
+
+    /// K6 with a few extra hub edges: enough overlap that windowed
+    /// searches run multiple rounds at tiny pair caps.
+    fn dense() -> Graph {
+        let mut edges = Vec::new();
+        for u in 0..8u32 {
+            for v in 0..8u32 {
+                if u != v && (u < 6 || v < 3) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Graph::from_edges(8, &edges)
     }
 
     #[test]
@@ -528,6 +1200,130 @@ mod tests {
         let (h2, _) = hag_search(&g, &cfg);
         assert_eq!(h1.agg_nodes, h2.agg_nodes);
         assert_eq!(h1.in_edges, h2.in_edges);
+    }
+
+    /// The determinism contract is stronger than run-to-run: the flat
+    /// kernel must replay the retained reference's merge sequence
+    /// byte-for-byte, across exact, windowed (multi-round), and
+    /// capacity-capped configs. `tests/properties.rs` widens this to
+    /// the random-graph corpus.
+    #[test]
+    fn flat_kernel_matches_reference_byte_identical() {
+        let mut scratch = SearchScratch::new();
+        for g in [fig1(), dense()] {
+            for pair_cap in [2usize, 3, 64, usize::MAX] {
+                for capacity in [0usize, 1, g.n() / 4, usize::MAX] {
+                    let cfg = SearchConfig {
+                        capacity,
+                        kind: AggregateKind::Set,
+                        pair_cap,
+                    };
+                    let (hr, sr) = hag_search_reference(&g, &cfg);
+                    let (hf, sf) =
+                        hag_search_with_scratch(&g, &cfg, &mut scratch);
+                    assert_eq!(hr.agg_nodes, hf.agg_nodes,
+                               "merge order diverged at pair_cap \
+                                {pair_cap} capacity {capacity}");
+                    assert_eq!(hr.in_edges, hf.in_edges,
+                               "final lists diverged at pair_cap \
+                                {pair_cap} capacity {capacity}");
+                    assert_eq!(sr.iterations, sf.iterations);
+                    assert_eq!(sr.rounds, sf.rounds,
+                               "round count diverged at pair_cap \
+                                {pair_cap} capacity {capacity}");
+                    assert_eq!((sr.heap_pops, sr.stale_pops),
+                               (sf.heap_pops, sf.stale_pops),
+                               "pop sequences diverged at pair_cap \
+                                {pair_cap} capacity {capacity}");
+                    hf.validate().unwrap();
+                    check_equivalence(&g, &hf).unwrap();
+                }
+            }
+        }
+    }
+
+    /// A scratch carried across graphs of different shapes must not
+    /// leak state between runs.
+    #[test]
+    fn scratch_reuse_is_pollution_free() {
+        let mut scratch = SearchScratch::new();
+        let cfg_small = SearchConfig {
+            capacity: usize::MAX,
+            kind: AggregateKind::Set,
+            pair_cap: 2,
+        };
+        // big graph first so every buffer is oversized for fig1
+        let (_, _) = hag_search_with_scratch(&dense(), &cfg_small,
+                                             &mut scratch);
+        let g = fig1();
+        for pair_cap in [2usize, usize::MAX] {
+            let cfg = SearchConfig {
+                capacity: usize::MAX,
+                kind: AggregateKind::Set,
+                pair_cap,
+            };
+            let (fresh, _) = hag_search(&g, &cfg);
+            let (reused, _) =
+                hag_search_with_scratch(&g, &cfg, &mut scratch);
+            assert_eq!(fresh.agg_nodes, reused.agg_nodes);
+            assert_eq!(fresh.in_edges, reused.in_edges);
+        }
+        assert!(scratch.bytes() > 0);
+    }
+
+    #[test]
+    fn kernel_stats_are_coherent() {
+        let g = dense();
+        let mut cfg = SearchConfig::paper_default(g.n());
+        cfg.capacity = usize::MAX;
+        cfg.pair_cap = 2; // force multiple windowed rounds
+        let (_, stats) = hag_search(&g, &cfg);
+        assert!(stats.rounds >= 2, "tiny window must need rounds: \
+                                    {stats:?}");
+        assert!(stats.heap_pops >= stats.iterations);
+        assert!(stats.heap_pops >= stats.stale_pops);
+        assert!(stats.peak_scratch_bytes > 0);
+        // reference reports the same round structure
+        let (_, rstats) = hag_search_reference(&g, &cfg);
+        assert_eq!(stats.rounds, rstats.rounds);
+        assert_eq!(stats.iterations, rstats.iterations);
+    }
+
+    #[test]
+    fn pair_table_counts_and_clears() {
+        let mut t = PairTable::default();
+        assert_eq!(t.get(pack_pair(3, 9)), 0);
+        t.decr(pack_pair(3, 9)); // absent: no-op
+        assert_eq!(t.incr(pack_pair(3, 9)), 1);
+        assert_eq!(t.incr(pack_pair(9, 3)), 2, "unordered key");
+        t.decr(pack_pair(3, 9));
+        assert_eq!(t.get(pack_pair(3, 9)), 1);
+        t.zero(pack_pair(3, 9));
+        assert_eq!(t.get(pack_pair(3, 9)), 0);
+        assert_eq!(t.incr(pack_pair(3, 9)), 1, "zeroed key revives");
+        t.clear();
+        assert_eq!(t.get(pack_pair(3, 9)), 0);
+        let mut seen = 0usize;
+        t.for_each(|_, _| seen += 1);
+        assert_eq!(seen, 0);
+    }
+
+    #[test]
+    fn pair_table_grows_past_min_size() {
+        let mut t = PairTable::default();
+        let m = (MIN_TABLE * 2) as u32;
+        for a in 0..m {
+            assert_eq!(t.incr(pack_pair(a, a + 1)), 1);
+        }
+        for a in 0..m {
+            assert_eq!(t.get(pack_pair(a, a + 1)), 1, "lost key {a}");
+        }
+        let mut n = 0usize;
+        t.for_each(|_, c| {
+            assert_eq!(c, 1);
+            n += 1;
+        });
+        assert_eq!(n, m as usize);
     }
 
     #[test]

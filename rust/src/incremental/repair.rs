@@ -25,11 +25,9 @@
 //! full search when local repair has leaked too much cost.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
-use crate::hag::search::norm;
+use crate::hag::search::{pack_pair, PairHeap, PairTable};
 use crate::hag::{AggNode, AggregateKind, Hag};
-use crate::util::FxHashMap;
 
 /// Bit 31 tags an internal slot as an aggregation id.
 const AGG: u32 = 1 << 31;
@@ -50,47 +48,49 @@ pub(crate) fn agg_slot(i: usize) -> u32 {
     AGG | i as u32
 }
 
-/// Lazy max-heap entry: (count, pair) with smallest-pair tie-break,
-/// same shape as `search_set`'s heap.
-type PairHeap = BinaryHeap<(u32, Reverse<(u32, u32)>)>;
-
-/// Count every windowed pair of `list` into the re-merge map, pushing
-/// heap candidates as counts reach 2+ (mirror of `search.rs::
-/// add_window_pairs`, over whole fresh lists instead of one appended
-/// slot).
-fn add_window_pairs(pc: &mut FxHashMap<(u32, u32), u32>,
-                    heap: &mut PairHeap, list: &[u32],
-                    pair_cap: usize) {
+/// Count every windowed pair of `list` into the re-merge table,
+/// pushing heap candidates as counts reach 2+. Same flat kernel
+/// pieces as `hag/search.rs` ([`PairTable`], packed `u64` keys,
+/// [`PairHeap`] with the packed-key tie-break — identical pop order
+/// to the old `(u32, u32)` tuples), over whole fresh lists instead of
+/// one appended slot.
+fn add_window_pairs(pc: &mut PairTable, heap: &mut PairHeap,
+                    list: &[u32], pair_cap: usize) {
     let w = list.len().min(pair_cap);
     for i in 0..w {
         for j in (i + 1)..w {
-            let p = norm(list[i], list[j]);
-            let c = pc.entry(p).or_insert(0);
-            *c += 1;
-            if *c >= 2 {
-                heap.push((*c, Reverse(p)));
+            let k = pack_pair(list[i], list[j]);
+            let c = pc.incr(k);
+            if c >= 2 {
+                heap.push((c, Reverse(k)));
             }
         }
     }
 }
 
-/// Remove every windowed pair of `list` from the re-merge map;
-/// zero-count entries are dropped so stale heap entries die on pop
-/// (mirror of `search.rs::remove_window_pairs`).
-fn sub_window_pairs(pc: &mut FxHashMap<(u32, u32), u32>, list: &[u32],
+/// Remove every windowed pair of `list` from the re-merge table;
+/// zero-count entries read as absent, so stale heap entries die on
+/// pop.
+fn sub_window_pairs(pc: &mut PairTable, list: &[u32],
                     pair_cap: usize) {
     let w = list.len().min(pair_cap);
     for i in 0..w {
         for j in (i + 1)..w {
-            let p = norm(list[i], list[j]);
-            if let Some(c) = pc.get_mut(&p) {
-                *c = c.saturating_sub(1);
-                if *c == 0 {
-                    pc.remove(&p);
-                }
-            }
+            pc.decr(pack_pair(list[i], list[j]));
         }
     }
+}
+
+/// Reusable buffers for [`IncrementalHag::local_remerge`]: the flat
+/// pair-count table and heap (shared kernel layout with
+/// `hag/search.rs`) plus the users buffer the old pass re-allocated
+/// on every heap pop. Owned by the [`IncrementalHag`] so a stream
+/// engine's re-merge cadence stops paying per-pass allocations.
+#[derive(Debug, Clone, Default)]
+struct RemergeScratch {
+    count: PairTable,
+    heap: PairHeap,
+    users: Vec<u32>,
 }
 
 /// A repairable HAG: set-AGGREGATE only (ordered covers do not admit
@@ -111,6 +111,8 @@ pub struct IncrementalHag {
     live: usize,
     /// Maintained `sum |in_edges[v]|`.
     final_edges: usize,
+    /// Re-merge arena, recycled across passes.
+    scratch: RemergeScratch,
 }
 
 impl IncrementalHag {
@@ -152,7 +154,9 @@ impl IncrementalHag {
         let final_edges = in_edges.iter().map(|l| l.len()).sum();
         let live = aggs.len();
         let mut ih = IncrementalHag { n, aggs, refs, in_edges, live,
-                                      final_edges };
+                                      final_edges,
+                                      scratch:
+                                          RemergeScratch::default() };
         // Collect anything the search left unreferenced (defensive;
         // Algorithm 3 only materializes referenced nodes).
         for i in 0..ih.aggs.len() {
@@ -287,27 +291,37 @@ impl IncrementalHag {
 
     /// One re-merge round: build windowed pair counts over the dirty
     /// finals, then drain the lazy heap, maintaining counts
-    /// incrementally as consumers are rewired.
+    /// incrementally as consumers are rewired. The count table, heap,
+    /// and users buffer all come from the recycled
+    /// [`RemergeScratch`].
     fn remerge_round(&mut self, dirty: &[u32], pair_cap: usize,
                      budget: usize, capacity: usize) -> usize {
-        let mut count: FxHashMap<(u32, u32), u32> = FxHashMap::default();
-        let mut heap = PairHeap::new();
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.count.clear();
+        sc.heap.clear();
+        let merges = self.remerge_round_inner(&mut sc, dirty, pair_cap,
+                                              budget, capacity);
+        self.scratch = sc;
+        merges
+    }
+
+    fn remerge_round_inner(&mut self, sc: &mut RemergeScratch,
+                           dirty: &[u32], pair_cap: usize,
+                           budget: usize, capacity: usize) -> usize {
         for &v in dirty {
-            add_window_pairs(&mut count, &mut heap,
+            add_window_pairs(&mut sc.count, &mut sc.heap,
                              &self.in_edges[v as usize], pair_cap);
         }
         let mut merges = 0usize;
         while merges < budget && self.live < capacity {
             // Pop the highest-redundancy non-stale pair (ties break to
             // the smallest pair, so the pass is deterministic).
-            let (a, b) = loop {
-                match heap.pop() {
+            let (a, b, key) = loop {
+                match sc.heap.pop() {
                     None => return merges,
-                    Some((c, Reverse(p))) => {
-                        let cur =
-                            count.get(&p).copied().unwrap_or(0);
-                        if cur == c && c >= 2 {
-                            break p;
+                    Some((c, Reverse(k))) => {
+                        if sc.count.get(k) == c && c >= 2 {
+                            break ((k >> 32) as u32, k as u32, k);
                         }
                         // stale: a still-counted pair was re-pushed on
                         // its last update; just drop this entry
@@ -317,18 +331,17 @@ impl IncrementalHag {
             // `contains` rechecks whole lists, so this can only find
             // *more* users than the windowed count promised, never
             // fewer.
-            let users: Vec<u32> = dirty
-                .iter()
-                .copied()
-                .filter(|&v| {
-                    let l = &self.in_edges[v as usize];
-                    l.contains(&a) && l.contains(&b)
-                })
-                .collect();
-            if users.len() < 2 {
+            sc.users.clear();
+            for &v in dirty {
+                let l = &self.in_edges[v as usize];
+                if l.contains(&a) && l.contains(&b) {
+                    sc.users.push(v);
+                }
+            }
+            if sc.users.len() < 2 {
                 // Defensive (see above: unreachable): drop the entry
                 // so the heap cannot yield it again.
-                count.remove(&norm(a, b));
+                sc.count.zero(key);
                 continue;
             }
             let w = agg_slot(self.aggs.len());
@@ -339,15 +352,16 @@ impl IncrementalHag {
             // consumer releases a/b, so a cascade can never reap them.
             self.acquire(a);
             self.acquire(b);
-            for &v in &users {
-                sub_window_pairs(&mut count,
+            for i in 0..sc.users.len() {
+                let v = sc.users[i];
+                sub_window_pairs(&mut sc.count,
                                  &self.in_edges[v as usize], pair_cap);
                 {
                     let l = &mut self.in_edges[v as usize];
                     l.retain(|&s| s != a && s != b);
                     l.push(w);
                 }
-                add_window_pairs(&mut count, &mut heap,
+                add_window_pairs(&mut sc.count, &mut sc.heap,
                                  &self.in_edges[v as usize], pair_cap);
                 self.final_edges -= 1; // two slots out, one in
                 self.refs[agg_id(w)] += 1;
@@ -619,6 +633,158 @@ mod tests {
         let mut free = IncrementalHag::from_hag(&h);
         assert_eq!(free.local_remerge(&dirty, 64, 16, usize::MAX), 2);
         check_equivalence(&g, &free.to_hag()).unwrap();
+    }
+
+    /// The pre-kernel re-merge pass (FxHashMap pair counts, fresh
+    /// `users` Vec per heap pop), kept verbatim as a test oracle:
+    /// [`IncrementalHag::local_remerge`] on the flat [`PairTable`]
+    /// kernel must stay byte-identical to it.
+    fn local_remerge_reference(ih: &mut IncrementalHag, dirty: &[u32],
+                               pair_cap: usize, max_merges: usize,
+                               capacity: usize) -> usize {
+        let mut total = 0usize;
+        while total < max_merges && ih.live < capacity {
+            let made = remerge_round_reference(ih, dirty, pair_cap,
+                                               max_merges - total,
+                                               capacity);
+            total += made;
+            if made == 0 {
+                break;
+            }
+        }
+        total
+    }
+
+    fn remerge_round_reference(ih: &mut IncrementalHag, dirty: &[u32],
+                               pair_cap: usize, budget: usize,
+                               capacity: usize) -> usize {
+        use crate::util::FxHashMap;
+        use std::collections::BinaryHeap;
+        type RefHeap = BinaryHeap<(u32, Reverse<(u32, u32)>)>;
+        let norm =
+            |a: u32, b: u32| if a < b { (a, b) } else { (b, a) };
+        let add = |count: &mut FxHashMap<(u32, u32), u32>,
+                   heap: &mut RefHeap, list: &[u32]| {
+            let w = list.len().min(pair_cap);
+            for i in 0..w {
+                for j in (i + 1)..w {
+                    let p = norm(list[i], list[j]);
+                    let c = count.entry(p).or_insert(0);
+                    *c += 1;
+                    if *c >= 2 {
+                        heap.push((*c, Reverse(p)));
+                    }
+                }
+            }
+        };
+        let sub = |count: &mut FxHashMap<(u32, u32), u32>,
+                   list: &[u32]| {
+            let w = list.len().min(pair_cap);
+            for i in 0..w {
+                for j in (i + 1)..w {
+                    let p = norm(list[i], list[j]);
+                    if let Some(c) = count.get_mut(&p) {
+                        *c = c.saturating_sub(1);
+                        if *c == 0 {
+                            count.remove(&p);
+                        }
+                    }
+                }
+            }
+        };
+        let mut count: FxHashMap<(u32, u32), u32> =
+            FxHashMap::default();
+        let mut heap = RefHeap::new();
+        for &v in dirty {
+            add(&mut count, &mut heap, &ih.in_edges[v as usize]);
+        }
+        let mut merges = 0usize;
+        while merges < budget && ih.live < capacity {
+            let (a, b) = loop {
+                match heap.pop() {
+                    None => return merges,
+                    Some((c, Reverse(p))) => {
+                        let cur = count.get(&p).copied().unwrap_or(0);
+                        if cur == c && c >= 2 {
+                            break p;
+                        }
+                    }
+                }
+            };
+            let users: Vec<u32> = dirty
+                .iter()
+                .copied()
+                .filter(|&v| {
+                    let l = &ih.in_edges[v as usize];
+                    l.contains(&a) && l.contains(&b)
+                })
+                .collect();
+            if users.len() < 2 {
+                count.remove(&norm(a, b));
+                continue;
+            }
+            let w = agg_slot(ih.aggs.len());
+            ih.aggs.push(Some(AggNode { left: a, right: b }));
+            ih.refs.push(0);
+            ih.live += 1;
+            ih.acquire(a);
+            ih.acquire(b);
+            for &v in &users {
+                sub(&mut count, &ih.in_edges[v as usize]);
+                {
+                    let l = &mut ih.in_edges[v as usize];
+                    l.retain(|&s| s != a && s != b);
+                    l.push(w);
+                }
+                add(&mut count, &mut heap, &ih.in_edges[v as usize]);
+                ih.final_edges -= 1;
+                ih.refs[agg_id(w)] += 1;
+                ih.release(a);
+                ih.release(b);
+            }
+            merges += 1;
+        }
+        merges
+    }
+
+    #[test]
+    fn remerge_matches_prekernel_reference() {
+        use crate::datasets::{community_graph, CommunityCfg};
+        for seed in 0..4u64 {
+            let gcfg = CommunityCfg {
+                n: 120,
+                e: 1500,
+                communities: 4,
+                intra_frac: 0.9,
+                zipf_exp: 0.9,
+                clone_frac: 0.5,
+            };
+            let (g, _) = community_graph(&gcfg, seed);
+            let h = Hag::from_graph(&g, AggregateKind::Set);
+            let mut a = IncrementalHag::from_hag(&h);
+            let mut b = IncrementalHag::from_hag(&h);
+            let dirty: Vec<u32> = (0..g.n() as u32)
+                .filter(|v| v % 3 == 0)
+                .collect();
+            // Successive calls drive `a` through its recycled scratch
+            // (exact, tiny-window, and capacity-capped configs) while
+            // `b` replays the pre-kernel pass; every step must agree.
+            for (cap, mm, vcap) in [
+                (usize::MAX, 8, usize::MAX),
+                (4, 16, usize::MAX),
+                (64, 64, 12),
+            ] {
+                let ma = a.local_remerge(&dirty, cap, mm, vcap);
+                let mb = local_remerge_reference(&mut b, &dirty, cap,
+                                                 mm, vcap);
+                assert_eq!(ma, mb, "seed {seed} cap {cap}: merge \
+                                    counts diverged");
+                assert_eq!(a.to_hag(), b.to_hag(),
+                           "seed {seed} cap {cap}: results diverged");
+                a.check().unwrap();
+            }
+            check_equivalence(&g, &a.to_hag()).unwrap();
+        }
     }
 
     #[test]

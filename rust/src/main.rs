@@ -203,6 +203,10 @@ fn cmd_search(args: &Args, scale: f64, seed: u64) -> Result<()> {
                  / stats.transfers_after.max(1) as f64);
     println!("search time   : {:.1} ms  ({} merges)", stats.elapsed_ms,
              stats.iterations);
+    println!("kernel        : {} rounds, {} heap pops ({} stale), \
+              scratch peak {:.1} KiB",
+             stats.rounds, stats.heap_pops, stats.stale_pops,
+             stats.peak_scratch_bytes as f64 / 1024.0);
     println!("equivalence   : OK (probabilistic, Theorem 1)");
     Ok(())
 }
@@ -251,13 +255,19 @@ fn cmd_partition_stats(args: &Args, scale: f64, seed: u64) -> Result<()> {
     }
     println!("\nper-shard redundancy elimination ({kind:?}, capacity \
               {}):", cfg.capacity);
-    println!("{:>6} {:>12} {:>12} {:>10} {:>10}", "shard", "aggs gnn",
-             "aggs hag", "agg nodes", "ms");
+    println!("{:>6} {:>12} {:>12} {:>10} {:>7} {:>10} {:>10}", "shard",
+             "aggs gnn", "aggs hag", "agg nodes", "rounds", "pops",
+             "ms");
     for (s, st) in sh.per_shard.iter().enumerate() {
-        println!("{:>6} {:>12} {:>12} {:>10} {:>10.1}", s,
+        println!("{:>6} {:>12} {:>12} {:>10} {:>7} {:>10} {:>10.1}", s,
                  st.aggregations_before, st.aggregations_after,
-                 st.agg_nodes, st.elapsed_ms);
+                 st.agg_nodes, st.rounds, st.heap_pops,
+                 st.elapsed_ms);
     }
+    println!("kernel    : {} rounds, {} heap pops ({} stale) across \
+              shards; max worker scratch {:.1} KiB",
+             sh.total.rounds, sh.total.heap_pops, sh.total.stale_pops,
+             sh.total.peak_scratch_bytes as f64 / 1024.0);
     let (single, ss) = hag_search(&ds.graph, &cfg);
     println!("\nstitched vs single-shard:");
     println!("  cost |E|-|VA| : {} vs {} ({:+.2}% gap)",

@@ -37,8 +37,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::graph::Graph;
-use crate::hag::{hag_search, AggregateKind, Hag, SearchConfig,
-                 SearchStats};
+use crate::hag::{hag_search, hag_search_with_scratch, AggregateKind,
+                 Hag, SearchConfig, SearchScratch, SearchStats};
 
 /// Statistics for one sharded search run.
 #[derive(Debug, Clone)]
@@ -134,13 +134,20 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
         (0..k).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|sc| {
         for _ in 0..threads {
-            sc.spawn(|| loop {
-                let s = next.fetch_add(1, Ordering::Relaxed);
-                if s >= k {
-                    break;
+            sc.spawn(|| {
+                // One arena per worker, reused across every shard the
+                // worker drains: the kernel's tables and CSR buffers
+                // are allocated once per pool, not once per shard.
+                let mut scratch = SearchScratch::new();
+                loop {
+                    let s = next.fetch_add(1, Ordering::Relaxed);
+                    if s >= k {
+                        break;
+                    }
+                    let r = hag_search_with_scratch(&subs[s], &cfgs[s],
+                                                    &mut scratch);
+                    *results[s].lock().unwrap() = Some(r);
                 }
-                let r = hag_search(&subs[s], &cfgs[s]);
-                *results[s].lock().unwrap() = Some(r);
             });
         }
     });
@@ -167,6 +174,15 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
         transfers_before: g.e(),
         transfers_after: hag.data_transfers(),
         elapsed_ms: wall_ms,
+        rounds: per_shard.iter().map(|s| s.rounds).sum(),
+        heap_pops: per_shard.iter().map(|s| s.heap_pops).sum(),
+        stale_pops: per_shard.iter().map(|s| s.stale_pops).sum(),
+        // per-worker arenas: the max is the honest per-thread figure
+        peak_scratch_bytes: per_shard
+            .iter()
+            .map(|s| s.peak_scratch_bytes)
+            .max()
+            .unwrap_or(0),
     };
     (hag, ShardedStats { per_shard, report, threads, wall_ms, total })
 }

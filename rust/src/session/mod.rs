@@ -53,8 +53,8 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{self, Lowered, Repr};
 use crate::datasets::{Dataset, Task};
 use crate::graph::Graph;
-use crate::hag::{build_plan, hag_search, ExecutionPlan, Hag,
-                 SearchConfig};
+use crate::hag::{build_plan, hag_search_with_scratch, ExecutionPlan,
+                 Hag, SearchConfig, SearchScratch};
 use crate::incremental::{GraphDelta, OverlayGraph};
 use crate::partition::{partition_bfs, split_capacity_by_edges,
                        stitch_hags, subgraph, worker_parallelism,
@@ -114,6 +114,9 @@ pub struct Session {
     version: u64,
     cache: PlanCache,
     stats: SessionStats,
+    /// Reusable search arena for the session's own (single-shard)
+    /// re-searches; the sharded path gives each pool worker its own.
+    scratch: SearchScratch,
 }
 
 impl Session {
@@ -187,6 +190,7 @@ impl Session {
             version: 0,
             cache: PlanCache::new(),
             stats: SessionStats::default(),
+            scratch: SearchScratch::new(),
         }
     }
 
@@ -354,7 +358,9 @@ impl Session {
                     return h;
                 }
             }
-            let (hag, _) = hag_search(g, &self.shard_config(0));
+            let cfg = self.shard_config(0);
+            let (hag, _) =
+                hag_search_with_scratch(g, &cfg, &mut self.scratch);
             let hag = Arc::new(hag);
             if use_cache {
                 self.stats.shard_searches += 1;
@@ -392,13 +398,19 @@ impl Session {
             let next = AtomicUsize::new(0);
             std::thread::scope(|sc| {
                 for _ in 0..threads {
-                    sc.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= m {
-                            break;
+                    sc.spawn(|| {
+                        // per-worker arena, reused across its misses
+                        let mut scratch = SearchScratch::new();
+                        loop {
+                            let i =
+                                next.fetch_add(1, Ordering::Relaxed);
+                            if i >= m {
+                                break;
+                            }
+                            let (h, _) = hag_search_with_scratch(
+                                &subs[i], &cfgs[i], &mut scratch);
+                            *results[i].lock().unwrap() = Some(h);
                         }
-                        let (h, _) = hag_search(&subs[i], &cfgs[i]);
-                        *results[i].lock().unwrap() = Some(h);
                     });
                 }
             });
@@ -501,7 +513,7 @@ pub fn emit_buckets(datasets: &[Dataset], spec: &LowerSpec,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hag::check_equivalence;
+    use crate::hag::{check_equivalence, hag_search};
     use crate::partition::search_partitioned;
     use crate::partition::test_graphs::clique_ring;
 

@@ -1,9 +1,16 @@
 //! Micro-benchmark harness (criterion is not vendored here): warmup +
 //! repeated timing with median/mean/min reporting, matching the
 //! `cargo bench` (harness = false) protocol. Results print in a
-//! machine-greppable one-line format used by EXPERIMENTS.md.
+//! machine-greppable one-line format used by EXPERIMENTS.md, and can
+//! additionally be collected into a machine-readable JSON document
+//! ([`BenchJson`] — the `BENCH_*.json` files the perf log references)
+//! so the repo's perf trajectory is diffable, not just greppable.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
 
 #[derive(Debug, Clone)]
 pub struct BenchStats {
@@ -33,6 +40,64 @@ fn fmt(d: Duration) -> String {
         format!("{:.3} ms", s * 1e3)
     } else {
         format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Machine-readable result collector: every [`BenchStats`] pushed,
+/// plus free-form derived metrics (speedups, cost gaps) keyed by
+/// name. Written as one JSON document:
+/// `{"schema": "benchkit-v1", "entries": [...], "derived": {...}}`.
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    entries: Vec<Value>,
+    derived: BTreeMap<String, Value>,
+}
+
+impl BenchJson {
+    pub fn new() -> BenchJson {
+        BenchJson::default()
+    }
+
+    /// Record one harness result (times in seconds, f64).
+    pub fn push(&mut self, s: &BenchStats) {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Value::Str(s.name.clone()));
+        m.insert("iters".to_string(), Value::Num(s.iters as f64));
+        m.insert("median_s".to_string(),
+                 Value::Num(s.median.as_secs_f64()));
+        m.insert("mean_s".to_string(),
+                 Value::Num(s.mean.as_secs_f64()));
+        m.insert("min_s".to_string(), Value::Num(s.min.as_secs_f64()));
+        m.insert("max_s".to_string(), Value::Num(s.max.as_secs_f64()));
+        self.entries.push(Value::Obj(m));
+    }
+
+    /// Record a derived metric next to the raw entries (later writes
+    /// to the same key win).
+    pub fn derived(&mut self, key: &str, v: Value) {
+        self.derived.insert(key.to_string(), v);
+    }
+
+    /// Convenience for scalar derived metrics.
+    pub fn derived_num(&mut self, key: &str, v: f64) {
+        self.derived(key, Value::Num(v));
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(),
+                 Value::Str("benchkit-v1".to_string()));
+        m.insert("entries".to_string(),
+                 Value::Arr(self.entries.clone()));
+        m.insert("derived".to_string(),
+                 Value::Obj(self.derived.clone()));
+        Value::Obj(m)
+    }
+
+    /// Write pretty-printed JSON to `path` (parent directories must
+    /// exist).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_string_pretty())
     }
 }
 
@@ -106,6 +171,28 @@ mod tests {
         });
         assert_eq!(s.iters, 5);
         assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let b = Bencher { warmup: 0, iters: 3,
+                          max_total: Duration::from_secs(5) };
+        let s = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut j = BenchJson::new();
+        j.push(&s);
+        j.derived_num("speedup", 2.5);
+        let v = crate::util::json::parse(&j.to_value().to_string())
+            .unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "benchkit-v1");
+        let entries = v.req_arr("entries").unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].req_str("name").unwrap(), "noop");
+        assert_eq!(entries[0].req_usize("iters").unwrap(), 3);
+        assert!(entries[0].req_f64("median_s").unwrap() >= 0.0);
+        let d = v.req("derived").unwrap();
+        assert_eq!(d.req_f64("speedup").unwrap(), 2.5);
     }
 
     #[test]

@@ -16,8 +16,9 @@ use repro::datasets::{community_graph, ego_clique_set, CommunityCfg,
 use repro::graph::{Graph, GraphBuilder};
 use repro::hag::{build_plan, check_equivalence,
                  check_equivalence_probabilistic, hag_search,
+                 hag_search_reference, hag_search_with_scratch,
                  AggregateKind, ExecutionPlan, Hag, PlanConfig,
-                 SearchConfig};
+                 SearchConfig, SearchScratch};
 use repro::util::Rng;
 
 const CASES: usize = 30;
@@ -141,6 +142,51 @@ fn prop_cost_monotone_in_capacity() {
                     "case {case}: cost rose from {last} to {c} at \
                      capacity {cap}");
             last = c;
+        }
+    }
+}
+
+/// The flat arena kernel's determinism contract: over the whole
+/// random-graph corpus, at exact *and* finite pair caps and under
+/// tight capacities, the kernel and the retained naive reference
+/// produce **byte-identical** HAGs — same merge order, same
+/// `agg_nodes`, same `in_edges` — and the same round structure. One
+/// scratch is carried across every case, so arena reuse is proven
+/// pollution-free at corpus scale too. (This is the property the
+/// session golden-buckets byte-identity test and
+/// `Session::plan() == plan_fresh()` stand on.)
+#[test]
+fn prop_flat_kernel_matches_reference_byte_identical() {
+    let mut scratch = SearchScratch::new();
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7000 + case as u64);
+        let g = random_graph(&mut rng);
+        for pair_cap in [4usize, 64, usize::MAX] {
+            for capacity in [g.n() / 4, usize::MAX] {
+                let cfg = SearchConfig {
+                    capacity,
+                    kind: AggregateKind::Set,
+                    pair_cap,
+                };
+                let (hr, sr) = hag_search_reference(&g, &cfg);
+                let (hf, sf) =
+                    hag_search_with_scratch(&g, &cfg, &mut scratch);
+                assert_eq!(hr.agg_nodes, hf.agg_nodes,
+                           "case {case} pair_cap {pair_cap} capacity \
+                            {capacity}: merge order diverged");
+                assert_eq!(hr.in_edges, hf.in_edges,
+                           "case {case} pair_cap {pair_cap} capacity \
+                            {capacity}: final lists diverged");
+                assert_eq!(sr.iterations, sf.iterations,
+                           "case {case}: iteration counts diverged");
+                assert_eq!(sr.rounds, sf.rounds,
+                           "case {case}: round counts diverged");
+                // identical heap evolution, not just identical output
+                assert_eq!((sr.heap_pops, sr.stale_pops),
+                           (sf.heap_pops, sf.stale_pops),
+                           "case {case}: pop sequences diverged");
+                hf.validate().unwrap();
+            }
         }
     }
 }
