@@ -1,0 +1,98 @@
+//! Telemetry overhead micro-bench: ns/op for the obs primitives the
+//! hot paths call. The contract the serving/search code relies on: a
+//! *disabled* trace point costs one relaxed atomic load (plus loop
+//! overhead here), and registry counters / histogram records stay in
+//! the low-nanosecond range. CI prints these as an advisory guard —
+//! no hard threshold, shared runners are too noisy for one.
+//!
+//! Run: `cargo bench --bench obs_overhead`. Besides the one-line
+//! harness output, results land in `BENCH_obs.json` (override with
+//! `BENCH_JSON=...`) in the `benchkit-v1` schema.
+
+use std::path::Path;
+
+use repro::obs::trace;
+use repro::obs::MetricsRegistry;
+use repro::util::benchkit::{BenchJson, BenchStats, Bencher};
+
+/// Ops per timed closure call: each bench reports time / N.
+const N: usize = 1_000_000;
+
+fn ns_per_op(json: &mut BenchJson, s: &BenchStats) -> f64 {
+    let ns = s.median.as_secs_f64() * 1e9 / N as f64;
+    println!("  -> {ns:.2} ns/op");
+    json.push(s);
+    json.derived_num(&format!("{}/ns_per_op", s.name), ns);
+    ns
+}
+
+fn main() {
+    let b = Bencher::quick();
+    let mut json = BenchJson::new();
+
+    // Disabled tracing: the path every trace point takes in a normal
+    // (untraced) run. This is the number that must stay trivial.
+    // black_box sits outside the macros: their arg expressions only
+    // evaluate when tracing is enabled, and the disabled loops must
+    // not be deletable.
+    trace::set_enabled(false);
+    let s = b.run("obs_overhead/event_disabled", || {
+        for i in 0..N {
+            let i = std::hint::black_box(i);
+            repro::obs_event!("bench.ev", i as u64);
+        }
+    });
+    let ev_off = ns_per_op(&mut json, &s);
+    let s = b.run("obs_overhead/span_disabled", || {
+        for i in 0..N {
+            let i = std::hint::black_box(i);
+            let _sp = repro::obs_span!("bench.span", i as u64);
+        }
+    });
+    let span_off = ns_per_op(&mut json, &s);
+
+    // Enabled tracing: clock read + seqlock ring write per point.
+    trace::set_enabled(true);
+    let s = b.run("obs_overhead/event_enabled", || {
+        for i in 0..N {
+            let i = std::hint::black_box(i);
+            repro::obs_event!("bench.ev", i as u64);
+        }
+    });
+    ns_per_op(&mut json, &s);
+    let s = b.run("obs_overhead/span_enabled", || {
+        for i in 0..N {
+            let i = std::hint::black_box(i);
+            let _sp = repro::obs_span!("bench.span", i as u64);
+        }
+    });
+    ns_per_op(&mut json, &s);
+    trace::set_enabled(false);
+
+    // Registry primitives: the batcher pays one of each per request.
+    let reg = MetricsRegistry::new();
+    let c = reg.counter("bench.count");
+    let s = b.run("obs_overhead/counter_inc", || {
+        for _ in 0..N {
+            c.inc();
+        }
+    });
+    ns_per_op(&mut json, &s);
+    let h = reg.histogram("bench.lat");
+    let s = b.run("obs_overhead/hist_record_ns", || {
+        for i in 0..N {
+            h.record_ns(std::hint::black_box(i) as u64);
+        }
+    });
+    ns_per_op(&mut json, &s);
+
+    println!(
+        "advisory: disabled trace point {ev_off:.2} ns/event, \
+         disabled span {span_off:.2} ns/span (target: a few atomics)");
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    json.write(Path::new(&out))
+        .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("wrote {out}");
+}

@@ -17,8 +17,8 @@ pub use packing::{pack_workload, plan_tensors, unpermute_rows,
                   PackedWorkload};
 pub use server::{BatchPolicy, InferenceServer, Resident, ScoreError,
                  ScoreOk, ScoreReject, ScoreRequest, ScoreResponse,
-                 ServeOutcome, ServeStats, ServerMsg, SwapPolicy,
-                 UpdateRequest, UpdateResponse};
+                 ServeOutcome, ServeStats, ServerMsg, StatsRequest,
+                 SwapPolicy, UpdateRequest, UpdateResponse};
 pub use trainer::{EpochStats, TrainReport, Trainer};
 
 use anyhow::Result;

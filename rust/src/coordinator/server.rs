@@ -51,6 +51,18 @@
 //! returns [`ScoreReject::NodeOutOfRange`] until a swap publishes a
 //! plan that covers it (the serving plan trails the live topology by
 //! one swap, not by a whole emit-buckets/compile cycle; DESIGN.md §8).
+//!
+//! Telemetry (DESIGN.md §10): each server owns a
+//! [`MetricsRegistry`] — counters and bounded log-scale histograms
+//! (`serve.latency`, `serve.exec`) replace the historical unbounded
+//! per-request `Vec<f64>` accumulators, so memory is O(1) per metric
+//! and percentiles are readable *live*: [`ServerMsg::Stats`] returns
+//! a [`StatsSnapshot`] over the same queue the scoring traffic uses.
+//! The batcher marks its lifecycle in the trace ring
+//! (`serve.batch`/`serve.flush` spans, `serve.drift_check` instants,
+//! a `serve.plan_swap` span per landed swap), and failures — batch
+//! execute, plan swap — write a flight-recorder artifact
+//! ([`crate::obs::flight`]) carrying the failing span.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError,
@@ -64,6 +76,8 @@ use crate::graph::Graph;
 use crate::hag::{AggregateKind, ExecutionPlan, Hag};
 use crate::incremental::{ApplyOutcome, GraphDelta, RebuildEvent,
                          StreamEngine};
+use crate::obs::{self, Counter, Histogram, MetricsRegistry,
+                 StatsSnapshot};
 use crate::runtime::xla;
 use crate::runtime::{BucketSpec, Executable, HostTensor, Runtime,
                      TensorSpec};
@@ -163,6 +177,22 @@ pub fn oneshot() -> (SyncSender<ScoreResponse>,
 pub enum ServerMsg {
     Score(ScoreRequest),
     Update(UpdateRequest),
+    /// Live stats: the worker publishes the resident pair's own
+    /// counters into its registry and replies with a point-in-time
+    /// [`StatsSnapshot`]. Never blocks behind a batch window —
+    /// answered from whichever receive loop sees it.
+    Stats(StatsRequest),
+}
+
+/// A live-stats request (see [`ServerMsg::Stats`]).
+pub struct StatsRequest {
+    pub reply: SyncSender<StatsSnapshot>,
+}
+
+/// Create a reply channel pair for a [`StatsRequest`].
+pub fn stats_oneshot() -> (SyncSender<StatsSnapshot>,
+                           Receiver<StatsSnapshot>) {
+    sync_channel(1)
 }
 
 /// One topology update for the resident maintenance pair. Buffered on
@@ -460,17 +490,10 @@ pub fn coalesce_order(deltas: &[GraphDelta],
     keys.into_iter().map(|(_, _, i)| i).collect()
 }
 
-/// Nearest-rank percentile over an ascending-sorted sample: the
-/// smallest value whose 1-based rank is `ceil(p * n)`. The previous
-/// truncating index biased small-sample tails low (p99 over 10
-/// samples returned the 9th value, not the max). NaN on empty input.
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let rank = (p * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
-}
+// Nearest-rank percentile semantics moved to
+// `obs::metrics::percentile_exact` (the exact reference) and
+// `obs::metrics::Histogram::percentile_ns` (the bounded serving-path
+// estimator, within a documented ≤ 2% relative bucket error).
 
 /// Re-derive the resident permuted `h0` under a new plan's
 /// permutation: row `old.inv_perm[v]` moves to `new.inv_perm[v]`.
@@ -584,8 +607,9 @@ impl Worker {
                 Self::xla_setup(runtime, artifact, &statics, seed)?
             }
             Err(e) => {
-                eprintln!("[serve] PJRT backend unavailable ({e:#}); \
-                           serving on the host reference executor");
+                crate::obs_warn!("[serve] PJRT backend unavailable \
+                                  ({e:#}); serving on the host \
+                                  reference executor");
                 Backend::reference(bucket.f_in, bucket.hidden,
                                    bucket.classes, seed)
             }
@@ -657,7 +681,7 @@ impl Worker {
     }
 
     fn reject(r: ScoreRequest, reject: ScoreReject, c: &mut Counters) {
-        c.rejected += 1;
+        c.rejected.inc();
         let _ = r.reply.send(ScoreResponse::Err(ScoreError {
             node: r.node,
             reject,
@@ -674,6 +698,7 @@ impl Worker {
         if pending.is_empty() {
             return;
         }
+        let _sp = crate::obs_span!("serve.flush", pending.len());
         let deltas: Vec<GraphDelta> =
             pending.iter().map(|u| u.delta).collect();
         let order = match resident.as_ref() {
@@ -706,12 +731,12 @@ impl Worker {
                     latency: req.submitted.elapsed(),
                 },
             };
-            c.updates += 1;
+            c.updates.inc();
             if let Some(tx) = req.reply {
                 let _ = tx.send(resp);
             }
         }
-        c.update_batches += 1;
+        c.update_batches.inc();
         self.maybe_swap(resident, c);
     }
 
@@ -724,16 +749,24 @@ impl Worker {
         if !res.swap.swap_plans || res.engine.rebuild_in_flight() {
             return;
         }
-        if res.engine.drift() <= res.threshold {
+        let due = res.engine.drift() > res.threshold;
+        crate::obs_event!("serve.drift_check", due as u64);
+        if !due {
             return;
         }
         // Nothing changed since the plan we already serve: skip.
         if self.served_session_plan && res.session.plan_current() {
             return;
         }
+        // Span the whole swap attempt; cancelled on every path that
+        // leaves the serving plan untouched, so a `serve.plan_swap`
+        // span in a trace means a swap actually landed (and is always
+        // preceded by a due `serve.drift_check` instant).
+        let mut sp = crate::obs_span!("serve.plan_swap");
         let (hag, plan) = res.session.plan();
         if Arc::ptr_eq(&plan, &self.plan) {
             self.served_session_plan = true;
+            sp.cancel();
             return;
         }
         if *plan == *self.plan {
@@ -741,6 +774,7 @@ impl Worker {
             // different Arc): adopt the handle, no serving-state churn.
             self.plan = plan;
             self.served_session_plan = true;
+            sp.cancel();
             return;
         }
         // Install into the engine only once the serving state actually
@@ -750,13 +784,18 @@ impl Worker {
         match self.swap_to(plan) {
             Ok(true) => {
                 res.engine.install_hag(&hag);
-                c.plan_swaps += 1;
+                c.plan_swaps.inc();
                 self.served_session_plan = true;
             }
-            Ok(false) => c.swaps_skipped += 1,
+            Ok(false) => {
+                c.swaps_skipped.inc();
+                sp.cancel();
+            }
             Err(e) => {
-                eprintln!("[serve] plan swap failed: {e:#}");
-                c.swaps_skipped += 1;
+                crate::obs_warn!("[serve] plan swap failed: {e:#}");
+                c.swaps_skipped.inc();
+                sp.cancel();
+                obs::flight::dump("plan-swap-failed", &c.registry);
             }
         }
     }
@@ -857,6 +896,10 @@ impl Worker {
                                                &mut pending, &mut c);
                         }
                     }
+                    Ok(ServerMsg::Stats(s)) => {
+                        publish_resident_stats(&resident, &c);
+                        let _ = s.reply.send(c.registry.snapshot());
+                    }
                     Err(RecvTimeoutError::Timeout) => {
                         self.flush_updates(&mut resident, &mut pending,
                                            &mut c);
@@ -880,6 +923,10 @@ impl Worker {
                     // Buffer only — updates never stretch the
                     // latency-critical batch window; they flush next.
                     Ok(ServerMsg::Update(u)) => pending.push(u),
+                    Ok(ServerMsg::Stats(s)) => {
+                        publish_resident_stats(&resident, &c);
+                        let _ = s.reply.send(c.registry.snapshot());
+                    }
                     Err(RecvTimeoutError::Timeout)
                     | Err(RecvTimeoutError::Disconnected) => break,
                 }
@@ -900,20 +947,24 @@ impl Worker {
                         .copy_from_slice(&r.features);
                 }
             }
+            let sp = crate::obs_span!("serve.batch", batch.len());
             let te = Instant::now();
             let result = self.run_batch();
-            c.exec_ms.push(te.elapsed().as_secs_f64() * 1e3);
-            c.batches += 1;
+            // Land the span before handling the result: a failing
+            // batch's flight record must already carry it.
+            drop(sp);
+            c.exec.record(te.elapsed());
+            c.batches.inc();
             match result {
                 Ok(logits) => {
                     for r in batch {
-                        c.requests += 1;
+                        c.requests.inc();
                         let new = self.plan.inv_perm[r.node as usize]
                             as usize;
                         let row = logits[new * self.classes
                             ..(new + 1) * self.classes].to_vec();
                         let latency = r.submitted.elapsed();
-                        c.lat_ms.push(latency.as_secs_f64() * 1e3);
+                        c.lat.record(latency);
                         let _ = r.reply.send(ScoreResponse::Ok(
                             ScoreOk { node: r.node, logits: row,
                                       latency }));
@@ -922,8 +973,10 @@ impl Worker {
                 Err(e) => {
                     // Explicit error outcome per request: clients can
                     // tell "server rejected" from "server died".
-                    eprintln!("[serve] batch failed: {e:#}");
-                    c.exec_failures += 1;
+                    crate::obs_error!("[serve] batch failed: {e:#}");
+                    crate::obs_event!("serve.exec_failed");
+                    c.exec_failures.inc();
+                    obs::flight::dump("batch-exec-failed", &c.registry);
                     let message = format!("{e:#}");
                     for r in batch {
                         Self::reject_failed(r, &message, &mut c);
@@ -950,7 +1003,7 @@ impl Worker {
     }
 
     fn reject_failed(r: ScoreRequest, message: &str, c: &mut Counters) {
-        c.failed += 1;
+        c.failed.inc();
         let _ = r.reply.send(ScoreResponse::Err(ScoreError {
             node: r.node,
             reject: ScoreReject::ExecFailed {
@@ -1142,65 +1195,122 @@ fn rebind_artifact(state: &mut XlaState, artifact: &str,
     Ok(())
 }
 
-/// Batcher-loop accumulators, folded into [`ServeStats`] at shutdown.
-#[derive(Default)]
+/// Batcher-loop metrics: registry-backed handles (one relaxed atomic
+/// op per event), folded into [`ServeStats`] at shutdown. The
+/// latency/exec histograms are bounded — a long-running server no
+/// longer grows per-request memory — and every value here is
+/// readable live through [`ServerMsg::Stats`].
 struct Counters {
-    requests: usize,
-    rejected: usize,
-    failed: usize,
-    batches: usize,
-    updates: usize,
-    update_batches: usize,
-    plan_swaps: usize,
-    swaps_skipped: usize,
-    exec_failures: usize,
-    lat_ms: Vec<f64>,
-    exec_ms: Vec<f64>,
+    registry: Arc<MetricsRegistry>,
+    requests: Counter,
+    rejected: Counter,
+    failed: Counter,
+    batches: Counter,
+    updates: Counter,
+    update_batches: Counter,
+    plan_swaps: Counter,
+    swaps_skipped: Counter,
+    exec_failures: Counter,
+    /// Queue + batch + execute latency per answered request.
+    lat: Histogram,
+    /// Batch execute wall time.
+    exec: Histogram,
+}
+
+impl Default for Counters {
+    fn default() -> Counters {
+        Counters::new(Arc::new(MetricsRegistry::new()))
+    }
 }
 
 impl Counters {
-    fn finalize(self, elapsed: Duration, resident: Option<&Resident>,
+    fn new(registry: Arc<MetricsRegistry>) -> Counters {
+        Counters {
+            requests: registry.counter("serve.requests"),
+            rejected: registry.counter("serve.rejected"),
+            failed: registry.counter("serve.failed"),
+            batches: registry.counter("serve.batches"),
+            updates: registry.counter("serve.updates"),
+            update_batches: registry.counter("serve.update_batches"),
+            plan_swaps: registry.counter("serve.plan_swaps"),
+            swaps_skipped: registry.counter("serve.swaps_skipped"),
+            exec_failures: registry.counter("serve.exec_failures"),
+            lat: registry.histogram("serve.latency"),
+            exec: registry.histogram("serve.exec"),
+            registry,
+        }
+    }
+
+    fn finalize(&self, elapsed: Duration, resident: Option<&Resident>,
                 plan_matches_fresh: Option<bool>) -> ServeStats {
-        let mut lat = self.lat_ms;
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let (shard_searches, shard_cache_hits, rebuild_swaps) =
             resident.map_or((0, 0, 0), |r| {
                 (r.session.stats().shard_searches,
                  r.session.stats().shard_cache_hits,
                  r.engine.stats().rebuild_swaps)
             });
+        let requests = self.requests.get() as usize;
+        let failed = self.failed.get() as usize;
+        let batches = self.batches.get() as usize;
+        let exec = self.exec.summary();
         ServeStats {
-            requests: self.requests,
-            rejected: self.rejected,
-            failed: self.failed,
-            batches: self.batches,
-            mean_batch: if self.batches == 0 {
+            requests,
+            rejected: self.rejected.get() as usize,
+            failed,
+            batches,
+            mean_batch: if batches == 0 {
                 0.0
             } else {
-                (self.requests + self.failed) as f64
-                    / self.batches as f64
+                (requests + failed) as f64 / batches as f64
             },
-            p50_ms: percentile(&lat, 0.5),
-            p99_ms: percentile(&lat, 0.99),
-            mean_exec_ms: if self.exec_ms.is_empty() {
+            p50_ms: self.lat.percentile_ms(0.5),
+            p99_ms: self.lat.percentile_ms(0.99),
+            mean_exec_ms: if exec.count == 0 {
                 f64::NAN
             } else {
-                self.exec_ms.iter().sum::<f64>()
-                    / self.exec_ms.len() as f64
+                exec.mean_ns / 1.0e6
             },
-            throughput_rps: self.requests as f64
+            throughput_rps: requests as f64
                 / elapsed.as_secs_f64().max(1e-9),
-            updates: self.updates,
-            update_batches: self.update_batches,
+            updates: self.updates.get() as usize,
+            update_batches: self.update_batches.get() as usize,
             rebuild_swaps,
-            plan_swaps: self.plan_swaps,
-            swaps_skipped: self.swaps_skipped,
-            exec_failures: self.exec_failures,
+            plan_swaps: self.plan_swaps.get() as usize,
+            swaps_skipped: self.swaps_skipped.get() as usize,
+            exec_failures: self.exec_failures.get() as usize,
             shard_searches,
             shard_cache_hits,
             plan_matches_fresh,
         }
     }
+}
+
+/// Fold the resident pair's own counters into the server registry as
+/// absolute gauges (`session.*`, `incr.*`), so one [`StatsSnapshot`]
+/// is a coherent cross-subsystem view. Called on every
+/// [`ServerMsg::Stats`]; gauges are set-to-absolute, so republishing
+/// is idempotent.
+fn publish_resident_stats(resident: &Option<Resident>, c: &Counters) {
+    let Some(res) = resident.as_ref() else { return };
+    let reg = &c.registry;
+    let s = res.session.stats();
+    reg.gauge("session.deltas").set(s.deltas as i64);
+    reg.gauge("session.noops").set(s.noops as i64);
+    reg.gauge("session.cross_shard_deltas")
+        .set(s.cross_shard_deltas as i64);
+    reg.gauge("session.plans").set(s.plans as i64);
+    reg.gauge("session.plan_cache_hits").set(s.plan_cache_hits as i64);
+    reg.gauge("session.shard_searches").set(s.shard_searches as i64);
+    reg.gauge("session.shard_cache_hits")
+        .set(s.shard_cache_hits as i64);
+    let e = res.engine.stats();
+    reg.gauge("incr.applied").set(e.applied as i64);
+    reg.gauge("incr.noops").set(e.noops as i64);
+    reg.gauge("incr.fallbacks").set(e.fallbacks as i64);
+    reg.gauge("incr.remerge_passes").set(e.remerge_passes as i64);
+    reg.gauge("incr.remerge_merges").set(e.remerge_merges as i64);
+    reg.gauge("incr.rebuild_swaps").set(e.rebuild_swaps as i64);
+    reg.gauge("incr.installs").set(e.installs as i64);
 }
 
 #[cfg(test)]
@@ -1232,19 +1342,8 @@ mod tests {
                         submitted: Instant::now() }, rx)
     }
 
-    #[test]
-    fn percentile_is_nearest_rank() {
-        let v: Vec<f64> = (1..=10).map(|x| x as f64).collect();
-        assert_eq!(percentile(&v, 0.5), 5.0);
-        assert_eq!(percentile(&v, 0.99), 10.0, "p99 of 10 is the max");
-        assert_eq!(percentile(&v, 1.0), 10.0);
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        let w: Vec<f64> = (1..=100).map(|x| x as f64).collect();
-        assert_eq!(percentile(&w, 0.99), 99.0);
-        assert_eq!(percentile(&w, 0.5), 50.0);
-        assert!(percentile(&[], 0.5).is_nan());
-        assert_eq!(percentile(&[42.0], 0.99), 42.0);
-    }
+    // Nearest-rank percentile unit tests live with the moved code:
+    // `obs::metrics::tests::percentile_exact_is_nearest_rank`.
 
     #[test]
     fn coalesce_groups_by_shard_with_node_add_barriers() {
@@ -1296,8 +1395,8 @@ mod tests {
         assert_eq!(res.engine.e(), g.e() + 1);
         assert_eq!(res.session.e(), g.e() + 1);
         assert_eq!(resp.cost_core, res.engine.cost_core());
-        assert_eq!(c.updates, 1);
-        assert_eq!(c.update_batches, 1);
+        assert_eq!(c.updates.get(), 1);
+        assert_eq!(c.update_batches.get(), 1);
         assert!(pending.is_empty());
     }
 
@@ -1398,6 +1497,81 @@ mod tests {
         assert_eq!(out.stats.exec_failures, 2);
         assert_eq!(out.stats.failed, 2);
         assert_eq!(out.stats.requests, 0);
+    }
+
+    #[test]
+    fn exec_failure_writes_flight_record_with_batch_span() {
+        // Serialize against other tests that redirect the global
+        // flight-dump dir.
+        let _guard = crate::obs::flight::test_lock();
+        let dir = std::env::temp_dir().join(format!(
+            "repro-serve-flight-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::obs::flight::set_dir(&dir);
+        crate::obs::trace::set_enabled(true);
+        let g = clique_ring(3, 4);
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
+        w.backend = Backend::Broken;
+        let (tx, rx) = sync_channel::<ServerMsg>(16);
+        let (r1, rx1) = score(0, vec![0.1; 4]);
+        tx.send(ServerMsg::Score(r1)).unwrap();
+        drop(tx);
+        let out = w.batcher_loop(rx, BatchPolicy::default(), None);
+        assert!(matches!(rx1.recv().unwrap(), ScoreResponse::Err(_)));
+        assert_eq!(out.stats.exec_failures, 1);
+        // The dump must carry the failing batch's span and the
+        // registry state at failure time.
+        let mut found = false;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            let name = p.file_name().unwrap()
+                .to_string_lossy().into_owned();
+            if !name.contains("batch-exec-failed")
+                || !name.ends_with(".json")
+            {
+                continue;
+            }
+            let v = crate::util::json::parse(
+                &std::fs::read_to_string(&p).unwrap()).unwrap();
+            assert_eq!(v.req_str("reason").unwrap(),
+                       "batch-exec-failed");
+            let snap = v.req("snapshot").unwrap();
+            assert_eq!(snap.req("derived").unwrap()
+                           .req_f64("serve.exec_failures").unwrap(),
+                       1.0);
+            if v.req_arr("trace").unwrap().iter().any(|e| {
+                e.req_str("name").unwrap() == "serve.batch"
+            }) {
+                found = true;
+            }
+        }
+        assert!(found, "flight record carries the failing batch span");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats_message_returns_live_snapshot() {
+        let g = clique_ring(4, 5);
+        let (mut w, _) = reference_worker(&g, 4, 8, 3);
+        let (tx, rx) = sync_channel::<ServerMsg>(16);
+        let handle = std::thread::spawn(move || {
+            w.batcher_loop(rx, BatchPolicy::default(), None)
+        });
+        let (r1, rx1) = score(1, vec![0.5; 4]);
+        tx.send(ServerMsg::Score(r1)).unwrap();
+        // Counters increment before the reply is sent, so once the
+        // score came back the next snapshot must count it.
+        assert!(rx1.recv().unwrap().is_ok());
+        let (stx, srx) = stats_oneshot();
+        tx.send(ServerMsg::Stats(StatsRequest { reply: stx })).unwrap();
+        let snap = srx.recv().expect("stats answered while serving");
+        drop(tx);
+        let out = handle.join().unwrap();
+        assert_eq!(snap.counter("serve.requests"), 1);
+        assert_eq!(snap.counter("serve.batches"), 1);
+        let lat = snap.hist("serve.latency").expect("latency hist");
+        assert_eq!(lat.count, 1);
+        assert_eq!(out.stats.requests, 1);
     }
 
     #[test]

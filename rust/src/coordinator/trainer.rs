@@ -212,7 +212,7 @@ impl Trainer {
             let (loss, acc) = self.step()?;
             let wall_ms = ts.elapsed().as_secs_f64() * 1e3;
             if log_every > 0 && (e % log_every == 0 || e + 1 == epochs) {
-                eprintln!(
+                crate::obs_info!(
                     "[train {}] epoch {e:4}  loss {loss:.4}  \
                      acc {acc:.3}  {wall_ms:.1} ms",
                     self.exe.spec.name);

@@ -553,6 +553,10 @@ fn search_set_flat(hag: &mut Hag, cfg: &SearchConfig,
     let mut total = 0usize;
     'rounds: loop {
         ks.rounds += 1;
+        // One trace span per merge round: args are (merges landed,
+        // heap pops) for this round.
+        let mut sp = crate::obs_span!("search.round");
+        let round_pops0 = ks.heap_pops;
         let mut made = 0usize;
         while hag.agg_nodes.len() < cfg.capacity {
             // Pop the highest-redundancy non-stale pair.
@@ -718,6 +722,8 @@ fn search_set_flat(hag: &mut Hag, cfg: &SearchConfig,
         }
 
         total += made;
+        sp.set_args(made as u64,
+                    (ks.heap_pops - round_pops0) as u64);
         if made == 0 || hag.agg_nodes.len() >= cfg.capacity || exact {
             break 'rounds;
         }

@@ -280,15 +280,17 @@ impl StreamEngine {
             if self.poll_rebuild() {
                 rebuild = RebuildEvent::Swapped;
             }
-        } else if self.cfg.policy.due(self.seq)
-            && self.drift() > self.cfg.policy.threshold
-        {
-            if self.cfg.policy.background {
-                self.start_rebuild();
-                rebuild = RebuildEvent::Started;
-            } else {
-                self.rebuild_now();
-                rebuild = RebuildEvent::Swapped;
+        } else if self.cfg.policy.due(self.seq) {
+            let over = self.drift() > self.cfg.policy.threshold;
+            crate::obs_event!("incr.drift_check", over as u64);
+            if over {
+                if self.cfg.policy.background {
+                    self.start_rebuild();
+                    rebuild = RebuildEvent::Started;
+                } else {
+                    self.rebuild_now();
+                    rebuild = RebuildEvent::Swapped;
+                }
             }
         }
 
@@ -320,6 +322,8 @@ impl StreamEngine {
     /// use, so the §3.2 a-hat memory budget holds even under a policy
     /// that never re-searches.
     fn remerge(&mut self) -> usize {
+        // args: (dirty nodes visited, merges landed)
+        let mut sp = crate::obs_span!("incr.remerge");
         let mut batch: Vec<u32> = self.dirty.iter().copied().collect();
         batch.sort_unstable();
         batch.truncate(self.cfg.remerge_window);
@@ -330,6 +334,7 @@ impl StreamEngine {
         let merges = self.hag.local_remerge(&batch, self.cfg.pair_cap,
                                             self.cfg.remerge_merges,
                                             capacity);
+        sp.set_args(batch.len() as u64, merges as u64);
         self.stats.remerge_passes += 1;
         self.stats.remerge_merges += merges;
         merges
@@ -364,6 +369,7 @@ impl StreamEngine {
 
     /// Inline full re-search + swap.
     pub fn rebuild_now(&mut self) {
+        let _sp = crate::obs_span!("incr.rebuild");
         let g = self.overlay.to_graph();
         let fresh = run_search(&g, &self.cfg);
         self.tracker.record_search(fresh.cost_core(), g.e());
@@ -386,6 +392,8 @@ impl StreamEngine {
         let cfg = self.cfg.clone();
         let (tx, rx) = channel();
         let handle = std::thread::spawn(move || {
+            // records on the worker's own trace ring
+            let _sp = crate::obs_span!("incr.rebuild", g.n(), g.e());
             let fresh = run_search(&g, &cfg);
             let _ = tx.send((g, fresh));
         });
@@ -455,6 +463,7 @@ impl StreamEngine {
     /// Replay the post-snapshot deltas onto the rebuilt HAG and swap
     /// both overlay and HAG in one step.
     fn install(&mut self, snapshot: Graph, fresh: Hag) {
+        crate::obs_event!("incr.rebuild_swap");
         let e_snap = snapshot.e();
         self.tracker.record_search(fresh.cost_core(), e_snap);
         let mut overlay = OverlayGraph::new(snapshot);

@@ -11,7 +11,9 @@
 //!   ([`partition`]), the streaming incremental-maintenance subsystem
 //!   ([`incremental`]), the unified lowering [`session`] (spec +
 //!   per-shard plan cache), plan compiler, PJRT runtime, training
-//!   coordinator and inference server, dataset generators, benches.
+//!   coordinator and inference server, dataset generators, benches,
+//!   and the [`obs`] telemetry substrate (metrics registry, event
+//!   tracer, flight recorder) threaded through all of the above.
 //! * **L2 (python/compile/model.py)** — GCN / GraphSAGE-P fwd+bwd in
 //!   JAX, AOT-lowered to HLO text per shape bucket.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the
@@ -25,6 +27,7 @@ pub mod datasets;
 pub mod graph;
 pub mod hag;
 pub mod incremental;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod session;

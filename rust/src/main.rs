@@ -58,6 +58,10 @@ SUBCOMMANDS
                  deltas while serving; --plan-swap hot-swaps drifted
                  serving plans from the resident session's per-shard
                  plan cache)
+  obs            telemetry tools: demo the metrics registry + event
+                 tracer on a small search, or validate exported
+                 artifacts (--check-snapshot / --check-trace, used by
+                 CI on the serve smoke's exports)
   bench-fig2     Fig 2: end-to-end train + inference comparison
   bench-fig3     Fig 3: aggregation/data-transfer reductions
   bench-fig4     Fig 4: capacity sweep on COLLAB
@@ -101,6 +105,16 @@ COMMON OPTIONS
   --insert-frac F   insert share of edge updates  [0.5]
   --node-add-frac F NodeAdd share of updates      [0.01]
   --report-memory   (bench-fig4) print §3.2 memory accounting
+
+TELEMETRY (DESIGN.md §10; log level via REPRO_LOG=error|warn|info|trace)
+  --obs-snapshot P  (serve) export periodic benchkit-v1 registry
+                    snapshots to P as JSONL while serving, plus one
+                    final snapshot at shutdown
+  --trace P         (serve, obs) enable event tracing and write a
+                    Chrome trace_event JSON to P at exit
+  --snapshot P      (obs) write the demo's registry snapshot to P
+  --check-snapshot P  (obs) validate a --obs-snapshot JSONL export
+  --check-trace P   (obs) validate a --trace Chrome JSON export
 ";
 
 fn main() -> Result<()> {
@@ -121,6 +135,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args, &artifacts, scale, seed),
         "infer" => cmd_infer(&args, &artifacts, scale, seed),
         "serve" => cmd_serve(&args, &artifacts, scale, seed),
+        "obs" => cmd_obs(&args, scale, seed),
         "bench-fig2" => repro::bench::fig2(
             &artifacts, args.get_all("datasets"), scale, seed,
             args.get_or("epochs", 10usize)?),
@@ -498,14 +513,16 @@ fn cmd_emit_buckets(args: &Args, artifacts: &PathBuf, scale: f64,
     let mut sets = Vec::new();
     for name in &names {
         let s = repro::bench::effective_scale(name, scale);
-        eprintln!("[emit-buckets] generating {name} at scale {s:.4}");
+        repro::obs_info!("[emit-buckets] generating {name} at scale \
+                          {s:.4}");
         sets.push(datasets::load(name, s, seed));
     }
     let spec = SpecArgs::parse(args)?.spec;
     let out = artifacts.join("buckets.json");
     let mut buckets = repro::session::emit_buckets(&sets, &spec, &out)?;
     if args.flag("fig4")? {
-        eprintln!("[emit-buckets] adding Fig-4 capacity sweep buckets");
+        repro::obs_info!("[emit-buckets] adding Fig-4 capacity sweep \
+                          buckets");
         buckets.extend(repro::bench::fig4_buckets(
             args.get_or("fig4-scale", 0.02)?, seed)?);
         coordinator::write_buckets_json(&buckets, &out)?;
@@ -565,6 +582,11 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let updates = args.get_or("updates", 0usize)?;
     let plan_swap = args.flag("plan-swap")?;
     let update_batch = args.get_or("update-batch", 64usize)?;
+    let obs_snapshot = args.get::<String>("obs-snapshot")?;
+    let trace_path = args.get::<String>("trace")?;
+    if trace_path.is_some() {
+        repro::obs::trace::set_enabled(true);
+    }
     let (spec, insert_frac, node_add_frac) = stream_opts(args)?;
     let ds = datasets::load(
         &name, repro::bench::effective_scale(&name, scale), seed);
@@ -626,6 +648,41 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     }
     println!("hardened   : 2 malformed probes rejected with error \
               replies");
+
+    // Periodic benchkit-v1 snapshot export: a poller thread asks the
+    // worker for a live StatsSnapshot over the same queue the scoring
+    // traffic uses and appends one JSONL line per poll; the main
+    // thread appends a final line after the load finishes.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut poller = None;
+    if let Some(path) = obs_snapshot.clone() {
+        std::fs::write(&path, "")
+            .with_context(|| format!("truncating {path}"))?;
+        let tx = server.client();
+        let stop2 = stop.clone();
+        poller = Some(std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(
+                    std::time::Duration::from_millis(200));
+                let (stx, srx) = coordinator::server::stats_oneshot();
+                let msg = coordinator::ServerMsg::Stats(
+                    coordinator::StatsRequest { reply: stx });
+                if tx.send(msg).is_err() {
+                    break;
+                }
+                match srx.recv() {
+                    Ok(snap) => {
+                        let line =
+                            snap.to_benchkit_value().to_string();
+                        if append_line(&path, &line).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+    }
     let mut handles = Vec::new();
     for c in 0..concurrency {
         let tx = server.client();
@@ -676,6 +733,27 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     for h in handles {
         let _ = h.join();
     }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(p) = poller {
+        let _ = p.join();
+    }
+    // Final live snapshot: taken after the load drains (every reply
+    // received means every counter moved) and appended as the export's
+    // last JSONL line, then cross-checked against shutdown stats.
+    let mut final_snap = None;
+    if let Some(path) = &obs_snapshot {
+        let (stx, srx) = coordinator::server::stats_oneshot();
+        let msg = coordinator::ServerMsg::Stats(
+            coordinator::StatsRequest { reply: stx });
+        if server.client().send(msg).is_err() {
+            bail!("server queue closed before the final obs snapshot");
+        }
+        let snap = srx.recv()
+            .context("server died answering the final obs snapshot")?;
+        append_line(path, &snap.to_benchkit_value().to_string())
+            .with_context(|| format!("appending to {path}"))?;
+        final_snap = Some(snap);
+    }
     let stats = server.shutdown();
     println!("requests   : {} ok, {} rejected, {} failed",
              stats.requests, stats.rejected, stats.failed);
@@ -704,5 +782,160 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
             None => {}
         }
     }
+    // The final snapshot line and the shutdown stats read the same
+    // registry with no traffic in between — disagreement means the
+    // stats views drifted apart, so fail loudly.
+    if let (Some(snap), Some(path)) = (&final_snap, &obs_snapshot) {
+        let sr = snap.counter("serve.requests") as usize;
+        if sr != stats.requests {
+            bail!("obs snapshot disagrees with shutdown stats: \
+                   serve.requests {sr} != {}", stats.requests);
+        }
+        let (p50, p99) = snap.hist("serve.latency")
+            .map(|h| (h.p50_ns / 1.0e6, h.p99_ns / 1.0e6))
+            .unwrap_or((f64::NAN, f64::NAN));
+        if stats.requests > 0
+            && ((p50 - stats.p50_ms).abs() > 1e-6
+                || (p99 - stats.p99_ms).abs() > 1e-6)
+        {
+            bail!("obs snapshot disagrees with shutdown stats: \
+                   p50/p99 {p50:.3}/{p99:.3} ms vs {:.3}/{:.3} ms",
+                  stats.p50_ms, stats.p99_ms);
+        }
+        println!("obs snap   : benchkit-v1 JSONL -> {path} (final \
+                  line agrees with shutdown stats)");
+    }
+    if let Some(path) = &trace_path {
+        repro::obs::trace::write_chrome_trace(
+            std::path::Path::new(path))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace      : Chrome trace_event JSON -> {path}");
+    }
+    Ok(())
+}
+
+/// Append one line to a JSONL file, creating it if needed.
+fn append_line(path: &str, line: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{line}")
+}
+
+fn cmd_obs(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    // Validation modes (CI runs these on the serve smoke's exports).
+    let check_snap = args.get::<String>("check-snapshot")?;
+    let check_trace = args.get::<String>("check-trace")?;
+    if check_snap.is_some() || check_trace.is_some() {
+        if let Some(path) = check_snap {
+            obs_check_snapshot(&path)?;
+        }
+        if let Some(path) = check_trace {
+            obs_check_trace(&path)?;
+        }
+        return Ok(());
+    }
+
+    // Demo mode: trace + time a few searches through the global
+    // registry, then print the snapshot via the shared formatter.
+    let name = args.get_or::<String>("dataset", "BZR".into())?;
+    let snap_out = args.get::<String>("snapshot")?;
+    let trace_out = args.get::<String>("trace")?;
+    let repeats = args.get_or("repeats", 3usize)?.max(1);
+    repro::obs::trace::set_enabled(true);
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let spec = SpecArgs::parse(args)?.spec;
+    let cfg = spec.search_config(ds.graph.n());
+    let reg = repro::obs::MetricsRegistry::global();
+    let hist = reg.histogram("obs.demo_search");
+    let mut cost = 0u64;
+    for _ in 0..repeats {
+        let t = std::time::Instant::now();
+        let (hag, _) = hag_search(&ds.graph, &cfg);
+        hist.record(t.elapsed());
+        reg.counter("obs.demo_runs").inc();
+        cost = hag.cost_core() as u64;
+    }
+    reg.gauge("obs.demo_cost").set(cost as i64);
+    let snap = reg.snapshot();
+    println!("registry snapshot after {repeats} searches of {} \
+              (n={}, e={}):", ds.name, ds.n(), ds.e());
+    print!("{}", snap.format());
+    let events = repro::obs::trace::collect();
+    let spans = events.iter()
+        .filter(|e| e.kind == repro::obs::trace::KIND_SPAN)
+        .count();
+    println!("trace      : {} events buffered ({} spans, {} instants)",
+             events.len(), spans, events.len() - spans);
+    if let Some(path) = snap_out {
+        std::fs::write(&path,
+                       snap.to_benchkit_value().to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("obs snap   : benchkit-v1 JSON -> {path}");
+    }
+    if let Some(path) = trace_out {
+        repro::obs::trace::write_chrome_trace(
+            std::path::Path::new(&path))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace      : Chrome trace_event JSON -> {path}");
+    }
+    Ok(())
+}
+
+/// CI check: every JSONL line must be a benchkit-v1 document whose
+/// `derived` map carries the serve counters.
+fn obs_check_snapshot(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let mut lines = 0usize;
+    let mut last_requests = 0.0f64;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = repro::util::json::parse(line)
+            .with_context(|| format!("{path}:{}: invalid JSON", i + 1))?;
+        let schema = doc.req_str("schema")
+            .with_context(|| format!("{path}:{}", i + 1))?;
+        if schema != "benchkit-v1" {
+            bail!("{path}:{}: schema {schema:?}, want benchkit-v1",
+                  i + 1);
+        }
+        let derived = doc.req("derived")
+            .with_context(|| format!("{path}:{}", i + 1))?;
+        last_requests = derived.req_f64("serve.requests")
+            .with_context(|| format!("{path}:{}", i + 1))?;
+        doc.req_arr("entries")
+            .with_context(|| format!("{path}:{}", i + 1))?;
+        lines += 1;
+    }
+    if lines == 0 {
+        bail!("{path}: no snapshot lines");
+    }
+    println!("check-snapshot OK: {lines} benchkit-v1 lines, final \
+              serve.requests = {last_requests}");
+    Ok(())
+}
+
+/// CI check: the Chrome export must parse and contain at least one
+/// completed span (`ph == \"X\"`).
+fn obs_check_trace(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let doc = repro::util::json::parse(&text)
+        .with_context(|| format!("{path}: invalid JSON"))?;
+    let events = doc.req_arr("traceEvents")
+        .with_context(|| path.to_string())?;
+    let spans = events.iter()
+        .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+        .count();
+    let instants = events.len() - spans;
+    if spans == 0 {
+        bail!("{path}: no completed spans in {} events", events.len());
+    }
+    println!("check-trace OK: {spans} spans + {instants} instants");
     Ok(())
 }

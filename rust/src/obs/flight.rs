@@ -1,0 +1,136 @@
+//! Flight recorder: post-mortem artifacts for serving failures.
+//!
+//! [`dump`] atomically writes (`tmp` + rename) a timestamped JSON
+//! file capturing the failure reason, the last
+//! [`KEEP_EVENTS`] trace events across all threads, and a full
+//! registry snapshot — turning a transient `[serve] batch failed`
+//! stderr line into an artifact a human (or CI) can open after the
+//! process is gone. Triggered on batch-execution failure, plan-swap
+//! failure, and serving-contract trips.
+//!
+//! Destination: [`set_dir`] override (tests), else
+//! `REPRO_FLIGHT_DIR`, else the OS temp dir. `REPRO_FLIGHT=0`
+//! disables dumps entirely.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace;
+use crate::util::json;
+
+/// Most-recent trace events preserved per dump.
+pub const KEEP_EVENTS: usize = 512;
+
+static DIR_OVERRIDE: Mutex<Option<PathBuf>> = Mutex::new(None);
+static LAST: Mutex<Option<PathBuf>> = Mutex::new(None);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Route subsequent dumps to `dir` (tests; wins over the env var).
+pub fn set_dir(dir: impl Into<PathBuf>) {
+    *DIR_OVERRIDE.lock().unwrap() = Some(dir.into());
+}
+
+/// Path of the most recent dump this process wrote, if any. Dumps
+/// happen on worker threads; callers (tests, shutdown paths) read
+/// this after joining.
+pub fn last_dump() -> Option<PathBuf> {
+    LAST.lock().unwrap().clone()
+}
+
+/// Write a flight record; returns the path, or `None` when disabled
+/// or the write failed (a failing failure-handler must never panic
+/// the serving thread).
+pub fn dump(reason: &str, registry: &MetricsRegistry)
+            -> Option<PathBuf> {
+    if std::env::var("REPRO_FLIGHT").is_ok_and(|v| v == "0") {
+        return None;
+    }
+    let dir = DIR_OVERRIDE.lock().unwrap().clone()
+        .or_else(|| std::env::var_os("REPRO_FLIGHT_DIR")
+            .map(PathBuf::from))
+        .unwrap_or_else(std::env::temp_dir);
+    let ms = SystemTime::now().duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64).unwrap_or(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let slug: String = reason.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    let path = dir.join(format!("obs-flight-{slug}-{ms}-{seq}.json"));
+
+    let mut events = trace::collect();
+    if events.len() > KEEP_EVENTS {
+        events.drain(..events.len() - KEEP_EVENTS);
+    }
+    let doc = json::obj(vec![
+        ("schema", json::str_("obs-flight-v1")),
+        ("reason", json::str_(reason)),
+        ("at_unix_ms", json::num(ms as f64)),
+        ("snapshot", registry.snapshot().to_benchkit_value()),
+        ("trace", trace::events_to_value(&events)),
+    ]);
+
+    let tmp = dir.join(format!(".obs-flight-{ms}-{seq}.tmp"));
+    let written = std::fs::write(&tmp, doc.to_string_pretty())
+        .and_then(|()| std::fs::rename(&tmp, &path));
+    match written {
+        Ok(()) => {
+            *LAST.lock().unwrap() = Some(path.clone());
+            crate::obs_warn!("[obs] flight record ({reason}) -> {}",
+                             path.display());
+            Some(path)
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            crate::obs_error!("[obs] flight record write failed: {e}");
+            None
+        }
+    }
+}
+
+/// Serializes tests that redirect the global dump dir via [`set_dir`]
+/// (here and in the server's flight-record test): without it, a
+/// concurrent override could route a dump into the other test's dir.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dump_writes_parseable_artifact_with_trace_and_snapshot() {
+        let _guard = test_lock();
+        let dir = std::env::temp_dir()
+            .join(format!("repro-obs-flight-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        set_dir(&dir);
+        trace::set_enabled(true);
+        {
+            let _s = crate::obs_span!("test.flight_span", 5u64);
+        }
+        let reg = MetricsRegistry::new();
+        reg.counter("test.flight_counter").add(3);
+        let path = dump("unit test", &reg).expect("dump written");
+        // last_dump is global and other tests may dump concurrently;
+        // just check the pointer is live
+        assert!(last_dump().is_some());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "obs-flight-v1");
+        assert_eq!(v.req_str("reason").unwrap(), "unit test");
+        let snap = v.req("snapshot").unwrap();
+        assert_eq!(snap.req("derived").unwrap()
+                       .req_f64("test.flight_counter").unwrap(), 3.0);
+        let evs = v.req_arr("trace").unwrap();
+        assert!(evs.iter().any(|e| {
+            e.req_str("name").unwrap() == "test.flight_span"
+        }), "dump carries the recent span");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

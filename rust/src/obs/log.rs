@@ -1,0 +1,190 @@
+//! Tiny leveled logger honoring `REPRO_LOG=error|warn|info|trace`.
+//!
+//! Every former ad-hoc `eprintln!` in the serving/runtime/CLI paths
+//! routes through [`obs_error!`]/[`obs_warn!`]/[`obs_info!`]/
+//! [`obs_trace!`], so CI smoke output is controllable
+//! (`REPRO_LOG=error` silences progress chatter) and tests can
+//! assert on emitted warnings via the capture sink. The level is one
+//! `AtomicU8` read per call site once the env var has been sampled;
+//! disabled levels never format their arguments.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Trace = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Trace => "trace",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Trace,
+        }
+    }
+}
+
+const UNINIT: u8 = 255;
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn level_from_env() -> Level {
+    match std::env::var("REPRO_LOG").ok().as_deref()
+        .map(str::to_ascii_lowercase).as_deref()
+    {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("trace") => Level::Trace,
+        // "info", unknown values, and unset all mean the historical
+        // default: everything the repo used to eprintln
+        _ => Level::Info,
+    }
+}
+
+/// Current level (samples `REPRO_LOG` on first use).
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNINIT => {
+            let l = level_from_env();
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        v => Level::from_u8(v),
+    }
+}
+
+/// Override the level programmatically (tests, CLI flags). Wins over
+/// the environment.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Test sink: while active, log lines are captured instead of
+/// written to stderr. Global — keep begin/take pairs within one test
+/// (see `tests` below for the pattern).
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+pub fn capture_begin() {
+    *CAPTURE.lock().unwrap() = Some(Vec::new());
+}
+
+pub fn capture_take() -> Vec<String> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
+/// Sink for an already-level-checked record (use the macros, which
+/// do the check without formatting).
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let line = format!("[{}] {}", l.tag(), args);
+    let mut cap = CAPTURE.lock().unwrap();
+    if let Some(buf) = cap.as_mut() {
+        buf.push(line);
+    } else {
+        drop(cap);
+        eprintln!("{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! obs_error {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::log($crate::obs::log::Level::Error,
+                                  format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! obs_warn {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::log($crate::obs::log::Level::Warn,
+                                  format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! obs_info {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::log($crate::obs::log::Level::Info,
+                                  format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! obs_trace {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Trace) {
+            $crate::obs::log::log($crate::obs::log::Level::Trace,
+                                  format_args!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is global, so concurrently running tests (e.g. the
+    // server tests, which warn on reference fallback) may interleave
+    // lines: assertions filter on a marker unique to this test.
+    #[test]
+    fn levels_filter_and_capture_asserts_on_warnings() {
+        let restore = level();
+        capture_begin();
+        set_level(Level::Warn);
+        crate::obs_error!("obstest e {}", 1);
+        crate::obs_warn!("obstest [serve] w {}", 2);
+        crate::obs_info!("obstest i {}", 3);
+        crate::obs_trace!("obstest t {}", 4);
+        let got: Vec<String> = capture_take().into_iter()
+            .filter(|l| l.contains("obstest")).collect();
+        set_level(restore);
+        assert_eq!(got, vec!["[error] obstest e 1".to_string(),
+                             "[warn] obstest [serve] w 2".to_string()]);
+
+        // raising to trace lets everything through
+        capture_begin();
+        set_level(Level::Trace);
+        crate::obs_trace!("obstest deep");
+        let got: Vec<String> = capture_take().into_iter()
+            .filter(|l| l.contains("obstest")).collect();
+        set_level(restore);
+        assert_eq!(got, vec!["[trace] obstest deep".to_string()]);
+    }
+
+    #[test]
+    fn level_ordering_matches_semantics() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Trace);
+        assert_eq!(Level::from_u8(Level::Warn as u8), Level::Warn);
+    }
+}

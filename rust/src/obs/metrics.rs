@@ -1,0 +1,551 @@
+//! Metrics registry: named atomic counters, gauges, and fixed-bucket
+//! log-scale latency histograms.
+//!
+//! The registry is the bounded-memory replacement for the serving
+//! path's historical `Vec<f64>` latency accumulators: a histogram is
+//! a fixed array of `AtomicU64` buckets, so a long-running server
+//! costs O(1) memory per metric no matter how many requests it sees,
+//! and percentiles are readable *live* (any thread may snapshot at
+//! any time), not only at shutdown.
+//!
+//! ## Bucket scheme and error bound
+//!
+//! Values are recorded in integer nanoseconds. Buckets are exact
+//! (width 1) below 64 ns; above that each power-of-two octave is
+//! split into 64 sub-buckets (HdrHistogram-style top-6-mantissa
+//! indexing), so the relative bucket width is at most 2^-6 ≈ 1.56%.
+//! [`Histogram::percentile_ns`] keeps nearest-rank semantics (the
+//! same rank rule as [`percentile_exact`]) and reports the midpoint
+//! of the selected bucket, so the reported quantile is within a
+//! **documented ≤ 2% relative error** of the exact nearest-rank
+//! value (midpoint halves the 1.56% width to ≈ 0.78%; the 2% figure
+//! leaves headroom for the clamped tail). Values above ~2^41 ns
+//! (≈ 36 min) clamp into the last bucket.
+//!
+//! ## Naming
+//!
+//! Metric names follow `subsystem.noun_verb` (e.g.
+//! `serve.plan_swaps`, `session.shard_cache_hits`); histograms name
+//! the measured quantity (`serve.latency`, `serve.exec`). One scheme,
+//! one formatter ([`StatsSnapshot::format`]), one export shape
+//! ([`StatsSnapshot::to_benchkit_value`], benchkit-v1).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Value;
+
+/// Exact nearest-rank percentile over an ascending-sorted sample
+/// (`p` in [0, 1]; NaN on empty input). This is the reference rule
+/// the histogram approximates — the serving path used it directly on
+/// unbounded vectors before the registry existed, and the histogram
+/// unit tests compare against it.
+pub fn percentile_exact(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Monotone counter handle (clone-cheap; all clones share storage).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Set-to-absolute gauge handle (publishes externally-owned stats
+/// into a snapshot; may go down).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+const SUB_BITS: u32 = 6;
+const SUB: usize = 1 << SUB_BITS; // 64 sub-buckets per octave
+const MAX_EXP: u32 = 41; // clamp above ~2^42 ns
+const BUCKETS: usize = SUB + (MAX_EXP - SUB_BITS + 1) as usize * SUB;
+const MAX_VAL: u64 = (1u64 << (MAX_EXP + 1)) - 1;
+
+fn bucket_of(v: u64) -> usize {
+    let v = v.min(MAX_VAL);
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros(); // floor(log2 v), in SUB_BITS..=MAX_EXP
+    let sub = ((v >> (exp - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    SUB + (exp - SUB_BITS) as usize * SUB + sub
+}
+
+/// Inclusive-exclusive value range `[lo, hi)` covered by bucket `i`.
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB {
+        return (i as u64, i as u64 + 1);
+    }
+    let oct = ((i - SUB) / SUB) as u32; // exp - SUB_BITS
+    let sub = ((i - SUB) % SUB) as u64;
+    let width = 1u64 << oct;
+    let lo = (SUB as u64 + sub) << oct;
+    (lo, lo + width)
+}
+
+#[derive(Debug)]
+struct HistCore {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64, // u64::MAX while empty
+    max: AtomicU64,
+}
+
+/// Fixed-bucket log-scale histogram handle (nanosecond domain).
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram(Arc::new(HistCore {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0))
+                .collect::<Vec<_>>().into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histogram {
+    pub fn record_ns(&self, v: u64) {
+        let c = &self.0;
+        c.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.min.fetch_min(v, Ordering::Relaxed);
+        c.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank percentile in nanoseconds (bucket midpoint; see
+    /// module docs for the ≤ 2% relative error bound). NaN on empty.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            let c = self.0.buckets[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                // integer domain: the bucket holds values in
+                // [lo, hi-1], so this midpoint is exact for the
+                // width-1 buckets below 64 ns
+                let (lo, hi) = bucket_bounds(i);
+                return (lo + hi - 1) as f64 / 2.0;
+            }
+        }
+        // count raced ahead of a concurrent bucket write: the max is
+        // the best remaining answer.
+        self.0.max.load(Ordering::Relaxed) as f64
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile_ns(p) / 1.0e6
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        let count = self.count();
+        let sum = self.0.sum.load(Ordering::Relaxed);
+        let min = self.0.min.load(Ordering::Relaxed);
+        HistSummary {
+            count,
+            mean_ns: if count == 0 { f64::NAN } else {
+                sum as f64 / count as f64
+            },
+            min_ns: if min == u64::MAX { 0 } else { min },
+            max_ns: self.0.max.load(Ordering::Relaxed),
+            p50_ns: self.percentile_ns(0.50),
+            p99_ns: self.percentile_ns(0.99),
+        }
+    }
+}
+
+/// Point-in-time digest of one histogram (times in nanoseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Hist(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// Named metric store. Instantiable (each [`crate::coordinator`]
+/// server owns one, so concurrently running servers — e.g. parallel
+/// tests — never share counters), with a process-global instance for
+/// CLI tools ([`MetricsRegistry::global`]). Handle lookup takes a
+/// read lock once; hot paths cache the returned handle and pay one
+/// relaxed atomic op per update after that.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: RwLock<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Process-global registry (CLI subcommands, ad-hoc probes).
+    pub fn global() -> &'static MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::new)
+    }
+
+    fn get_or_insert(&self, name: &str,
+                     make: impl FnOnce() -> Metric) -> Metric {
+        if let Some(m) = self.metrics.read().unwrap().get(name) {
+            return m.clone();
+        }
+        let mut w = self.metrics.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(make).clone()
+    }
+
+    /// Get or create a counter. Panics if `name` is already
+    /// registered as a different metric kind (a naming bug, not a
+    /// runtime condition).
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.get_or_insert(name,
+                                 || Metric::Counter(Counter::default()))
+        {
+            Metric::Counter(c) => c,
+            m => panic!("metric {name:?} is a {}, not a counter",
+                        m.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.get_or_insert(name,
+                                 || Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g,
+            m => panic!("metric {name:?} is a {}, not a gauge",
+                        m.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        match self.get_or_insert(name,
+                                 || Metric::Hist(Histogram::default()))
+        {
+            Metric::Hist(h) => h,
+            m => panic!("metric {name:?} is a {}, not a histogram",
+                        m.kind()),
+        }
+    }
+
+    /// Point-in-time snapshot of every registered metric. Cheap
+    /// enough for periodic export; safe to call from any thread while
+    /// writers are live (relaxed reads — each metric is internally
+    /// consistent to within in-flight updates).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let at_unix_ms = SystemTime::now().duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64).unwrap_or(0);
+        let mut snap = StatsSnapshot {
+            at_unix_ms,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        };
+        for (name, m) in self.metrics.read().unwrap().iter() {
+            match m {
+                Metric::Counter(c) => {
+                    snap.counters.insert(name.clone(), c.get());
+                }
+                Metric::Gauge(g) => {
+                    snap.gauges.insert(name.clone(), g.get());
+                }
+                Metric::Hist(h) => {
+                    snap.hists.insert(name.clone(), h.summary());
+                }
+            }
+        }
+        snap
+    }
+}
+
+/// Plain-data snapshot (Send + Clone): what `ServerMsg::Stats`
+/// returns over the channel API and what the periodic JSONL exporter
+/// serializes.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub at_unix_ms: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, HistSummary>,
+}
+
+impl StatsSnapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSummary> {
+        self.hists.get(name)
+    }
+
+    /// benchkit-v1 document: histograms become `entries` rows (times
+    /// in seconds, `iters` = sample count), counters/gauges/extra
+    /// quantiles become `derived` scalars. Runtime telemetry and
+    /// bench sidecars share one schema so the same tooling parses
+    /// both (see EXPERIMENTS.md).
+    pub fn to_benchkit_value(&self) -> Value {
+        let ns_to_s = |ns: f64| if ns.is_nan() { 0.0 } else { ns / 1.0e9 };
+        let mut entries = Vec::with_capacity(self.hists.len());
+        let mut derived = BTreeMap::new();
+        derived.insert("at_unix_ms".to_string(),
+                       Value::Num(self.at_unix_ms as f64));
+        for (name, h) in &self.hists {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Value::Str(name.clone()));
+            m.insert("iters".to_string(), Value::Num(h.count as f64));
+            m.insert("median_s".to_string(),
+                     Value::Num(ns_to_s(h.p50_ns)));
+            m.insert("mean_s".to_string(),
+                     Value::Num(ns_to_s(h.mean_ns)));
+            m.insert("min_s".to_string(),
+                     Value::Num(h.min_ns as f64 / 1.0e9));
+            m.insert("max_s".to_string(),
+                     Value::Num(h.max_ns as f64 / 1.0e9));
+            entries.push(Value::Obj(m));
+            derived.insert(format!("{name}.p99_s"),
+                           Value::Num(ns_to_s(h.p99_ns)));
+        }
+        for (name, v) in &self.counters {
+            derived.insert(name.clone(), Value::Num(*v as f64));
+        }
+        for (name, v) in &self.gauges {
+            derived.insert(name.clone(), Value::Num(*v as f64));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(),
+                   Value::Str("benchkit-v1".to_string()));
+        doc.insert("entries".to_string(), Value::Arr(entries));
+        doc.insert("derived".to_string(), Value::Obj(derived));
+        Value::Obj(doc)
+    }
+
+    /// One human-readable line per metric (the single formatter the
+    /// CLI and shutdown paths share).
+    pub fn format(&self) -> String {
+        fn ms(ns: f64) -> String {
+            if ns.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.3}ms", ns / 1.0e6)
+            }
+        }
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("counter {name:<34} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("gauge   {name:<34} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!(
+                "hist    {name:<34} count {} p50 {} p99 {} mean {} \
+                 max {}\n",
+                h.count, ms(h.p50_ns), ms(h.p99_ns), ms(h.mean_ns),
+                ms(h.max_ns as f64)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_indexing_is_monotone_and_tight() {
+        // exact below 64 ns
+        for v in 0..64u64 {
+            assert_eq!(bucket_of(v), v as usize);
+            let (lo, hi) = bucket_bounds(bucket_of(v));
+            assert!(lo <= v && v < hi);
+        }
+        // every bucket contains its value; bounds are contiguous and
+        // within the documented relative width
+        let mut prev = 0usize;
+        for shift in 6..=MAX_EXP {
+            for off in [0u64, 1, 63, 1 << (shift - 6)] {
+                let v = (1u64 << shift) + off * (1 << (shift - 6));
+                let v = v.min(MAX_VAL);
+                let i = bucket_of(v);
+                assert!(i >= prev, "monotone at v={v}");
+                prev = i;
+                let (lo, hi) = bucket_bounds(i);
+                assert!(lo <= v && v < hi,
+                        "v={v} not in [{lo},{hi}) (bucket {i})");
+                assert!((hi - lo) as f64 / lo as f64
+                            <= 1.0 / 64.0 + 1e-12,
+                        "bucket {i} too wide");
+            }
+        }
+        // clamp: everything above MAX_VAL lands in the last bucket
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_of(MAX_VAL), BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentiles_match_exact_within_2pct() {
+        let mut rng = Rng::seed_from_u64(17);
+        let h = Histogram::default();
+        let mut exact: Vec<f64> = Vec::new();
+        // log-uniform spread over ~9 decades: exercises linear
+        // region, octave sub-buckets, and large values
+        for _ in 0..20_000 {
+            let e = rng.range_u32(0, 30);
+            let base = 1u64 << e;
+            let v = base
+                + rng.range_usize(0, base.max(1) as usize) as u64;
+            h.record_ns(v);
+            exact.push(v as f64);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let want = percentile_exact(&exact, p);
+            let got = h.percentile_ns(p);
+            let rel = (got - want).abs() / want.max(1.0);
+            assert!(rel <= 0.02,
+                    "p{p}: got {got}, want {want}, rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_summary_tracks_count_min_max() {
+        let h = Histogram::default();
+        assert!(h.percentile_ns(0.5).is_nan());
+        assert_eq!(h.summary().count, 0);
+        for v in [5u64, 500, 50_000] {
+            h.record_ns(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min_ns, 5);
+        assert_eq!(s.max_ns, 50_000);
+        assert!(s.mean_ns > 0.0);
+        // small values are exact (width-1 buckets)
+        assert_eq!(h.percentile_ns(0.01), 5.0);
+    }
+
+    #[test]
+    fn percentile_exact_is_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_exact(&v, 0.5), 2.0);
+        assert_eq!(percentile_exact(&v, 0.51), 3.0);
+        assert_eq!(percentile_exact(&v, 0.0), 1.0);
+        assert_eq!(percentile_exact(&v, 1.0), 4.0);
+        assert!(percentile_exact(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn registry_handles_share_storage_and_snapshot() {
+        let reg = MetricsRegistry::new();
+        let c1 = reg.counter("t.reqs");
+        let c2 = reg.counter("t.reqs");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        reg.gauge("t.depth").set(-4);
+        reg.histogram("t.lat").record(Duration::from_micros(250));
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("t.reqs"), 3);
+        assert_eq!(snap.gauge("t.depth"), -4);
+        assert_eq!(snap.hist("t.lat").unwrap().count, 1);
+        assert_eq!(snap.counter("t.missing"), 0);
+        // benchkit-v1 shape parses and carries the metrics
+        let v = crate::util::json::parse(
+            &snap.to_benchkit_value().to_string()).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "benchkit-v1");
+        assert_eq!(v.req("derived").unwrap()
+                       .req_f64("t.reqs").unwrap(), 3.0);
+        let entries = v.req_arr("entries").unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].req_str("name").unwrap(), "t.lat");
+        assert_eq!(entries[0].req_usize("iters").unwrap(), 1);
+        // formatter covers every metric
+        let text = snap.format();
+        assert!(text.contains("t.reqs") && text.contains("t.depth")
+                    && text.contains("t.lat"));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a counter")]
+    fn kind_clash_panics() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("t.oops");
+        reg.counter("t.oops");
+    }
+}

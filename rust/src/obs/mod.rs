@@ -1,0 +1,36 @@
+//! Observability substrate: metrics registry, event tracer, leveled
+//! logger, and flight recorder (std-only; no external deps).
+//!
+//! Four pieces, one naming convention (`subsystem.noun_verb`):
+//!
+//! * [`metrics`] — named atomic counters, gauges, and fixed-bucket
+//!   log-scale latency histograms ([`MetricsRegistry`]). Bounded
+//!   memory per metric, live percentiles, benchkit-v1-compatible
+//!   export ([`StatsSnapshot::to_benchkit_value`]).
+//! * [`trace`] — lock-free per-thread ring-buffer spans/instants
+//!   ([`obs_span!`]/[`obs_event!`]), dumpable as Chrome
+//!   `trace_event` JSON. Disabled path is one relaxed atomic load.
+//! * [`log`] — `REPRO_LOG=error|warn|info|trace` leveled stderr
+//!   logger ([`obs_error!`]/[`obs_warn!`]/[`obs_info!`]/
+//!   [`obs_trace!`]) with a capture sink for test assertions.
+//! * [`flight`] — on serving failures, atomically dump the last N
+//!   trace events + a registry snapshot to a timestamped file.
+//!
+//! Wiring map (who records what): the HAG search kernel spans its
+//! merge rounds (`search.round`), the partitioned search spans each
+//! shard (`partition.shard_search`), the session spans `plan()` and
+//! marks shard cache hits/misses (`session.*`), the streaming engine
+//! marks drift decisions and spans re-merges/rebuilds (`incr.*`),
+//! and the inference server meters its whole request/update/swap
+//! lifecycle (`serve.*`) against a per-server registry surfaced
+//! live over `ServerMsg::Stats`. See DESIGN.md §10.
+
+pub mod flight;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::Level;
+pub use metrics::{Counter, Gauge, HistSummary, Histogram,
+                  MetricsRegistry, StatsSnapshot};
+pub use trace::{SpanGuard, TraceEvent};

@@ -1,0 +1,407 @@
+//! Lock-free per-thread ring-buffer event tracer.
+//!
+//! Each thread that records a span or instant event owns a
+//! fixed-size ring of seqlock-protected slots; rings register
+//! themselves once (one mutex lock per thread lifetime) in a global
+//! list so any thread can collect a best-effort snapshot of recent
+//! events at any time — the shutdown trace dump and the flight
+//! recorder both read live rings without stopping writers.
+//!
+//! The **disabled path is a few atomics, not a syscall**: every
+//! [`obs_span!`]/[`obs_event!`] call site first does one relaxed
+//! load of the global enable flag and returns immediately when
+//! tracing is off (the `obs_overhead` bench pins a number on this).
+//! When enabled, a record is one `Instant` read plus six relaxed
+//! stores into the calling thread's own ring — no locks, no
+//! allocation, no cross-thread contention.
+//!
+//! Event names are interned `&'static str`s (one `OnceLock<u32>` per
+//! call site, filled on first use), following the same
+//! `subsystem.noun_verb` convention as metric names. Dumps use the
+//! Chrome `trace_event` JSON format (`chrome://tracing`, Perfetto):
+//! spans are `"ph":"X"` complete events, instants are `"ph":"i"`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Events kept per thread; older entries are overwritten in place.
+const RING_CAP: usize = 4096;
+
+pub const KIND_SPAN: u8 = 0;
+pub const KIND_INSTANT: u8 = 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// One relaxed load — the whole cost of a disabled trace point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Process-wide time origin: all timestamps are microseconds since
+/// the first trace call.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn us_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch())
+        .map(|d| d.as_micros().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}
+
+static NAMES: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+
+/// Intern an event name; call sites cache the returned id in a
+/// `static OnceLock<u32>` (the macros below do this for you).
+pub fn intern(name: &'static str) -> u32 {
+    let mut v = NAMES.lock().unwrap();
+    if let Some(i) = v.iter().position(|&n| n == name) {
+        return i as u32;
+    }
+    v.push(name);
+    (v.len() - 1) as u32
+}
+
+#[derive(Default)]
+struct Slot {
+    /// Seqlock word: 0 = never written, odd = write in progress,
+    /// even = generation marker. Only the owning thread writes.
+    seq: AtomicU64,
+    ts_us: AtomicU64,
+    dur_us: AtomicU64,
+    meta: AtomicU64, // name_id << 8 | kind
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+struct Ring {
+    tid: u64,
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl Ring {
+    fn push(&self, kind: u8, name_id: u32, ts_us: u64, dur_us: u64,
+            a: u64, b: u64) {
+        let idx = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[idx as usize % RING_CAP];
+        let gen = idx / RING_CAP as u64;
+        slot.seq.store(gen * 2 + 1, Ordering::Relaxed);
+        slot.ts_us.store(ts_us, Ordering::Relaxed);
+        slot.dur_us.store(dur_us, Ordering::Relaxed);
+        slot.meta.store((name_id as u64) << 8 | kind as u64,
+                        Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.seq.store(gen * 2 + 2, Ordering::Release);
+    }
+}
+
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static RING: Arc<Ring> = {
+        let ring = Arc::new(Ring {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            head: AtomicU64::new(0),
+            slots: (0..RING_CAP).map(|_| Slot::default()).collect(),
+        });
+        RINGS.lock().unwrap().push(ring.clone());
+        ring
+    };
+}
+
+/// The calling thread's trace id (stable for the thread's lifetime;
+/// tests use it to scope assertions to one worker's events).
+pub fn current_tid() -> u64 {
+    RING.with(|r| r.tid)
+}
+
+/// Record an instant event (no duration). No-op when disabled.
+pub fn instant(name_id: u32, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let ts = us_since_epoch(Instant::now());
+    RING.with(|r| r.push(KIND_INSTANT, name_id, ts, 0, a, b));
+}
+
+/// RAII span: records a complete event covering its lifetime when
+/// dropped. Obtained via [`obs_span!`] (or [`span`] directly).
+pub struct SpanGuard {
+    name_id: u32,
+    start: Option<Instant>, // None = tracing was off at entry
+    a: u64,
+    b: u64,
+}
+
+impl SpanGuard {
+    pub fn disabled() -> SpanGuard {
+        SpanGuard { name_id: 0, start: None, a: 0, b: 0 }
+    }
+
+    /// Update the args recorded at drop (e.g. counts only known at
+    /// the end of the spanned region).
+    pub fn set_args(&mut self, a: u64, b: u64) {
+        self.a = a;
+        self.b = b;
+    }
+
+    /// Suppress the span: drop records nothing. For call sites where
+    /// only one outcome of the spanned region should appear in the
+    /// trace (e.g. a plan swap that actually landed).
+    pub fn cancel(&mut self) {
+        self.start = None;
+    }
+}
+
+pub fn span(name_id: u32, a: u64, b: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::disabled();
+    }
+    SpanGuard { name_id, start: Some(Instant::now()), a, b }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else {
+            return;
+        };
+        let dur = start.elapsed()
+            .as_micros().min(u64::MAX as u128) as u64;
+        let ts = us_since_epoch(start);
+        RING.with(|r| r.push(KIND_SPAN, self.name_id, ts, dur,
+                             self.a, self.b));
+    }
+}
+
+/// Open a named span over the enclosing scope.
+/// `obs_span!("serve.batch", nodes)` — optional `a`/`b` args are
+/// cast to `u64` and land in the Chrome trace's `args` object. Bind
+/// the result (`let _span = obs_span!(..)`) or it drops immediately.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:literal) => { $crate::obs_span!($name, 0u64, 0u64) };
+    ($name:literal, $a:expr) => { $crate::obs_span!($name, $a, 0u64) };
+    ($name:literal, $a:expr, $b:expr) => {{
+        if $crate::obs::trace::enabled() {
+            static __OBS_ID: ::std::sync::OnceLock<u32> =
+                ::std::sync::OnceLock::new();
+            $crate::obs::trace::span(
+                *__OBS_ID.get_or_init(
+                    || $crate::obs::trace::intern($name)),
+                ($a) as u64, ($b) as u64)
+        } else {
+            $crate::obs::trace::SpanGuard::disabled()
+        }
+    }};
+}
+
+/// Record a named instant event.
+/// `obs_event!("serve.drift_check", due as u64)`.
+#[macro_export]
+macro_rules! obs_event {
+    ($name:literal) => { $crate::obs_event!($name, 0u64, 0u64) };
+    ($name:literal, $a:expr) => { $crate::obs_event!($name, $a, 0u64) };
+    ($name:literal, $a:expr, $b:expr) => {{
+        if $crate::obs::trace::enabled() {
+            static __OBS_ID: ::std::sync::OnceLock<u32> =
+                ::std::sync::OnceLock::new();
+            $crate::obs::trace::instant(
+                *__OBS_ID.get_or_init(
+                    || $crate::obs::trace::intern($name)),
+                ($a) as u64, ($b) as u64);
+        }
+    }};
+}
+
+/// A decoded trace record (snapshot copy, no atomics).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub kind: u8,
+    pub tid: u64,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Best-effort snapshot of every thread's recent events, sorted by
+/// timestamp. Slots that are mid-write when read (seqlock mismatch)
+/// are skipped rather than surfaced torn.
+pub fn collect() -> Vec<TraceEvent> {
+    let rings: Vec<Arc<Ring>> = RINGS.lock().unwrap().clone();
+    let names: Vec<&'static str> = NAMES.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        for slot in &ring.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let ev = TraceEvent {
+                name: names.get((meta >> 8) as usize).copied()
+                    .unwrap_or("?"),
+                kind: (meta & 0xff) as u8,
+                tid: ring.tid,
+                ts_us: slot.ts_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            };
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) == s1 {
+                out.push(ev);
+            }
+        }
+    }
+    out.sort_by_key(|e| (e.ts_us, e.tid));
+    out
+}
+
+/// Chrome `trace_event` array for `events` (the `traceEvents` value).
+pub fn events_to_value(events: &[TraceEvent]) -> Value {
+    let rows = events.iter().map(|e| {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Value::Str(e.name.to_string()));
+        m.insert("ph".to_string(),
+                 Value::Str(if e.kind == KIND_SPAN { "X" } else { "i" }
+                     .to_string()));
+        m.insert("pid".to_string(), Value::Num(1.0));
+        m.insert("tid".to_string(), Value::Num(e.tid as f64));
+        m.insert("ts".to_string(), Value::Num(e.ts_us as f64));
+        if e.kind == KIND_SPAN {
+            m.insert("dur".to_string(), Value::Num(e.dur_us as f64));
+        } else {
+            // instant scope: thread
+            m.insert("s".to_string(), Value::Str("t".to_string()));
+        }
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Value::Num(e.a as f64));
+        args.insert("b".to_string(), Value::Num(e.b as f64));
+        m.insert("args".to_string(), Value::Obj(args));
+        Value::Obj(m)
+    }).collect();
+    Value::Arr(rows)
+}
+
+/// Full Chrome trace document (`{"traceEvents": [...]}`).
+pub fn dump_chrome_json() -> Value {
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(),
+               events_to_value(&collect()));
+    Value::Obj(doc)
+}
+
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, dump_chrome_json().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global; tests only ever turn it ON so
+    // concurrently running tests cannot lose each other's events.
+
+    #[test]
+    fn spans_and_events_round_trip_through_collect() {
+        set_enabled(true);
+        let tid = current_tid();
+        {
+            let mut s = crate::obs_span!("test.outer", 7u64);
+            s.set_args(7, 9);
+            crate::obs_event!("test.mark", 3u64);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let evs: Vec<TraceEvent> = collect().into_iter()
+            .filter(|e| e.tid == tid).collect();
+        let mark = evs.iter().find(|e| e.name == "test.mark")
+            .expect("instant recorded");
+        assert_eq!(mark.kind, KIND_INSTANT);
+        assert_eq!((mark.a, mark.b), (3, 0));
+        let outer = evs.iter().find(|e| e.name == "test.outer")
+            .expect("span recorded");
+        assert_eq!(outer.kind, KIND_SPAN);
+        assert_eq!((outer.a, outer.b), (7, 9));
+        assert!(outer.dur_us >= 1000, "span spans the sleep");
+        // the span *starts* before the instant fires inside it
+        assert!(outer.ts_us <= mark.ts_us);
+    }
+
+    #[test]
+    fn chrome_dump_is_valid_json_with_phases() {
+        set_enabled(true);
+        {
+            let _s = crate::obs_span!("test.chrome_span");
+            crate::obs_event!("test.chrome_event");
+        }
+        let text = dump_chrome_json().to_string();
+        let v = crate::util::json::parse(&text).unwrap();
+        let rows = v.req_arr("traceEvents").unwrap();
+        assert!(!rows.is_empty());
+        for r in rows {
+            let ph = r.req_str("ph").unwrap();
+            assert!(ph == "X" || ph == "i");
+            assert!(r.req_f64("ts").unwrap() >= 0.0);
+            if ph == "X" {
+                assert!(r.req_f64("dur").unwrap() >= 0.0);
+            }
+        }
+        assert!(rows.iter().any(|r| {
+            r.req_str("name").unwrap() == "test.chrome_span"
+                && r.req_str("ph").unwrap() == "X"
+        }));
+    }
+
+    #[test]
+    fn cancelled_span_records_nothing() {
+        set_enabled(true);
+        let tid = current_tid();
+        {
+            let mut s = crate::obs_span!("test.cancelled");
+            s.cancel();
+        }
+        assert!(!collect().iter().any(|e| {
+            e.tid == tid && e.name == "test.cancelled"
+        }));
+    }
+
+    #[test]
+    fn interning_is_idempotent() {
+        let a = intern("test.same");
+        let b = intern("test.same");
+        assert_eq!(a, b);
+        assert_ne!(intern("test.other"), a);
+    }
+
+    #[test]
+    fn ring_wraps_without_growing() {
+        set_enabled(true);
+        let tid = current_tid();
+        for i in 0..(RING_CAP + 100) as u64 {
+            crate::obs_event!("test.wrap", i);
+        }
+        let mine: Vec<TraceEvent> = collect().into_iter()
+            .filter(|e| e.tid == tid && e.name == "test.wrap")
+            .collect();
+        assert!(mine.len() <= RING_CAP);
+        // the newest event survived the wrap
+        assert!(mine.iter()
+            .any(|e| e.a == (RING_CAP + 100) as u64 - 1));
+    }
+}

@@ -144,6 +144,8 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
                     if s >= k {
                         break;
                     }
+                    let _sp = crate::obs_span!("partition.shard_search",
+                                               s, subs[s].n());
                     let r = hag_search_with_scratch(&subs[s], &cfgs[s],
                                                     &mut scratch);
                     *results[s].lock().unwrap() = Some(r);

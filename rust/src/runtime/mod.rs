@@ -178,8 +178,8 @@ impl Runtime {
             .lock()
             .unwrap()
             .insert(name.to_string(), arc.clone());
-        eprintln!("[runtime] compiled {name} in {:.2}s",
-                  t0.elapsed().as_secs_f64());
+        crate::obs_info!("[runtime] compiled {name} in {:.2}s",
+                         t0.elapsed().as_secs_f64());
         Ok(arc)
     }
 

@@ -355,10 +355,13 @@ impl Session {
             if use_cache {
                 if let Some(h) = self.cache.shard_hag(key) {
                     self.stats.shard_cache_hits += 1;
+                    crate::obs_event!("session.shard_cache_hit");
                     return h;
                 }
             }
             let cfg = self.shard_config(0);
+            let _sp = crate::obs_span!("session.shard_search",
+                                       0u64, g.n());
             let (hag, _) =
                 hag_search_with_scratch(g, &cfg, &mut self.scratch);
             let hag = Arc::new(hag);
@@ -376,6 +379,7 @@ impl Session {
                 let key = self.key(s);
                 if let Some(h) = self.cache.shard_hag(key) {
                     self.stats.shard_cache_hits += 1;
+                    crate::obs_event!("session.shard_cache_hit", s);
                     locals[s] = Some(h);
                     continue;
                 }
@@ -407,6 +411,9 @@ impl Session {
                             if i >= m {
                                 break;
                             }
+                            let _sp = crate::obs_span!(
+                                "session.shard_search",
+                                misses[i], subs[i].n());
                             let (h, _) = hag_search_with_scratch(
                                 &subs[i], &cfgs[i], &mut scratch);
                             *results[i].lock().unwrap() = Some(h);
@@ -438,8 +445,11 @@ impl Session {
     /// deltas (plan-tier memo).
     pub fn plan(&mut self) -> (Arc<Hag>, Arc<ExecutionPlan>) {
         self.stats.plans += 1;
+        // args: a = 1 when the memoized plan tier answered
+        let mut sp = crate::obs_span!("session.plan");
         if let Some(hit) = self.cache.plan_at(self.fp, self.version) {
             self.stats.plan_cache_hits += 1;
+            sp.set_args(1, 0);
             return hit;
         }
         let g = self.graph.to_graph();

@@ -1,0 +1,168 @@
+//! Telemetry end-to-end over the serving path: the trace invariant
+//! (every landed plan-swap span is preceded by a drift check that
+//! came up due) and the live-stats contract (a `ServerMsg::Stats`
+//! snapshot agrees with the shutdown `ServeStats` and with the
+//! resident session's own counters).
+//!
+//! One test on purpose: the event tracer is process-global, and
+//! keeping a single server in this binary means every
+//! `serve.plan_swap` span in the collected trace belongs to it.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use repro::coordinator::{self, BatchPolicy, Resident, ScoreResponse,
+                         SwapPolicy};
+use repro::datasets::{self, Dataset};
+use repro::incremental::{DriftPolicy, GraphDelta};
+use repro::obs::trace::{self, KIND_INSTANT, KIND_SPAN};
+use repro::obs::StatsSnapshot;
+use repro::session::{LowerSpec, Session};
+use repro::util::Rng;
+
+/// Artifacts dir that does not exist: forces the reference executor.
+fn no_artifacts() -> PathBuf {
+    std::env::temp_dir().join("repro-obs-telemetry-no-artifacts")
+}
+
+fn send_score(server: &coordinator::InferenceServer, node: u32,
+              features: Vec<f32>) -> ScoreResponse {
+    let (otx, orx) = coordinator::server::oneshot();
+    server.client()
+        .send(coordinator::ServerMsg::Score(coordinator::ScoreRequest {
+            node,
+            features,
+            reply: otx,
+            submitted: Instant::now(),
+        }))
+        .expect("queue open");
+    orx.recv().expect("batcher alive")
+}
+
+/// Blocking update: the reply is sent at flush time, so when this
+/// returns the delta has been applied AND the post-flush drift/swap
+/// check has run — no pending work is left to move the counters
+/// between the final snapshot and shutdown.
+fn send_update(server: &coordinator::InferenceServer, delta: GraphDelta) {
+    let (otx, orx) = coordinator::server::update_oneshot();
+    server.client()
+        .send(coordinator::ServerMsg::Update(
+            coordinator::UpdateRequest {
+                delta,
+                reply: Some(otx),
+                submitted: Instant::now(),
+            }))
+        .expect("queue open");
+    orx.recv().expect("batcher alive");
+}
+
+fn stats_snapshot(server: &coordinator::InferenceServer)
+                  -> StatsSnapshot {
+    let (stx, srx) = coordinator::server::stats_oneshot();
+    server.client()
+        .send(coordinator::ServerMsg::Stats(
+            coordinator::StatsRequest { reply: stx }))
+        .expect("queue open");
+    srx.recv().expect("batcher alive")
+}
+
+#[test]
+fn plan_swaps_trace_due_drift_checks_and_stats_agree() {
+    trace::set_enabled(true);
+    let ds: Dataset = datasets::load("BZR", 0.02, 7);
+    // Negative threshold: every flush is due, so swaps land whenever
+    // the re-plan produces a genuinely new plan.
+    let spec = LowerSpec::default().with_shards(4).with_drift(
+        DriftPolicy::default().with_threshold(-1.0));
+    // Localize updates to shard 0 (deterministic partition seed =>
+    // an identically specced probe session has the same shard map).
+    let probe = Session::new(&ds, spec.clone());
+    let members: Vec<u32> = (0..ds.n() as u32)
+        .filter(|&v| probe.shard_of(v) == 0)
+        .collect();
+    assert!(members.len() >= 2, "shard 0 too small to localize");
+    let mut session = Session::new(&ds, spec);
+    let lowered = session.lower().unwrap();
+    let resident = Some(Resident::new(
+        session, &ds.graph, &lowered.hag,
+        SwapPolicy { swap_plans: true, max_pending: 4 }));
+    let server = coordinator::InferenceServer::for_lowered(
+        no_artifacts(), "gcn", &ds, &lowered, BatchPolicy::default(),
+        7, resident).unwrap();
+
+    let mut rng = Rng::seed_from_u64(23);
+    let mut scored = 0usize;
+    for i in 0..48usize {
+        let a = members[rng.range_usize(0, members.len())];
+        let b = members[rng.range_usize(0, members.len())];
+        if a == b {
+            continue;
+        }
+        send_update(&server, GraphDelta::EdgeInsert { src: a, dst: b });
+        if i % 6 == 0 {
+            let node = rng.range_u32(0, ds.n() as u32);
+            send_score(&server, node, vec![0.5; ds.f_in])
+                .into_result().expect("scored");
+            scored += 1;
+        }
+    }
+
+    // Live snapshot over the same queue the traffic uses. Taken while
+    // the server is up; nothing scores or flushes afterwards, so it
+    // must agree exactly with the shutdown stats.
+    let snap = stats_snapshot(&server);
+    let out = server.shutdown_outcome();
+    let stats = &out.stats;
+    assert!(stats.plan_swaps >= 1, "drift must swap: {stats:?}");
+
+    // Snapshot vs shutdown ServeStats: counts and percentiles come
+    // from the same registry, through two different views.
+    assert_eq!(snap.counter("serve.requests") as usize, stats.requests);
+    assert_eq!(stats.requests, scored);
+    assert_eq!(snap.counter("serve.plan_swaps") as usize,
+               stats.plan_swaps);
+    assert_eq!(snap.counter("serve.updates") as usize, stats.updates);
+    let h = snap.hist("serve.latency").expect("latency histogram");
+    assert_eq!(h.count as usize, stats.requests);
+    assert!((h.p50_ns / 1.0e6 - stats.p50_ms).abs() < 1e-6,
+            "snapshot p50 {} ns vs ServeStats {} ms",
+            h.p50_ns, stats.p50_ms);
+    assert!((h.p99_ns / 1.0e6 - stats.p99_ms).abs() < 1e-6,
+            "snapshot p99 {} ns vs ServeStats {} ms",
+            h.p99_ns, stats.p99_ms);
+
+    // Snapshot vs the session's own counters (published as gauges by
+    // the Stats handler from the resident pair).
+    let res = out.resident.expect("resident handed back");
+    assert_eq!(snap.gauge("session.shard_cache_hits"),
+               res.session.stats().shard_cache_hits as i64);
+    assert_eq!(snap.gauge("session.shard_searches"),
+               res.session.stats().shard_searches as i64);
+    assert_eq!(snap.gauge("incr.applied"),
+               res.engine.stats().applied as i64);
+
+    // Trace invariant: a `serve.plan_swap` span only exists for a
+    // swap that actually landed, and every one is preceded on its
+    // thread by a drift check that came up due (a == 1).
+    let events = trace::collect();
+    let swaps: Vec<_> = events.iter()
+        .filter(|e| e.name == "serve.plan_swap" && e.kind == KIND_SPAN)
+        .collect();
+    assert!(!swaps.is_empty(), "landed swaps must leave spans");
+    assert!(swaps.len() <= stats.plan_swaps,
+            "{} plan_swap spans but only {} landed swaps",
+            swaps.len(), stats.plan_swaps);
+    for sw in &swaps {
+        let preceded = events.iter().any(|e| {
+            e.name == "serve.drift_check"
+                && e.kind == KIND_INSTANT
+                && e.tid == sw.tid
+                && e.a == 1
+                && e.ts_us <= sw.ts_us
+        });
+        assert!(preceded,
+                "plan_swap span at {} us on tid {} lacks a preceding \
+                 due drift check",
+                sw.ts_us, sw.tid);
+    }
+}
