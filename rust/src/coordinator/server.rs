@@ -76,8 +76,8 @@ use crate::graph::Graph;
 use crate::hag::{AggregateKind, ExecutionPlan, Hag};
 use crate::incremental::{ApplyOutcome, GraphDelta, RebuildEvent,
                          StreamEngine};
-use crate::obs::{self, Counter, Histogram, MetricsRegistry,
-                 StatsSnapshot};
+use crate::obs::{self, CostModel, Counter, Histogram,
+                 MetricsRegistry, StatsSnapshot};
 use crate::runtime::xla;
 use crate::runtime::{BucketSpec, Executable, HostTensor, Runtime,
                      TensorSpec};
@@ -699,6 +699,7 @@ impl Worker {
             return;
         }
         let _sp = crate::obs_span!("serve.flush", pending.len());
+        let tr = Instant::now();
         let deltas: Vec<GraphDelta> =
             pending.iter().map(|u| u.delta).collect();
         let order = match resident.as_ref() {
@@ -737,6 +738,10 @@ impl Worker {
             }
         }
         c.update_batches.inc();
+        // Repair bucket = the coalesced apply loop (per-delta local
+        // repair inside `engine.apply`); the swap check accounts to
+        // the plan bucket separately.
+        c.t_repair.record(tr.elapsed());
         self.maybe_swap(resident, c);
     }
 
@@ -763,6 +768,7 @@ impl Worker {
         // span in a trace means a swap actually landed (and is always
         // preceded by a due `serve.drift_check` instant).
         let mut sp = crate::obs_span!("serve.plan_swap");
+        let tq = Instant::now();
         let (hag, plan) = res.session.plan();
         if Arc::ptr_eq(&plan, &self.plan) {
             self.served_session_plan = true;
@@ -786,6 +792,10 @@ impl Worker {
                 res.engine.install_hag(&hag);
                 c.plan_swaps.inc();
                 self.served_session_plan = true;
+                // The served plan changed: refresh the predicted
+                // attribution terms it will be audited against.
+                obs::cost::record_plan_terms(
+                    &c.registry, &hag, res.session.shard_terms());
             }
             Ok(false) => {
                 c.swaps_skipped.inc();
@@ -798,6 +808,9 @@ impl Worker {
                 obs::flight::dump("plan-swap-failed", &c.registry);
             }
         }
+        // Plan bucket = re-plan + swap protocol, attributed only when
+        // a due drift check actually did the work.
+        c.t_plan.record(tq.elapsed());
     }
 
     /// The swap protocol: re-derive `h0` under the new permutation and
@@ -868,6 +881,16 @@ impl Worker {
         let mut pending: Vec<UpdateRequest> = Vec::new();
         let max_pending = resident.as_ref()
             .map_or(64, |r| r.swap.max_pending).max(1);
+        // Attribution at serve start: record the resident plan's
+        // Definition-2 terms, and hand the engine the live
+        // calibration so its drift checks price in measured units as
+        // soon as the model warms up.
+        if let Some(res) = resident.as_mut() {
+            res.engine.set_cost_model(c.cost.clone());
+            obs::cost::record_plan_terms(&c.registry,
+                                         &res.engine.to_hag(),
+                                         res.session.shard_terms());
+        }
         let t_start = Instant::now();
         'serve: loop {
             // Collect a batch: wait for the first valid scoring
@@ -939,6 +962,7 @@ impl Worker {
             self.flush_updates(&mut resident, &mut pending, &mut c);
             // Apply feature updates to the resident (permuted) h0.
             // Safe: nodes were validated and n only ever grows.
+            let tp = Instant::now();
             for r in &batch {
                 if !r.features.is_empty() {
                     let new = self.plan.inv_perm[r.node as usize]
@@ -947,13 +971,16 @@ impl Worker {
                         .copy_from_slice(&r.features);
                 }
             }
+            c.t_pack.record(tp.elapsed());
             let sp = crate::obs_span!("serve.batch", batch.len());
             let te = Instant::now();
-            let result = self.run_batch();
+            let result = self.run_batch(&c);
             // Land the span before handling the result: a failing
             // batch's flight record must already carry it.
             drop(sp);
-            c.exec.record(te.elapsed());
+            let exec_wall = te.elapsed();
+            c.exec.record(exec_wall);
+            c.t_exec.record(exec_wall);
             c.batches.inc();
             match result {
                 Ok(logits) => {
@@ -1013,10 +1040,12 @@ impl Worker {
         }));
     }
 
-    fn run_batch(&self) -> Result<Vec<f32>> {
+    fn run_batch(&self, c: &Counters) -> Result<Vec<f32>> {
         match &self.backend {
             Backend::Xla(state) => self.run_xla(state),
-            Backend::Reference(state) => Ok(self.run_reference(state)),
+            Backend::Reference(state) => {
+                Ok(self.run_reference(state, c))
+            }
             #[cfg(test)]
             Backend::Broken => Err(anyhow!("broken test backend")),
         }
@@ -1043,13 +1072,25 @@ impl Worker {
 
     /// model.py `gcn_forward` on the host, entirely in permuted space:
     /// `z = (agg(h) + h) / (deg + 1)`, two layers, logits last.
-    fn run_reference(&self, state: &RefState) -> Vec<f32> {
+    ///
+    /// Cost-model metering (DESIGN.md §11): only the two
+    /// `reference_aggregate` passes are timed — the matmuls scale
+    /// with weight shapes, not with the plan's aggregation
+    /// structure, and folding them in would poison the α̂/β̂ fit.
+    /// One `(aggregations, transfers, ns)` sample per batch; on a
+    /// fixed plan the samples are collinear and the model's
+    /// shared-rate fallback (α̂ == β̂) applies by design.
+    fn run_reference(&self, state: &RefState, c: &Counters)
+                     -> Vec<f32> {
         let p = &*self.plan;
         let n_pad = p.n_pad;
         let norm: Vec<f32> =
             p.deg.iter().map(|&d| 1.0 / (d + 1.0)).collect();
-        let layer_in = |h: &[f32], f: usize| -> Vec<f32> {
+        let mut agg_ns = 0u64;
+        let mut layer_in = |h: &[f32], f: usize| -> Vec<f32> {
+            let t0 = Instant::now();
             let a = reference_aggregate(p, h, f);
+            agg_ns += t0.elapsed().as_nanos() as u64;
             let mut z = vec![0f32; n_pad * f];
             for v in 0..n_pad {
                 for k in 0..f {
@@ -1068,8 +1109,125 @@ impl Worker {
             }
         }
         let z2 = layer_in(&h1, self.hidden);
-        matmul_bias(&z2, &state.w2, &state.b2, n_pad, self.hidden,
-                    self.classes)
+        let out = matmul_bias(&z2, &state.w2, &state.b2, n_pad,
+                              self.hidden, self.classes);
+        let (combine, scatter) = plan_op_counts(p);
+        let width = (self.f_in + self.hidden) as u64;
+        let aggs = (combine + scatter) * width;
+        let transfers = (2 * combine + scatter) * width;
+        c.meas_aggs.add(aggs);
+        c.meas_transfers.add(transfers);
+        c.cost.record_sample(aggs, transfers, agg_ns);
+        out
+    }
+}
+
+/// Element-scaled op counts of one `reference_aggregate` pass:
+/// `(combine_rows, scatter_rows)`. Combine rows are the padded level
+/// slots (`levels * l_pad` — each does one binary add over two
+/// operand reads: the measured counterpart of an aggregation node's
+/// `+1` aggregation / `+2` transfers in Definition 2); scatter rows
+/// are the padded band entries (`Σ nb * nnzb` — one add over one
+/// operand read, the counterpart of a final in-edge). Both include
+/// the padding the predicted terms exclude, which is exactly the gap
+/// the audit attributes. Width-independent; multiply by the feature
+/// width for element counts.
+pub fn plan_op_counts(plan: &ExecutionPlan) -> (u64, u64) {
+    let combine = (plan.levels * plan.l_pad) as u64;
+    let scatter = plan.bands.iter()
+        .map(|&(nb, nnzb)| (nb * nnzb) as u64)
+        .sum();
+    (combine, scatter)
+}
+
+/// One dataset's measured-vs-predicted cost audit (`repro
+/// cost-audit`, `benches/cost_model.rs`).
+#[derive(Debug, Clone)]
+pub struct CostProbe {
+    pub name: String,
+    pub n: usize,
+    pub e: usize,
+    /// Definition-2 terms of the served HAG (padding-free).
+    pub pred_aggregations: usize,
+    pub pred_transfers: usize,
+    /// Width-independent executed rows per aggregate pass
+    /// (padding included): `combine + scatter` aggregation rows,
+    /// `2*combine + scatter` transfer rows.
+    pub plan_agg_rows: u64,
+    pub plan_transfer_rows: u64,
+    /// Element-scaled tallies over all `batches` executions.
+    pub meas_aggregations: u64,
+    pub meas_transfers: u64,
+    pub batches: usize,
+    /// Batch execute wall time (the whole reference forward).
+    pub exec: crate::obs::HistSummary,
+}
+
+impl CostProbe {
+    /// Padding overhead the audit attributes: executed aggregation
+    /// rows over the predicted (ideal) Definition-2 count.
+    pub fn agg_overhead(&self) -> f64 {
+        self.plan_agg_rows as f64
+            / (self.pred_aggregations as f64).max(1.0)
+    }
+
+    pub fn transfer_overhead(&self) -> f64 {
+        self.plan_transfer_rows as f64
+            / (self.pred_transfers as f64).max(1.0)
+    }
+}
+
+/// Run `batches` reference-executor forwards over `g` under the
+/// default lowering spec, metering every batch into `model` (shared
+/// across probes so one calibration spans the sweep), and report the
+/// predicted terms next to the measured tallies. This is the
+/// host-side audit loop behind `repro cost-audit` and the
+/// `cost_model` bench — the same executor and metering path the
+/// serving batcher uses, without threads or queues.
+pub fn cost_probe(name: &str, g: &Graph, f_in: usize, hidden: usize,
+                  classes: usize, batches: usize,
+                  model: &Arc<CostModel>) -> CostProbe {
+    let mut session = Session::from_graph(
+        g, crate::session::LowerSpec::default());
+    let (hag, plan) = session.plan();
+    obs::cost::record_plan_terms(MetricsRegistry::global(), &hag,
+                                 session.shard_terms());
+    let mut h0 = vec![0f32; plan.n_pad * f_in];
+    for (i, x) in h0.iter_mut().enumerate() {
+        // deterministic non-zero features; values are irrelevant to
+        // the metering, but all-zero rows would let `matmul_bias`
+        // short-circuit and understate the (untimed) matmul share
+        *x = ((i % 13) as f32 - 6.0) * 0.1;
+    }
+    let worker = Worker {
+        backend: Backend::reference(f_in, hidden, classes, 7),
+        plan: plan.clone(),
+        h0,
+        f_in,
+        classes,
+        hidden,
+        served_session_plan: false,
+    };
+    let c = Counters::with_model(Arc::new(MetricsRegistry::new()),
+                                 model.clone());
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        let _ = worker.run_batch(&c);
+        c.t_exec.record(t0.elapsed());
+    }
+    let (combine, scatter) = plan_op_counts(&plan);
+    CostProbe {
+        name: name.to_string(),
+        n: g.n(),
+        e: g.e(),
+        pred_aggregations: hag.aggregations(),
+        pred_transfers: hag.data_transfers(),
+        plan_agg_rows: combine + scatter,
+        plan_transfer_rows: 2 * combine + scatter,
+        meas_aggregations: c.meas_aggs.get(),
+        meas_transfers: c.meas_transfers.get(),
+        batches,
+        exec: c.t_exec.summary(),
     }
 }
 
@@ -1215,6 +1373,18 @@ struct Counters {
     lat: Histogram,
     /// Batch execute wall time.
     exec: Histogram,
+    /// Cost-model audit (DESIGN.md §11): per-batch wall-time buckets
+    /// (`cost.pack`/`cost.exec`/`cost.repair`/`cost.plan`), measured
+    /// Definition-2 tallies from the reference executor, and the
+    /// online α̂/β̂ calibration the resident engine prices drift
+    /// with.
+    t_pack: Histogram,
+    t_exec: Histogram,
+    t_repair: Histogram,
+    t_plan: Histogram,
+    meas_aggs: Counter,
+    meas_transfers: Counter,
+    cost: Arc<CostModel>,
 }
 
 impl Default for Counters {
@@ -1225,6 +1395,13 @@ impl Default for Counters {
 
 impl Counters {
     fn new(registry: Arc<MetricsRegistry>) -> Counters {
+        Counters::with_model(registry, Arc::new(CostModel::new()))
+    }
+
+    /// Share an externally owned model (the cost-audit CLI probe
+    /// meters several sweeps into one calibration).
+    fn with_model(registry: Arc<MetricsRegistry>,
+                  cost: Arc<CostModel>) -> Counters {
         Counters {
             requests: registry.counter("serve.requests"),
             rejected: registry.counter("serve.rejected"),
@@ -1237,12 +1414,22 @@ impl Counters {
             exec_failures: registry.counter("serve.exec_failures"),
             lat: registry.histogram("serve.latency"),
             exec: registry.histogram("serve.exec"),
+            t_pack: registry.histogram("cost.pack"),
+            t_exec: registry.histogram("cost.exec"),
+            t_repair: registry.histogram("cost.repair"),
+            t_plan: registry.histogram("cost.plan"),
+            meas_aggs: registry.counter("cost.meas_aggregations"),
+            meas_transfers: registry.counter("cost.meas_transfers"),
+            cost,
             registry,
         }
     }
 
     fn finalize(&self, elapsed: Duration, resident: Option<&Resident>,
                 plan_matches_fresh: Option<bool>) -> ServeStats {
+        // Final snapshots must carry the calibration gauges even if
+        // no Stats request ever landed.
+        self.cost.publish(&self.registry);
         let (shard_searches, shard_cache_hits, rebuild_swaps) =
             resident.map_or((0, 0, 0), |r| {
                 (r.session.stats().shard_searches,
@@ -1291,6 +1478,9 @@ impl Counters {
 /// [`ServerMsg::Stats`]; gauges are set-to-absolute, so republishing
 /// is idempotent.
 fn publish_resident_stats(resident: &Option<Resident>, c: &Counters) {
+    // Calibration gauges first — they exist with or without a
+    // resident pair (the reference executor meters every batch).
+    c.cost.publish(&c.registry);
     let Some(res) = resident.as_ref() else { return };
     let reg = &c.registry;
     let s = res.session.stats();
@@ -1591,6 +1781,44 @@ mod tests {
             assert!((got - want).abs() < 1e-4,
                     "node {v}: {got} vs {want}");
         }
+    }
+
+    #[test]
+    fn reference_batches_feed_the_cost_model() {
+        let g = clique_ring(4, 5);
+        let (w, mut s) = reference_worker(&g, 4, 8, 3);
+        let c = Counters::default();
+        for _ in 0..12 {
+            w.run_batch(&c).unwrap();
+        }
+        // one sample per batch; a fixed plan yields collinear
+        // samples, so the fit lands on the shared-rate fallback
+        assert_eq!(c.cost.samples(), 12);
+        let (alpha, beta) = c.cost.alpha_beta();
+        assert!(alpha > 0.0 && alpha == beta,
+                "collinear fallback: α̂={alpha} β̂={beta}");
+        let (combine, scatter) = plan_op_counts(&w.plan);
+        let width = (w.f_in + w.hidden) as u64;
+        assert_eq!(c.meas_aggs.get(),
+                   12 * (combine + scatter) * width);
+        assert_eq!(c.meas_transfers.get(),
+                   12 * (2 * combine + scatter) * width);
+
+        // attribution + calibration land in one snapshot
+        let (hag, _) = s.plan();
+        obs::cost::record_plan_terms(&c.registry, &hag,
+                                     s.shard_terms());
+        c.cost.publish(&c.registry);
+        let snap = c.registry.snapshot();
+        assert_eq!(snap.gauge("cost.pred_aggregations"),
+                   hag.aggregations() as i64);
+        assert_eq!(snap.gauge("cost.pred_transfers"),
+                   hag.data_transfers() as i64);
+        assert_eq!(snap.gauge("cost.samples"), 12);
+        assert_eq!(snap.gauge("cost.calibrated"), 1);
+        assert!(snap.gauge("cost.alpha") > 0);
+        // executed rows strictly exceed the padding-free prediction
+        assert!(combine + scatter >= hag.aggregations() as u64);
     }
 
     #[test]

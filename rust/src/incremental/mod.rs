@@ -36,10 +36,12 @@ pub use policy::{DriftPolicy, DriftTracker};
 pub use repair::IncrementalHag;
 
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::graph::Graph;
 use crate::hag::{hag_search, AggregateKind, Hag, SearchConfig};
+use crate::obs::CostModel;
 use crate::partition::search_sharded;
 use crate::util::{FxHashSet, Rng};
 
@@ -171,6 +173,9 @@ pub struct StreamEngine {
     log: DeltaLog,
     rebuild: Option<RebuildTask>,
     stats: StreamStats,
+    /// Live α̂/β̂ source for calibrated drift (None = raw
+    /// `cost_core` units; see [`Self::set_cost_model`]).
+    cost_model: Option<Arc<CostModel>>,
 }
 
 impl StreamEngine {
@@ -201,7 +206,23 @@ impl StreamEngine {
             log: DeltaLog::default(),
             rebuild: None,
             stats: StreamStats::default(),
+            cost_model: None,
         }
+    }
+
+    /// Adopt a live cost-model calibration: subsequent
+    /// [`Self::drift`]/[`Self::estimated_fresh`] readings price the
+    /// maintained HAG and the fresh-search estimate with
+    /// `Hag::cost(α̂, β̂)` instead of raw `cost_core` (DESIGN.md
+    /// §11). Until the model has enough samples to calibrate,
+    /// `alpha_beta()` is `(1, 1)` and behavior is unchanged.
+    pub fn set_cost_model(&mut self, model: Arc<CostModel>) {
+        self.cost_model = Some(model);
+    }
+
+    fn alpha_beta(&self) -> (f64, f64) {
+        self.cost_model.as_ref()
+            .map_or((1.0, 1.0), |m| m.alpha_beta())
     }
 
     pub fn overlay(&self) -> &OverlayGraph {
@@ -232,13 +253,23 @@ impl StreamEngine {
         self.dirty.len()
     }
 
-    /// Current drift over the decayed fresh-search estimate.
+    /// Current drift over the decayed fresh-search estimate, in
+    /// calibrated Definition-2 units when a cost model is attached
+    /// (raw `cost_core` units otherwise — α̂=β̂=1 is the same
+    /// number).
     pub fn drift(&self) -> f64 {
-        self.tracker.drift(self.hag.cost_core(), self.overlay.e())
+        let (alpha, beta) = self.alpha_beta();
+        self.tracker.drift_calibrated(self.hag.cost_core(),
+                                      self.overlay.e(),
+                                      self.overlay.n(), alpha, beta)
     }
 
+    /// Fresh-search cost estimate, same units as [`Self::drift`].
     pub fn estimated_fresh(&self) -> f64 {
-        self.tracker.estimated_fresh(self.overlay.e())
+        let (alpha, beta) = self.alpha_beta();
+        self.tracker.estimated_fresh_calibrated(self.overlay.e(),
+                                                self.overlay.n(),
+                                                alpha, beta)
     }
 
     /// The search config a rebuild would use right now.
@@ -793,6 +824,46 @@ mod tests {
                 a.cost_core(), b.cost_core(), a.e());
         check_equivalence(&a.graph(), &a.to_hag()).unwrap();
         check_equivalence(&b.graph(), &b.to_hag()).unwrap();
+    }
+
+    #[test]
+    fn engine_drift_adopts_cost_model_calibration() {
+        let g = small_community();
+        let mut cfg = StreamConfig::default();
+        cfg.policy = cfg.policy.clone().with_threshold(f64::INFINITY);
+        let mut eng = StreamEngine::new(&g, cfg);
+        let mut rng = Rng::seed_from_u64(23);
+        for _ in 0..400 {
+            let d = random_delta(&mut rng, eng.overlay(), 0.3, 0.02);
+            eng.apply(d);
+        }
+        // raw-unit readings through the uncalibrated default path
+        let est_core = eng.estimated_fresh();
+        let (c_now, n_now) = (eng.cost_core(), eng.n());
+
+        // noiseless β-heavy synthetic host: ns = 2·aggs + 9·transfers
+        let model = Arc::new(CostModel::new());
+        let mut srng = Rng::seed_from_u64(5);
+        for _ in 0..64 {
+            let a = 1_000 + srng.range_usize(0, 50_000) as u64;
+            let t = 1_000 + srng.range_usize(0, 80_000) as u64;
+            model.record_sample(a, t, 2 * a + 9 * t);
+        }
+        let (alpha, beta) = model.alpha_beta();
+        assert!(beta > alpha,
+                "β-heavy synthetic fit: α̂={alpha} β̂={beta}");
+        eng.set_cost_model(model);
+
+        // both readings now follow the Hag::cost identity exactly
+        let want_est =
+            alpha * est_core + (beta - alpha) * n_now as f64;
+        assert!((eng.estimated_fresh() - want_est).abs()
+                    < 1e-6 * want_est.max(1.0));
+        let want = (alpha * c_now as f64
+                        + (beta - alpha) * n_now as f64)
+            / want_est.max(1.0) - 1.0;
+        assert!((eng.drift() - want).abs() < 1e-9,
+                "calibrated drift: {} vs {want}", eng.drift());
     }
 
     #[test]

@@ -19,6 +19,17 @@
 //! through `partition::search_sharded` when sharding is configured —
 //! and swaps the rebuilt HAG in (inline, or on a background thread
 //! with delta replay; see `StreamEngine`).
+//!
+//! **Calibrated units** (DESIGN.md §11): raw drift prices both sides
+//! in `cost_core` — the α=β=1 point of Definition 2. When a live
+//! [`CostModel`](crate::obs::CostModel) calibration is available,
+//! [`DriftTracker::drift_calibrated`] prices them with
+//! `Hag::cost(α̂, β̂) = α̂·cost_core + (β̂−α̂)·|V|` instead. The EWMA
+//! itself stays in dimensionless core units and α̂/β̂ are applied at
+//! *evaluation* time to both the estimate and the current cost, so
+//! evolving coefficients can never mix units across the ratio — and
+//! at α̂=β̂ (the uncalibrated default, and the collinear-fit
+//! fallback) calibrated drift reduces exactly to raw drift.
 
 /// Re-search policy knobs.
 #[derive(Debug, Clone)]
@@ -138,6 +149,34 @@ impl DriftTracker {
         let est = self.estimated_fresh(e_now).max(1.0);
         cost_now as f64 / est - 1.0
     }
+
+    /// [`Self::estimated_fresh`] re-priced in calibrated Definition-2
+    /// units: `α·est_core + (β−α)·n_now` (the `Hag::cost` identity —
+    /// node count is invariant under re-search, so only the core term
+    /// needs the EWMA).
+    pub fn estimated_fresh_calibrated(&self, e_now: usize,
+                                      n_now: usize, alpha: f64,
+                                      beta: f64) -> f64 {
+        crate::obs::cost::calibrated_cost(0, n_now, alpha, beta)
+            + alpha * self.estimated_fresh(e_now)
+    }
+
+    /// [`Self::drift`] with both sides priced by `Hag::cost(α, β)`.
+    /// At `α == β == 1` this is bit-for-bit the raw drift; a real
+    /// calibration shifts the trigger point by how heavily transfers
+    /// (`β`) actually weigh against aggregations on this host.
+    pub fn drift_calibrated(&self, cost_core_now: usize, e_now: usize,
+                            n_now: usize, alpha: f64,
+                            beta: f64) -> f64 {
+        if self.observations == 0 {
+            return 0.0;
+        }
+        let est = self
+            .estimated_fresh_calibrated(e_now, n_now, alpha, beta)
+            .max(1.0);
+        crate::obs::cost::calibrated_cost(cost_core_now, n_now,
+                                          alpha, beta) / est - 1.0
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +237,39 @@ mod tests {
         for s in 0..10 {
             assert!(!off.due(s));
         }
+    }
+
+    #[test]
+    fn calibrated_drift_reduces_to_raw_at_unit_coefficients() {
+        let mut t = DriftTracker::new(0.5);
+        assert_eq!(t.drift_calibrated(100, 100, 30, 2.0, 3.0), 0.0,
+                   "no observation yet");
+        t.record_search(75, 100);
+        for (c, e, n) in [(165usize, 200usize, 40usize), (75, 100, 40),
+                          (10, 300, 7)] {
+            let raw = t.drift(c, e);
+            let cal = t.drift_calibrated(c, e, n, 1.0, 1.0);
+            assert!((raw - cal).abs() < 1e-12,
+                    "α=β=1 must be raw drift: {raw} vs {cal}");
+            // shared non-unit rate: pure rescale, n term cancels
+            let shared = t.drift_calibrated(c, e, n, 2.5, 2.5);
+            assert!((raw - shared).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn calibrated_drift_weighs_transfers_via_beta() {
+        let mut t = DriftTracker::new(0.5);
+        t.record_search(100, 100); // est core = e_now
+        // current core 20% over estimate; a large β·n floor shared by
+        // both sides dilutes the relative excess below 20%
+        let raw = t.drift(120, 100);
+        assert!((raw - 0.2).abs() < 1e-9);
+        let cal = t.drift_calibrated(120, 100, 1_000, 1.0, 5.0);
+        assert!(cal > 0.0 && cal < raw,
+                "β-heavy pricing dilutes core drift: {cal} vs {raw}");
+        let est = t.estimated_fresh_calibrated(100, 1_000, 1.0, 5.0);
+        assert!((est - (100.0 + 4.0 * 1_000.0)).abs() < 1e-9);
     }
 
     #[test]

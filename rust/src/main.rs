@@ -60,8 +60,15 @@ SUBCOMMANDS
                  plan cache)
   obs            telemetry tools: demo the metrics registry + event
                  tracer on a small search, or validate exported
-                 artifacts (--check-snapshot / --check-trace, used by
-                 CI on the serve smoke's exports)
+                 artifacts (--check-snapshot / --check-trace /
+                 --check-cost, used by CI on the serve smoke's
+                 exports)
+  cost-audit     measured-vs-predicted cost-model audit: run the host
+                 reference executor over the generator corpus, meter
+                 every batch into the online α̂/β̂ calibration, and
+                 report Definition-2 predicted terms next to executed
+                 (padded) op counts (--json P writes a benchkit-v1
+                 line validatable by obs --check-cost)
   bench-fig2     Fig 2: end-to-end train + inference comparison
   bench-fig3     Fig 3: aggregation/data-transfer reductions
   bench-fig4     Fig 4: capacity sweep on COLLAB
@@ -106,15 +113,27 @@ COMMON OPTIONS
   --node-add-frac F NodeAdd share of updates      [0.01]
   --report-memory   (bench-fig4) print §3.2 memory accounting
 
-TELEMETRY (DESIGN.md §10; log level via REPRO_LOG=error|warn|info|trace)
+TELEMETRY (DESIGN.md §10-11; log level via
+REPRO_LOG=error|warn|info|trace)
   --obs-snapshot P  (serve) export periodic benchkit-v1 registry
                     snapshots to P as JSONL while serving, plus one
                     final snapshot at shutdown
+  --cost-audit P    (serve) write a one-line benchkit-v1 JSONL
+                    cost-audit sidecar to P at shutdown: live α̂/β̂,
+                    model error, predicted vs measured Definition-2
+                    terms (reference executor only — the XLA path
+                    does not meter per-batch op counts)
+  --batches N       (cost-audit) reference batches per dataset  [8]
+  --json P          (cost-audit) write the audit as one benchkit-v1
+                    JSONL line to P
   --trace P         (serve, obs) enable event tracing and write a
                     Chrome trace_event JSON to P at exit
   --snapshot P      (obs) write the demo's registry snapshot to P
   --check-snapshot P  (obs) validate a --obs-snapshot JSONL export
   --check-trace P   (obs) validate a --trace Chrome JSON export
+  --check-cost P    (obs) validate a --cost-audit / cost-audit --json
+                    export: calibration populated, predicted and
+                    measured terms present and positive
 ";
 
 fn main() -> Result<()> {
@@ -136,6 +155,7 @@ fn main() -> Result<()> {
         "infer" => cmd_infer(&args, &artifacts, scale, seed),
         "serve" => cmd_serve(&args, &artifacts, scale, seed),
         "obs" => cmd_obs(&args, scale, seed),
+        "cost-audit" => cmd_cost_audit(&args, scale, seed),
         "bench-fig2" => repro::bench::fig2(
             &artifacts, args.get_all("datasets"), scale, seed,
             args.get_or("epochs", 10usize)?),
@@ -583,6 +603,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let plan_swap = args.flag("plan-swap")?;
     let update_batch = args.get_or("update-batch", 64usize)?;
     let obs_snapshot = args.get::<String>("obs-snapshot")?;
+    let cost_audit = args.get::<String>("cost-audit")?;
     let trace_path = args.get::<String>("trace")?;
     if trace_path.is_some() {
         repro::obs::trace::set_enabled(true);
@@ -739,9 +760,10 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     }
     // Final live snapshot: taken after the load drains (every reply
     // received means every counter moved) and appended as the export's
-    // last JSONL line, then cross-checked against shutdown stats.
+    // last JSONL line, then cross-checked against shutdown stats. The
+    // cost-audit sidecar reads the same snapshot.
     let mut final_snap = None;
-    if let Some(path) = &obs_snapshot {
+    if obs_snapshot.is_some() || cost_audit.is_some() {
         let (stx, srx) = coordinator::server::stats_oneshot();
         let msg = coordinator::ServerMsg::Stats(
             coordinator::StatsRequest { reply: stx });
@@ -750,9 +772,24 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
         }
         let snap = srx.recv()
             .context("server died answering the final obs snapshot")?;
-        append_line(path, &snap.to_benchkit_value().to_string())
-            .with_context(|| format!("appending to {path}"))?;
+        if let Some(path) = &obs_snapshot {
+            append_line(path, &snap.to_benchkit_value().to_string())
+                .with_context(|| format!("appending to {path}"))?;
+        }
         final_snap = Some(snap);
+    }
+    if let (Some(path), Some(snap)) = (&cost_audit, &final_snap) {
+        let doc = cost_sidecar_value(snap, &lowered.hag);
+        std::fs::write(path, doc.to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        let scale = repro::obs::cost::GAUGE_SCALE;
+        println!("cost audit : benchkit-v1 JSONL -> {path} \
+                  (alpha {:.4} beta {:.4} ns/elem, model error \
+                  {:.1}%, {} samples)",
+                 snap.gauge("cost.alpha") as f64 / scale,
+                 snap.gauge("cost.beta") as f64 / scale,
+                 100.0 * snap.gauge("cost.model_error") as f64 / scale,
+                 snap.gauge("cost.samples"));
     }
     let stats = server.shutdown();
     println!("requests   : {} ok, {} rejected, {} failed",
@@ -824,16 +861,148 @@ fn append_line(path: &str, line: &str) -> std::io::Result<()> {
     writeln!(f, "{line}")
 }
 
+/// One benchkit-v1 cost-audit document from a live serve snapshot:
+/// wall-time buckets as entries, calibration gauges de-scaled from
+/// their fixed-point encoding, measured tallies, and predicted
+/// Definition-2 terms. A serve without a resident pair records no
+/// plan-term gauges, so predictions fall back to the initially
+/// lowered HAG — the plan the worker is in fact serving.
+fn cost_sidecar_value(snap: &repro::obs::StatsSnapshot,
+                      hag: &repro::hag::Hag)
+                      -> repro::util::json::Value {
+    let mut bj = repro::util::benchkit::BenchJson::new();
+    for name in ["cost.pack", "cost.exec", "cost.repair",
+                 "cost.plan"] {
+        if let Some(h) = snap.hist(name) {
+            bj.push_entry(name, h.count, h.p50_ns / 1e9,
+                          h.mean_ns / 1e9, h.min_ns as f64 / 1e9,
+                          h.max_ns as f64 / 1e9);
+        }
+    }
+    let scale = repro::obs::cost::GAUGE_SCALE;
+    bj.derived_num("cost.alpha",
+                   snap.gauge("cost.alpha") as f64 / scale);
+    bj.derived_num("cost.beta",
+                   snap.gauge("cost.beta") as f64 / scale);
+    bj.derived_num("cost.model_error",
+                   snap.gauge("cost.model_error") as f64 / scale);
+    bj.derived_num("cost.samples", snap.gauge("cost.samples") as f64);
+    bj.derived_num("cost.calibrated",
+                   snap.gauge("cost.calibrated") as f64);
+    let pred_a = snap.gauge("cost.pred_aggregations");
+    let (pa, pt) = if pred_a > 0 {
+        (pred_a as f64, snap.gauge("cost.pred_transfers") as f64)
+    } else {
+        (hag.aggregations() as f64, hag.data_transfers() as f64)
+    };
+    bj.derived_num("cost.pred_aggregations", pa);
+    bj.derived_num("cost.pred_transfers", pt);
+    bj.derived_num("cost.meas_aggregations",
+                   snap.counter("cost.meas_aggregations") as f64);
+    bj.derived_num("cost.meas_transfers",
+                   snap.counter("cost.meas_transfers") as f64);
+    bj.to_value()
+}
+
+fn cmd_cost_audit(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    use repro::coordinator::server::cost_probe;
+    let batches = args.get_or("batches", 8usize)?;
+    let json_out = args.get::<String>("json")?;
+    let mut names = args.get_all("datasets");
+    if names.is_empty() {
+        names =
+            datasets::names().iter().map(|s| s.to_string()).collect();
+    }
+    // One model across the sweep: plans of different sizes give the
+    // fit non-collinear (aggs, transfers) rows, unlike a single
+    // fixed-plan serve.
+    let model = Arc::new(repro::obs::CostModel::new());
+    let mut probes = Vec::new();
+    println!("cost-model audit — Definition-2 predicted terms vs the \
+              reference executor ({batches} batches per dataset; \
+              executed rows include plan padding)");
+    println!("{:<8} {:>8} {:>10} {:>12} {:>12} {:>9} {:>13} {:>10}",
+             "dataset", "n", "e", "pred aggs", "exec rows", "overhd",
+             "pred xfers", "exec ms");
+    for name in &names {
+        let ds = datasets::load(
+            name, repro::bench::effective_scale(name, scale), seed);
+        let p = cost_probe(name, &ds.graph, ds.f_in, 64, ds.classes,
+                           batches, &model);
+        println!("{:<8} {:>8} {:>10} {:>12} {:>12} {:>8.2}x {:>13} \
+                  {:>10.2}",
+                 p.name, p.n, p.e, p.pred_aggregations,
+                 p.plan_agg_rows, p.agg_overhead(), p.pred_transfers,
+                 p.exec.mean_ns / 1e6);
+        probes.push(p);
+    }
+    match model.calibration() {
+        Some(c) => println!(
+            "calibration : alpha {:.4} beta {:.4} ns/elem, model \
+             error {:.1}% ({} samples)",
+            c.alpha, c.beta, 100.0 * c.model_error, c.samples),
+        None => println!("calibration : insufficient samples ({} < \
+                          {})", model.samples(),
+                         repro::obs::cost::MIN_SAMPLES),
+    }
+    if let Some(path) = json_out {
+        let mut bj = repro::util::benchkit::BenchJson::new();
+        let mut sums = [0f64; 4];
+        for p in &probes {
+            bj.push_entry(&format!("cost.{}", p.name), p.exec.count,
+                          p.exec.p50_ns / 1e9, p.exec.mean_ns / 1e9,
+                          p.exec.min_ns as f64 / 1e9,
+                          p.exec.max_ns as f64 / 1e9);
+            let pre = format!("cost.{}", p.name);
+            bj.derived_num(&format!("{pre}.pred_aggregations"),
+                           p.pred_aggregations as f64);
+            bj.derived_num(&format!("{pre}.pred_transfers"),
+                           p.pred_transfers as f64);
+            bj.derived_num(&format!("{pre}.meas_aggregations"),
+                           p.meas_aggregations as f64);
+            bj.derived_num(&format!("{pre}.meas_transfers"),
+                           p.meas_transfers as f64);
+            bj.derived_num(&format!("{pre}.agg_overhead"),
+                           p.agg_overhead());
+            sums[0] += p.pred_aggregations as f64;
+            sums[1] += p.pred_transfers as f64;
+            sums[2] += p.meas_aggregations as f64;
+            sums[3] += p.meas_transfers as f64;
+        }
+        bj.derived_num("cost.pred_aggregations", sums[0]);
+        bj.derived_num("cost.pred_transfers", sums[1]);
+        bj.derived_num("cost.meas_aggregations", sums[2]);
+        bj.derived_num("cost.meas_transfers", sums[3]);
+        let c = model.calibration();
+        bj.derived_num("cost.alpha", c.map_or(1.0, |c| c.alpha));
+        bj.derived_num("cost.beta", c.map_or(1.0, |c| c.beta));
+        bj.derived_num("cost.model_error",
+                       c.map_or(0.0, |c| c.model_error));
+        bj.derived_num("cost.samples", model.samples() as f64);
+        bj.derived_num("cost.calibrated", c.is_some() as u8 as f64);
+        std::fs::write(&path, bj.to_value().to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        println!("cost json   : benchkit-v1 -> {path}");
+    }
+    Ok(())
+}
+
 fn cmd_obs(args: &Args, scale: f64, seed: u64) -> Result<()> {
     // Validation modes (CI runs these on the serve smoke's exports).
     let check_snap = args.get::<String>("check-snapshot")?;
     let check_trace = args.get::<String>("check-trace")?;
-    if check_snap.is_some() || check_trace.is_some() {
+    let check_cost = args.get::<String>("check-cost")?;
+    if check_snap.is_some() || check_trace.is_some()
+        || check_cost.is_some()
+    {
         if let Some(path) = check_snap {
             obs_check_snapshot(&path)?;
         }
         if let Some(path) = check_trace {
             obs_check_trace(&path)?;
+        }
+        if let Some(path) = check_cost {
+            obs_check_cost(&path)?;
         }
         return Ok(());
     }
@@ -917,6 +1086,71 @@ fn obs_check_snapshot(path: &str) -> Result<()> {
     }
     println!("check-snapshot OK: {lines} benchkit-v1 lines, final \
               serve.requests = {last_requests}");
+    Ok(())
+}
+
+/// CI check: a cost-audit export must be benchkit-v1 documents whose
+/// `derived` maps carry a populated calibration (α̂/β̂ > 0, finite
+/// non-negative model error) and positive predicted + measured
+/// Definition-2 terms. Accepts both artifact shapes: the serve /
+/// cost-audit sidecars are JSONL (one document per line), while the
+/// `cost_model` bench writes one pretty-printed document — the
+/// whole-file parse is tried first (the JSON parser rejects trailing
+/// characters, so multi-document JSONL cannot be misread as one).
+fn obs_check_cost(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let docs: Vec<(String, repro::util::json::Value)> =
+        match repro::util::json::parse(&text) {
+            Ok(doc) => vec![(path.to_string(), doc)],
+            Err(_) => {
+                let mut v = Vec::new();
+                for (i, line) in text.lines().enumerate() {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let at = format!("{path}:{}", i + 1);
+                    let doc = repro::util::json::parse(line)
+                        .with_context(
+                            || format!("{at}: invalid JSON"))?;
+                    v.push((at, doc));
+                }
+                v
+            }
+        };
+    let (mut alpha, mut beta, mut err) = (0.0f64, 0.0f64, 0.0f64);
+    for (at, doc) in &docs {
+        let ctx = || at.clone();
+        let schema = doc.req_str("schema").with_context(ctx)?;
+        if schema != "benchkit-v1" {
+            bail!("{at}: schema {schema:?}, want benchkit-v1");
+        }
+        doc.req_arr("entries").with_context(ctx)?;
+        let d = doc.req("derived").with_context(ctx)?;
+        alpha = d.req_f64("cost.alpha").with_context(ctx)?;
+        beta = d.req_f64("cost.beta").with_context(ctx)?;
+        err = d.req_f64("cost.model_error").with_context(ctx)?;
+        if alpha <= 0.0 || beta <= 0.0 {
+            bail!("{at}: calibration not populated (alpha {alpha}, \
+                   beta {beta})");
+        }
+        if !err.is_finite() || err < 0.0 {
+            bail!("{at}: bad model error {err}");
+        }
+        for key in ["cost.pred_aggregations", "cost.pred_transfers",
+                    "cost.meas_aggregations", "cost.meas_transfers"] {
+            let v = d.req_f64(key).with_context(ctx)?;
+            if v <= 0.0 {
+                bail!("{at}: {key} = {v}, want > 0");
+            }
+        }
+    }
+    if docs.is_empty() {
+        bail!("{path}: no cost-audit documents");
+    }
+    println!("check-cost OK: {} documents, alpha {alpha:.4} beta \
+              {beta:.4} ns/elem, model error {:.1}%",
+             docs.len(), 100.0 * err);
     Ok(())
 }
 

@@ -1,0 +1,475 @@
+//! Cost-model audit: measured-vs-predicted Definition-2 cost, with
+//! online α/β calibration (DESIGN.md §11).
+//!
+//! The paper's cost function (§4.1, Definition 2) prices a HAG as
+//! `cost = α·aggregations + β·transfers`; the search only ever
+//! minimizes `cost_core` (the α=β=1 point). This module makes the
+//! model itself observable: a [`CostModel`] accumulates
+//! `(aggregations, transfers) → measured_ns` samples from the host
+//! reference executor into a bounded ring, fits live coefficient
+//! estimates α̂/β̂ by incremental least-squares (running normal-
+//! equation sums, closed-form 2×2 solve — std only), and reports a
+//! windowed relative fit error. Consumers:
+//!
+//! * the serving path records one sample per executed batch and
+//!   publishes the calibration into its [`MetricsRegistry`]
+//!   ([`CostModel::publish`]: `cost.alpha`/`cost.beta`/
+//!   `cost.model_error` gauges, fixed-point ×1e6);
+//! * `DriftPolicy`'s fresh-cost comparison evaluates drift in
+//!   calibrated units via [`calibrated_cost`] — the identity
+//!   `Hag::cost(α,β) = α·cost_core + (β−α)·n` lets the streaming
+//!   engine price its maintained HAG without materializing it;
+//! * sustained fit error past the alert threshold emits [`obs_warn!`]
+//!   and a flight record (`cost-model-drift`), so a cost model that
+//!   stops tracking the hardware is an event, not a silent
+//!   mis-optimization.
+//!
+//! Degenerate sample sets are expected and handled: a fixed serving
+//! plan yields identical `(a, t)` rows (a singular system), and the
+//! fit falls back to the combined-ratio estimate α̂ = β̂ — which makes
+//! calibrated drift coincide with raw `cost_core` drift, the
+//! conservative pre-calibration behavior. Distinguishing α from β
+//! needs ratio diversity across plans (`repro cost-audit` and
+//! `benches/cost_model.rs` sweep the generator corpus for exactly
+//! that).
+//!
+//! [`obs_warn!`]: crate::obs_warn
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::hag::Hag;
+use crate::obs::flight;
+use crate::obs::metrics::MetricsRegistry;
+
+/// Fixed-point scale for float-valued gauges (`cost.alpha`,
+/// `cost.beta`, `cost.model_error`): gauges are `i64`, so the
+/// calibration exports as micro-units (value × 1e6).
+pub const GAUGE_SCALE: f64 = 1e6;
+
+/// Samples required before [`CostModel::calibration`] reports a fit.
+pub const MIN_SAMPLES: usize = 8;
+
+/// Default sample-ring capacity (the calibration window).
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// Default windowed-relative-error alert threshold (50%).
+pub const DEFAULT_ALERT_ERROR: f64 = 0.5;
+
+/// Consecutive over-threshold [`CostModel::publish`] observations
+/// before the alert fires ("sustained", not a one-batch blip).
+pub const DEFAULT_ALERT_STREAK: u32 = 8;
+
+/// Recompute the running normal-equation sums from the ring after
+/// this many recorded samples, bounding f64 add/subtract drift.
+const RESUM_EVERY: u64 = 1024;
+
+/// Calibrated Definition-2 cost from the two quantities every HAG
+/// holder can produce cheaply: `Hag::cost(α, β) = α·(ê − |V_A|) +
+/// (β − α)·|V| = α·cost_core + (β − α)·n`. Exact for any α/β (the
+/// contract `prop_cost_identity` pins); at α=β=1 it is `cost_core`.
+pub fn calibrated_cost(cost_core: usize, n: usize, alpha: f64,
+                       beta: f64) -> f64 {
+    alpha * cost_core as f64 + (beta - alpha) * n as f64
+}
+
+/// Record a plan's predicted Definition-2 terms as absolute gauges:
+/// stitched totals (`cost.pred_aggregations`/`cost.pred_transfers`)
+/// plus per-shard terms (`cost.shard<i>.pred_*`) when the caller has
+/// them. Set-to-absolute, so re-recording after a swap is idempotent.
+pub fn record_plan_terms(reg: &MetricsRegistry, hag: &Hag,
+                         shards: &[(usize, usize)]) {
+    reg.gauge("cost.pred_aggregations")
+        .set(hag.aggregations() as i64);
+    reg.gauge("cost.pred_transfers")
+        .set(hag.data_transfers() as i64);
+    for (i, &(aggs, transfers)) in shards.iter().enumerate() {
+        reg.gauge(&format!("cost.shard{i}.pred_aggregations"))
+            .set(aggs as i64);
+        reg.gauge(&format!("cost.shard{i}.pred_transfers"))
+            .set(transfers as i64);
+    }
+}
+
+/// One executor observation: element-wise aggregation ops and operand
+/// reads actually performed, and the wall time they took.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    aggs: f64,
+    transfers: f64,
+    ns: f64,
+}
+
+/// A point-in-time calibration readout.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Fitted ns per aggregation op (α̂), clamped non-negative.
+    pub alpha: f64,
+    /// Fitted ns per transferred element (β̂), clamped non-negative.
+    pub beta: f64,
+    /// Mean relative residual `|α̂a + β̂t − y| / y` over the window.
+    pub model_error: f64,
+    /// Samples currently in the window.
+    pub samples: usize,
+}
+
+struct Inner {
+    ring: VecDeque<Sample>,
+    capacity: usize,
+    recorded: u64,
+    // running normal-equation sums over the ring:
+    // [saa sat; sat stt] [α; β] = [say; sty]
+    saa: f64,
+    sat: f64,
+    stt: f64,
+    say: f64,
+    sty: f64,
+    // alert state
+    alert_error: f64,
+    alert_streak: u32,
+    streak: u32,
+    alerted: bool,
+}
+
+impl Inner {
+    fn push(&mut self, s: Sample) {
+        if self.ring.len() == self.capacity {
+            if let Some(old) = self.ring.pop_front() {
+                self.saa -= old.aggs * old.aggs;
+                self.sat -= old.aggs * old.transfers;
+                self.stt -= old.transfers * old.transfers;
+                self.say -= old.aggs * old.ns;
+                self.sty -= old.transfers * old.ns;
+            }
+        }
+        self.saa += s.aggs * s.aggs;
+        self.sat += s.aggs * s.transfers;
+        self.stt += s.transfers * s.transfers;
+        self.say += s.aggs * s.ns;
+        self.sty += s.transfers * s.ns;
+        self.ring.push_back(s);
+        self.recorded += 1;
+        if self.recorded % RESUM_EVERY == 0 {
+            self.resum();
+        }
+    }
+
+    /// Rebuild the sums from the ring (bounds incremental f64 drift).
+    fn resum(&mut self) {
+        self.saa = 0.0;
+        self.sat = 0.0;
+        self.stt = 0.0;
+        self.say = 0.0;
+        self.sty = 0.0;
+        for s in &self.ring {
+            self.saa += s.aggs * s.aggs;
+            self.sat += s.aggs * s.transfers;
+            self.stt += s.transfers * s.transfers;
+            self.say += s.aggs * s.ns;
+            self.sty += s.transfers * s.ns;
+        }
+    }
+
+    /// Closed-form least-squares solve of the 2×2 normal equations,
+    /// with a combined-ratio fallback when the sample matrix is
+    /// (near-)singular — identical `(a, t)` rows, e.g. a fixed
+    /// serving plan — and non-negativity clamps refit on the
+    /// remaining axis (a negative rate is never a usable price).
+    fn fit(&self) -> Option<(f64, f64)> {
+        if self.ring.len() < MIN_SAMPLES {
+            return None;
+        }
+        let det = self.saa * self.stt - self.sat * self.sat;
+        let scale = (self.saa * self.stt).max(1.0);
+        if det.abs() > 1e-9 * scale {
+            let alpha = (self.stt * self.say - self.sat * self.sty)
+                / det;
+            let beta = (self.saa * self.sty - self.sat * self.say)
+                / det;
+            if alpha >= 0.0 && beta >= 0.0 {
+                return Some((alpha, beta));
+            }
+            if alpha < 0.0 && self.stt > 0.0 {
+                return Some((0.0, (self.sty / self.stt).max(0.0)));
+            }
+            if beta < 0.0 && self.saa > 0.0 {
+                return Some(((self.say / self.saa).max(0.0), 0.0));
+            }
+            return None;
+        }
+        // collinear: fit one shared rate r to y ≈ r·(a + t)
+        let denom = self.saa + 2.0 * self.sat + self.stt;
+        if denom <= 0.0 {
+            return None;
+        }
+        let r = ((self.say + self.sty) / denom).max(0.0);
+        Some((r, r))
+    }
+
+    fn calibration(&self) -> Option<Calibration> {
+        let (alpha, beta) = self.fit()?;
+        let mut err = 0.0;
+        for s in &self.ring {
+            let pred = alpha * s.aggs + beta * s.transfers;
+            err += (pred - s.ns).abs() / s.ns.max(1.0);
+        }
+        Some(Calibration {
+            alpha,
+            beta,
+            model_error: err / self.ring.len() as f64,
+            samples: self.ring.len(),
+        })
+    }
+}
+
+/// Bounded-window online calibrator for the Definition-2 cost model.
+/// Thread-safe (one mutex; callers record once per *batch*, not per
+/// op, so contention is negligible next to an execute).
+pub struct CostModel {
+    inner: Mutex<Inner>,
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel::new()
+    }
+}
+
+impl CostModel {
+    pub fn new() -> CostModel {
+        CostModel::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> CostModel {
+        CostModel {
+            inner: Mutex::new(Inner {
+                ring: VecDeque::with_capacity(capacity.max(1)),
+                capacity: capacity.max(1),
+                recorded: 0,
+                saa: 0.0,
+                sat: 0.0,
+                stt: 0.0,
+                say: 0.0,
+                sty: 0.0,
+                alert_error: DEFAULT_ALERT_ERROR,
+                alert_streak: DEFAULT_ALERT_STREAK,
+                streak: 0,
+                alerted: false,
+            }),
+        }
+    }
+
+    /// Override the model-drift alert policy: fire after `streak`
+    /// consecutive [`Self::publish`] observations with windowed error
+    /// above `error`.
+    pub fn set_alert(&self, error: f64, streak: u32) {
+        let mut g = self.inner.lock().unwrap();
+        g.alert_error = error;
+        g.alert_streak = streak.max(1);
+    }
+
+    /// Record one measured batch: `aggs` element aggregation ops and
+    /// `transfers` element operand reads took `ns` wall-nanoseconds.
+    /// Zero-duration samples are dropped (a timer tick too coarse to
+    /// price anything would only poison the fit).
+    pub fn record_sample(&self, aggs: u64, transfers: u64, ns: u64) {
+        if ns == 0 || (aggs == 0 && transfers == 0) {
+            return;
+        }
+        self.inner.lock().unwrap().push(Sample {
+            aggs: aggs as f64,
+            transfers: transfers as f64,
+            ns: ns as f64,
+        });
+    }
+
+    /// Samples currently windowed.
+    pub fn samples(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    /// The live fit, or `None` before [`MIN_SAMPLES`] observations
+    /// (or when the system is unfittable, e.g. all-zero operands).
+    pub fn calibration(&self) -> Option<Calibration> {
+        self.inner.lock().unwrap().calibration()
+    }
+
+    /// `(α̂, β̂)` for cost evaluation: the live fit when calibrated,
+    /// else `(1, 1)` — the exact point where calibrated cost equals
+    /// `cost_core`, so uncalibrated consumers behave as before.
+    pub fn alpha_beta(&self) -> (f64, f64) {
+        self.calibration().map_or((1.0, 1.0),
+                                  |c| (c.alpha, c.beta))
+    }
+
+    /// Publish the calibration into `reg` (`cost.alpha`/`cost.beta`/
+    /// `cost.model_error` fixed-point ×[`GAUGE_SCALE`],
+    /// `cost.samples`, `cost.calibrated`) and run the sustained-error
+    /// alert check: `alert_streak` consecutive publishes over
+    /// `alert_error` emit one warn + flight record, re-armed once the
+    /// error recovers below threshold.
+    pub fn publish(&self, reg: &MetricsRegistry) {
+        let (cal, fire, alert_error, alert_streak) = {
+            let mut g = self.inner.lock().unwrap();
+            let cal = g.calibration();
+            let over = cal.map_or(false,
+                                  |c| c.model_error > g.alert_error);
+            let mut fire = false;
+            if over {
+                g.streak += 1;
+                if g.streak >= g.alert_streak && !g.alerted {
+                    g.alerted = true;
+                    fire = true;
+                }
+            } else {
+                g.streak = 0;
+                g.alerted = false;
+            }
+            (cal, fire, g.alert_error, g.alert_streak)
+        };
+        let scaled = |v: f64| (v * GAUGE_SCALE).round() as i64;
+        let (alpha, beta) = cal.map_or((1.0, 1.0),
+                                       |c| (c.alpha, c.beta));
+        reg.gauge("cost.alpha").set(scaled(alpha));
+        reg.gauge("cost.beta").set(scaled(beta));
+        reg.gauge("cost.model_error")
+            .set(scaled(cal.map_or(0.0, |c| c.model_error)));
+        reg.gauge("cost.samples")
+            .set(cal.map_or(self.samples(), |c| c.samples) as i64);
+        reg.gauge("cost.calibrated").set(cal.is_some() as i64);
+        if fire {
+            let c = cal.expect("alert implies a calibration");
+            crate::obs_warn!(
+                "[cost] model drift: windowed relative error \
+                 {:.1}% > {:.1}% sustained over {} windows \
+                 (alpha {:.4} beta {:.4} ns/elem, {} samples)",
+                c.model_error * 100.0, alert_error * 100.0,
+                alert_streak, c.alpha, c.beta, c.samples);
+            flight::dump("cost-model-drift", reg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::hag::AggregateKind;
+    use crate::util::Rng;
+
+    /// Noisy synthetic generator: y = α·a + β·t, ±`noise`
+    /// multiplicative, over non-collinear (a, t) rows.
+    fn feed(m: &CostModel, alpha: f64, beta: f64, noise: f64,
+            samples: usize, seed: u64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        for _ in 0..samples {
+            let a = 1_000 + rng.range_usize(0, 50_000) as u64;
+            let t = 1_000 + rng.range_usize(0, 80_000) as u64;
+            let y = alpha * a as f64 + beta * t as f64;
+            let eps = 1.0 + noise * (2.0 * rng.f64() - 1.0);
+            m.record_sample(a, t, (y * eps) as u64);
+        }
+    }
+
+    #[test]
+    fn recovers_synthetic_coefficients_from_noisy_samples() {
+        let m = CostModel::new();
+        assert!(m.calibration().is_none(), "no fit before samples");
+        feed(&m, 2.5, 0.8, 0.05, 200, 41);
+        let c = m.calibration().expect("calibrated");
+        assert!((c.alpha - 2.5).abs() / 2.5 < 0.10,
+                "alpha {} vs 2.5", c.alpha);
+        assert!((c.beta - 0.8).abs() / 0.8 < 0.10,
+                "beta {} vs 0.8", c.beta);
+        assert!(c.model_error < 0.10,
+                "5% noise must fit well: err {}", c.model_error);
+        assert_eq!(c.samples, DEFAULT_CAPACITY.min(200));
+    }
+
+    #[test]
+    fn collinear_samples_fall_back_to_shared_rate() {
+        let m = CostModel::new();
+        // every row proportional to (2, 3): singular normal matrix
+        for i in 1..40u64 {
+            m.record_sample(2 * i * 100, 3 * i * 100,
+                            i * 100 * (2 * 4 + 3 * 4));
+        }
+        let c = m.calibration().expect("calibrated");
+        assert_eq!(c.alpha, c.beta, "fallback is a shared rate");
+        assert!((c.alpha - 4.0).abs() < 0.2,
+                "rate {} vs 4.0", c.alpha);
+        // shared rate ⇒ calibrated drift degenerates to raw drift:
+        // cost scales by a constant
+        let x = calibrated_cost(100, 10, c.alpha, c.beta);
+        let y = calibrated_cost(200, 10, c.alpha, c.beta);
+        assert!((y / x - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_fit_tracks_the_window() {
+        let m = CostModel::with_capacity(32);
+        feed(&m, 10.0, 10.0, 0.0, 100, 7);
+        assert_eq!(m.samples(), 32);
+        // drown the old regime: the window must forget it
+        feed(&m, 1.0, 3.0, 0.0, 64, 8);
+        let c = m.calibration().expect("calibrated");
+        assert!((c.alpha - 1.0).abs() < 0.1, "alpha {}", c.alpha);
+        assert!((c.beta - 3.0).abs() < 0.1, "beta {}", c.beta);
+        assert!(c.model_error < 0.01);
+    }
+
+    #[test]
+    fn calibrated_cost_matches_hag_cost() {
+        let g = Graph::from_edges(5, &[(1, 0), (2, 0), (1, 3),
+                                       (2, 3), (4, 2)]);
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        for (a, b) in [(1.0, 1.0), (2.5, 0.8), (0.0, 7.0)] {
+            let want = h.cost(a, b);
+            let got = calibrated_cost(h.cost_core(), h.n, a, b);
+            assert!((got - want).abs() < 1e-9,
+                    "cost({a},{b}): {got} != {want}");
+        }
+        assert_eq!(calibrated_cost(h.cost_core(), h.n, 1.0, 1.0),
+                   h.cost_core() as f64);
+    }
+
+    #[test]
+    fn publish_exports_gauges_and_sustained_error_alerts() {
+        let _guard = flight::test_lock();
+        let dir = std::env::temp_dir()
+            .join(format!("repro-cost-alert-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        flight::set_dir(&dir);
+        let reg = MetricsRegistry::new();
+        let m = CostModel::new();
+        m.publish(&reg);
+        assert_eq!(reg.gauge("cost.calibrated").get(), 0);
+        assert_eq!(reg.gauge("cost.alpha").get(),
+                   GAUGE_SCALE as i64, "uncalibrated α defaults to 1");
+
+        // a fit this bad trips any threshold: constant work, wildly
+        // bimodal measured time
+        for i in 0..20u64 {
+            m.record_sample(1_000, 2_000,
+                            if i % 2 == 0 { 1_000 } else { 400_000 });
+        }
+        m.set_alert(0.25, 3);
+        crate::obs::log::capture_begin();
+        m.publish(&reg); // streak 1
+        m.publish(&reg); // streak 2
+        m.publish(&reg); // streak 3: fires
+        m.publish(&reg); // latched: no second record
+        let warns: Vec<String> = crate::obs::log::capture_take()
+            .into_iter()
+            .filter(|l| l.contains("[cost] model drift"))
+            .collect();
+        assert_eq!(warns.len(), 1, "one sustained alert: {warns:?}");
+        let dump = flight::last_dump().expect("flight record");
+        assert!(dump.to_string_lossy().contains("cost-model-drift"),
+                "dump {dump:?}");
+        assert_eq!(reg.gauge("cost.calibrated").get(), 1);
+        assert!(reg.gauge("cost.model_error").get()
+                    > (0.25 * GAUGE_SCALE) as i64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

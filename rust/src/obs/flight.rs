@@ -11,6 +11,11 @@
 //! Destination: [`set_dir`] override (tests), else
 //! `REPRO_FLIGHT_DIR`, else the OS temp dir. `REPRO_FLIGHT=0`
 //! disables dumps entirely.
+//!
+//! Bounded: after every successful dump the destination directory is
+//! rotated down to the newest [`DEFAULT_KEEP`] `obs-flight-*.json`
+//! files (`REPRO_FLIGHT_KEEP` overrides), so a flapping swap path
+//! cannot fill the disk with artifacts.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,6 +28,10 @@ use crate::util::json;
 
 /// Most-recent trace events preserved per dump.
 pub const KEEP_EVENTS: usize = 512;
+
+/// Flight artifacts kept per directory after rotation
+/// (`REPRO_FLIGHT_KEEP` overrides; values < 1 clamp to 1).
+pub const DEFAULT_KEEP: usize = 16;
 
 static DIR_OVERRIDE: Mutex<Option<PathBuf>> = Mutex::new(None);
 static LAST: Mutex<Option<PathBuf>> = Mutex::new(None);
@@ -80,6 +89,10 @@ pub fn dump(reason: &str, registry: &MetricsRegistry)
             *LAST.lock().unwrap() = Some(path.clone());
             crate::obs_warn!("[obs] flight record ({reason}) -> {}",
                              path.display());
+            let keep = std::env::var("REPRO_FLIGHT_KEEP").ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(DEFAULT_KEEP);
+            rotate(&dir, keep.max(1));
             Some(path)
         }
         Err(e) => {
@@ -87,6 +100,44 @@ pub fn dump(reason: &str, registry: &MetricsRegistry)
             crate::obs_error!("[obs] flight record write failed: {e}");
             None
         }
+    }
+}
+
+/// Delete all but the newest `keep` `obs-flight-*.json` files in
+/// `dir`. "Newest" orders by the `-<unix_ms>-<seq>` filename suffix
+/// (seq breaks same-millisecond ties), so rotation is stable across
+/// processes and needs no fstat calls; unparseable names sort oldest.
+/// Best-effort like the rest of the failure path: IO errors are
+/// swallowed, never panics.
+fn rotate(dir: &std::path::Path, keep: usize) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    let mut files: Vec<(u64, u64, PathBuf)> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            let path = e.path();
+            let name = e.file_name();
+            let name = name.to_str()?;
+            if !name.starts_with("obs-flight-")
+                || !name.ends_with(".json")
+            {
+                return None;
+            }
+            let stem = &name[..name.len() - ".json".len()];
+            let mut it = stem.rsplitn(3, '-');
+            let seq = it.next().and_then(|s| s.parse().ok())
+                .unwrap_or(0u64);
+            let ms = it.next().and_then(|s| s.parse().ok())
+                .unwrap_or(0u64);
+            Some((ms, seq, path))
+        })
+        .collect();
+    if files.len() <= keep {
+        return;
+    }
+    files.sort();
+    let excess = files.len() - keep;
+    for (_, _, path) in files.into_iter().take(excess) {
+        let _ = std::fs::remove_file(path);
     }
 }
 
@@ -131,6 +182,70 @@ mod tests {
         assert!(evs.iter().any(|e| {
             e.req_str("name").unwrap() == "test.flight_span"
         }), "dump carries the recent span");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_keeps_newest_n_and_ignores_foreign_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "repro-obs-rotate-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // 6 artifacts: 5 distinct timestamps plus a same-ms pair
+        // where seq must break the tie
+        for (ms, seq) in
+            [(100u64, 0u64), (200, 1), (300, 2), (300, 3), (400, 4),
+             (500, 5)]
+        {
+            std::fs::write(
+                dir.join(format!("obs-flight-x-{ms}-{seq}.json")),
+                "{}").unwrap();
+        }
+        // non-matching files must survive any rotation
+        std::fs::write(dir.join("notes.json"), "{}").unwrap();
+        std::fs::write(dir.join("obs-flight-keep.txt"), "").unwrap();
+        rotate(&dir, 3);
+        let mut left: Vec<String> = std::fs::read_dir(&dir).unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        left.sort();
+        assert_eq!(left, vec!["notes.json".to_string(),
+                              "obs-flight-keep.txt".to_string(),
+                              "obs-flight-x-300-3.json".to_string(),
+                              "obs-flight-x-400-4.json".to_string(),
+                              "obs-flight-x-500-5.json".to_string()]);
+        // keep >= population: no-op
+        rotate(&dir, 16);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dump_applies_rotation_to_its_own_directory() {
+        let _guard = test_lock();
+        let dir = std::env::temp_dir().join(format!(
+            "repro-obs-rotate-dump-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        set_dir(&dir);
+        // pre-seed DEFAULT_KEEP stale artifacts with ancient stamps;
+        // one real dump must displace the oldest
+        for i in 0..DEFAULT_KEEP {
+            std::fs::write(
+                dir.join(format!("obs-flight-old-1-{i}.json")), "{}")
+                .unwrap();
+        }
+        let reg = MetricsRegistry::new();
+        dump("rotation probe", &reg).expect("dump written");
+        let names: Vec<String> = std::fs::read_dir(&dir).unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(names.len(), DEFAULT_KEEP);
+        assert!(!names.contains(&"obs-flight-old-1-0.json".into()),
+                "oldest stale artifact rotated out: {names:?}");
+        assert!(names.iter()
+                    .any(|n| n.contains("rotation-probe")),
+                "fresh dump kept: {names:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

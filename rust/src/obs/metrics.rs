@@ -355,43 +355,28 @@ impl StatsSnapshot {
 
     /// benchkit-v1 document: histograms become `entries` rows (times
     /// in seconds, `iters` = sample count), counters/gauges/extra
-    /// quantiles become `derived` scalars. Runtime telemetry and
-    /// bench sidecars share one schema so the same tooling parses
-    /// both (see EXPERIMENTS.md).
+    /// quantiles become `derived` scalars. Serialized through
+    /// [`BenchJson`](crate::util::benchkit::BenchJson) — one schema,
+    /// one emitter — so the bench harness and runtime telemetry can
+    /// never drift apart (see EXPERIMENTS.md).
     pub fn to_benchkit_value(&self) -> Value {
         let ns_to_s = |ns: f64| if ns.is_nan() { 0.0 } else { ns / 1.0e9 };
-        let mut entries = Vec::with_capacity(self.hists.len());
-        let mut derived = BTreeMap::new();
-        derived.insert("at_unix_ms".to_string(),
-                       Value::Num(self.at_unix_ms as f64));
+        let mut bj = crate::util::benchkit::BenchJson::new();
+        bj.derived_num("at_unix_ms", self.at_unix_ms as f64);
         for (name, h) in &self.hists {
-            let mut m = BTreeMap::new();
-            m.insert("name".to_string(), Value::Str(name.clone()));
-            m.insert("iters".to_string(), Value::Num(h.count as f64));
-            m.insert("median_s".to_string(),
-                     Value::Num(ns_to_s(h.p50_ns)));
-            m.insert("mean_s".to_string(),
-                     Value::Num(ns_to_s(h.mean_ns)));
-            m.insert("min_s".to_string(),
-                     Value::Num(h.min_ns as f64 / 1.0e9));
-            m.insert("max_s".to_string(),
-                     Value::Num(h.max_ns as f64 / 1.0e9));
-            entries.push(Value::Obj(m));
-            derived.insert(format!("{name}.p99_s"),
-                           Value::Num(ns_to_s(h.p99_ns)));
+            bj.push_entry(name, h.count, ns_to_s(h.p50_ns),
+                          ns_to_s(h.mean_ns), h.min_ns as f64 / 1.0e9,
+                          h.max_ns as f64 / 1.0e9);
+            bj.derived_num(&format!("{name}.p99_s"),
+                           ns_to_s(h.p99_ns));
         }
         for (name, v) in &self.counters {
-            derived.insert(name.clone(), Value::Num(*v as f64));
+            bj.derived_num(name, *v as f64);
         }
         for (name, v) in &self.gauges {
-            derived.insert(name.clone(), Value::Num(*v as f64));
+            bj.derived_num(name, *v as f64);
         }
-        let mut doc = BTreeMap::new();
-        doc.insert("schema".to_string(),
-                   Value::Str("benchkit-v1".to_string()));
-        doc.insert("entries".to_string(), Value::Arr(entries));
-        doc.insert("derived".to_string(), Value::Obj(derived));
-        Value::Obj(doc)
+        bj.to_value()
     }
 
     /// One human-readable line per metric (the single formatter the
@@ -539,6 +524,48 @@ mod tests {
         let text = snap.format();
         assert!(text.contains("t.reqs") && text.contains("t.depth")
                     && text.contains("t.lat"));
+    }
+
+    #[test]
+    fn both_benchkit_producers_roundtrip_identically_shaped() {
+        // Producer 1: the bench harness path (Duration domain).
+        let b = crate::util::benchkit::Bencher {
+            warmup: 0, iters: 3,
+            max_total: Duration::from_secs(5),
+        };
+        let s = b.run("t.shape", || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut bj = crate::util::benchkit::BenchJson::new();
+        bj.push(&s);
+        bj.derived_num("at_unix_ms", 1.0);
+        // Producer 2: the telemetry snapshot path (ns domain),
+        // serialized through the same BenchJson emitter.
+        let reg = MetricsRegistry::new();
+        reg.histogram("t.shape").record(Duration::from_micros(80));
+        let snap = reg.snapshot();
+        let keys = |v: &Value| -> Vec<String> {
+            match v.req_arr("entries").unwrap()[0] {
+                Value::Obj(ref m) => m.keys().cloned().collect(),
+                _ => panic!("entry is not an object"),
+            }
+        };
+        for doc in [bj.to_value(), snap.to_benchkit_value()] {
+            let v = crate::util::json::parse(&doc.to_string())
+                .unwrap();
+            assert_eq!(v.req_str("schema").unwrap(), "benchkit-v1");
+            assert_eq!(v.req_arr("entries").unwrap().len(), 1);
+            assert_eq!(keys(&v),
+                       vec!["iters", "max_s", "mean_s", "median_s",
+                            "min_s", "name"]);
+            assert!(v.req("derived").unwrap()
+                        .req_f64("at_unix_ms").unwrap() >= 1.0);
+        }
+        // snapshot-only extras ride in derived, same row shape
+        let v = crate::util::json::parse(
+            &snap.to_benchkit_value().to_string()).unwrap();
+        assert!(v.req("derived").unwrap()
+                    .req_f64("t.shape.p99_s").unwrap() > 0.0);
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //!   logger ([`obs_error!`]/[`obs_warn!`]/[`obs_info!`]/
 //!   [`obs_trace!`]) with a capture sink for test assertions.
 //! * [`flight`] — on serving failures, atomically dump the last N
-//!   trace events + a registry snapshot to a timestamped file.
+//!   trace events + a registry snapshot to a timestamped file
+//!   (rotated: newest [`flight::DEFAULT_KEEP`] per directory).
+//! * [`cost`] — measured-vs-predicted Definition-2 cost audit:
+//!   a bounded sample ring fitted online into live α̂/β̂
+//!   ([`CostModel`]), calibrated-cost evaluation for drift policies
+//!   ([`cost::calibrated_cost`]), and model-drift alerting. See
+//!   DESIGN.md §11.
 //!
 //! Wiring map (who records what): the HAG search kernel spans its
 //! merge rounds (`search.round`), the partitioned search spans each
@@ -25,11 +31,13 @@
 //! lifecycle (`serve.*`) against a per-server registry surfaced
 //! live over `ServerMsg::Stats`. See DESIGN.md §10.
 
+pub mod cost;
 pub mod flight;
 pub mod log;
 pub mod metrics;
 pub mod trace;
 
+pub use cost::{Calibration, CostModel};
 pub use log::Level;
 pub use metrics::{Counter, Gauge, HistSummary, Histogram,
                   MetricsRegistry, StatsSnapshot};

@@ -117,6 +117,13 @@ pub struct Session {
     /// Reusable search arena for the session's own (single-shard)
     /// re-searches; the sharded path gives each pool worker its own.
     scratch: SearchScratch,
+    /// Definition-2 attribution terms
+    /// `(aggregations, data_transfers)` per shard HAG, captured by
+    /// the most recent [`Session::plan`] build (empty until one
+    /// runs). Feeds `obs::cost::record_plan_terms` on the serving
+    /// path; per-shard sums differ from the stitched totals by the
+    /// cross-shard edges the stitch appends.
+    shard_terms: Vec<(usize, usize)>,
 }
 
 impl Session {
@@ -191,7 +198,14 @@ impl Session {
             cache: PlanCache::new(),
             stats: SessionStats::default(),
             scratch: SearchScratch::new(),
+            shard_terms: Vec::new(),
         }
+    }
+
+    /// Per-shard `(aggregations, data_transfers)` from the most
+    /// recent HAG build; empty before the first [`Session::plan`].
+    pub fn shard_terms(&self) -> &[(usize, usize)] {
+        &self.shard_terms
     }
 
     pub fn spec(&self) -> &LowerSpec {
@@ -347,7 +361,10 @@ impl Session {
     /// cache and no stats move (the from-scratch comparator).
     fn build_hag(&mut self, g: &Graph, use_cache: bool) -> Arc<Hag> {
         if self.spec.repr == Repr::GnnGraph {
-            return Arc::new(Hag::from_graph(g, self.spec.kind));
+            let hag = Arc::new(Hag::from_graph(g, self.spec.kind));
+            self.shard_terms =
+                vec![(hag.aggregations(), hag.data_transfers())];
+            return hag;
         }
         let k = self.part.n_shards;
         if k <= 1 {
@@ -356,6 +373,8 @@ impl Session {
                 if let Some(h) = self.cache.shard_hag(key) {
                     self.stats.shard_cache_hits += 1;
                     crate::obs_event!("session.shard_cache_hit");
+                    self.shard_terms = vec![(h.aggregations(),
+                                             h.data_transfers())];
                     return h;
                 }
             }
@@ -369,6 +388,8 @@ impl Session {
                 self.stats.shard_searches += 1;
                 self.cache.insert_shard(key, hag.clone());
             }
+            self.shard_terms = vec![(hag.aggregations(),
+                                     hag.data_transfers())];
             return hag;
         }
 
@@ -436,6 +457,9 @@ impl Session {
 
         let locals: Vec<Arc<Hag>> = locals.into_iter()
             .map(|h| h.expect("every shard resolved"))
+            .collect();
+        self.shard_terms = locals.iter()
+            .map(|h| (h.aggregations(), h.data_transfers()))
             .collect();
         Arc::new(stitch_hags(g, &self.part, &locals))
     }
@@ -666,6 +690,32 @@ mod tests {
         assert_eq!(s.stats().noops, 3);
         let (_, p2) = s.plan();
         assert!(Arc::ptr_eq(&p1, &p2), "no-ops keep the memo");
+    }
+
+    #[test]
+    fn shard_terms_track_the_latest_build() {
+        let g = clique_ring(8, 6);
+        let spec = LowerSpec::default().with_shards(4);
+        let mut s = Session::from_graph(&g, spec);
+        assert!(s.shard_terms().is_empty(), "nothing built yet");
+        let (hag, _) = s.plan();
+        let terms = s.shard_terms().to_vec();
+        assert_eq!(terms.len(), 4);
+        assert!(terms.iter().all(|&(a, t)| a > 0 && t >= a),
+                "transfers dominate aggregations per Definition 2");
+        // per-shard totals undercount the stitched HAG by exactly
+        // the cross-shard edges appended at stitch time
+        let (asum, tsum): (usize, usize) = terms.iter().fold(
+            (0, 0), |(a, t), &(sa, st)| (a + sa, t + st));
+        assert!(asum <= hag.aggregations());
+        assert!(tsum <= hag.data_transfers());
+
+        // single shard: terms are exactly the stitched totals
+        let mut s1 =
+            Session::from_graph(&g, LowerSpec::default());
+        let (h1, _) = s1.plan();
+        assert_eq!(s1.shard_terms(),
+                   &[(h1.aggregations(), h1.data_transfers())]);
     }
 
     #[test]

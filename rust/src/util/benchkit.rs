@@ -60,15 +60,26 @@ impl BenchJson {
 
     /// Record one harness result (times in seconds, f64).
     pub fn push(&mut self, s: &BenchStats) {
+        self.push_entry(&s.name, s.iters as u64,
+                        s.median.as_secs_f64(), s.mean.as_secs_f64(),
+                        s.min.as_secs_f64(), s.max.as_secs_f64());
+    }
+
+    /// Record one entries row directly in the seconds-f64 domain —
+    /// the single place the benchkit-v1 row shape is spelled out.
+    /// Producers that are not [`Bencher`] runs (the telemetry
+    /// snapshot's nanosecond histograms, the cost-audit sweep)
+    /// serialize through here instead of hand-rolling the schema.
+    pub fn push_entry(&mut self, name: &str, iters: u64,
+                      median_s: f64, mean_s: f64, min_s: f64,
+                      max_s: f64) {
         let mut m = BTreeMap::new();
-        m.insert("name".to_string(), Value::Str(s.name.clone()));
-        m.insert("iters".to_string(), Value::Num(s.iters as f64));
-        m.insert("median_s".to_string(),
-                 Value::Num(s.median.as_secs_f64()));
-        m.insert("mean_s".to_string(),
-                 Value::Num(s.mean.as_secs_f64()));
-        m.insert("min_s".to_string(), Value::Num(s.min.as_secs_f64()));
-        m.insert("max_s".to_string(), Value::Num(s.max.as_secs_f64()));
+        m.insert("name".to_string(), Value::Str(name.to_string()));
+        m.insert("iters".to_string(), Value::Num(iters as f64));
+        m.insert("median_s".to_string(), Value::Num(median_s));
+        m.insert("mean_s".to_string(), Value::Num(mean_s));
+        m.insert("min_s".to_string(), Value::Num(min_s));
+        m.insert("max_s".to_string(), Value::Num(max_s));
         self.entries.push(Value::Obj(m));
     }
 

@@ -14,6 +14,7 @@
 use repro::datasets::{community_graph, ego_clique_set, CommunityCfg,
                       EgoCliqueCfg};
 use repro::graph::{Graph, GraphBuilder};
+use repro::obs::cost::calibrated_cost;
 use repro::hag::{build_plan, check_equivalence,
                  check_equivalence_probabilistic, hag_search,
                  hag_search_reference, hag_search_with_scratch,
@@ -120,6 +121,46 @@ fn prop_search_result_is_equivalent_and_valid() {
             let trivial = Hag::from_graph(&g, kind);
             assert!(hag.cost_core() <= trivial.cost_core(),
                     "case {case}: cost increased");
+        }
+    }
+}
+
+/// The cost-formula contract the audit layer (obs/cost.rs) stands
+/// on, over the whole random corpus, for trivial *and* searched
+/// HAGs:
+/// * at `α = β = 1` the paper's cost (§4.1) collapses to the
+///   integer `cost_core = ê − |V_A|`, **bit-exactly** — every term
+///   is an integer below 2^53, so the f64 arithmetic is exact;
+/// * for any α/β, `obs::cost::calibrated_cost(cost_core, n, α, β)`
+///   reproduces `Hag::cost(α, β)` bit-exactly: both evaluate
+///   `α·x + (β−α)·n` with the identical exact `x`. This is what
+///   lets the audit price drift from `(cost_core, n)` alone
+///   without re-walking the HAG.
+#[test]
+fn prop_cost_identity() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(8000 + case as u64);
+        let g = random_graph(&mut rng);
+        let cfg = cfg_for(&mut rng, &g, AggregateKind::Set);
+        let (searched, _) = hag_search(&g, &cfg);
+        let trivial = Hag::from_graph(&g, AggregateKind::Set);
+        for hag in [&trivial, &searched] {
+            assert_eq!(hag.cost(1.0, 1.0), hag.cost_core() as f64,
+                       "case {case}: unit-coefficient cost must be \
+                        cost_core exactly");
+            for (alpha, beta) in [(1.0, 1.0), (0.5, 2.0),
+                                  (3.25, 3.25), (2.0, 9.0),
+                                  (1e-3, 7.5)] {
+                let via_terms = calibrated_cost(
+                    hag.cost_core(), hag.n, alpha, beta);
+                assert_eq!(hag.cost(alpha, beta), via_terms,
+                           "case {case}: calibrated_cost diverged \
+                            at alpha {alpha} beta {beta}");
+            }
+            // Definition-2 sanity the attribution gauges rely on:
+            // transfers = ê ≥ aggregations always.
+            assert!(hag.data_transfers() >= hag.aggregations(),
+                    "case {case}: transfers < aggregations");
         }
     }
 }
