@@ -5,16 +5,25 @@
 //!
 //! Run: `cargo bench --bench stream_updates`
 //! CI smoke (bounded sizes): `cargo bench --bench stream_updates -- --smoke`
+//!
+//! The final section drives the same serving stack through the TCP
+//! front end (`rust/src/net/`) over loopback and emits
+//! `BENCH_serve.json` (benchkit-v1; path override: `BENCH_SERVE_JSON`)
+//! with client-observed wire latencies.
 
-use std::time::Instant;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use repro::coordinator::{self, BatchPolicy, SwapPolicy};
 use repro::datasets::{community_graph, CommunityCfg};
 use repro::hag::hag_search;
 use repro::incremental::{random_delta, DriftPolicy, GraphDelta,
                          StreamConfig, StreamEngine};
+use repro::net::{Client, NetConfig, NetServer, Outcome};
+use repro::obs::metrics::MetricsRegistry;
 use repro::session::{LowerSpec, Session};
-use repro::util::benchkit::Bencher;
+use repro::util::benchkit::{BenchJson, Bencher};
 use repro::util::Rng;
 
 fn community(n: usize, e: usize, seed: u64) -> repro::graph::Graph {
@@ -199,6 +208,7 @@ fn main() {
                 .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
             reply: otx,
             submitted: Instant::now(),
+            pin_epoch: None,
         };
         if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
             break;
@@ -218,4 +228,76 @@ fn main() {
         s.requests, s.rejected, s.p50_ms, s.p99_ms, s.updates,
         s.update_batches, s.plan_swaps, s.swaps_skipped,
         s.shard_searches, s.shard_cache_hits, s.plan_matches_fresh);
+
+    // wire-level serving: the same stack behind the TCP front end,
+    // scored over loopback through the length-prefixed protocol.
+    // Client-observed latency = framing + socket + batcher + exec.
+    let wire_reqs = if smoke { 200usize } else { 2_000 };
+    println!("\nserve wire (BZR stand-in, {wire_reqs} loopback \
+              round-trips):");
+    let ds = repro::datasets::load("BZR", 0.02, 37);
+    let mut session = Session::new(&ds,
+                                   LowerSpec::default().with_shards(2));
+    let lowered = session.lower().expect("lower");
+    let server = coordinator::InferenceServer::for_lowered(
+        "artifacts", "gcn", &ds, &lowered, BatchPolicy::default(), 37,
+        None).expect("spawn");
+    let net = NetServer::spawn("127.0.0.1:0", server.client(),
+                               server.epoch_cell(),
+                               Arc::new(MetricsRegistry::new()),
+                               NetConfig::default())
+        .expect("bind loopback");
+    let mut c = Client::connect(net.local_addr()).expect("connect");
+    let epoch_before = c.ping().expect("ping");
+    let mut rng = Rng::seed_from_u64(37);
+    let mut wire_us: Vec<f64> = Vec::with_capacity(wire_reqs);
+    let mut ok = 0usize;
+    for _ in 0..wire_reqs {
+        let node = rng.range_u32(0, ds.n() as u32);
+        let feats: Vec<f32> = (0..ds.f_in)
+            .map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let t = Instant::now();
+        match c.score(node, &feats).expect("wire round-trip") {
+            Outcome::Ok(_) => ok += 1,
+            Outcome::Rejected(r) => panic!("unexpected shed: {r}"),
+        }
+        wire_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let epoch_after = c.ping().expect("ping");
+    assert!(epoch_after >= epoch_before, "epochs went backwards");
+    drop(c);
+    let net_stats = net.drain(Duration::from_secs(5));
+    let _ = server.shutdown();
+
+    wire_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = wire_us[wire_us.len() / 2];
+    let p99 = wire_us[((wire_us.len() as f64 * 0.99) as usize)
+                      .min(wire_us.len() - 1)];
+    let mean = wire_us.iter().sum::<f64>() / wire_us.len() as f64;
+    println!(
+        "  -> {ok}/{wire_reqs} ok over the wire; client p50 \
+         {p50:.1} us p99 {p99:.1} us; {} accepted, {} shed, \
+         {} protocol errors",
+        net_stats.accepted, net_stats.shed,
+        net_stats.protocol_errors);
+
+    let mut json = BenchJson::new();
+    json.push_entry("serve_wire/score_roundtrip", wire_us.len() as u64,
+                    p50 / 1e6, mean / 1e6,
+                    wire_us[0] / 1e6,
+                    wire_us[wire_us.len() - 1] / 1e6);
+    json.derived_num("serve.requests", ok as f64);
+    json.derived_num("serve.wire_p50_us", p50);
+    json.derived_num("serve.wire_p99_us", p99);
+    json.derived_num("serve.accepted", net_stats.accepted as f64);
+    json.derived_num("serve.shed", net_stats.shed as f64);
+    json.derived_num("serve.drained", net_stats.drained as f64);
+    json.derived_num("serve.protocol_errors",
+                     net_stats.protocol_errors as f64);
+    json.derived_num("serve.epoch", epoch_after as f64);
+    let out = std::env::var("BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    json.write(Path::new(&out))
+        .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("wrote {out}");
 }

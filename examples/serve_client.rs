@@ -1,0 +1,184 @@
+//! Wire-client example: the minimal blocking SDK
+//! (`repro::net::Client`) against a live TCP front end.
+//!
+//! Two modes:
+//!
+//! - `--addr HOST:PORT` — connect to an already-running server (the
+//!   CI smoke points this at `repro serve --listen 127.0.0.1:0`).
+//! - no `--addr` — self-contained: spin up an in-process
+//!   `InferenceServer` + `NetServer` on an ephemeral loopback port
+//!   and talk to it over real TCP, so the example runs end-to-end on
+//!   a fresh checkout with no second terminal.
+//!
+//! ```bash
+//! cargo run --release --example serve_client                # spawn mode
+//! cargo run --release --example serve_client -- --addr 127.0.0.1:4841
+//! ```
+//!
+//! Exercises the whole client-visible contract: ping (epoch probe),
+//! scoring with fresh feature rows, an epoch-pinned read, a
+//! deliberately stale pin answered with `epoch_mismatch`, and a
+//! stats snapshot over the wire.
+
+use std::time::Duration;
+
+use repro::net::{Client, NetConfig, NetServer, Outcome};
+
+fn parse_args() -> (Option<String>, usize) {
+    let mut addr = None;
+    let mut requests = 20usize;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => addr = it.next(),
+            "--requests" => {
+                requests = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--requests N");
+            }
+            other => panic!("unknown arg {other:?} \
+                             (usage: [--addr HOST:PORT] \
+                             [--requests N])"),
+        }
+    }
+    (addr, requests)
+}
+
+/// Spawn-mode backend: a small BZR stand-in behind the batcher and a
+/// loopback TCP front end. Returns (net handle, inference server,
+/// f_in, n) — the net handle must drain before the server shuts down.
+fn spawn_local() -> anyhow::Result<(NetServer,
+                                    repro::coordinator::InferenceServer,
+                                    usize, u32)> {
+    use repro::coordinator::{self, BatchPolicy};
+    use repro::session::{LowerSpec, Session};
+
+    let ds = repro::datasets::load("BZR", 0.02, 7);
+    let lowered = Session::new(&ds, LowerSpec::default()).lower()?;
+    let server = coordinator::InferenceServer::for_lowered(
+        "artifacts", "gcn", &ds, &lowered,
+        BatchPolicy { max_batch: 32,
+                      max_wait: Duration::from_millis(2) },
+        7, None)?;
+    let reg = std::sync::Arc::new(
+        repro::obs::metrics::MetricsRegistry::new());
+    let net = NetServer::spawn("127.0.0.1:0", server.client(),
+                               server.epoch_cell(), reg,
+                               NetConfig::default())?;
+    Ok((net, server, ds.f_in, ds.n() as u32))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (addr, requests) = parse_args();
+
+    // Spawn-mode state kept alive for the whole run.
+    let mut local = None;
+    // In --addr mode the model's f_in is unknown, so requests keep
+    // the resident feature rows (empty features = no replacement) and
+    // stay in a small node range; out-of-range ids come back as
+    // explicit rejections rather than failures either way.
+    let (target, f_in, n) = match &addr {
+        Some(a) => (a.clone(), 0usize, 16u32),
+        None => {
+            let (net, server, f_in, n) = spawn_local()?;
+            let t = net.local_addr().to_string();
+            println!("spawned in-process server on {t}");
+            local = Some((net, server));
+            (t, f_in, n)
+        }
+    };
+
+    let mut client = Client::connect(&target)?;
+    client.set_read_timeout(Duration::from_secs(10))?;
+
+    // 1. Liveness + epoch probe.
+    let epoch = client.ping()?;
+    println!("ping       : serving plan epoch {epoch}");
+
+    // 2. Scoring load with client-side latency accounting. Node ids
+    //    above the graph size come back as explicit
+    //    node_out_of_range rejections — count both outcomes.
+    let mut lat_us: Vec<u64> = Vec::new();
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let mut rand = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for _ in 0..requests {
+        let node = (rand() % n as u64) as u32;
+        let features: Vec<f32> = (0..f_in)
+            .map(|_| (rand() % 2000) as f32 / 1000.0 - 1.0)
+            .collect();
+        let t = std::time::Instant::now();
+        match client.score(node, &features)? {
+            Outcome::Ok(score) => {
+                ok += 1;
+                lat_us.push(t.elapsed().as_micros() as u64);
+                assert!(!score.logits.is_empty(), "empty logits");
+                assert!(score.epoch >= 1, "epoch must start at 1");
+            }
+            Outcome::Rejected(rej) => {
+                rejected += 1;
+                println!("  rejected: {rej}");
+            }
+        }
+    }
+    lat_us.sort_unstable();
+    if !lat_us.is_empty() {
+        let p = |q: f64| {
+            lat_us[((lat_us.len() - 1) as f64 * q) as usize]
+        };
+        println!("scores     : {ok} ok / {rejected} rejected; \
+                  wire p50 {} us  p99 {} us", p(0.5), p(0.99));
+    }
+
+    // 3. Epoch pinning: a pin at the serving epoch answers; a stale
+    //    pin must come back as a well-formed epoch_mismatch carrying
+    //    both epochs — never a silent answer under the wrong plan.
+    let now = client.ping()?;
+    match client.score_pinned(0, &[], Some(now))? {
+        Outcome::Ok(s) => {
+            println!("pinned     : epoch {now} answered (epoch {})",
+                     s.epoch);
+        }
+        Outcome::Rejected(rej) => {
+            // Only a racing hot swap may reject a fresh pin.
+            println!("pinned     : raced a swap ({rej})");
+        }
+    }
+    match client.score_pinned(0, &[], Some(now + 1000))? {
+        Outcome::Ok(_) => {
+            anyhow::bail!("stale pin was silently answered");
+        }
+        Outcome::Rejected(rej) => {
+            println!("stale pin  : {} (pinned {:?}, serving {:?})",
+                     rej.code.name(), rej.pinned, rej.current);
+            assert_eq!(rej.code.name(), "epoch_mismatch");
+        }
+    }
+
+    // 4. Stats over the wire (benchkit-v1 document).
+    if let Outcome::Ok(doc) = client.stats()? {
+        let reqs = doc
+            .get("derived")
+            .and_then(|d| d.get("serve.requests"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+        println!("stats      : serve.requests {reqs}");
+    }
+
+    drop(client);
+    if let Some((net, server)) = local {
+        let ns = net.drain(Duration::from_secs(5));
+        let stats = server.shutdown();
+        println!("drained    : {} accepted, {} shed, {} drained; \
+                  batcher saw {} requests",
+                 ns.accepted, ns.shed, ns.drained, stats.requests);
+    }
+    println!("serve_client: OK");
+    Ok(())
+}

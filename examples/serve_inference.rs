@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                             .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
                         reply: otx,
                         submitted: Instant::now(),
+                        pin_epoch: None,
                     };
                     if tx.send(coordinator::ServerMsg::Score(req))
                         .is_err()
@@ -124,6 +125,7 @@ fn main() -> anyhow::Result<()> {
                 .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
             reply: otx,
             submitted: Instant::now(),
+            pin_epoch: None,
         };
         if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
             break;

@@ -65,6 +65,7 @@
 //! ([`crate::obs::flight`]) carrying the failing span.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError,
                       SyncSender};
 use std::sync::Arc;
@@ -100,6 +101,14 @@ pub struct ScoreRequest {
     /// Single-use reply channel.
     pub reply: SyncSender<ScoreResponse>,
     pub submitted: Instant,
+    /// Pin this read to a plan epoch: `Some(e)` answers only while
+    /// the serving plan's epoch is exactly `e`, else the request is
+    /// rejected with [`ScoreReject::EpochMismatch`] — a client that
+    /// observed epoch `e` is told a hot swap landed instead of
+    /// silently reading under a different plan. `None` (the default)
+    /// reads whatever plan is current. Checked on the batcher
+    /// thread, so the check is race-free against swaps.
+    pub pin_epoch: Option<u64>,
 }
 
 /// Successful scoring reply.
@@ -109,6 +118,13 @@ pub struct ScoreOk {
     pub logits: Vec<f32>,
     /// Queue + batch + execute time.
     pub latency: Duration,
+    /// Plan epoch this answer was computed under. Starts at 1 for
+    /// the spawn-time plan and is bumped by exactly 1 per landed
+    /// hot swap, so values are strictly monotone over a server's
+    /// lifetime — the serving analogue of the paper's Theorem-1
+    /// guarantee: any two reads with equal epochs were computed
+    /// under the identical (equivalence-checked) plan.
+    pub epoch: u64,
 }
 
 /// Why a scoring request was answered with an error outcome.
@@ -123,6 +139,11 @@ pub enum ScoreReject {
     /// can distinguish "server rejected this batch" from a closed
     /// channel, i.e. "server died").
     ExecFailed { message: String },
+    /// The request pinned a plan epoch the server no longer (or not
+    /// yet) serves — a hot swap landed between the client observing
+    /// `pinned` and this read. Carries the serving epoch so the
+    /// client can re-pin without a second round trip.
+    EpochMismatch { pinned: u64, current: u64 },
 }
 
 /// Error scoring reply (request-level or batch-level failure).
@@ -131,6 +152,8 @@ pub struct ScoreError {
     pub node: u32,
     pub reject: ScoreReject,
     pub latency: Duration,
+    /// Plan epoch at rejection time (see [`ScoreOk::epoch`]).
+    pub epoch: u64,
 }
 
 /// Scoring reply: logits, or an explicit error outcome.
@@ -157,6 +180,14 @@ impl ScoreResponse {
 
     pub fn is_ok(&self) -> bool {
         matches!(self, ScoreResponse::Ok(_))
+    }
+
+    /// Plan epoch the response was produced under.
+    pub fn epoch(&self) -> u64 {
+        match self {
+            ScoreResponse::Ok(r) => r.epoch,
+            ScoreResponse::Err(e) => e.epoch,
+        }
     }
 
     pub fn into_result(self) -> std::result::Result<ScoreOk, ScoreError> {
@@ -360,6 +391,9 @@ pub struct ServeOutcome {
 pub struct InferenceServer {
     tx: SyncSender<ServerMsg>,
     handle: std::thread::JoinHandle<ServeOutcome>,
+    /// Shared plan-epoch cell (see [`ScoreOk::epoch`]): written by
+    /// the batcher, read by the wire front end for diagnostics.
+    epoch: Arc<AtomicU64>,
 }
 
 impl InferenceServer {
@@ -411,9 +445,12 @@ impl InferenceServer {
 
         let (tx, rx) = sync_channel::<ServerMsg>(4096);
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let epoch = Arc::new(AtomicU64::new(0));
+        let epoch_worker = epoch.clone();
         let handle = std::thread::spawn(move || {
             let setup = Worker::setup(&dir, &artifact, statics, h0,
-                                      plan, &bucket, seed);
+                                      plan, &bucket, seed,
+                                      epoch_worker);
             match setup {
                 Ok(mut w) => {
                     let _ = ready_tx.send(Ok(()));
@@ -427,7 +464,7 @@ impl InferenceServer {
             }
         });
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(InferenceServer { tx, handle }),
+            Ok(Ok(())) => Ok(InferenceServer { tx, handle, epoch }),
             Ok(Err(e)) => {
                 let _ = handle.join();
                 Err(e)
@@ -443,6 +480,18 @@ impl InferenceServer {
     /// [`ServerMsg::Update`] to stream a topology delta.
     pub fn client(&self) -> SyncSender<ServerMsg> {
         self.tx.clone()
+    }
+
+    /// The live plan-epoch cell (1 after spawn, +1 per landed hot
+    /// swap). Share it with [`crate::net::NetServer`] so the wire
+    /// layer can report the serving epoch without queueing.
+    pub fn epoch_cell(&self) -> Arc<AtomicU64> {
+        self.epoch.clone()
+    }
+
+    /// Current plan epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
     }
 
     /// Close the queue and collect final stats.
@@ -589,13 +638,17 @@ struct Worker {
     /// The served plan is the session's memoized plan (skip re-plan
     /// checks until a delta bumps the topology version).
     served_session_plan: bool,
+    /// Plan epoch (see [`ScoreOk::epoch`]): written only by this
+    /// worker (+1 per landed swap), shared so the wire front end
+    /// can stamp diagnostics without a queue round trip.
+    epoch: Arc<AtomicU64>,
 }
 
 impl Worker {
     fn setup(dir: &PathBuf, artifact: &str,
              statics: Vec<(String, HostTensor)>, h0: Vec<f32>,
              plan: Arc<ExecutionPlan>, bucket: &BucketSpec,
-             seed: u64) -> Result<Worker> {
+             seed: u64, epoch: Arc<AtomicU64>) -> Result<Worker> {
         // Fall back to the reference executor only when the runtime
         // itself is unavailable (no manifest / stubbed PJRT client).
         // Once a runtime opens, artifact problems — wrong kind,
@@ -614,6 +667,7 @@ impl Worker {
                                    bucket.classes, seed)
             }
         };
+        epoch.store(1, Ordering::Release);
         Ok(Worker {
             backend,
             plan,
@@ -622,6 +676,7 @@ impl Worker {
             classes: bucket.classes,
             hidden: bucket.hidden,
             served_session_plan: false,
+            epoch,
         })
     }
 
@@ -663,8 +718,20 @@ impl Worker {
                                    h0_index, params, prefix }))
     }
 
-    /// Receipt-time validation against the *served* plan.
+    /// Receipt-time validation against the *served* plan. The epoch
+    /// pin is checked first: a stale-pinned request learns about the
+    /// swap even when its other fields would also have been invalid
+    /// under the plan it thinks it is reading.
     fn validate(&self, r: &ScoreRequest) -> Option<ScoreReject> {
+        if let Some(pinned) = r.pin_epoch {
+            let current = self.epoch.load(Ordering::Acquire);
+            if pinned != current {
+                return Some(ScoreReject::EpochMismatch {
+                    pinned,
+                    current,
+                });
+            }
+        }
         if (r.node as usize) >= self.plan.n {
             return Some(ScoreReject::NodeOutOfRange {
                 node: r.node,
@@ -680,12 +747,14 @@ impl Worker {
         None
     }
 
-    fn reject(r: ScoreRequest, reject: ScoreReject, c: &mut Counters) {
+    fn reject(&self, r: ScoreRequest, reject: ScoreReject,
+              c: &mut Counters) {
         c.rejected.inc();
         let _ = r.reply.send(ScoreResponse::Err(ScoreError {
             node: r.node,
             reject,
             latency: r.submitted.elapsed(),
+            epoch: self.epoch.load(Ordering::Acquire),
         }));
     }
 
@@ -769,6 +838,12 @@ impl Worker {
         // preceded by a due `serve.drift_check` instant).
         let mut sp = crate::obs_span!("serve.plan_swap");
         let tq = Instant::now();
+        // Price the re-plan's shard searches with the live
+        // calibration (a positive (alpha, beta) provably cannot
+        // change the search result — see `SearchConfig::alpha` —
+        // so the session's plan cache stays valid across updates).
+        let (alpha, beta) = c.cost.alpha_beta();
+        res.session.set_cost_weights(alpha, beta);
         let (hag, plan) = res.session.plan();
         if Arc::ptr_eq(&plan, &self.plan) {
             self.served_session_plan = true;
@@ -792,10 +867,22 @@ impl Worker {
                 res.engine.install_hag(&hag);
                 c.plan_swaps.inc();
                 self.served_session_plan = true;
+                // Publish the new epoch only after the serving state
+                // swapped: every response computed from here on
+                // carries it, and no earlier response could have.
+                let e = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+                c.registry.gauge("serve.epoch").set(e as i64);
+                crate::obs_event!("serve.epoch", e);
                 // The served plan changed: refresh the predicted
-                // attribution terms it will be audited against.
+                // attribution terms it will be audited against, and
+                // re-apportion the measured tallies to the new
+                // shard shares.
                 obs::cost::record_plan_terms(
                     &c.registry, &hag, res.session.shard_terms());
+                obs::cost::record_shard_meas_terms(
+                    &c.registry, c.meas_aggs.get(),
+                    c.meas_transfers.get(),
+                    res.session.shard_terms());
             }
             Ok(false) => {
                 c.swaps_skipped.inc();
@@ -878,6 +965,8 @@ impl Worker {
                     policy: BatchPolicy,
                     mut resident: Option<Resident>) -> ServeOutcome {
         let mut c = Counters::default();
+        c.registry.gauge("serve.epoch")
+            .set(self.epoch.load(Ordering::Acquire) as i64);
         let mut pending: Vec<UpdateRequest> = Vec::new();
         let max_pending = resident.as_ref()
             .map_or(64, |r| r.swap.max_pending).max(1);
@@ -908,7 +997,7 @@ impl Worker {
                 match msg {
                     Ok(ServerMsg::Score(r)) => {
                         match self.validate(&r) {
-                            Some(why) => Self::reject(r, why, &mut c),
+                            Some(why) => self.reject(r, why, &mut c),
                             None => break r,
                         }
                     }
@@ -940,7 +1029,7 @@ impl Worker {
                 }
                 match rx.recv_timeout(left) {
                     Ok(ServerMsg::Score(r)) => match self.validate(&r) {
-                        Some(why) => Self::reject(r, why, &mut c),
+                        Some(why) => self.reject(r, why, &mut c),
                         None => batch.push(r),
                     },
                     // Buffer only — updates never stretch the
@@ -984,6 +1073,7 @@ impl Worker {
             c.batches.inc();
             match result {
                 Ok(logits) => {
+                    let epoch = self.epoch.load(Ordering::Acquire);
                     for r in batch {
                         c.requests.inc();
                         let new = self.plan.inv_perm[r.node as usize]
@@ -994,7 +1084,7 @@ impl Worker {
                         c.lat.record(latency);
                         let _ = r.reply.send(ScoreResponse::Ok(
                             ScoreOk { node: r.node, logits: row,
-                                      latency }));
+                                      latency, epoch }));
                     }
                 }
                 Err(e) => {
@@ -1006,7 +1096,7 @@ impl Worker {
                     obs::flight::dump("batch-exec-failed", &c.registry);
                     let message = format!("{e:#}");
                     for r in batch {
-                        Self::reject_failed(r, &message, &mut c);
+                        self.reject_failed(r, &message, &mut c);
                     }
                 }
             }
@@ -1029,7 +1119,8 @@ impl Worker {
         ServeOutcome { stats, resident }
     }
 
-    fn reject_failed(r: ScoreRequest, message: &str, c: &mut Counters) {
+    fn reject_failed(&self, r: ScoreRequest, message: &str,
+                     c: &mut Counters) {
         c.failed.inc();
         let _ = r.reply.send(ScoreResponse::Err(ScoreError {
             node: r.node,
@@ -1037,6 +1128,7 @@ impl Worker {
                 message: message.to_string(),
             },
             latency: r.submitted.elapsed(),
+            epoch: self.epoch.load(Ordering::Acquire),
         }));
     }
 
@@ -1207,6 +1299,7 @@ pub fn cost_probe(name: &str, g: &Graph, f_in: usize, hidden: usize,
         classes,
         hidden,
         served_session_plan: false,
+        epoch: Arc::new(AtomicU64::new(1)),
     };
     let c = Counters::with_model(Arc::new(MetricsRegistry::new()),
                                  model.clone());
@@ -1483,6 +1576,9 @@ fn publish_resident_stats(resident: &Option<Resident>, c: &Counters) {
     c.cost.publish(&c.registry);
     let Some(res) = resident.as_ref() else { return };
     let reg = &c.registry;
+    obs::cost::record_shard_meas_terms(reg, c.meas_aggs.get(),
+                                       c.meas_transfers.get(),
+                                       res.session.shard_terms());
     let s = res.session.stats();
     reg.gauge("session.deltas").set(s.deltas as i64);
     reg.gauge("session.noops").set(s.noops as i64);
@@ -1522,6 +1618,7 @@ mod tests {
             classes,
             hidden,
             served_session_plan: false,
+            epoch: Arc::new(AtomicU64::new(1)),
         }, s)
     }
 
@@ -1529,7 +1626,8 @@ mod tests {
              -> (ScoreRequest, Receiver<ScoreResponse>) {
         let (tx, rx) = oneshot();
         (ScoreRequest { node, features, reply: tx,
-                        submitted: Instant::now() }, rx)
+                        submitted: Instant::now(),
+                        pin_epoch: None }, rx)
     }
 
     // Nearest-rank percentile unit tests live with the moved code:

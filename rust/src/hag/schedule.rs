@@ -427,7 +427,7 @@ mod tests {
         let g = Graph::from_edges(20, &edges);
         let (hag, _) = hag_search(
             &g,
-            &SearchConfig { capacity: usize::MAX, kind: AggregateKind::Set,
+            &SearchConfig { alpha: 1.0, beta: 1.0, capacity: usize::MAX, kind: AggregateKind::Set,
                             pair_cap: usize::MAX });
         let plan = build_plan(&g, &hag, &PlanConfig::default());
         assert!(plan.levels >= 1, "clique must produce hierarchy");

@@ -62,12 +62,29 @@ pub struct SearchConfig {
     /// Per-consumer candidate-pair window (set AGGREGATE only); see
     /// module docs. `usize::MAX` = exact.
     pub pair_cap: usize,
+    /// Definition-2 aggregation weight α the search prices merges
+    /// with (live α̂ from [`crate::obs::CostModel`] when the caller
+    /// is calibrated; `1.0` otherwise). A merge of redundancy `r`
+    /// removes `r-1` aggregations and `r-2` transfers, so its
+    /// calibrated gain is `α(r-1) + β(r-2)` — strictly increasing in
+    /// `r` and positive exactly when `r >= 2` for any positive
+    /// weights. Greedy order and the acceptance threshold are
+    /// therefore *provably invariant* across all positive `(α, β)`
+    /// (the `calibrated_weights_never_change_the_search` test pins
+    /// this), which is what keeps the kernel byte-identical to
+    /// [`hag_search_reference`] while still reporting costs and
+    /// gains in calibrated units. [`SearchConfig::with_weights`]
+    /// clamps non-finite or non-positive inputs back to `1.0`.
+    pub alpha: f64,
+    /// Definition-2 transfer weight β (see `alpha`).
+    pub beta: f64,
 }
 
 impl SearchConfig {
-    /// Paper §5.2 defaults: capacity = |V|/4, set aggregate.
+    /// Paper §5.2 defaults: capacity = |V|/4, set aggregate,
+    /// uncalibrated (α = β = 1, the `cost_core` point).
     pub fn paper_default(n: usize) -> Self {
-        SearchConfig {
+        SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: n / 4,
             kind: AggregateKind::Set,
             pair_cap: 64,
@@ -87,6 +104,33 @@ impl SearchConfig {
     pub fn exact(mut self) -> Self {
         self.pair_cap = usize::MAX;
         self
+    }
+
+    /// Price merges with a live calibration (α̂, β̂). Non-finite or
+    /// non-positive weights are clamped back to `1.0` each — a
+    /// degenerate fit must never zero out a cost axis and change
+    /// what the search would accept (see the `alpha` field docs for
+    /// why any *positive* pair leaves the search result untouched).
+    pub fn with_weights(mut self, alpha: f64, beta: f64) -> Self {
+        self.alpha = if alpha.is_finite() && alpha > 0.0 {
+            alpha
+        } else {
+            1.0
+        };
+        self.beta = if beta.is_finite() && beta > 0.0 {
+            beta
+        } else {
+            1.0
+        };
+        self
+    }
+
+    /// Calibrated gain of one merge with redundancy `r`:
+    /// `α(r-1) + β(r-2)` (Definition 2: `r-1` aggregations and
+    /// `r-2` transfers eliminated). At α = β = 1 this is the
+    /// `cost_core` saving `2r - 3`.
+    pub fn merge_gain(&self, r: u32) -> f64 {
+        self.alpha * (r as f64 - 1.0) + self.beta * (r as f64 - 2.0)
     }
 }
 
@@ -113,6 +157,22 @@ pub struct SearchStats {
     /// (that carried capacity is the point of the reuse). Zero for
     /// sequential AGGREGATE and for [`hag_search_reference`].
     pub peak_scratch_bytes: usize,
+}
+
+impl SearchStats {
+    /// What the search saved in `cfg`'s calibrated units:
+    /// `α·Δaggregations + β·Δtransfers`. At α = β = 1 this equals
+    /// the `cost_core` reduction; with a live (α̂, β̂) it is the
+    /// predicted wall-time saving per layer pass, in the fit's
+    /// ns-per-element units.
+    pub fn calibrated_saving(&self, cfg: &SearchConfig) -> f64 {
+        cfg.alpha
+            * (self.aggregations_before as f64
+                - self.aggregations_after as f64)
+            + cfg.beta
+                * (self.transfers_before as f64
+                    - self.transfers_after as f64)
+    }
 }
 
 /// Run Algorithm 3 on `g`, returning the optimized HAG and stats.
@@ -1061,7 +1121,7 @@ mod tests {
     #[test]
     fn set_search_on_fig1_finds_shared_pairs() {
         let g = fig1();
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,
@@ -1082,7 +1142,7 @@ mod tests {
     #[test]
     fn set_search_respects_capacity() {
         let g = fig1();
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: 1,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,
@@ -1096,7 +1156,7 @@ mod tests {
     #[test]
     fn set_search_zero_capacity_is_identity() {
         let g = fig1();
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: 0,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,
@@ -1111,7 +1171,7 @@ mod tests {
     fn set_search_no_redundancy_no_merges() {
         // path graph: no two nodes share 2+ common in-neighbors
         let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,
@@ -1132,7 +1192,7 @@ mod tests {
             }
         }
         let g = Graph::from_edges(6, &edges);
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,
@@ -1160,7 +1220,7 @@ mod tests {
         // NB: CSR sorts neighbors ascending, so ordered lists here are
         // the sorted ones; prefix (5,6) is shared by nodes 0 and 1; node
         // 2's sorted list is (3,5,6) — prefix (3,5).
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Sequential,
             pair_cap: usize::MAX,
@@ -1183,7 +1243,7 @@ mod tests {
             }
         }
         let g = b.build();
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Sequential,
             pair_cap: usize::MAX,
@@ -1219,7 +1279,7 @@ mod tests {
         for g in [fig1(), dense()] {
             for pair_cap in [2usize, 3, 64, usize::MAX] {
                 for capacity in [0usize, 1, g.n() / 4, usize::MAX] {
-                    let cfg = SearchConfig {
+                    let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
                         capacity,
                         kind: AggregateKind::Set,
                         pair_cap,
@@ -1253,7 +1313,7 @@ mod tests {
     #[test]
     fn scratch_reuse_is_pollution_free() {
         let mut scratch = SearchScratch::new();
-        let cfg_small = SearchConfig {
+        let cfg_small = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Set,
             pair_cap: 2,
@@ -1263,7 +1323,7 @@ mod tests {
                                              &mut scratch);
         let g = fig1();
         for pair_cap in [2usize, usize::MAX] {
-            let cfg = SearchConfig {
+            let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
                 capacity: usize::MAX,
                 kind: AggregateKind::Set,
                 pair_cap,
@@ -1347,7 +1407,7 @@ mod tests {
         let g = Graph::from_edges(12, &edges);
         let mut last = usize::MAX;
         for cap in [0usize, 1, 2, 4, 8, 16, 64] {
-            let cfg = SearchConfig {
+            let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
                 capacity: cap,
                 kind: AggregateKind::Set,
                 pair_cap: usize::MAX,
@@ -1358,5 +1418,45 @@ mod tests {
             assert!(c <= last, "cost went up at capacity {cap}");
             last = c;
         }
+    }
+
+    /// The calibration-consuming contract: for any positive (α, β)
+    /// the merge gain `α(r-1) + β(r-2)` is monotone in `r` and
+    /// positive exactly on the `r >= 2` acceptance set, so the greedy
+    /// search result is *identical* across weights — calibrated
+    /// pricing changes what the stats report, never what the search
+    /// builds. Degenerate weights are clamped rather than honored.
+    #[test]
+    fn calibrated_weights_never_change_the_search() {
+        let g = dense();
+        let base = SearchConfig::paper_default(g.n());
+        let (h0, s0) = hag_search(&g, &base);
+        for (a, b) in [(2.5, 0.8), (0.01, 300.0), (1e6, 1e-6)] {
+            let cfg = base.clone().with_weights(a, b);
+            assert_eq!(cfg.alpha, a);
+            assert_eq!(cfg.beta, b);
+            let (h, s) = hag_search(&g, &cfg);
+            assert_eq!(h, h0, "weights ({a}, {b}) changed the HAG");
+            assert_eq!(s.iterations, s0.iterations);
+            // gain ordering/acceptance invariants the equality above
+            // rides on
+            assert!(cfg.merge_gain(3) > cfg.merge_gain(2));
+            assert!(cfg.merge_gain(2) > 0.0);
+            // stats price in calibrated units
+            let want = a * (s.aggregations_before
+                            - s.aggregations_after) as f64
+                + b * (s.transfers_before
+                       - s.transfers_after) as f64;
+            assert!((s.calibrated_saving(&cfg) - want).abs() < 1e-9);
+        }
+        // at (1, 1) the saving is the cost_core reduction
+        let saved = Hag::from_graph(&g, AggregateKind::Set).cost_core()
+            - h0.cost_core();
+        assert_eq!(s0.calibrated_saving(&base), saved as f64);
+        // clamping: zero/NaN/negative weights fall back to 1.0
+        let clamped = base.clone()
+            .with_weights(0.0, f64::NAN)
+            .with_weights(-3.0, f64::INFINITY);
+        assert_eq!((clamped.alpha, clamped.beta), (1.0, 1.0));
     }
 }

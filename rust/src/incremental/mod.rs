@@ -84,7 +84,7 @@ impl Default for StreamConfig {
 impl StreamConfig {
     /// The [`SearchConfig`] a (re)build uses at node count `n`.
     pub fn search_config(&self, n: usize) -> SearchConfig {
-        SearchConfig {
+        SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: (n as f64 * self.capacity_frac) as usize,
             kind: AggregateKind::Set,
             pair_cap: self.pair_cap,

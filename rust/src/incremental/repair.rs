@@ -489,7 +489,7 @@ mod tests {
     use crate::hag::{check_equivalence, hag_search, SearchConfig};
 
     fn searched(g: &Graph) -> IncrementalHag {
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,

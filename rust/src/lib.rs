@@ -27,6 +27,7 @@ pub mod datasets;
 pub mod graph;
 pub mod hag;
 pub mod incremental;
+pub mod net;
 pub mod obs;
 pub mod partition;
 pub mod runtime;

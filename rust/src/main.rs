@@ -99,6 +99,18 @@ COMMON OPTIONS
   --model M         gcn | sage                [gcn]
   --fig4            (emit-buckets) include Fig-4 sweep buckets
   --requests N --max-batch N --concurrency N  (serve)
+  --listen ADDR     (serve) expose the wire protocol on ADDR while
+                    the internal load runs (127.0.0.1:0 picks an
+                    ephemeral port, printed as 'listening'; frame
+                    format + error codes in DESIGN.md §12)
+  --max-inflight N  (serve --listen) per-connection pipeline cap [32]
+  --shed-after N    (serve --listen) server-wide outstanding-request
+                    cap; load past it is answered with explicit
+                    RetryAfter error frames             [256]
+  --linger-secs N   (serve --listen) keep the wire front end up this
+                    many seconds after the internal load finishes
+                    (lets external clients, e.g. the CI smoke's
+                    serve_client example, connect)      [0]
   --plan-swap       (serve) session-aware serving: drift past the
                     threshold swaps the session's spliced dirty-shard
                     re-plan into the live worker (negative
@@ -605,6 +617,10 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let obs_snapshot = args.get::<String>("obs-snapshot")?;
     let cost_audit = args.get::<String>("cost-audit")?;
     let trace_path = args.get::<String>("trace")?;
+    let listen = args.get::<String>("listen")?;
+    let max_inflight = args.get_or("max-inflight", 32usize)?;
+    let shed_after = args.get_or("shed-after", 256usize)?;
+    let linger_secs = args.get_or("linger-secs", 0u64)?;
     if trace_path.is_some() {
         repro::obs::trace::set_enabled(true);
     }
@@ -652,6 +668,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
             features,
             reply: otx,
             submitted: std::time::Instant::now(),
+            pin_epoch: None,
         };
         if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
             bail!("server queue closed during probes");
@@ -669,6 +686,28 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     }
     println!("hardened   : 2 malformed probes rejected with error \
               replies");
+
+    // Wire front end (DESIGN.md §12): the TCP listener feeds the same
+    // batcher queue as the in-process load below, so external clients
+    // see the same admission + plan-epoch contract the conformance
+    // suite pins. Its net.* metrics live in their own registry (the
+    // batcher's serve.* registry is only reachable over StatsReq).
+    let net = if let Some(addr) = &listen {
+        let reg = Arc::new(repro::obs::metrics::MetricsRegistry::new());
+        let srv = repro::net::NetServer::spawn(
+            addr.as_str(), server.client(), server.epoch_cell(), reg,
+            repro::net::NetConfig {
+                max_inflight,
+                shed_after,
+                ..Default::default()
+            })
+            .with_context(|| format!("binding {addr}"))?;
+        println!("listening  : {} (max-inflight {max_inflight}, \
+                  shed-after {shed_after})", srv.local_addr());
+        Some(srv)
+    } else {
+        None
+    };
 
     // Periodic benchkit-v1 snapshot export: a poller thread asks the
     // worker for a live StatsSnapshot over the same queue the scoring
@@ -718,6 +757,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
                         .map(|_| rng.range_f32(-1.0, 1.0)).collect(),
                     reply: otx,
                     submitted: std::time::Instant::now(),
+                    pin_epoch: None,
                 };
                 if tx.send(coordinator::ServerMsg::Score(req)).is_err() {
                     break;
@@ -754,6 +794,15 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     for h in handles {
         let _ = h.join();
     }
+    // Hold the wire front end open for external clients (the CI smoke
+    // connects serve_client during this window), then drain it:
+    // accepting stops, in-flight wire requests flush through the
+    // still-live batcher, stragglers get Draining frames.
+    if net.is_some() && linger_secs > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(linger_secs));
+    }
+    let net_stats =
+        net.map(|n| n.drain(std::time::Duration::from_secs(5)));
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     if let Some(p) = poller {
         let _ = p.join();
@@ -792,6 +841,11 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
                  snap.gauge("cost.samples"));
     }
     let stats = server.shutdown();
+    if let Some(ns) = net_stats {
+        println!("wire       : {} conns accepted, {} shed, {} drained, \
+                  {} protocol errors",
+                 ns.accepted, ns.shed, ns.drained, ns.protocol_errors);
+    }
     println!("requests   : {} ok, {} rejected, {} failed",
              stats.requests, stats.rejected, stats.failed);
     println!("batches    : {} (mean size {:.1}, {} exec failures)",

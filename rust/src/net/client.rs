@@ -1,0 +1,335 @@
+//! Minimal blocking client SDK for the wire protocol, used by
+//! `examples/serve_client.rs` and the numbered conformance suite.
+//!
+//! The SDK is strictly sequential — one outstanding request per call
+//! — and speaks the binary encoding. Raw access (`send`, `send_raw`,
+//! `recv`) is exposed for tests that need to pipeline, stall, or
+//! send malformed bytes on purpose.
+
+use std::io::{self, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::util::json::{self, Value};
+
+use super::frame::{self, ErrorCode, Frame, FrameKind, Mode, WireError};
+
+/// A successful scoring answer.
+#[derive(Debug, Clone)]
+pub struct Score {
+    /// Plan epoch the answer was computed under.
+    pub epoch: u64,
+    pub logits: Vec<f32>,
+    pub latency_us: u64,
+}
+
+/// A decoded server error frame.
+#[derive(Debug, Clone)]
+pub struct WireRejection {
+    pub code: ErrorCode,
+    pub message: String,
+    /// Serving epoch at rejection time.
+    pub epoch: u64,
+    /// For [`ErrorCode::EpochMismatch`]: the epoch the request pinned.
+    pub pinned: Option<u64>,
+    /// For [`ErrorCode::EpochMismatch`]: the epoch being served.
+    pub current: Option<u64>,
+    /// For [`ErrorCode::RetryAfter`]: suggested back-off.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl WireRejection {
+    /// Decode an `Error` frame; `None` if it is not one (or the
+    /// payload lacks a valid code).
+    pub fn from_frame(f: &Frame) -> Option<WireRejection> {
+        let code = f.error_code()?;
+        let num = |key: &str| {
+            f.payload
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .filter(|n| *n >= 0.0)
+                .map(|n| n as u64)
+        };
+        Some(WireRejection {
+            code,
+            message: f.message().unwrap_or("").to_string(),
+            epoch: f.epoch,
+            pinned: num("pinned"),
+            current: num("current"),
+            retry_after_ms: num("retry_after_ms"),
+        })
+    }
+}
+
+impl std::fmt::Display for WireRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+/// Request outcome: the server answered, either with the result or
+/// with a well-formed rejection (connection still usable unless the
+/// code is non-recoverable).
+#[derive(Debug, Clone)]
+pub enum Outcome<T> {
+    Ok(T),
+    Rejected(WireRejection),
+}
+
+impl<T> Outcome<T> {
+    pub fn into_result(self) -> Result<T, WireRejection> {
+        match self {
+            Outcome::Ok(v) => Ok(v),
+            Outcome::Rejected(r) => Err(r),
+        }
+    }
+
+    pub fn rejection(&self) -> Option<&WireRejection> {
+        match self {
+            Outcome::Ok(_) => None,
+            Outcome::Rejected(r) => Some(r),
+        }
+    }
+}
+
+/// Why a client call failed outright (no usable server answer).
+#[derive(Debug)]
+pub enum ClientError {
+    Io(io::Error),
+    Wire(WireError),
+    /// The reply was well-framed but not what the request expects
+    /// (wrong kind, wrong id, missing payload field).
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Wire(e) => write!(f, "wire: {e}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> Self {
+        ClientError::Wire(e)
+    }
+}
+
+/// An acknowledged topology update.
+#[derive(Debug, Clone)]
+pub struct UpdateAck {
+    pub seq: u64,
+    pub outcome: String,
+    pub rebuild: String,
+    pub cost_core: u64,
+    pub latency_us: u64,
+    pub epoch: u64,
+}
+
+/// Blocking wire client.
+pub struct Client {
+    stream: TcpStream,
+    next_id: u64,
+    max_payload: u32,
+    stall: Duration,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let stall = Duration::from_secs(30);
+        stream.set_read_timeout(Some(stall))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Client {
+            stream,
+            next_id: 0,
+            max_payload: frame::DEFAULT_MAX_PAYLOAD,
+            stall,
+        })
+    }
+
+    /// How long `recv` waits for a reply before giving up.
+    pub fn set_read_timeout(&mut self, d: Duration) -> io::Result<()> {
+        self.stall = d;
+        self.stream.set_read_timeout(Some(d))
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    // ---- raw layer (conformance suite) ----
+
+    /// Write one binary frame.
+    pub fn send(&mut self, f: &Frame) -> io::Result<()> {
+        frame::write_frame(&mut self.stream, f, Mode::Binary)
+    }
+
+    /// Write arbitrary bytes — for tests that violate the protocol
+    /// on purpose (bad magic, truncated headers, stalls).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// Read one frame (either encoding).
+    pub fn recv(&mut self) -> Result<Frame, WireError> {
+        frame::read_frame(&mut self.stream, self.max_payload,
+                          self.stall)
+            .map(|(f, _)| f)
+    }
+
+    /// Send a request and wait for its reply. The sequential SDK
+    /// expects the very next frame to answer this request;
+    /// connection-level error frames (id 0) are also accepted.
+    fn roundtrip(&mut self, kind: FrameKind, epoch: u64,
+                 payload: Value) -> Result<Frame, ClientError> {
+        let id = self.fresh_id();
+        self.send(&Frame::new(kind, id, epoch, payload))?;
+        let reply = self.recv()?;
+        if reply.request_id != id && reply.request_id != 0 {
+            return Err(ClientError::Protocol(format!(
+                "reply id {} does not match request id {id}",
+                reply.request_id)));
+        }
+        Ok(reply)
+    }
+
+    fn expect<T>(&self, reply: &Frame, want: FrameKind,
+                 parse: impl FnOnce(&Frame) -> Result<T, String>)
+                 -> Result<Outcome<T>, ClientError> {
+        if reply.kind == FrameKind::Error {
+            let rej = WireRejection::from_frame(reply).ok_or_else(|| {
+                ClientError::Protocol(
+                    "error frame without a valid code".into())
+            })?;
+            return Ok(Outcome::Rejected(rej));
+        }
+        if reply.kind != want {
+            return Err(ClientError::Protocol(format!(
+                "expected {} or error, got {}", want.name(),
+                reply.kind.name())));
+        }
+        parse(reply).map(Outcome::Ok).map_err(ClientError::Protocol)
+    }
+
+    // ---- high-level calls ----
+
+    /// Score `node`, optionally replacing its feature row first
+    /// (empty slice = keep current features).
+    pub fn score(&mut self, node: u32, features: &[f32])
+                 -> Result<Outcome<Score>, ClientError> {
+        self.score_pinned(node, features, None)
+    }
+
+    /// Score with an optional epoch pin: `Some(e)` demands the
+    /// answer be computed under plan epoch `e` exactly, else the
+    /// server rejects with `epoch_mismatch`.
+    pub fn score_pinned(&mut self, node: u32, features: &[f32],
+                        pin: Option<u64>)
+                        -> Result<Outcome<Score>, ClientError> {
+        let mut pairs = vec![("node", json::num(node as f64))];
+        if !features.is_empty() {
+            pairs.push(("features", json::arr(
+                features.iter().map(|v| json::num(*v as f64))
+                    .collect())));
+        }
+        let reply = self.roundtrip(FrameKind::ScoreReq,
+                                   pin.unwrap_or(0),
+                                   json::obj(pairs))?;
+        self.expect(&reply, FrameKind::ScoreOk, |f| {
+            let logits = f
+                .payload
+                .req_arr("logits")
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as f32)
+                    .ok_or("non-numeric logit".to_string()))
+                .collect::<Result<Vec<f32>, _>>()?;
+            let latency_us = f
+                .payload
+                .req_f64("latency_us")
+                .map_err(|e| e.to_string())? as u64;
+            Ok(Score { epoch: f.epoch, logits, latency_us })
+        })
+    }
+
+    fn update(&mut self, op: &str, src: Option<u32>, dst: Option<u32>)
+              -> Result<Outcome<UpdateAck>, ClientError> {
+        let mut pairs = vec![("op", json::str_(op))];
+        if let Some(s) = src {
+            pairs.push(("src", json::num(s as f64)));
+        }
+        if let Some(d) = dst {
+            pairs.push(("dst", json::num(d as f64)));
+        }
+        let reply = self.roundtrip(FrameKind::UpdateReq, 0,
+                                   json::obj(pairs))?;
+        self.expect(&reply, FrameKind::UpdateOk, |f| {
+            let g = |key: &str| {
+                f.payload.req_f64(key).map(|n| n as u64)
+                    .map_err(|e| e.to_string())
+            };
+            Ok(UpdateAck {
+                seq: g("seq")?,
+                outcome: f.payload.req_str("outcome")
+                    .map_err(|e| e.to_string())?.to_string(),
+                rebuild: f.payload.req_str("rebuild")
+                    .map_err(|e| e.to_string())?.to_string(),
+                cost_core: g("cost_core")?,
+                latency_us: g("latency_us")?,
+                epoch: f.epoch,
+            })
+        })
+    }
+
+    pub fn edge_insert(&mut self, src: u32, dst: u32)
+                       -> Result<Outcome<UpdateAck>, ClientError> {
+        self.update("edge_insert", Some(src), Some(dst))
+    }
+
+    pub fn edge_delete(&mut self, src: u32, dst: u32)
+                       -> Result<Outcome<UpdateAck>, ClientError> {
+        self.update("edge_delete", Some(src), Some(dst))
+    }
+
+    pub fn node_add(&mut self)
+                    -> Result<Outcome<UpdateAck>, ClientError> {
+        self.update("node_add", None, None)
+    }
+
+    /// Live stats snapshot as benchkit-v1 JSON.
+    pub fn stats(&mut self) -> Result<Outcome<Value>, ClientError> {
+        let reply = self.roundtrip(FrameKind::StatsReq, 0,
+                                   Value::Null)?;
+        self.expect(&reply, FrameKind::StatsOk,
+                    |f| Ok(f.payload.clone()))
+    }
+
+    /// Liveness probe; returns the serving plan epoch.
+    pub fn ping(&mut self) -> Result<u64, ClientError> {
+        let reply = self.roundtrip(FrameKind::Ping, 0, Value::Null)?;
+        if reply.kind != FrameKind::Pong {
+            return Err(ClientError::Protocol(format!(
+                "expected pong, got {}", reply.kind.name())));
+        }
+        Ok(reply.epoch)
+    }
+}

@@ -1,0 +1,112 @@
+//! Graceful shutdown for the TCP front end.
+//!
+//! The drain state machine has three stages:
+//!
+//! 1. **`begin_drain`** — stop accepting (the listener thread exits,
+//!    so new connects are refused by the OS once the backlog empties)
+//!    and flip the `draining` flag. Connection threads keep flushing
+//!    replies for requests already in flight; any *new* score/update
+//!    frame is answered with an explicit [`ErrorCode::Draining`]
+//!    error frame (counted as `net.drained`) instead of being queued.
+//! 2. **wait** — until the server-wide inflight gauge reaches zero
+//!    and every connection thread has unwound, or the grace deadline
+//!    passes.
+//! 3. **halt** — flip `stopped` (connection loops exit at the next
+//!    tick regardless of state) and join all threads.
+//!
+//! Order matters for the caller: drain the net front end *first*,
+//! then shut down the [`crate::coordinator::InferenceServer`] — the
+//! in-flight batches being flushed in stage 2 need a live batcher.
+//!
+//! [`ErrorCode::Draining`]: super::frame::ErrorCode::Draining
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use super::listener::NetServer;
+
+/// Final counter snapshot for a front end's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted (gate-1 refusals are counted in `shed`).
+    pub accepted: u64,
+    /// Requests (or connections) load-shed with `RetryAfter`.
+    pub shed: u64,
+    /// Requests answered with `Draining` during shutdown.
+    pub drained: u64,
+    /// Wire-contract violations (each also closed its connection).
+    pub protocol_errors: u64,
+}
+
+impl NetServer {
+    /// Point-in-time `net.*` counter values.
+    pub fn stats(&self) -> NetStats {
+        NetStats {
+            accepted: self.shared.accepted.get(),
+            shed: self.shared.shed.get(),
+            drained: self.shared.drained.get(),
+            protocol_errors: self.shared.proto_errors.get(),
+        }
+    }
+
+    /// Stage 1: stop accepting and start answering new work with
+    /// `Draining`. Idempotent; [`drain`](NetServer::drain) calls it
+    /// implicitly, but tests (and operators wiring a signal handler)
+    /// can trigger it early and keep the handle.
+    pub fn begin_drain(&self) {
+        self.shared.accepting.store(false, Ordering::Release);
+        self.shared.draining.store(true, Ordering::Release);
+        crate::obs_event!("net.drain_begin", 1);
+    }
+
+    /// Full graceful shutdown: stage 1, then wait up to `grace` for
+    /// in-flight requests to flush and connections to unwind, then
+    /// halt and join every thread. Returns the final counters.
+    pub fn drain(mut self, grace: Duration) -> NetStats {
+        self.begin_drain();
+        let deadline = Instant::now() + grace;
+        while Instant::now() < deadline {
+            let inflight =
+                self.shared.inflight.load(Ordering::Acquire);
+            let conns =
+                self.shared.active_conns.load(Ordering::Acquire);
+            if inflight == 0 && conns == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.halt();
+        let stats = self.stats();
+        crate::obs_event!("net.drained_total", stats.drained);
+        stats
+    }
+
+    /// Impatient shutdown with a short grace window — the drop-in
+    /// counterpart to `InferenceServer::shutdown`.
+    pub fn shutdown(self) -> NetStats {
+        self.drain(Duration::from_secs(5))
+    }
+
+    /// Stage 3: force every loop to exit and join all threads.
+    /// Idempotent (handles are taken).
+    fn halt(&mut self) {
+        self.shared.accepting.store(false, Ordering::Release);
+        self.shared.stopped.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = {
+            let mut g = self.conns.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}

@@ -1,0 +1,668 @@
+//! Wire framing for the TCP serving front end.
+//!
+//! Two encodings share one logical frame model:
+//!
+//! **Binary** (the default, used by [`crate::net::client::Client`]):
+//! a fixed 24-byte little-endian header followed by an optional UTF-8
+//! JSON payload.
+//!
+//! ```text
+//!   offset  size  field
+//!   0       2     magic        0x4841 ("HA", LE on the wire: 41 48)
+//!   2       1     version      1
+//!   3       1     kind         FrameKind discriminant
+//!   4       8     request_id   client-chosen correlation id
+//!   12      8     epoch        plan epoch (see below)
+//!   20      4     payload_len  bytes of JSON following the header
+//! ```
+//!
+//! **Text fallback**: if the *first byte* a peer sends on a connection
+//! (or of any subsequent frame) is `{`, the frame is one JSON object
+//! terminated by `\n`:
+//! `{"type":"score_req","id":7,"epoch":0,"payload":{...}}`.
+//! A connection may mix encodings frame-by-frame; the server answers
+//! each request in the encoding it arrived in, so `nc` sessions get
+//! readable replies while binary SDK traffic stays compact.
+//!
+//! **Epoch semantics.** In *responses* the header epoch is the plan
+//! epoch the answer was computed under (strictly monotone across hot
+//! swaps, starting at 1 for the spawn-time plan). In *requests* a
+//! non-zero epoch pins the read: the server answers only while it is
+//! serving exactly that epoch and otherwise returns an
+//! [`ErrorCode::EpochMismatch`] error frame carrying both `pinned`
+//! and `current`. Epoch 0 in a request means "unpinned".
+//!
+//! Request/response ids and epochs ride the binary header exactly
+//! (u64); the JSON text form carries them as numbers and is therefore
+//! exact only below 2^53 — far beyond any realistic epoch or id.
+
+use std::io::{self, Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Value};
+
+/// `0x4841` = ASCII "HA" (HAG wire).
+pub const MAGIC: u16 = 0x4841;
+/// Current protocol version. Bump on any incompatible header change.
+pub const VERSION: u8 = 1;
+/// Fixed binary header size in bytes.
+pub const HEADER_LEN: usize = 24;
+/// Default payload cap (1 MiB) — a dense feature row at f_in=1024 is
+/// ~12 KiB of JSON, so this leaves two orders of magnitude headroom
+/// while still bounding a hostile `payload_len`.
+pub const DEFAULT_MAX_PAYLOAD: u32 = 1 << 20;
+
+/// Frame discriminant. Requests are odd-kinded by convention except
+/// `Error`, which only ever flows server → client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    ScoreReq = 1,
+    ScoreOk = 2,
+    Error = 3,
+    UpdateReq = 4,
+    UpdateOk = 5,
+    StatsReq = 6,
+    StatsOk = 7,
+    Ping = 8,
+    Pong = 9,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        Some(match b {
+            1 => FrameKind::ScoreReq,
+            2 => FrameKind::ScoreOk,
+            3 => FrameKind::Error,
+            4 => FrameKind::UpdateReq,
+            5 => FrameKind::UpdateOk,
+            6 => FrameKind::StatsReq,
+            7 => FrameKind::StatsOk,
+            8 => FrameKind::Ping,
+            9 => FrameKind::Pong,
+            _ => return None,
+        })
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Stable name used by the JSON text encoding's `"type"` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameKind::ScoreReq => "score_req",
+            FrameKind::ScoreOk => "score_ok",
+            FrameKind::Error => "error",
+            FrameKind::UpdateReq => "update_req",
+            FrameKind::UpdateOk => "update_ok",
+            FrameKind::StatsReq => "stats_req",
+            FrameKind::StatsOk => "stats_ok",
+            FrameKind::Ping => "ping",
+            FrameKind::Pong => "pong",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FrameKind> {
+        Some(match s {
+            "score_req" => FrameKind::ScoreReq,
+            "score_ok" => FrameKind::ScoreOk,
+            "error" => FrameKind::Error,
+            "update_req" => FrameKind::UpdateReq,
+            "update_ok" => FrameKind::UpdateOk,
+            "stats_req" => FrameKind::StatsReq,
+            "stats_ok" => FrameKind::StatsOk,
+            "ping" => FrameKind::Ping,
+            "pong" => FrameKind::Pong,
+            _ => return None,
+        })
+    }
+}
+
+/// Error-frame code, carried in the payload as `"code"` (number) and
+/// `"error"` (stable name). Codes 1–2 are protocol violations (the
+/// server closes the connection after answering), 3–4 are admission
+/// outcomes (retry-able), 5–9 are per-request rejections (the
+/// connection stays healthy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadFrame = 1,
+    Oversized = 2,
+    RetryAfter = 3,
+    Draining = 4,
+    EpochMismatch = 5,
+    NodeOutOfRange = 6,
+    FeatureLen = 7,
+    ExecFailed = 8,
+    Internal = 9,
+}
+
+impl ErrorCode {
+    pub fn from_u16(v: u16) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::BadFrame,
+            2 => ErrorCode::Oversized,
+            3 => ErrorCode::RetryAfter,
+            4 => ErrorCode::Draining,
+            5 => ErrorCode::EpochMismatch,
+            6 => ErrorCode::NodeOutOfRange,
+            7 => ErrorCode::FeatureLen,
+            8 => ErrorCode::ExecFailed,
+            9 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    pub fn as_u16(self) -> u16 {
+        self as u16
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::RetryAfter => "retry_after",
+            ErrorCode::Draining => "draining",
+            ErrorCode::EpochMismatch => "epoch_mismatch",
+            ErrorCode::NodeOutOfRange => "node_out_of_range",
+            ErrorCode::FeatureLen => "feature_len",
+            ErrorCode::ExecFailed => "exec_failed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Whether the server keeps the connection open after sending an
+    /// error frame with this code.
+    pub fn recoverable(self) -> bool {
+        !matches!(self, ErrorCode::BadFrame | ErrorCode::Oversized)
+    }
+}
+
+/// Which encoding a frame arrived in / should leave in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Binary,
+    Text,
+}
+
+/// One logical frame: header fields + decoded JSON payload
+/// (`Value::Null` ⇔ empty payload on the wire).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub request_id: u64,
+    pub epoch: u64,
+    pub payload: Value,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, request_id: u64, epoch: u64,
+               payload: Value) -> Frame {
+        Frame { kind, request_id, epoch, payload }
+    }
+
+    /// Build an error frame: `{"code":n,"error":name,"message":...}`
+    /// plus any extra key/value pairs (e.g. `pinned`/`current` for
+    /// epoch mismatches, `retry_after_ms` for sheds).
+    pub fn error(request_id: u64, epoch: u64, code: ErrorCode,
+                 message: &str, extra: Vec<(&str, Value)>) -> Frame {
+        let mut pairs = vec![
+            ("code", json::num(code.as_u16() as f64)),
+            ("error", json::str_(code.name())),
+            ("message", json::str_(message)),
+        ];
+        pairs.extend(extra);
+        Frame::new(FrameKind::Error, request_id, epoch, json::obj(pairs))
+    }
+
+    /// For `Error` frames: the decoded [`ErrorCode`], if well-formed.
+    pub fn error_code(&self) -> Option<ErrorCode> {
+        if self.kind != FrameKind::Error {
+            return None;
+        }
+        let code = self.payload.get("code")?.as_f64()?;
+        if !(0.0..=u16::MAX as f64).contains(&code) {
+            return None;
+        }
+        ErrorCode::from_u16(code as u16)
+    }
+
+    pub fn message(&self) -> Option<&str> {
+        self.payload.get("message").and_then(|v| v.as_str())
+    }
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum WireError {
+    /// Protocol violation: bad magic/version/kind, junk payload,
+    /// connection closed mid-frame. The connection is unusable.
+    Bad(String),
+    /// Declared payload length exceeds the cap; nothing past the
+    /// header was read.
+    Oversized { len: u32, max: u32 },
+    /// Peer stopped sending mid-frame for longer than the stall
+    /// budget (distinct from *idle* between frames, which the caller
+    /// handles before the first byte).
+    Stalled,
+    /// Clean EOF before any byte of a frame.
+    Eof,
+    /// Underlying transport error (including read-timeout on the
+    /// first byte when the caller uses blocking reads).
+    Io(io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Bad(m) => write!(f, "bad frame: {m}"),
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized payload: {len} bytes (max {max})")
+            }
+            WireError::Stalled => write!(f, "peer stalled mid-frame"),
+            WireError::Eof => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn timeoutish(e: &io::Error) -> bool {
+    matches!(e.kind(),
+             io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// `read_exact` with a stall deadline: short reads caused by a socket
+/// read-timeout retry until `deadline`, then report [`WireError::Stalled`].
+/// EOF mid-buffer is a protocol violation, not a clean close.
+fn read_exact_deadline(r: &mut impl Read, buf: &mut [u8],
+                       deadline: Instant) -> Result<(), WireError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(WireError::Bad(
+                    "connection closed mid-frame".into()));
+            }
+            Ok(n) => filled += n,
+            Err(e) if timeoutish(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Stalled);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame, consuming the first byte from `r` (blocking or
+/// timing out per the stream's own read-timeout). Convenience wrapper
+/// used by the client SDK; servers that need to distinguish idle from
+/// mid-frame stalls read the first byte themselves and call
+/// [`read_frame_after`].
+pub fn read_frame(r: &mut impl Read, max_payload: u32,
+                  stall: Duration) -> Result<(Frame, Mode), WireError> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Err(WireError::Eof),
+            Ok(_) => return read_frame_after(b[0], r, max_payload, stall),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+}
+
+/// Read the remainder of a frame whose first byte is already in hand.
+/// `{` selects the JSON text encoding; anything else must be the low
+/// byte of the binary magic.
+pub fn read_frame_after(first: u8, r: &mut impl Read, max_payload: u32,
+                        stall: Duration)
+                        -> Result<(Frame, Mode), WireError> {
+    let deadline = Instant::now() + stall;
+    if first == b'{' {
+        return read_text_frame(r, max_payload, deadline)
+            .map(|f| (f, Mode::Text));
+    }
+    if first != (MAGIC & 0xff) as u8 {
+        return Err(WireError::Bad(format!(
+            "bad magic byte 0x{first:02x}")));
+    }
+    let mut rest = [0u8; HEADER_LEN - 1];
+    read_exact_deadline(r, &mut rest, deadline)?;
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0] = first;
+    hdr[1..].copy_from_slice(&rest);
+
+    let magic = u16::from_le_bytes([hdr[0], hdr[1]]);
+    if magic != MAGIC {
+        return Err(WireError::Bad(format!("bad magic 0x{magic:04x}")));
+    }
+    let version = hdr[2];
+    if version != VERSION {
+        return Err(WireError::Bad(format!(
+            "unsupported version {version} (want {VERSION})")));
+    }
+    let kind = FrameKind::from_u8(hdr[3]).ok_or_else(|| {
+        WireError::Bad(format!("unknown frame kind {}", hdr[3]))
+    })?;
+    let request_id = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+    let epoch = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(hdr[20..24].try_into().unwrap());
+    if payload_len > max_payload {
+        return Err(WireError::Oversized { len: payload_len,
+                                          max: max_payload });
+    }
+    let payload = if payload_len == 0 {
+        Value::Null
+    } else {
+        let mut buf = vec![0u8; payload_len as usize];
+        read_exact_deadline(r, &mut buf, deadline)?;
+        let text = std::str::from_utf8(&buf).map_err(|_| {
+            WireError::Bad("payload is not UTF-8".into())
+        })?;
+        json::parse(text).map_err(|e| {
+            WireError::Bad(format!("payload is not JSON: {e}"))
+        })?
+    };
+    Ok((Frame { kind, request_id, epoch, payload }, Mode::Binary))
+}
+
+/// Text fallback: the `{` is already consumed; read to `\n` (capped),
+/// parse, lift `type`/`id`/`epoch`/`payload`.
+fn read_text_frame(r: &mut impl Read, max_payload: u32,
+                   deadline: Instant) -> Result<Frame, WireError> {
+    let mut line = vec![b'{'];
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => {
+                return Err(WireError::Bad(
+                    "connection closed mid-line".into()));
+            }
+            Ok(_) => {
+                if b[0] == b'\n' {
+                    break;
+                }
+                line.push(b[0]);
+                if line.len() > max_payload as usize {
+                    return Err(WireError::Oversized {
+                        len: line.len() as u32,
+                        max: max_payload,
+                    });
+                }
+            }
+            Err(e) if timeoutish(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Stalled);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let text = std::str::from_utf8(&line)
+        .map_err(|_| WireError::Bad("line is not UTF-8".into()))?;
+    let v = json::parse(text.trim_end_matches('\r'))
+        .map_err(|e| WireError::Bad(format!("bad JSON line: {e}")))?;
+    let kind_name = v
+        .get("type")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| WireError::Bad("missing \"type\"".into()))?;
+    let kind = FrameKind::from_name(kind_name).ok_or_else(|| {
+        WireError::Bad(format!("unknown type {kind_name:?}"))
+    })?;
+    let num_field = |key: &str| -> Result<u64, WireError> {
+        match v.get(key) {
+            None | Some(Value::Null) => Ok(0),
+            Some(x) => x
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| {
+                    WireError::Bad(format!("bad {key:?} field"))
+                }),
+        }
+    };
+    let request_id = num_field("id")?;
+    let epoch = num_field("epoch")?;
+    let payload = v.get("payload").cloned().unwrap_or(Value::Null);
+    Ok(Frame { kind, request_id, epoch, payload })
+}
+
+/// Binary encoding of a frame (header + JSON payload bytes).
+pub fn encode_binary(f: &Frame) -> Vec<u8> {
+    let body = match &f.payload {
+        Value::Null => String::new(),
+        v => v.to_string(),
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(f.kind.as_u8());
+    out.extend_from_slice(&f.request_id.to_le_bytes());
+    out.extend_from_slice(&f.epoch.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// Text encoding: one JSON object + `\n`.
+pub fn encode_text(f: &Frame) -> String {
+    let mut pairs = vec![
+        ("type", json::str_(f.kind.name())),
+        ("id", json::num(f.request_id as f64)),
+        ("epoch", json::num(f.epoch as f64)),
+    ];
+    if f.payload != Value::Null {
+        pairs.push(("payload", f.payload.clone()));
+    }
+    let mut s = json::obj(pairs).to_string();
+    s.push('\n');
+    s
+}
+
+/// Serialize in the given mode and write it out in one call.
+pub fn write_frame(w: &mut impl Write, f: &Frame,
+                   mode: Mode) -> io::Result<()> {
+    match mode {
+        Mode::Binary => w.write_all(&encode_binary(f))?,
+        Mode::Text => w.write_all(encode_text(f).as_bytes())?,
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const STALL: Duration = Duration::from_secs(2);
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode_binary(f);
+        let mut r = &bytes[..];
+        let (out, mode) =
+            read_frame(&mut r, DEFAULT_MAX_PAYLOAD, STALL).unwrap();
+        assert_eq!(mode, Mode::Binary);
+        assert!(r.is_empty(), "trailing bytes after decode");
+        out
+    }
+
+    #[test]
+    fn binary_roundtrip_all_kinds() {
+        for kind in [
+            FrameKind::ScoreReq, FrameKind::ScoreOk, FrameKind::Error,
+            FrameKind::UpdateReq, FrameKind::UpdateOk,
+            FrameKind::StatsReq, FrameKind::StatsOk, FrameKind::Ping,
+            FrameKind::Pong,
+        ] {
+            let f = Frame::new(
+                kind,
+                0xDEAD_BEEF_0BAD_CAFE,
+                42,
+                json::obj(vec![("node", json::num(3.0))]),
+            );
+            let out = roundtrip(&f);
+            assert_eq!(out.kind, kind);
+            assert_eq!(out.request_id, 0xDEAD_BEEF_0BAD_CAFE);
+            assert_eq!(out.epoch, 42);
+            assert_eq!(out.payload, f.payload);
+            assert_eq!(FrameKind::from_u8(kind.as_u8()), Some(kind));
+            assert_eq!(FrameKind::from_name(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn empty_payload_is_null() {
+        let f = Frame::new(FrameKind::Ping, 1, 0, Value::Null);
+        let bytes = encode_binary(&f);
+        assert_eq!(bytes.len(), HEADER_LEN);
+        assert_eq!(roundtrip(&f).payload, Value::Null);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let f = Frame::new(
+            FrameKind::ScoreReq,
+            7,
+            3,
+            json::obj(vec![
+                ("node", json::num(5.0)),
+                ("features", json::arr(vec![json::num(0.5)])),
+            ]),
+        );
+        let text = encode_text(&f);
+        assert!(text.ends_with('\n'));
+        let mut r = text.as_bytes();
+        let (out, mode) =
+            read_frame(&mut r, DEFAULT_MAX_PAYLOAD, STALL).unwrap();
+        assert_eq!(mode, Mode::Text);
+        assert_eq!(out.kind, FrameKind::ScoreReq);
+        assert_eq!(out.request_id, 7);
+        assert_eq!(out.epoch, 3);
+        assert_eq!(out.payload, f.payload);
+    }
+
+    #[test]
+    fn text_defaults_id_and_epoch_to_zero() {
+        let mut r = "{\"type\":\"ping\"}\n".as_bytes();
+        let (out, _) =
+            read_frame(&mut r, DEFAULT_MAX_PAYLOAD, STALL).unwrap();
+        assert_eq!(out.kind, FrameKind::Ping);
+        assert_eq!(out.request_id, 0);
+        assert_eq!(out.epoch, 0);
+        assert_eq!(out.payload, Value::Null);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode_binary(
+            &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+        bytes[1] = 0x00;
+        let err = read_frame(&mut &bytes[..], DEFAULT_MAX_PAYLOAD, STALL)
+            .unwrap_err();
+        assert!(matches!(err, WireError::Bad(_)), "{err:?}");
+        // First byte wrong: caught before the header is read.
+        let err = read_frame_after(0x99, &mut &bytes[1..],
+                                   DEFAULT_MAX_PAYLOAD, STALL)
+            .unwrap_err();
+        assert!(matches!(err, WireError::Bad(_)), "{err:?}");
+    }
+
+    #[test]
+    fn bad_version_and_kind_rejected() {
+        let mut bytes = encode_binary(
+            &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+        bytes[2] = 9;
+        assert!(matches!(
+            read_frame(&mut &bytes[..], DEFAULT_MAX_PAYLOAD, STALL),
+            Err(WireError::Bad(_))
+        ));
+        bytes[2] = VERSION;
+        bytes[3] = 200;
+        assert!(matches!(
+            read_frame(&mut &bytes[..], DEFAULT_MAX_PAYLOAD, STALL),
+            Err(WireError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_payload_rejected_without_reading_it() {
+        let f = Frame::new(FrameKind::ScoreReq, 1, 0,
+                           json::obj(vec![("node", json::num(0.0))]));
+        let bytes = encode_binary(&f);
+        // Cap below the actual payload size: header alone triggers it.
+        let err = read_frame(&mut &bytes[..], 4, STALL).unwrap_err();
+        match err {
+            WireError::Oversized { len, max } => {
+                assert!(len > 4);
+                assert_eq!(max, 4);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_bad_not_eof() {
+        let bytes = encode_binary(
+            &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+        let err = read_frame(&mut &bytes[..HEADER_LEN - 3],
+                             DEFAULT_MAX_PAYLOAD, STALL)
+            .unwrap_err();
+        assert!(matches!(err, WireError::Bad(_)), "{err:?}");
+        // But zero bytes is a clean EOF.
+        assert!(matches!(
+            read_frame(&mut &[][..], DEFAULT_MAX_PAYLOAD, STALL),
+            Err(WireError::Eof)
+        ));
+    }
+
+    #[test]
+    fn junk_payload_rejected() {
+        let f = Frame::new(FrameKind::Ping, 1, 0, Value::Null);
+        let mut bytes = encode_binary(&f);
+        bytes[20..24].copy_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(b"}{!");
+        assert!(matches!(
+            read_frame(&mut &bytes[..], DEFAULT_MAX_PAYLOAD, STALL),
+            Err(WireError::Bad(_))
+        ));
+        // Text side: a line that is not JSON.
+        let mut r = "{nope\n".as_bytes();
+        assert!(matches!(
+            read_frame(&mut r, DEFAULT_MAX_PAYLOAD, STALL),
+            Err(WireError::Bad(_))
+        ));
+        // Text side: valid JSON, unknown type.
+        let mut r = "{\"type\":\"bogus\"}\n".as_bytes();
+        assert!(matches!(
+            read_frame(&mut r, DEFAULT_MAX_PAYLOAD, STALL),
+            Err(WireError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn error_frame_accessors() {
+        let f = Frame::error(
+            9, 4, ErrorCode::EpochMismatch, "plan moved",
+            vec![("pinned", json::num(3.0)),
+                 ("current", json::num(4.0))],
+        );
+        let out = roundtrip(&f);
+        assert_eq!(out.error_code(), Some(ErrorCode::EpochMismatch));
+        assert_eq!(out.message(), Some("plan moved"));
+        assert_eq!(out.payload.req_f64("pinned").unwrap(), 3.0);
+        assert_eq!(out.payload.req_f64("current").unwrap(), 4.0);
+        assert!(ErrorCode::EpochMismatch.recoverable());
+        assert!(!ErrorCode::BadFrame.recoverable());
+        assert!(!ErrorCode::Oversized.recoverable());
+        for c in 1..=9u16 {
+            let code = ErrorCode::from_u16(c).unwrap();
+            assert_eq!(code.as_u16(), c);
+        }
+        assert_eq!(ErrorCode::from_u16(0), None);
+        assert_eq!(ErrorCode::from_u16(10), None);
+    }
+}

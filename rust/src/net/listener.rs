@@ -1,0 +1,768 @@
+//! TCP front end: bounded accept loop + per-connection handlers that
+//! feed the batcher queue.
+//!
+//! Admission control happens at three gates, each of which answers
+//! with an explicit [`ErrorCode::RetryAfter`] frame instead of
+//! buffering unboundedly:
+//!
+//! 1. **connection cap** (`max_conns`) — refused at accept time;
+//! 2. **per-connection pipeline cap** (`max_inflight`) — a client may
+//!    pipeline requests, but only that many may be outstanding on one
+//!    connection;
+//! 3. **server-wide backlog cap** (`shed_after`) — total outstanding
+//!    wire requests across all connections; the batcher queue's own
+//!    `try_send` failure sheds the same way, so the server never
+//!    blocks a connection thread on a full queue.
+//!
+//! Each connection is one thread running a poll loop: deliver any
+//! completed replies, then read (with a short tick timeout) the first
+//! byte of the next frame. The first-byte read doubles as the idle
+//! detector — a connection with no traffic and no outstanding work
+//! for longer than `read_timeout` is closed — while *mid-frame*
+//! stalls are bounded separately inside the frame decoder (a peer
+//! that sends half a header gets `BadFrame`/close, not a held thread).
+//!
+//! Observability: `net.accepted` / `net.shed` / `net.drained` /
+//! `net.proto_errors` counters and a `net.frame_latency` histogram
+//! (enqueue → reply written). The first protocol error on a
+//! connection triggers a flight-recorder dump.
+
+use std::io::{self, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
+               ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::{self as srv, ScoreReject, ScoreRequest,
+                                 ScoreResponse, ServerMsg, StatsRequest,
+                                 UpdateRequest, UpdateResponse};
+use crate::incremental::GraphDelta;
+use crate::obs::flight;
+use crate::obs::metrics::{Counter, Histogram, MetricsRegistry,
+                          StatsSnapshot};
+use crate::util::json::{self, Value};
+
+use super::frame::{self, ErrorCode, Frame, FrameKind, Mode, WireError};
+
+/// Poll tick for connection loops: first-byte read timeout and the
+/// reply-flush cadence. Small enough that drain/stop are noticed
+/// promptly, large enough to stay off the scheduler's back.
+const TICK: Duration = Duration::from_millis(10);
+
+/// Suggested client back-off carried in `RetryAfter` frames.
+const RETRY_AFTER_MS: f64 = 50.0;
+
+/// Front-end tuning knobs (see module docs for the three gates).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Outstanding requests allowed per connection (pipelining cap).
+    pub max_inflight: usize,
+    /// Outstanding requests allowed server-wide before load-shedding.
+    pub shed_after: usize,
+    /// Idle limit: a connection with no frames and no outstanding
+    /// work for this long is closed. Also bounds mid-frame stalls.
+    pub read_timeout: Duration,
+    /// Per-write socket timeout.
+    pub write_timeout: Duration,
+    /// Frame payload cap in bytes (declared lengths above this are
+    /// rejected without reading the payload).
+    pub max_payload: u32,
+    /// Concurrent connection cap (each costs one thread).
+    pub max_conns: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_inflight: 32,
+            shed_after: 256,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_payload: frame::DEFAULT_MAX_PAYLOAD,
+            max_conns: 256,
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+pub(super) struct Shared {
+    pub(super) queue: SyncSender<ServerMsg>,
+    pub(super) epoch: Arc<AtomicU64>,
+    pub(super) registry: Arc<MetricsRegistry>,
+    pub(super) cfg: NetConfig,
+    pub(super) accepting: AtomicBool,
+    pub(super) draining: AtomicBool,
+    pub(super) stopped: AtomicBool,
+    /// Server-wide outstanding wire requests (gate 3).
+    pub(super) inflight: AtomicUsize,
+    pub(super) active_conns: AtomicUsize,
+    pub(super) accepted: Counter,
+    pub(super) shed: Counter,
+    pub(super) drained: Counter,
+    pub(super) proto_errors: Counter,
+    pub(super) frame_lat: Histogram,
+}
+
+/// Handle to a running TCP front end. Decoupled from
+/// [`crate::coordinator::InferenceServer`] on purpose: `spawn` takes
+/// the raw batcher queue + epoch cell, so conformance tests can stand
+/// up a front end over a test-owned consumer and script the batcher
+/// side deterministically.
+pub struct NetServer {
+    pub(super) shared: Arc<Shared>,
+    pub(super) local: SocketAddr,
+    pub(super) accept: Option<JoinHandle<()>>,
+    pub(super) conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting. `queue` is the batcher queue (normally
+    /// [`InferenceServer::client`](crate::coordinator::InferenceServer::client)),
+    /// `epoch` the live plan-epoch cell
+    /// ([`InferenceServer::epoch_cell`](crate::coordinator::InferenceServer::epoch_cell)),
+    /// `registry` where the `net.*` metrics land.
+    pub fn spawn(listen: impl ToSocketAddrs, queue: SyncSender<ServerMsg>,
+                 epoch: Arc<AtomicU64>, registry: Arc<MetricsRegistry>,
+                 cfg: NetConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(listen)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            accepted: registry.counter("net.accepted"),
+            shed: registry.counter("net.shed"),
+            drained: registry.counter("net.drained"),
+            proto_errors: registry.counter("net.proto_errors"),
+            frame_lat: registry.histogram("net.frame_latency"),
+            queue,
+            epoch,
+            registry,
+            cfg,
+            accepting: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            active_conns: AtomicUsize::new(0),
+        });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, shared, conns))?
+        };
+        crate::obs_event!("net.listen", local.port() as u64);
+        Ok(NetServer { shared, local, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Current server-wide outstanding wire requests.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
+               conns: Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    loop {
+        if shared.stopped.load(Ordering::Acquire)
+            || !shared.accepting.load(Ordering::Acquire)
+        {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let active = shared.active_conns.load(Ordering::Acquire);
+                if active >= shared.cfg.max_conns {
+                    shared.shed.inc();
+                    refuse(&shared, stream, ErrorCode::RetryAfter,
+                           "connection limit reached");
+                    continue;
+                }
+                shared.accepted.inc();
+                shared.active_conns.fetch_add(1, Ordering::AcqRel);
+                let sh = shared.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("net-conn-{peer}"))
+                    .spawn(move || {
+                        handle_conn(&sh, stream);
+                        sh.active_conns.fetch_sub(1, Ordering::AcqRel);
+                    });
+                match handle {
+                    Ok(h) => {
+                        let mut g = conns.lock().unwrap();
+                        // Reap finished handles so the vec stays
+                        // bounded by the live-connection count.
+                        g.retain(|h| !h.is_finished());
+                        g.push(h);
+                    }
+                    Err(_) => {
+                        // Thread spawn failed (resource exhaustion):
+                        // undo the accept accounting and shed.
+                        shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+                        shared.shed.inc();
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Best-effort single error frame to a connection refused at accept
+/// time (the peer has not spoken yet, so binary mode is assumed).
+fn refuse(shared: &Shared, stream: TcpStream, code: ErrorCode,
+          message: &str) {
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let epoch = shared.epoch.load(Ordering::Acquire);
+    let f = Frame::error(0, epoch, code, message,
+                         vec![("retry_after_ms",
+                               json::num(RETRY_AFTER_MS))]);
+    let _ = frame::write_frame(&mut &stream, &f, Mode::Binary);
+    // An eager client may have pipelined a request already; close
+    // without resetting so the refusal frame survives.
+    let _ = stream.set_read_timeout(Some(TICK));
+    graceful_close(&stream);
+}
+
+/// One outstanding wire request on a connection, awaiting its reply
+/// from the batcher. `mode` remembers the encoding the request
+/// arrived in so the reply matches it.
+enum Pending {
+    Score {
+        id: u64,
+        mode: Mode,
+        submitted: Instant,
+        rx: Receiver<ScoreResponse>,
+    },
+    Update {
+        id: u64,
+        mode: Mode,
+        submitted: Instant,
+        rx: Receiver<UpdateResponse>,
+    },
+    Stats {
+        id: u64,
+        mode: Mode,
+        submitted: Instant,
+        rx: Receiver<StatsSnapshot>,
+    },
+}
+
+impl Pending {
+    fn mode(&self) -> Mode {
+        match self {
+            Pending::Score { mode, .. }
+            | Pending::Update { mode, .. }
+            | Pending::Stats { mode, .. } => *mode,
+        }
+    }
+
+    fn submitted(&self) -> Instant {
+        match self {
+            Pending::Score { submitted, .. }
+            | Pending::Update { submitted, .. }
+            | Pending::Stats { submitted, .. } => *submitted,
+        }
+    }
+}
+
+fn timeoutish(e: &io::Error) -> bool {
+    matches!(e.kind(),
+             io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn handle_conn(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(TICK));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut last_activity = Instant::now();
+    let mut last_mode = Mode::Binary;
+    let mut peer_closed = false;
+    let mut flight_dumped = false;
+
+    loop {
+        if flush_pending(shared, &stream, &mut pending).is_err() {
+            break;
+        }
+        if shared.stopped.load(Ordering::Acquire) {
+            break;
+        }
+        if pending.is_empty()
+            && (peer_closed || shared.draining.load(Ordering::Acquire))
+        {
+            break;
+        }
+        if peer_closed {
+            // Nothing left to read; wait for outstanding replies.
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        let mut b = [0u8; 1];
+        match (&stream).read(&mut b) {
+            Ok(0) => peer_closed = true,
+            Ok(_) => {
+                last_activity = Instant::now();
+                match frame::read_frame_after(b[0], &mut &stream,
+                                              shared.cfg.max_payload,
+                                              shared.cfg.read_timeout) {
+                    Ok((f, mode)) => {
+                        last_mode = mode;
+                        if !dispatch(shared, &stream, &mut pending, f,
+                                     mode, &mut flight_dumped) {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        protocol_error(shared, &stream, last_mode, &e,
+                                       &mut flight_dumped);
+                        break;
+                    }
+                }
+            }
+            Err(e) if timeoutish(&e) => {
+                if pending.is_empty()
+                    && last_activity.elapsed() >= shared.cfg.read_timeout
+                {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+
+    // Courtesy window: deliver replies that are already (or about to
+    // be) computed, then release the connection's inflight slots so
+    // the server-wide gauge does not leak.
+    let deadline = Instant::now() + Duration::from_millis(200);
+    while !pending.is_empty() && Instant::now() < deadline {
+        if flush_pending(shared, &stream, &mut pending).is_err() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if !pending.is_empty() {
+        shared.inflight.fetch_sub(pending.len(), Ordering::AcqRel);
+    }
+    graceful_close(&stream);
+}
+
+/// Close without an RST: send FIN first, then swallow whatever the
+/// peer already had in flight. Dropping a socket with unread bytes in
+/// its receive buffer resets the connection, which would destroy a
+/// final error frame before the client gets to read it.
+fn graceful_close(stream: &TcpStream) {
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut scratch = [0u8; 4096];
+    let mut swallowed = 0usize;
+    loop {
+        match (&stream).read(&mut scratch) {
+            Ok(0) => break,
+            Ok(n) => {
+                swallowed += n;
+                // A peer still firehosing gets the RST it asked for.
+                if swallowed > 256 * 1024 {
+                    break;
+                }
+            }
+            // WouldBlock after one read-timeout tick, or a hard
+            // error: the buffer is empty, safe to drop.
+            Err(_) => break,
+        }
+    }
+}
+
+/// Result of polling one pending entry.
+enum Polled {
+    NotReady,
+    Reply(Frame),
+}
+
+/// Deliver every completed reply; returns `Err` only when the socket
+/// write fails (the connection is then torn down by the caller).
+fn flush_pending(shared: &Shared, stream: &TcpStream,
+                 pending: &mut Vec<Pending>) -> io::Result<()> {
+    let epoch_now = shared.epoch.load(Ordering::Acquire);
+    let mut i = 0;
+    while i < pending.len() {
+        let polled = match &pending[i] {
+            Pending::Score { id, rx, .. } => match rx.try_recv() {
+                Ok(resp) => Polled::Reply(score_frame(*id, resp)),
+                Err(TryRecvError::Empty) => Polled::NotReady,
+                Err(TryRecvError::Disconnected) => Polled::Reply(
+                    Frame::error(*id, epoch_now, ErrorCode::Internal,
+                                 "reply channel closed", vec![])),
+            },
+            Pending::Update { id, rx, .. } => match rx.try_recv() {
+                Ok(resp) => {
+                    Polled::Reply(update_frame(*id, epoch_now, resp))
+                }
+                Err(TryRecvError::Empty) => Polled::NotReady,
+                Err(TryRecvError::Disconnected) => Polled::Reply(
+                    Frame::error(*id, epoch_now, ErrorCode::Internal,
+                                 "reply channel closed", vec![])),
+            },
+            Pending::Stats { id, rx, .. } => match rx.try_recv() {
+                Ok(snap) => Polled::Reply(Frame::new(
+                    FrameKind::StatsOk, *id, epoch_now,
+                    snap.to_benchkit_value())),
+                Err(TryRecvError::Empty) => Polled::NotReady,
+                Err(TryRecvError::Disconnected) => Polled::Reply(
+                    Frame::error(*id, epoch_now, ErrorCode::Internal,
+                                 "reply channel closed", vec![])),
+            },
+        };
+        match polled {
+            Polled::NotReady => i += 1,
+            Polled::Reply(f) => {
+                let entry = pending.swap_remove(i);
+                shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                shared.frame_lat.record(entry.submitted().elapsed());
+                frame::write_frame(&mut &*stream, &f, entry.mode())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn score_frame(id: u64, resp: ScoreResponse) -> Frame {
+    match resp {
+        ScoreResponse::Ok(ok) => Frame::new(
+            FrameKind::ScoreOk, id, ok.epoch,
+            json::obj(vec![
+                ("node", json::num(ok.node as f64)),
+                ("logits", json::arr(ok.logits.iter()
+                    .map(|v| json::num(*v as f64)).collect())),
+                ("latency_us",
+                 json::num(ok.latency.as_micros() as f64)),
+            ])),
+        ScoreResponse::Err(e) => {
+            let (code, msg, extra) = match &e.reject {
+                ScoreReject::NodeOutOfRange { node, n } => (
+                    ErrorCode::NodeOutOfRange,
+                    format!("node {node} out of range (n={n})"),
+                    vec![("node", json::num(*node as f64)),
+                         ("n", json::num(*n as f64))],
+                ),
+                ScoreReject::FeatureLen { got, want } => (
+                    ErrorCode::FeatureLen,
+                    format!("feature row has {got} values, want {want}"),
+                    vec![("got", json::num(*got as f64)),
+                         ("want", json::num(*want as f64))],
+                ),
+                ScoreReject::ExecFailed { message } => (
+                    ErrorCode::ExecFailed,
+                    message.clone(),
+                    vec![],
+                ),
+                ScoreReject::EpochMismatch { pinned, current } => (
+                    ErrorCode::EpochMismatch,
+                    format!("pinned epoch {pinned}, serving {current}"),
+                    vec![("pinned", json::num(*pinned as f64)),
+                         ("current", json::num(*current as f64))],
+                ),
+            };
+            Frame::error(id, e.epoch, code, &msg, extra)
+        }
+    }
+}
+
+fn update_frame(id: u64, epoch: u64, resp: UpdateResponse) -> Frame {
+    Frame::new(
+        FrameKind::UpdateOk, id, epoch,
+        json::obj(vec![
+            ("seq", json::num(resp.seq as f64)),
+            ("outcome", json::str_(format!("{:?}", resp.outcome))),
+            ("rebuild", json::str_(format!("{:?}", resp.rebuild))),
+            ("cost_core", json::num(resp.cost_core as f64)),
+            ("latency_us", json::num(resp.latency.as_micros() as f64)),
+        ]))
+}
+
+/// Answer one request frame. Returns `false` when the connection
+/// must close (protocol violation or dead transport).
+fn dispatch(shared: &Shared, stream: &TcpStream,
+            pending: &mut Vec<Pending>, f: Frame, mode: Mode,
+            flight_dumped: &mut bool) -> bool {
+    let epoch_now = shared.epoch.load(Ordering::Acquire);
+    let reply = |frm: &Frame| -> bool {
+        frame::write_frame(&mut &*stream, frm, mode).is_ok()
+    };
+    match f.kind {
+        FrameKind::Ping => reply(&Frame::new(
+            FrameKind::Pong, f.request_id, epoch_now, Value::Null)),
+        FrameKind::ScoreReq => {
+            if shared.draining.load(Ordering::Acquire) {
+                shared.drained.inc();
+                return reply(&Frame::error(
+                    f.request_id, epoch_now, ErrorCode::Draining,
+                    "server is draining", vec![]));
+            }
+            if let Some(why) = admission(shared, pending) {
+                return shed(shared, stream, f.request_id, epoch_now,
+                            mode, why);
+            }
+            let (node, features, pin) = match parse_score(&f) {
+                Ok(v) => v,
+                Err(msg) => {
+                    return payload_error(shared, stream, &f, epoch_now,
+                                         mode, &msg, flight_dumped);
+                }
+            };
+            let (tx, rx) = srv::oneshot();
+            let req = ScoreRequest {
+                node,
+                features,
+                reply: tx,
+                submitted: Instant::now(),
+                pin_epoch: pin,
+            };
+            enqueue(shared, stream, pending, ServerMsg::Score(req),
+                    Pending::Score {
+                        id: f.request_id,
+                        mode,
+                        submitted: Instant::now(),
+                        rx,
+                    },
+                    f.request_id, epoch_now, mode)
+        }
+        FrameKind::UpdateReq => {
+            if shared.draining.load(Ordering::Acquire) {
+                shared.drained.inc();
+                return reply(&Frame::error(
+                    f.request_id, epoch_now, ErrorCode::Draining,
+                    "server is draining", vec![]));
+            }
+            if let Some(why) = admission(shared, pending) {
+                return shed(shared, stream, f.request_id, epoch_now,
+                            mode, why);
+            }
+            let delta = match parse_update(&f) {
+                Ok(d) => d,
+                Err(msg) => {
+                    return payload_error(shared, stream, &f, epoch_now,
+                                         mode, &msg, flight_dumped);
+                }
+            };
+            let (tx, rx) = srv::update_oneshot();
+            let req = UpdateRequest {
+                delta,
+                reply: Some(tx),
+                submitted: Instant::now(),
+            };
+            enqueue(shared, stream, pending, ServerMsg::Update(req),
+                    Pending::Update {
+                        id: f.request_id,
+                        mode,
+                        submitted: Instant::now(),
+                        rx,
+                    },
+                    f.request_id, epoch_now, mode)
+        }
+        FrameKind::StatsReq => {
+            // Stats bypass the backlog gate (cheap, answered from the
+            // receive loop) but still respect the pipeline cap.
+            if pending.len() >= shared.cfg.max_inflight {
+                return shed(shared, stream, f.request_id, epoch_now,
+                            mode, "connection pipeline full");
+            }
+            let (tx, rx) = srv::stats_oneshot();
+            enqueue(shared, stream, pending,
+                    ServerMsg::Stats(StatsRequest { reply: tx }),
+                    Pending::Stats {
+                        id: f.request_id,
+                        mode,
+                        submitted: Instant::now(),
+                        rx,
+                    },
+                    f.request_id, epoch_now, mode)
+        }
+        // Response kinds flowing client → server are protocol abuse.
+        FrameKind::ScoreOk | FrameKind::UpdateOk | FrameKind::StatsOk
+        | FrameKind::Error | FrameKind::Pong => {
+            let e = WireError::Bad(format!(
+                "unexpected {} frame from client", f.kind.name()));
+            protocol_error(shared, stream, mode, &e, flight_dumped);
+            false
+        }
+    }
+}
+
+/// Gates 2 and 3 (gate 1 lives at accept time). `None` = admitted.
+fn admission(shared: &Shared,
+             pending: &[Pending]) -> Option<&'static str> {
+    if pending.len() >= shared.cfg.max_inflight {
+        Some("connection pipeline full")
+    } else if shared.inflight.load(Ordering::Acquire)
+        >= shared.cfg.shed_after
+    {
+        Some("server backlog full")
+    } else {
+        None
+    }
+}
+
+/// try_send into the batcher queue; a full queue sheds, a closed
+/// queue reports `Internal` and closes the connection.
+fn enqueue(shared: &Shared, stream: &TcpStream,
+           pending: &mut Vec<Pending>, msg: ServerMsg, entry: Pending,
+           id: u64, epoch: u64, mode: Mode) -> bool {
+    match shared.queue.try_send(msg) {
+        Ok(()) => {
+            shared.inflight.fetch_add(1, Ordering::AcqRel);
+            pending.push(entry);
+            true
+        }
+        Err(TrySendError::Full(_)) => {
+            shed(shared, stream, id, epoch, mode, "batcher queue full")
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            let f = Frame::error(id, epoch, ErrorCode::Internal,
+                                 "batcher is gone", vec![]);
+            let _ = frame::write_frame(&mut &*stream, &f, mode);
+            false
+        }
+    }
+}
+
+fn shed(shared: &Shared, stream: &TcpStream, id: u64, epoch: u64,
+        mode: Mode, why: &str) -> bool {
+    shared.shed.inc();
+    crate::obs_event!("net.shed", 1);
+    let f = Frame::error(id, epoch, ErrorCode::RetryAfter, why,
+                         vec![("retry_after_ms",
+                               json::num(RETRY_AFTER_MS))]);
+    frame::write_frame(&mut &*stream, &f, mode).is_ok()
+}
+
+fn parse_score(f: &Frame)
+               -> Result<(u32, Vec<f32>, Option<u64>), String> {
+    let node = f
+        .payload
+        .get("node")
+        .and_then(|v| v.as_f64())
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0
+                && *n <= u32::MAX as f64)
+        .ok_or("score_req needs a \"node\" (non-negative integer)")?
+        as u32;
+    let features = match f.payload.get("features") {
+        None | Some(Value::Null) => Vec::new(),
+        Some(v) => {
+            let arr = v.as_arr()
+                .ok_or("\"features\" must be an array of numbers")?;
+            let mut out = Vec::with_capacity(arr.len());
+            for x in arr {
+                out.push(x.as_f64().ok_or(
+                    "\"features\" must be an array of numbers")?
+                    as f32);
+            }
+            out
+        }
+    };
+    // Header epoch pins when non-zero; the text form can also spell
+    // it as payload.pin_epoch.
+    let pin = if f.epoch != 0 {
+        Some(f.epoch)
+    } else {
+        match f.payload.get("pin_epoch").and_then(|v| v.as_f64()) {
+            Some(e) if e >= 1.0 && e.fract() == 0.0 => Some(e as u64),
+            Some(_) => return Err(
+                "\"pin_epoch\" must be a positive integer".into()),
+            None => None,
+        }
+    };
+    Ok((node, features, pin))
+}
+
+fn parse_update(f: &Frame) -> Result<GraphDelta, String> {
+    let op = f
+        .payload
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or("update_req needs an \"op\" string")?;
+    let endpoint = |key: &str| -> Result<u32, String> {
+        f.payload
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0
+                    && *n <= u32::MAX as f64)
+            .map(|n| n as u32)
+            .ok_or(format!("update_req op {op:?} needs {key:?} \
+                            (non-negative integer)"))
+    };
+    match op {
+        "edge_insert" => Ok(GraphDelta::EdgeInsert {
+            src: endpoint("src")?,
+            dst: endpoint("dst")?,
+        }),
+        "edge_delete" => Ok(GraphDelta::EdgeDelete {
+            src: endpoint("src")?,
+            dst: endpoint("dst")?,
+        }),
+        "node_add" => Ok(GraphDelta::NodeAdd),
+        other => Err(format!("unknown update op {other:?}")),
+    }
+}
+
+/// A structurally valid frame with a nonsense payload: answered with
+/// `BadFrame` and the connection closes (same policy as wire-level
+/// violations, so clients get one consistent contract).
+fn payload_error(shared: &Shared, stream: &TcpStream, f: &Frame,
+                 epoch: u64, mode: Mode, msg: &str,
+                 flight_dumped: &mut bool) -> bool {
+    let e = WireError::Bad(msg.to_string());
+    let frm = Frame::error(f.request_id, epoch, ErrorCode::BadFrame,
+                           msg, vec![]);
+    let _ = frame::write_frame(&mut &*stream, &frm, mode);
+    note_protocol_error(shared, &e, flight_dumped);
+    false
+}
+
+/// Wire-level violation: count it, flight-dump once per connection,
+/// answer with a final error frame (best effort), close.
+fn protocol_error(shared: &Shared, stream: &TcpStream, mode: Mode,
+                  e: &WireError, flight_dumped: &mut bool) {
+    let epoch = shared.epoch.load(Ordering::Acquire);
+    let frm = match e {
+        WireError::Oversized { len, max } => Some(Frame::error(
+            0, epoch, ErrorCode::Oversized,
+            &format!("payload {len} bytes exceeds cap {max}"),
+            vec![("len", json::num(*len as f64)),
+                 ("max", json::num(*max as f64))])),
+        WireError::Bad(m) => Some(Frame::error(
+            0, epoch, ErrorCode::BadFrame, m, vec![])),
+        WireError::Stalled => Some(Frame::error(
+            0, epoch, ErrorCode::BadFrame, "peer stalled mid-frame",
+            vec![])),
+        // Transport already gone: nothing to answer.
+        WireError::Eof | WireError::Io(_) => None,
+    };
+    if let Some(frm) = frm {
+        let _ = frame::write_frame(&mut &*stream, &frm, mode);
+    }
+    note_protocol_error(shared, e, flight_dumped);
+}
+
+fn note_protocol_error(shared: &Shared, e: &WireError,
+                       flight_dumped: &mut bool) {
+    shared.proto_errors.inc();
+    crate::obs_warn!("[net] protocol error: {e}");
+    if !*flight_dumped {
+        *flight_dumped = true;
+        let _ = flight::dump("net.protocol_error", &shared.registry);
+    }
+}

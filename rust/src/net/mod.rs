@@ -1,0 +1,34 @@
+//! Wire-level serving: a std-only TCP front end over the channel API
+//! in [`crate::coordinator::server`].
+//!
+//! Layering (see DESIGN.md §12 for the full contract):
+//!
+//! - [`frame`] — length-prefixed binary framing with a JSON text
+//!   fallback; the versioned header carries a request id and the
+//!   **plan epoch** so clients can pin reads across hot plan swaps.
+//! - [`listener`] — bounded accept loop feeding the batcher queue;
+//!   three-gate admission control that load-sheds with `RetryAfter`
+//!   frames instead of buffering unboundedly; per-connection
+//!   read/write timeouts.
+//! - [`drain`] — graceful shutdown: stop accepting, flush in-flight
+//!   batches, answer stragglers with `Draining`.
+//! - [`client`] — minimal blocking SDK shared by
+//!   `examples/serve_client.rs` and the conformance suite.
+//!
+//! The front end deliberately takes the *raw* batcher queue and
+//! epoch cell rather than an `InferenceServer` handle: production
+//! wiring passes `server.client()` / `server.epoch_cell()`, while
+//! the conformance suite substitutes a test-owned channel and drives
+//! the batcher side by script — every shed/drain/epoch behavior is
+//! then deterministic.
+
+pub mod client;
+pub mod drain;
+pub mod frame;
+pub mod listener;
+
+pub use client::{Client, ClientError, Outcome, Score, UpdateAck,
+                 WireRejection};
+pub use drain::NetStats;
+pub use frame::{ErrorCode, Frame, FrameKind, Mode, WireError};
+pub use listener::{NetConfig, NetServer};

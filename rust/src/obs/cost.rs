@@ -91,6 +91,59 @@ pub fn record_plan_terms(reg: &MetricsRegistry, hag: &Hag,
     }
 }
 
+/// Attribute the *measured* tallies back to shards as
+/// `cost.shard<i>.meas_aggregations`/`cost.shard<i>.meas_transfers`
+/// gauges, next to the predicted ones [`record_plan_terms`] sets.
+///
+/// The stitched [`ExecutionPlan`](crate::hag::ExecutionPlan)
+/// interleaves shards inside its level/band tensors (bands carry no
+/// shard identity), so row-level measured attribution is not
+/// recoverable post-stitch; instead the executor's cumulative
+/// element-scaled tallies (`cost.meas_aggregations`/
+/// `cost.meas_transfers`) are apportioned by each shard's share of
+/// the predicted Definition-2 terms — cross-shard stitch edges and
+/// padding land proportionally. The last shard absorbs integer
+/// rounding, so the per-shard gauges always sum exactly to the
+/// totals. Set-to-absolute and idempotent, like the predicted side.
+pub fn record_shard_meas_terms(reg: &MetricsRegistry, meas_aggs: u64,
+                               meas_transfers: u64,
+                               shards: &[(usize, usize)]) {
+    if shards.is_empty() {
+        return;
+    }
+    let tot_a: usize = shards.iter().map(|s| s.0).sum();
+    let tot_t: usize = shards.iter().map(|s| s.1).sum();
+    let apportion = |total: u64, term: usize, sum: usize| -> u64 {
+        if sum == 0 {
+            // degenerate prediction (e.g. an edgeless shard set):
+            // spread evenly rather than dropping the measurement
+            total / shards.len() as u64
+        } else {
+            (total as f64 * term as f64 / sum as f64).round() as u64
+        }
+    };
+    let (mut used_a, mut used_t) = (0u64, 0u64);
+    let last = shards.len() - 1;
+    for (i, &(aggs, transfers)) in shards.iter().enumerate() {
+        let (a, t) = if i == last {
+            (meas_aggs.saturating_sub(used_a),
+             meas_transfers.saturating_sub(used_t))
+        } else {
+            let a = apportion(meas_aggs, aggs, tot_a)
+                .min(meas_aggs - used_a);
+            let t = apportion(meas_transfers, transfers, tot_t)
+                .min(meas_transfers - used_t);
+            (a, t)
+        };
+        used_a += a;
+        used_t += t;
+        reg.gauge(&format!("cost.shard{i}.meas_aggregations"))
+            .set(a as i64);
+        reg.gauge(&format!("cost.shard{i}.meas_transfers"))
+            .set(t as i64);
+    }
+}
+
 /// One executor observation: element-wise aggregation ops and operand
 /// reads actually performed, and the wall time they took.
 #[derive(Debug, Clone, Copy)]
@@ -416,6 +469,38 @@ mod tests {
         assert!((c.alpha - 1.0).abs() < 0.1, "alpha {}", c.alpha);
         assert!((c.beta - 3.0).abs() < 0.1, "beta {}", c.beta);
         assert!(c.model_error < 0.01);
+    }
+
+    #[test]
+    fn shard_meas_attribution_sums_to_totals() {
+        let reg = MetricsRegistry::new();
+        // predicted shares 1:2:3 on aggs, 5:3:2 on transfers
+        let shards = [(10, 50), (20, 30), (30, 20)];
+        record_shard_meas_terms(&reg, 601, 1001, &shards);
+        let a: i64 = (0..3).map(|i| reg
+            .gauge(&format!("cost.shard{i}.meas_aggregations")).get())
+            .sum();
+        let t: i64 = (0..3).map(|i| reg
+            .gauge(&format!("cost.shard{i}.meas_transfers")).get())
+            .sum();
+        assert_eq!(a, 601, "rounding never loses measured aggs");
+        assert_eq!(t, 1001, "rounding never loses measured transfers");
+        // proportionality: shard2 has 3x shard0's predicted aggs
+        let a0 = reg.gauge("cost.shard0.meas_aggregations").get();
+        let a2 = reg.gauge("cost.shard2.meas_aggregations").get();
+        assert!((a2 as f64 / a0 as f64 - 3.0).abs() < 0.1,
+                "shares follow prediction: {a0} vs {a2}");
+        // degenerate all-zero prediction: even split, nothing dropped
+        let reg2 = MetricsRegistry::new();
+        record_shard_meas_terms(&reg2, 90, 7, &[(0, 0), (0, 0)]);
+        assert_eq!(reg2.gauge("cost.shard0.meas_aggregations").get()
+                   + reg2.gauge("cost.shard1.meas_aggregations").get(),
+                   90);
+        assert_eq!(reg2.gauge("cost.shard0.meas_transfers").get()
+                   + reg2.gauge("cost.shard1.meas_transfers").get(),
+                   7);
+        // empty shard list is a no-op
+        record_shard_meas_terms(&MetricsRegistry::new(), 5, 5, &[]);
     }
 
     #[test]

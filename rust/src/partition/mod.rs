@@ -306,7 +306,7 @@ mod tests {
             }
         }
         let g = Graph::from_edges(20, &edges);
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Set,
             pair_cap: usize::MAX,

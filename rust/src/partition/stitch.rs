@@ -157,7 +157,7 @@ mod tests {
         let locals: Vec<Hag> = (0..2)
             .map(|s| {
                 let sg = subgraph(&g, &p, &local, s);
-                hag_search(&sg, &SearchConfig {
+                hag_search(&sg, &SearchConfig { alpha: 1.0, beta: 1.0,
                     capacity: usize::MAX,
                     kind: AggregateKind::Set,
                     pair_cap: usize::MAX,

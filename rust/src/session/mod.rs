@@ -110,6 +110,13 @@ pub struct Session {
     budgets: Vec<usize>,
     /// Per shard: sequence number of the last dirtying delta.
     shard_version: Vec<u64>,
+    /// Definition-2 weights shard searches price with — `(1, 1)`
+    /// until [`Session::set_cost_weights`] installs a live (α̂, β̂)
+    /// calibration. Positive weights provably never change the
+    /// greedy result (see `SearchConfig::alpha`), so cached shard
+    /// HAGs stay valid across weight updates and the weights are
+    /// deliberately *not* part of the plan-cache key.
+    cost_weights: (f64, f64),
     /// Global topology version (== applied-delta count).
     version: u64,
     cache: PlanCache,
@@ -195,6 +202,7 @@ impl Session {
             budgets,
             shard_version,
             version: 0,
+            cost_weights: (1.0, 1.0),
             cache: PlanCache::new(),
             stats: SessionStats::default(),
             scratch: SearchScratch::new(),
@@ -352,7 +360,26 @@ impl Session {
             capacity: self.budgets[shard],
             kind: self.spec.kind,
             pair_cap: self.spec.pair_cap,
+            alpha: 1.0,
+            beta: 1.0,
         }
+        .with_weights(self.cost_weights.0, self.cost_weights.1)
+    }
+
+    /// Install live Definition-2 weights (α̂, β̂) for every later
+    /// shard search — the serving batcher feeds its
+    /// [`CostModel`](crate::obs::CostModel) fit here before each
+    /// re-plan. Clamping and the search-invariance argument live in
+    /// [`SearchConfig::with_weights`]; because positive weights
+    /// cannot change a search result, this never invalidates the
+    /// plan cache.
+    pub fn set_cost_weights(&mut self, alpha: f64, beta: f64) {
+        self.cost_weights = (alpha, beta);
+    }
+
+    /// The weights shard searches currently price with.
+    pub fn cost_weights(&self) -> (f64, f64) {
+        self.cost_weights
     }
 
     /// Build the maintained HAG over `g` (the current graph),

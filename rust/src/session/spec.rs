@@ -137,7 +137,7 @@ impl LowerSpec {
     /// The [`SearchConfig`] this spec lowers a graph of `n` nodes
     /// under (per-shard budgets are split from this capacity).
     pub fn search_config(&self, n: usize) -> SearchConfig {
-        SearchConfig {
+        SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: self.resolved_capacity(n),
             kind: self.kind,
             pair_cap: self.pair_cap,

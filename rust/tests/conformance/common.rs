@@ -1,0 +1,164 @@
+//! Shared harness for the conformance suite.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use repro::coordinator::{self, BatchPolicy, Resident, ScoreError,
+                         ScoreOk, ScoreReject, ScoreRequest,
+                         ScoreResponse, ServerMsg, SwapPolicy,
+                         UpdateResponse};
+use repro::datasets;
+use repro::incremental::{ApplyOutcome, DriftPolicy, RebuildEvent};
+use repro::net::{Client, NetConfig, NetServer};
+use repro::obs::metrics::MetricsRegistry;
+use repro::session::{LowerSpec, Session};
+
+/// A front end over a test-owned batcher channel: the test *is* the
+/// batcher, so admission, sheds, drains and epoch flips are
+/// deterministic.
+pub struct Scripted {
+    pub net: NetServer,
+    pub rx: Receiver<ServerMsg>,
+    pub epoch: Arc<AtomicU64>,
+    pub registry: Arc<MetricsRegistry>,
+}
+
+/// Spawn a scripted front end with an explicit batcher-queue bound
+/// (the production queue is 4096; small bounds make the queue-full
+/// shed testable).
+pub fn scripted_with(cfg: NetConfig, queue_cap: usize) -> Scripted {
+    let (tx, rx) = sync_channel::<ServerMsg>(queue_cap);
+    // Epoch 1 = "serving the spawn-time plan"; 0 in a request header
+    // means unpinned, so 0 is never a serving epoch.
+    let epoch = Arc::new(AtomicU64::new(1));
+    let registry = Arc::new(MetricsRegistry::new());
+    let net = NetServer::spawn("127.0.0.1:0", tx, epoch.clone(),
+                               registry.clone(), cfg)
+        .expect("bind loopback");
+    Scripted { net, rx, epoch, registry }
+}
+
+pub fn scripted(cfg: NetConfig) -> Scripted {
+    scripted_with(cfg, 64)
+}
+
+/// Connect a client with a bounded read timeout: every "the server
+/// must answer, not hang" assertion rides on this deadline.
+pub fn connect(net: &NetServer) -> Client {
+    let mut c = Client::connect(net.local_addr()).expect("connect");
+    c.set_read_timeout(Duration::from_secs(5)).expect("timeout");
+    c
+}
+
+/// Scripted batcher thread that answers every message immediately:
+/// scores echo `[node, 0.25]` logits (honoring epoch pins against
+/// the shared cell), updates ack as NoOp with a running seq, stats
+/// answer an empty snapshot. Exits when the queue closes (i.e. when
+/// the `NetServer` is dropped).
+pub fn auto_responder(rx: Receiver<ServerMsg>,
+                      epoch: Arc<AtomicU64>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let reg = MetricsRegistry::new();
+        let mut seq = 0u64;
+        for msg in rx {
+            match msg {
+                ServerMsg::Score(req) => reply_score(req, &epoch),
+                ServerMsg::Update(req) => {
+                    seq += 1;
+                    if let Some(reply) = req.reply {
+                        let _ = reply.send(UpdateResponse {
+                            seq,
+                            outcome: ApplyOutcome::NoOp,
+                            rebuild: RebuildEvent::None,
+                            cost_core: 0,
+                            latency: Duration::from_micros(5),
+                        });
+                    }
+                }
+                ServerMsg::Stats(req) => {
+                    let _ = req.reply.send(reg.snapshot());
+                }
+            }
+        }
+    })
+}
+
+/// Answer one scoring request the way the real worker would: epoch
+/// pins are validated against the live cell, everything else echoes.
+pub fn reply_score(req: ScoreRequest, epoch: &AtomicU64) {
+    let e = epoch.load(Ordering::Acquire);
+    let resp = match req.pin_epoch {
+        Some(p) if p != e => ScoreResponse::Err(ScoreError {
+            node: req.node,
+            reject: ScoreReject::EpochMismatch { pinned: p,
+                                                 current: e },
+            latency: Duration::from_micros(5),
+            epoch: e,
+        }),
+        _ => ScoreResponse::Ok(ScoreOk {
+            node: req.node,
+            logits: vec![req.node as f32, 0.25],
+            latency: Duration::from_micros(5),
+            epoch: e,
+        }),
+    };
+    let _ = req.reply.send(resp);
+}
+
+/// Unwrap a queue message as a scoring request.
+pub fn expect_score(msg: ServerMsg) -> ScoreRequest {
+    match msg {
+        ServerMsg::Score(r) => r,
+        ServerMsg::Update(_) => panic!("expected Score, got Update"),
+        ServerMsg::Stats(_) => panic!("expected Score, got Stats"),
+    }
+}
+
+/// Artifacts dir that does not exist: forces the host reference
+/// executor regardless of what the checkout has compiled.
+pub fn no_artifacts() -> PathBuf {
+    std::env::temp_dir().join("repro-conformance-no-artifacts")
+}
+
+/// A live serving stack behind the wire: resident session with a
+/// forced drift threshold (every coalesced flush attempts a hot
+/// swap), so topology updates land real plan swaps and real epoch
+/// bumps.
+pub struct Live {
+    pub net: NetServer,
+    pub server: coordinator::InferenceServer,
+    pub f_in: usize,
+    pub n: u32,
+    pub classes: usize,
+}
+
+pub fn live_swapping() -> Live {
+    let ds = datasets::load("BZR", 0.02, 7);
+    let spec = LowerSpec::default().with_shards(2).with_drift(
+        DriftPolicy::default().with_threshold(-1.0));
+    let mut session = Session::new(&ds, spec);
+    let lowered = session.lower().expect("lower");
+    let resident = Resident::new(
+        session, &ds.graph, &lowered.hag,
+        SwapPolicy { swap_plans: true, max_pending: 1 });
+    let server = coordinator::InferenceServer::for_lowered(
+        no_artifacts(), "gcn", &ds, &lowered, BatchPolicy::default(),
+        7, Some(resident))
+        .expect("spawn server");
+    let reg = Arc::new(MetricsRegistry::new());
+    let net = NetServer::spawn("127.0.0.1:0", server.client(),
+                               server.epoch_cell(), reg,
+                               NetConfig::default())
+        .expect("bind loopback");
+    Live {
+        net,
+        server,
+        f_in: ds.f_in,
+        n: ds.n() as u32,
+        classes: ds.classes,
+    }
+}

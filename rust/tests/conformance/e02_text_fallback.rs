@@ -1,0 +1,82 @@
+//! e02 — JSON text fallback: a line starting with `{` is a complete
+//! frame, and the server answers each request in the encoding it
+//! arrived in (text gets text, binary gets binary, mixed per-frame
+//! on one connection).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use repro::net::frame::{self, Frame, FrameKind};
+use repro::net::NetConfig;
+use repro::util::json;
+
+use crate::common::{auto_responder, scripted};
+
+/// Read one `\n`-terminated line from a raw stream.
+fn read_line(s: &mut TcpStream) -> String {
+    let mut out = Vec::new();
+    let mut b = [0u8; 1];
+    loop {
+        match s.read(&mut b) {
+            Ok(0) => panic!("eof before newline"),
+            Ok(_) if b[0] == b'\n' => break,
+            Ok(_) => out.push(b[0]),
+            Err(e) => panic!("read failed: {e}"),
+        }
+    }
+    String::from_utf8(out).expect("utf-8 line")
+}
+
+fn read_exact(s: &mut TcpStream, n: usize) -> Vec<u8> {
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf).expect("read_exact");
+    buf
+}
+
+#[test]
+fn text_and_binary_frames_mix_on_one_connection() {
+    let s = scripted(NetConfig::default());
+    let responder = auto_responder(s.rx, s.epoch.clone());
+    let mut raw = TcpStream::connect(s.net.local_addr())
+        .expect("connect");
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    // 1. Text ping → text pong (the reply's first byte is `{`).
+    raw.write_all(b"{\"type\":\"ping\",\"id\":3}\n").unwrap();
+    let line = read_line(&mut raw);
+    assert!(line.starts_with('{'), "text request got {line:?}");
+    let v = json::parse(&line).expect("reply is JSON");
+    assert_eq!(v.req_str("type").unwrap(), "pong");
+    assert_eq!(v.req_f64("id").unwrap(), 3.0);
+    assert_eq!(v.req_f64("epoch").unwrap(), 1.0);
+
+    // 2. Text score with a payload → text score_ok carrying logits.
+    raw.write_all(b"{\"type\":\"score_req\",\"id\":4,\
+                    \"payload\":{\"node\":9}}\n").unwrap();
+    let v = json::parse(&read_line(&mut raw)).unwrap();
+    assert_eq!(v.req_str("type").unwrap(), "score_ok");
+    assert_eq!(v.req_f64("id").unwrap(), 4.0);
+    let logits = v.req("payload").unwrap().req_arr("logits").unwrap();
+    assert_eq!(logits[0].as_f64(), Some(9.0));
+
+    // 3. Binary ping on the same connection → binary pong (the
+    //    reply starts with the magic, not `{`).
+    let ping = Frame::new(FrameKind::Ping, 5, 0,
+                          repro::util::json::Value::Null);
+    raw.write_all(&frame::encode_binary(&ping)).unwrap();
+    let hdr = read_exact(&mut raw, frame::HEADER_LEN);
+    assert_eq!(u16::from_le_bytes([hdr[0], hdr[1]]), frame::MAGIC);
+    assert_eq!(hdr[3], FrameKind::Pong.as_u8());
+    assert_eq!(u64::from_le_bytes(hdr[4..12].try_into().unwrap()), 5);
+
+    // 4. …and text again: the mode is per-frame, not per-connection.
+    raw.write_all(b"{\"type\":\"ping\",\"id\":6}\n").unwrap();
+    let v = json::parse(&read_line(&mut raw)).unwrap();
+    assert_eq!(v.req_str("type").unwrap(), "pong");
+    assert_eq!(v.req_f64("id").unwrap(), 6.0);
+
+    drop(raw);
+    drop(s.net);
+    responder.join().expect("responder exits");
+}

@@ -1,0 +1,76 @@
+//! e03 — malformed frame rejection: every wire-contract violation is
+//! answered with an explicit `bad_frame` error frame, the connection
+//! is closed, and the violation is counted (`net.proto_errors`).
+//! The server process survives all of it.
+
+use repro::net::frame::{self, ErrorCode, Frame, FrameKind, WireError};
+use repro::net::NetConfig;
+use repro::util::json::{self, Value};
+
+use crate::common::{auto_responder, connect, scripted, Scripted};
+
+/// Send raw bytes on a fresh connection; expect one `bad_frame`
+/// error frame followed by EOF.
+fn expect_bad_frame_then_close(s: &Scripted, bytes: &[u8]) {
+    let mut c = connect(&s.net);
+    c.send_raw(bytes).expect("send");
+    let reply = c.recv().expect("server answers before closing");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.error_code(), Some(ErrorCode::BadFrame),
+               "payload: {:?}", reply.payload);
+    assert_eq!(reply.epoch, 1, "error frames carry the epoch");
+    match c.recv() {
+        Err(WireError::Eof) => {}
+        other => panic!("connection must close, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_get_error_frames_then_close() {
+    let s = scripted(NetConfig::default());
+    let responder = auto_responder(s.rx, s.epoch.clone());
+
+    // Bad magic byte.
+    expect_bad_frame_then_close(&s, &[0x99u8; 24]);
+
+    // Right magic, unsupported version.
+    let mut bytes = frame::encode_binary(
+        &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+    bytes[2] = 9;
+    expect_bad_frame_then_close(&s, &bytes);
+
+    // Unknown frame kind.
+    let mut bytes = frame::encode_binary(
+        &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+    bytes[3] = 200;
+    expect_bad_frame_then_close(&s, &bytes);
+
+    // Payload bytes that are not JSON.
+    let mut bytes = frame::encode_binary(
+        &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+    bytes[20..24].copy_from_slice(&3u32.to_le_bytes());
+    bytes.extend_from_slice(b"}!{");
+    expect_bad_frame_then_close(&s, &bytes);
+
+    // Text line that is not a JSON object.
+    expect_bad_frame_then_close(&s, b"{nonsense\n");
+
+    // Well-framed score_req with a nonsense payload (no node).
+    expect_bad_frame_then_close(&s, &frame::encode_binary(
+        &Frame::new(FrameKind::ScoreReq, 2, 0,
+                    json::obj(vec![("nope", json::num(1.0))]))));
+
+    // Response kinds flowing client → server are protocol abuse.
+    expect_bad_frame_then_close(&s, &frame::encode_binary(
+        &Frame::new(FrameKind::Pong, 3, 0, Value::Null)));
+
+    // Every violation was counted, and the server still serves: a
+    // clean connection works after all of the above.
+    assert_eq!(s.net.stats().protocol_errors, 7);
+    let mut c = connect(&s.net);
+    assert_eq!(c.ping().expect("still serving"), 1);
+
+    drop(c);
+    drop(s.net);
+    responder.join().expect("responder exits");
+}

@@ -1,0 +1,60 @@
+//! e04 — payload caps: a frame whose declared payload exceeds
+//! `max_payload` is refused **before** the payload is read (the
+//! server never buffers it), with an `oversized` error frame carrying
+//! the offending length and the cap. Over-long text lines get the
+//! same answer.
+
+use std::time::{Duration, Instant};
+
+use repro::net::frame::{self, ErrorCode, Frame, FrameKind, WireError};
+use repro::net::NetConfig;
+use repro::util::json::Value;
+
+use crate::common::{auto_responder, connect, scripted};
+
+#[test]
+fn oversized_payloads_are_refused_without_buffering() {
+    let cfg = NetConfig { max_payload: 256, ..NetConfig::default() };
+    let s = scripted(cfg);
+    let responder = auto_responder(s.rx, s.epoch.clone());
+
+    // Binary: a header declaring a 1 MiB payload — which we never
+    // send. The refusal must arrive anyway, promptly: the decoder
+    // rejects on the declared length, it does not wait for bytes.
+    let mut c = connect(&s.net);
+    let mut hdr = frame::encode_binary(
+        &Frame::new(FrameKind::ScoreReq, 1, 0, Value::Null));
+    hdr[20..24].copy_from_slice(&((1u32 << 20).to_le_bytes()));
+    let t0 = Instant::now();
+    c.send_raw(&hdr).expect("send header");
+    let reply = c.recv().expect("refusal without the payload");
+    assert!(t0.elapsed() < Duration::from_secs(2),
+            "refusal should not wait on payload bytes");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.error_code(), Some(ErrorCode::Oversized));
+    assert_eq!(reply.payload.req_f64("len").unwrap(), (1u64 << 20) as f64);
+    assert_eq!(reply.payload.req_f64("max").unwrap(), 256.0);
+    match c.recv() {
+        Err(WireError::Eof) => {}
+        other => panic!("connection must close, got {other:?}"),
+    }
+
+    // Text: a line that runs past the cap before any newline.
+    let mut c = connect(&s.net);
+    let mut line = vec![b'{'];
+    line.extend(std::iter::repeat(b'x').take(300));
+    c.send_raw(&line).expect("send long line");
+    let reply = c.recv().expect("refusal");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.error_code(), Some(ErrorCode::Oversized));
+    match c.recv() {
+        Err(WireError::Eof) => {}
+        other => panic!("connection must close, got {other:?}"),
+    }
+
+    assert_eq!(s.net.stats().protocol_errors, 2);
+
+    drop(c);
+    drop(s.net);
+    responder.join().expect("responder exits");
+}

@@ -1,0 +1,62 @@
+//! e05 — epoch-pinned reads: a request whose header epoch is
+//! non-zero is answered only by that exact plan epoch; after a swap,
+//! the stale pin gets a well-formed `epoch_mismatch` error frame
+//! carrying both the pinned and the current epoch. Unpinned requests
+//! always ride the serving plan.
+
+use std::sync::atomic::Ordering;
+
+use repro::net::frame::{ErrorCode, FrameKind};
+use repro::net::{NetConfig, Outcome};
+
+use crate::common::{auto_responder, connect, scripted};
+
+#[test]
+fn pinned_reads_answer_or_mismatch_after_swap() {
+    let s = scripted(NetConfig::default());
+    let responder = auto_responder(s.rx, s.epoch.clone());
+    let mut c = connect(&s.net);
+
+    // Pin at the serving epoch: answered, stamped with that epoch.
+    match c.score_pinned(3, &[], Some(1)).expect("pinned score") {
+        Outcome::Ok(score) => assert_eq!(score.epoch, 1),
+        Outcome::Rejected(r) => panic!("fresh pin rejected: {r}"),
+    }
+
+    // Simulate a hot swap landing: the serving epoch moves to 5.
+    s.epoch.store(5, Ordering::Release);
+
+    // The stale pin is refused with a structured mismatch, not
+    // silently served from the wrong plan.
+    match c.score_pinned(3, &[], Some(1)).expect("stale pin") {
+        Outcome::Ok(_) => panic!("stale pin must not be served"),
+        Outcome::Rejected(rej) => {
+            assert_eq!(rej.code, ErrorCode::EpochMismatch);
+            assert_eq!(rej.pinned, Some(1));
+            assert_eq!(rej.current, Some(5));
+            assert_eq!(rej.epoch, 5,
+                       "error header carries the serving epoch");
+        }
+    }
+
+    // Unpinned (header epoch 0) rides the new plan.
+    match c.score(3, &[]).expect("unpinned score") {
+        Outcome::Ok(score) => assert_eq!(score.epoch, 5),
+        Outcome::Rejected(r) => panic!("unpinned rejected: {r}"),
+    }
+
+    // Text mode spells the pin as payload.pin_epoch; same contract.
+    c.send_raw(b"{\"type\":\"score_req\",\"id\":9,\
+                 \"payload\":{\"node\":1,\"pin_epoch\":1}}\n")
+        .expect("send text pin");
+    let reply = c.recv().expect("text reply");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.request_id, 9);
+    assert_eq!(reply.error_code(), Some(ErrorCode::EpochMismatch));
+    assert_eq!(reply.payload.req_f64("pinned").unwrap(), 1.0);
+    assert_eq!(reply.payload.req_f64("current").unwrap(), 5.0);
+
+    drop(c);
+    drop(s.net);
+    responder.join().expect("responder exits");
+}

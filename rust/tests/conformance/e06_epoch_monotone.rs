@@ -1,0 +1,84 @@
+//! e06 — live epoch monotonicity: against a real `InferenceServer`
+//! with a forced-drift resident session, every response carries the
+//! serving plan epoch, hot swaps bump it, and the values a single
+//! connection observes are non-decreasing.
+
+use std::time::Duration;
+
+use repro::net::frame::ErrorCode;
+use repro::net::Outcome;
+
+use crate::common::{connect, live_swapping};
+
+#[test]
+fn live_swaps_stamp_strictly_newer_epochs() {
+    let live = live_swapping();
+    let mut c = connect(&live.net);
+    let feats = vec![0.5f32; live.f_in];
+    let mut seen: Vec<u64> = Vec::new();
+
+    // Setup plan serves as epoch 1 (0 is reserved for "unpinned").
+    let e0 = c.ping().expect("ping");
+    assert_eq!(e0, 1);
+    seen.push(e0);
+
+    let s1 = c.score(0, &feats).expect("score").into_result()
+        .expect("fresh plan answers");
+    assert_eq!(s1.epoch, 1);
+    assert_eq!(s1.logits.len(), live.classes);
+    seen.push(s1.epoch);
+
+    // Land a guaranteed-real plan change over the wire: grow the
+    // graph, then wire the new node in (a bare edge insert could
+    // coalesce into a tensor-identical plan, which must NOT bump).
+    c.node_add().expect("node_add").into_result().expect("acked");
+    c.edge_insert(0, live.n).expect("edge_insert").into_result()
+        .expect("acked");
+
+    // The swap lands on the worker thread; give it a bounded window.
+    let mut e2 = 0;
+    for _ in 0..250 {
+        e2 = c.ping().expect("ping");
+        if e2 > 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(e2 > 1, "hot swap must bump the epoch (still {e2})");
+    seen.push(e2);
+
+    let s2 = c.score(0, &feats).expect("score").into_result()
+        .expect("post-swap answers");
+    assert!(s2.epoch >= e2);
+    seen.push(s2.epoch);
+
+    // A pin at the retired epoch is refused with both values.
+    match c.score_pinned(0, &feats, Some(1)).expect("stale pin") {
+        Outcome::Ok(_) => panic!("stale pin served after a swap"),
+        Outcome::Rejected(rej) => {
+            assert_eq!(rej.code, ErrorCode::EpochMismatch);
+            assert_eq!(rej.pinned, Some(1));
+            assert_eq!(rej.current, Some(s2.epoch));
+            seen.push(rej.epoch);
+        }
+    }
+
+    // Re-pinning at the serving epoch works.
+    let s3 = c.score_pinned(0, &feats, Some(s2.epoch))
+        .expect("fresh pin").into_result()
+        .expect("current pin answers");
+    assert_eq!(s3.epoch, s2.epoch);
+    seen.push(s3.epoch);
+
+    for w in seen.windows(2) {
+        assert!(w[0] <= w[1],
+                "epochs went backwards: {seen:?}");
+    }
+
+    drop(c);
+    let net_stats = live.net.drain(Duration::from_secs(5));
+    assert!(net_stats.accepted >= 1);
+    let stats = live.server.shutdown();
+    assert!(stats.plan_swaps >= 1,
+            "the epoch bump must come from a real swap");
+}

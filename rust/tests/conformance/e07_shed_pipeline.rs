@@ -1,0 +1,68 @@
+//! e07 — per-connection admission: pipelining past `max_inflight`
+//! sheds the excess request with a `retry_after` error frame — the
+//! server answers instead of buffering or hanging — and the
+//! connection stays usable once the pipeline drains.
+
+use std::collections::HashMap;
+
+use repro::net::frame::{ErrorCode, Frame, FrameKind};
+use repro::net::{NetConfig, Outcome};
+use repro::util::json;
+
+use crate::common::{connect, expect_score, reply_score, scripted};
+
+#[test]
+fn pipeline_overflow_sheds_with_retry_after() {
+    let cfg = NetConfig {
+        max_inflight: 2,
+        shed_after: 100,
+        ..NetConfig::default()
+    };
+    let s = scripted(cfg);
+    let mut c = connect(&s.net);
+
+    // Fire 3 scores without reading; the back end answers nothing
+    // yet, so requests 1 and 2 fill the pipeline and request 3 must
+    // be shed. The 5 s client deadline is the no-hang proof.
+    for id in 1..=3u64 {
+        c.send(&Frame::new(
+            FrameKind::ScoreReq, id, 0,
+            json::obj(vec![("node", json::num(id as f64))])))
+            .expect("send");
+    }
+    let reply = c.recv().expect("shed answer arrives unprompted");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.request_id, 3);
+    assert_eq!(reply.error_code(), Some(ErrorCode::RetryAfter));
+    let msg = reply.message().unwrap_or("");
+    assert!(msg.contains("pipeline"), "wrong shed reason: {msg:?}");
+    assert!(reply.payload.get("retry_after_ms").is_some(),
+            "retry_after frames must carry a back-off hint");
+
+    // Now answer the two admitted requests and collect their oks.
+    reply_score(expect_score(s.rx.recv().expect("req 1")), &s.epoch);
+    reply_score(expect_score(s.rx.recv().expect("req 2")), &s.epoch);
+    let mut got: HashMap<u64, Frame> = HashMap::new();
+    for _ in 0..2 {
+        let f = c.recv().expect("admitted reply");
+        assert_eq!(f.kind, FrameKind::ScoreOk);
+        assert!(got.insert(f.request_id, f).is_none());
+    }
+    assert!(got.contains_key(&1) && got.contains_key(&2));
+
+    // The shed was transient: with the pipeline drained, the same
+    // connection is admitted again.
+    let epoch = s.epoch.clone();
+    let rx = s.rx;
+    let handle = std::thread::spawn(move || {
+        reply_score(expect_score(rx.recv().expect("req 4")), &epoch);
+    });
+    match c.score(4, &[]).expect("score after drain") {
+        Outcome::Ok(score) => assert_eq!(score.logits[0], 4.0),
+        Outcome::Rejected(r) => panic!("re-admission failed: {r}"),
+    }
+    handle.join().expect("responder");
+
+    assert_eq!(s.net.stats().shed, 1);
+    assert_eq!(s.net.inflight(), 0, "shed must not leak inflight");
+}

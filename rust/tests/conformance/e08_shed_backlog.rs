@@ -1,0 +1,126 @@
+//! e08 — server-wide admission: load past `--shed-after` (or past
+//! the bounded batcher queue) yields `retry_after` error frames —
+//! never an unbounded queue, never a hang — across *all*
+//! connections, and recovers once the backlog drains.
+
+use std::collections::HashMap;
+use std::sync::mpsc::TryRecvError;
+
+use repro::net::frame::{ErrorCode, Frame, FrameKind};
+use repro::net::{NetConfig, Outcome};
+use repro::util::json;
+
+use crate::common::{connect, expect_score, reply_score,
+                    scripted_with};
+
+fn send_scores(c: &mut repro::net::Client, ids: std::ops::RangeInclusive<u64>) {
+    for id in ids {
+        c.send(&Frame::new(
+            FrameKind::ScoreReq, id, 0,
+            json::obj(vec![("node", json::num(id as f64))])))
+            .expect("send");
+    }
+}
+
+#[test]
+fn backlog_cap_sheds_across_connections() {
+    let cfg = NetConfig {
+        max_inflight: 100,
+        shed_after: 4,
+        ..NetConfig::default()
+    };
+    let s = scripted_with(cfg, 64);
+    let mut c1 = connect(&s.net);
+
+    // 6 pipelined requests against a shed_after of 4: exactly 4 are
+    // admitted, 2 come back as retry_after ("backlog").
+    send_scores(&mut c1, 1..=6);
+    let mut shed_ids = Vec::new();
+    for _ in 0..2 {
+        let f = c1.recv().expect("shed answer");
+        assert_eq!(f.kind, FrameKind::Error);
+        assert_eq!(f.error_code(), Some(ErrorCode::RetryAfter));
+        let msg = f.message().unwrap_or("").to_string();
+        assert!(msg.contains("backlog"), "wrong reason: {msg:?}");
+        shed_ids.push(f.request_id);
+    }
+    shed_ids.sort_unstable();
+    assert_eq!(shed_ids, vec![5, 6]);
+
+    // The gate is server-wide: a *different* connection is also shed
+    // while the backlog stands.
+    let mut c2 = connect(&s.net);
+    match c2.score(9, &[]).expect("answered, not hung") {
+        Outcome::Ok(_) => panic!("admitted past the backlog cap"),
+        Outcome::Rejected(rej) => {
+            assert_eq!(rej.code, ErrorCode::RetryAfter);
+            assert!(rej.retry_after_ms.is_some());
+        }
+    }
+
+    // Drain the backlog; the four admitted requests all answer.
+    for i in 0..4 {
+        reply_score(expect_score(
+            s.rx.recv().unwrap_or_else(|_| panic!("req {i}"))),
+            &s.epoch);
+    }
+    let mut got: HashMap<u64, Frame> = HashMap::new();
+    for _ in 0..4 {
+        let f = c1.recv().expect("admitted reply");
+        assert_eq!(f.kind, FrameKind::ScoreOk);
+        assert!(got.insert(f.request_id, f).is_none());
+    }
+    for id in 1..=4u64 {
+        assert!(got.contains_key(&id), "request {id} lost");
+    }
+
+    // Nothing beyond the admitted four ever reached the queue, and
+    // the inflight gauge is back to zero.
+    assert!(matches!(s.rx.try_recv(), Err(TryRecvError::Empty)));
+    assert_eq!(s.net.inflight(), 0);
+    assert_eq!(s.net.stats().shed, 3);
+
+    // Recovery: with the backlog gone, c2 is admitted again.
+    let epoch = s.epoch.clone();
+    let rx = s.rx;
+    let t = std::thread::spawn(move || {
+        reply_score(expect_score(rx.recv().expect("req")), &epoch);
+    });
+    match c2.score(9, &[]).expect("score") {
+        Outcome::Ok(score) => assert_eq!(score.logits[0], 9.0),
+        Outcome::Rejected(r) => panic!("recovery failed: {r}"),
+    }
+    t.join().expect("responder");
+}
+
+#[test]
+fn bounded_batcher_queue_sheds_instead_of_buffering() {
+    // A tiny scripted queue (cap 2) stands in for "the batcher is
+    // slower than the wire": overflow sheds at enqueue time.
+    let s = scripted_with(NetConfig::default(), 2);
+    let mut c = connect(&s.net);
+
+    send_scores(&mut c, 1..=5);
+    let mut shed = 0;
+    for _ in 0..3 {
+        let f = c.recv().expect("shed answer");
+        assert_eq!(f.kind, FrameKind::Error);
+        assert_eq!(f.error_code(), Some(ErrorCode::RetryAfter));
+        let msg = f.message().unwrap_or("").to_string();
+        assert!(msg.contains("queue"), "wrong reason: {msg:?}");
+        shed += 1;
+    }
+    assert_eq!(shed, 3);
+
+    // Exactly the queue bound made it through.
+    for _ in 0..2 {
+        reply_score(expect_score(s.rx.recv().expect("queued req")),
+                    &s.epoch);
+    }
+    assert!(matches!(s.rx.try_recv(), Err(TryRecvError::Empty)));
+    for _ in 0..2 {
+        let f = c.recv().expect("queued reply");
+        assert_eq!(f.kind, FrameKind::ScoreOk);
+    }
+    assert_eq!(s.net.inflight(), 0);
+}

@@ -1,0 +1,79 @@
+//! e09 — connection timeouts: idle connections are reclaimed after
+//! `read_timeout`, a peer stalling mid-frame is rejected with a
+//! `bad_frame` answer (not a held server thread), and outstanding
+//! work holds an otherwise-quiet connection open.
+
+use std::time::{Duration, Instant};
+
+use repro::net::frame::{self, ErrorCode, Frame, FrameKind, WireError};
+use repro::net::NetConfig;
+use repro::util::json::{self, Value};
+
+use crate::common::{connect, expect_score, reply_score, scripted};
+
+fn short_timeout() -> NetConfig {
+    NetConfig {
+        read_timeout: Duration::from_millis(150),
+        ..NetConfig::default()
+    }
+}
+
+#[test]
+fn idle_connections_are_closed() {
+    let s = scripted(short_timeout());
+    let mut c = connect(&s.net);
+    let t0 = Instant::now();
+    match c.recv() {
+        Err(WireError::Eof) => {}
+        other => panic!("expected idle close, got {other:?}"),
+    }
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(100),
+            "closed too eagerly ({waited:?})");
+    assert!(waited < Duration::from_secs(4),
+            "idle close took {waited:?}");
+}
+
+#[test]
+fn midframe_stall_is_rejected_not_held() {
+    let s = scripted(short_timeout());
+    let mut c = connect(&s.net);
+
+    // Ten bytes of a perfectly valid header… and then silence.
+    let bytes = frame::encode_binary(
+        &Frame::new(FrameKind::Ping, 1, 0, Value::Null));
+    c.send_raw(&bytes[..10]).expect("send partial header");
+
+    let reply = c.recv().expect("stall must be answered");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.error_code(), Some(ErrorCode::BadFrame));
+    assert!(reply.message().unwrap_or("").contains("stalled"),
+            "wrong reason: {:?}", reply.message());
+    match c.recv() {
+        Err(WireError::Eof) => {}
+        other => panic!("connection must close, got {other:?}"),
+    }
+    assert_eq!(s.net.stats().protocol_errors, 1);
+}
+
+#[test]
+fn outstanding_work_blocks_idle_close() {
+    let s = scripted(short_timeout());
+    let mut c = connect(&s.net);
+
+    // One admitted request, then wire silence far past the idle
+    // limit. The connection must survive until the answer flows.
+    c.send(&Frame::new(
+        FrameKind::ScoreReq, 1, 0,
+        json::obj(vec![("node", json::num(6.0))])))
+        .expect("send");
+    let req = expect_score(s.rx.recv().expect("req"));
+    std::thread::sleep(Duration::from_millis(400));
+    reply_score(req, &s.epoch);
+
+    let f = c.recv().expect("reply after quiet wait");
+    assert_eq!(f.kind, FrameKind::ScoreOk);
+    assert_eq!(f.request_id, 1);
+    assert_eq!(f.payload.req_arr("logits").unwrap()[0].as_f64(),
+               Some(6.0));
+}

@@ -1,0 +1,69 @@
+//! e10 — graceful drain: `begin_drain` stops admitting work, answers
+//! stragglers with a `draining` error frame, still flushes requests
+//! that were already in flight, and then closes connections once
+//! they are idle. `drain()` reports the accounting.
+
+use std::time::Duration;
+
+use repro::net::frame::{ErrorCode, Frame, FrameKind, WireError};
+use repro::net::NetConfig;
+use repro::util::json;
+
+use crate::common::{connect, expect_score, reply_score, scripted};
+
+#[test]
+fn drain_answers_inflight_and_refuses_new_work() {
+    let s = scripted(NetConfig::default());
+    let mut c = connect(&s.net);
+
+    // One request in flight — the test holds its reply hostage.
+    c.send(&Frame::new(
+        FrameKind::ScoreReq, 1, 0,
+        json::obj(vec![("node", json::num(1.0))])))
+        .expect("send");
+    let held = expect_score(s.rx.recv().expect("req 1"));
+
+    s.net.begin_drain();
+
+    // New work on the existing connection: answered with `draining`,
+    // not queued, not hung. (The held reply guarantees this error is
+    // the next frame on the wire.)
+    c.send(&Frame::new(
+        FrameKind::ScoreReq, 2, 0,
+        json::obj(vec![("node", json::num(2.0))])))
+        .expect("send during drain");
+    let reply = c.recv().expect("straggler answered");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.request_id, 2);
+    assert_eq!(reply.error_code(), Some(ErrorCode::Draining));
+
+    // New connections are not accepted. The TCP handshake may still
+    // land in the kernel backlog, so tolerate a successful connect —
+    // but no frame may ever be answered on it.
+    if let Ok(mut probe) = repro::net::Client::connect(
+        s.net.local_addr())
+    {
+        probe.set_read_timeout(Duration::from_millis(300)).unwrap();
+        assert!(probe.ping().is_err(),
+                "drained server must not serve new connections");
+    }
+
+    // The in-flight request still completes: drain flushes, it does
+    // not abandon.
+    reply_score(held, &s.epoch);
+    let f = c.recv().expect("in-flight reply during drain");
+    assert_eq!(f.kind, FrameKind::ScoreOk);
+    assert_eq!(f.request_id, 1);
+
+    // With nothing left in flight, the server closes the connection.
+    match c.recv() {
+        Err(WireError::Eof) => {}
+        other => panic!("expected close after flush, got {other:?}"),
+    }
+
+    let stats = s.net.drain(Duration::from_secs(5));
+    assert!(stats.accepted >= 1);
+    assert_eq!(stats.drained, 1);
+    assert_eq!(stats.shed, 0, "drain is not a shed");
+    drop(c);
+}

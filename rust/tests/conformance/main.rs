@@ -1,0 +1,37 @@
+//! Numbered wire-protocol conformance suite (`cargo test --test
+//! conformance`): one file per client-visible contract guarantee,
+//! e01 … e10, all runnable against the CPU-stub build (no PJRT
+//! artifacts, no network beyond loopback).
+//!
+//! Most guarantees run against a **scripted** back end: the TCP
+//! front end is spawned over a test-owned batcher channel, so the
+//! test controls exactly when (and whether) each request is
+//! answered — sheds, drains, and epoch flips become deterministic.
+//! The epoch guarantees that depend on real hot swaps (e06) run
+//! against a live `InferenceServer` with a forced-drift resident
+//! session instead.
+//!
+//! | file                | guarantee                                  |
+//! |---------------------|--------------------------------------------|
+//! | e01_framing         | binary frames: id correlation, every kind  |
+//! | e02_text_fallback   | JSON text mode; reply matches request mode |
+//! | e03_malformed       | malformed frames: error frame + close      |
+//! | e04_oversized       | payload caps enforced without buffering    |
+//! | e05_epoch_pin       | pinned reads answer or EpochMismatch       |
+//! | e06_epoch_monotone  | live swaps: epochs stamped, monotone       |
+//! | e07_shed_pipeline   | per-connection cap sheds with RetryAfter   |
+//! | e08_shed_backlog    | server-wide cap + queue bound, no hang     |
+//! | e09_timeouts        | idle close; mid-frame stall rejected       |
+//! | e10_drain           | drain answers in-flight, refuses new work  |
+
+mod common;
+mod e01_framing;
+mod e02_text_fallback;
+mod e03_malformed;
+mod e04_oversized;
+mod e05_epoch_pin;
+mod e06_epoch_monotone;
+mod e07_shed_pipeline;
+mod e08_shed_backlog;
+mod e09_timeouts;
+mod e10_drain;

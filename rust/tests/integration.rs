@@ -204,6 +204,7 @@ fn serving_path_round_trips() {
                             .collect(),
                         reply: otx,
                         submitted: std::time::Instant::now(),
+                        pin_epoch: None,
                     })).unwrap();
                 let ok = orx.recv().unwrap().into_result()
                     .expect("scored");

@@ -34,6 +34,7 @@ fn send_score(server: &coordinator::InferenceServer, node: u32,
             features,
             reply: otx,
             submitted: Instant::now(),
+            pin_epoch: None,
         }))
         .expect("queue open");
     orx.recv().expect("batcher alive")

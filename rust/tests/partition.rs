@@ -149,7 +149,7 @@ fn prop_stitched_hag_valid_and_equivalent() {
         let mut rng = Rng::seed_from_u64(7200 + case as u64);
         let g = random_graph(&mut rng);
         for k in [2usize, 3, 4] {
-            let cfg = SearchConfig {
+            let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
                 capacity: match rng.range_usize(0, 3) {
                     0 => g.n() / 4,
                     1 => g.n(),
@@ -277,7 +277,7 @@ fn search_partitioned_respects_custom_partition() {
     }
     let g = Graph::from_edges(12, &edges);
     let part = partition_bfs(&g, &PartitionConfig::new(2));
-    let cfg = SearchConfig {
+    let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
         capacity: usize::MAX,
         kind: AggregateKind::Set,
         pair_cap: usize::MAX,

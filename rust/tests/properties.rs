@@ -81,7 +81,7 @@ fn random_graph(rng: &mut Rng) -> Graph {
 }
 
 fn cfg_for(rng: &mut Rng, g: &Graph, kind: AggregateKind) -> SearchConfig {
-    SearchConfig {
+    SearchConfig { alpha: 1.0, beta: 1.0,
         capacity: match rng.range_usize(0, 3) {
             0 => g.n() / 4,
             1 => g.n(),
@@ -172,7 +172,7 @@ fn prop_cost_monotone_in_capacity() {
         let g = random_graph(&mut rng);
         let mut last = usize::MAX;
         for cap in [0usize, 2, 8, 32, 128, usize::MAX] {
-            let cfg = SearchConfig {
+            let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
                 capacity: cap,
                 kind: AggregateKind::Set,
                 pair_cap: usize::MAX,
@@ -204,7 +204,7 @@ fn prop_flat_kernel_matches_reference_byte_identical() {
         let g = random_graph(&mut rng);
         for pair_cap in [4usize, 64, usize::MAX] {
             for capacity in [g.n() / 4, usize::MAX] {
-                let cfg = SearchConfig {
+                let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
                     capacity,
                     kind: AggregateKind::Set,
                     pair_cap,
@@ -328,7 +328,7 @@ fn prop_sequential_prefix_merges_preserve_order() {
     for case in 0..CASES {
         let mut rng = Rng::seed_from_u64(6000 + case as u64);
         let g = random_graph(&mut rng);
-        let cfg = SearchConfig {
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
             capacity: usize::MAX,
             kind: AggregateKind::Sequential,
             pair_cap: usize::MAX,

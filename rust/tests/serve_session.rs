@@ -42,6 +42,12 @@ fn spawn(ds: &Dataset, spec: LowerSpec, swap: Option<SwapPolicy>)
 
 fn send_score(server: &coordinator::InferenceServer, node: u32,
               features: Vec<f32>) -> ScoreResponse {
+    send_score_pinned(server, node, features, None)
+}
+
+fn send_score_pinned(server: &coordinator::InferenceServer, node: u32,
+                     features: Vec<f32>, pin_epoch: Option<u64>)
+                     -> ScoreResponse {
     let (otx, orx) = coordinator::server::oneshot();
     server.client()
         .send(coordinator::ServerMsg::Score(coordinator::ScoreRequest {
@@ -49,6 +55,7 @@ fn send_score(server: &coordinator::InferenceServer, node: u32,
             features,
             reply: otx,
             submitted: Instant::now(),
+            pin_epoch,
         }))
         .expect("queue open");
     orx.recv().expect("batcher alive")
@@ -160,6 +167,67 @@ fn node_add_scores_after_session_fed_swap() {
     assert_eq!(out.stats.plan_matches_fresh, Some(true));
     let res = out.resident.unwrap();
     assert_eq!(res.session.n(), n as usize + 1);
+}
+
+#[test]
+fn epoch_pinned_reads_reject_after_forced_swap() {
+    let ds = bzr();
+    let n = ds.n() as u32;
+    let spec = LowerSpec::default().with_shards(2).with_drift(
+        DriftPolicy::default().with_threshold(-1.0));
+    let (server, classes) = spawn(&ds, spec,
+                                  Some(SwapPolicy { swap_plans: true,
+                                                    max_pending: 1 }));
+
+    // The setup plan serves as epoch 1 (0 is reserved for unpinned).
+    assert_eq!(server.epoch(), 1);
+    let ok = send_score(&server, 0, vec![0.5; ds.f_in])
+        .into_result().expect("fresh plan scores");
+    let e0 = ok.epoch;
+    assert_eq!(e0, 1);
+
+    // Pinning at the serving epoch answers normally.
+    let ok = send_score_pinned(&server, 0, vec![0.5; ds.f_in],
+                               Some(e0))
+        .into_result().expect("current pin answers");
+    assert_eq!(ok.epoch, e0);
+
+    // Force a real plan change: grow the graph, then wire the new
+    // node in (a bare edge insert can coalesce into a
+    // tensor-identical plan, which must not bump the epoch).
+    send_update(&server, GraphDelta::NodeAdd);
+    send_update(&server, GraphDelta::EdgeInsert { src: 0, dst: n });
+
+    let ok = send_score(&server, 0, vec![0.5; ds.f_in])
+        .into_result().expect("post-swap scores");
+    let e2 = ok.epoch;
+    assert!(e2 > e0, "swap must bump the epoch: {e0} -> {e2}");
+    assert_eq!(server.epoch(), e2);
+
+    // A stale pin gets a structured mismatch carrying both epochs —
+    // never a silent answer from the wrong plan.
+    match send_score_pinned(&server, 0, vec![0.5; ds.f_in], Some(e0)) {
+        ScoreResponse::Err(e) => {
+            assert_eq!(e.reject,
+                       ScoreReject::EpochMismatch { pinned: e0,
+                                                    current: e2 });
+            assert_eq!(e.epoch, e2);
+        }
+        r => panic!("stale pin must be rejected, got ok={}",
+                    r.is_ok()),
+    }
+
+    // Re-pinning at the new epoch works.
+    let ok = send_score_pinned(&server, 0, vec![0.5; ds.f_in],
+                               Some(e2))
+        .into_result().expect("re-pin answers");
+    assert_eq!(ok.epoch, e2);
+    assert_eq!(ok.logits.len(), classes);
+
+    let stats = server.shutdown();
+    assert!(stats.plan_swaps >= 1,
+            "epoch bump must come from a real swap: {stats:?}");
+    assert_eq!(stats.rejected, 1);
 }
 
 #[test]
