@@ -1,0 +1,85 @@
+//! haglint gate overhead: wall time of `analysis::verify` (the full
+//! hag + plan + cost pass pipeline) and `verify_stitched` over the
+//! generator corpus, reported per artifact size. The number that
+//! matters operationally is verify-vs-plan-compile: the swap-path
+//! gate runs at most once per accepted re-plan, so as long as
+//! verification stays a small multiple of `build_plan` it is free in
+//! context. Advisory — no hard threshold; shared runners are noisy.
+//!
+//! Run: `cargo bench --bench verify_overhead` (CI passes `--smoke`
+//! for one bounded size). Results land in `BENCH_verify.json`
+//! (override with `BENCH_JSON=...`) in the `benchkit-v1` schema.
+
+use std::path::Path;
+
+use repro::analysis::{self, corpus, HagCtx};
+use repro::datasets::{community_graph, CommunityCfg};
+use repro::hag::{build_plan, hag_search, AggregateKind, PlanConfig,
+                 SearchConfig};
+use repro::util::benchkit::{BenchJson, Bencher};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = Bencher::quick();
+    let mut json = BenchJson::new();
+
+    // Size sweep: verify cost should track the artifact's edge count.
+    let sizes: &[(usize, usize)] = if smoke {
+        &[(400, 4_000)]
+    } else {
+        &[(400, 4_000), (1_600, 16_000), (6_400, 64_000)]
+    };
+    for &(n, e) in sizes {
+        let cfg = CommunityCfg { n, e, communities: 8,
+                                 intra_frac: 0.9, zipf_exp: 0.9,
+                                 clone_frac: 0.5 };
+        let (g, _) = community_graph(&cfg, 11);
+        let scfg = SearchConfig { alpha: 1.0, beta: 1.0,
+                                  capacity: usize::MAX,
+                                  kind: AggregateKind::Set,
+                                  pair_cap: usize::MAX };
+        let (hag, _) = hag_search(&g, &scfg);
+        let t0 = std::time::Instant::now();
+        let plan = build_plan(&g, &hag, &PlanConfig::default());
+        let compile_s = t0.elapsed().as_secs_f64();
+
+        let s = b.run(&format!("verify_overhead/hag_plan_n{n}"), || {
+            let ctx = HagCtx::new(&g, &hag).with_plan(&plan);
+            let r = analysis::verify(&ctx);
+            assert!(r.is_clean(), "{}", r.format());
+        });
+        let verify_s = s.median.as_secs_f64();
+        json.push(&s);
+        json.derived_num(&format!("verify_overhead/n{n}/verify_ms"),
+                         verify_s * 1e3);
+        json.derived_num(
+            &format!("verify_overhead/n{n}/vs_plan_compile"),
+            verify_s / compile_s.max(1e-9));
+        println!("  n={n} e={e}: verify {:.3} ms, plan compile \
+                  {:.3} ms ({:.2}x)",
+                 verify_s * 1e3, compile_s * 1e3,
+                 verify_s / compile_s.max(1e-9));
+    }
+
+    // The full corpus pass CI runs as its hard gate.
+    let arts = corpus::corpus();
+    let s = b.run("verify_overhead/corpus", || {
+        for a in &arts {
+            let r = a.verify();
+            assert!(r.is_clean(), "{}: {}", a.name, r.format());
+        }
+    });
+    json.push(&s);
+    json.derived_num("verify_overhead/corpus/cases",
+                     arts.len() as f64);
+    json.derived_num("verify_overhead/corpus/ms",
+                     s.median.as_secs_f64() * 1e3);
+    println!("  corpus ({} artifacts): {:.1} ms/pass",
+             arts.len(), s.median.as_secs_f64() * 1e3);
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_verify.json".to_string());
+    json.write(Path::new(&out))
+        .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("wrote {out}");
+}

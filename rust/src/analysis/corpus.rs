@@ -1,0 +1,251 @@
+//! The shared verification corpus: deterministic seeded artifacts —
+//! generator graphs × {exact, windowed, capacity-capped} search
+//! configs × {single, sharded/stitched, repaired} lowering paths —
+//! that `repro verify --corpus` (hard CI gate),
+//! `rust/tests/analysis.rs` (clean-pass property + mutation-kill
+//! matrix) and `benches/verify_overhead.rs` all run over.
+
+use crate::datasets::{community_graph, ego_clique_set, CommunityCfg,
+                      EgoCliqueCfg};
+use crate::graph::Graph;
+use crate::hag::{build_plan, hag_search, AggregateKind,
+                 ExecutionPlan, Hag, PlanConfig, SearchConfig};
+use crate::incremental::IncrementalHag;
+use crate::partition::{partition_bfs, stitch_hags, subgraph,
+                       Partition, PartitionConfig};
+
+use super::{verify, verify_stitched, HagCtx, Report};
+
+/// One verifiable artifact: a HAG over its graph, optionally the
+/// compiled plan, the capacity it was searched under, the producer's
+/// claimed Definition-2 terms, and (for stitched artifacts) the
+/// partition plus per-shard HAGs.
+#[derive(Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub graph: Graph,
+    pub hag: Hag,
+    pub plan: Option<ExecutionPlan>,
+    pub capacity: Option<usize>,
+    pub claimed_terms: Option<(usize, usize)>,
+    pub part: Option<Partition>,
+    pub locals: Option<Vec<Hag>>,
+}
+
+impl Artifact {
+    /// Run every applicable pass: the hag/plan/cost pipeline, plus
+    /// the cross-shard passes when the artifact was stitched.
+    pub fn verify(&self) -> Report {
+        let mut ctx = HagCtx::new(&self.graph, &self.hag);
+        if let Some(p) = &self.plan {
+            ctx.plan = Some(p);
+        }
+        ctx.capacity = self.capacity;
+        ctx.claimed_terms = self.claimed_terms;
+        let mut r = verify(&ctx);
+        if let (Some(part), Some(locals)) = (&self.part, &self.locals)
+        {
+            r.merge(verify_stitched(&self.graph, part, locals,
+                                    &self.hag));
+        }
+        r
+    }
+}
+
+fn exact(kind: AggregateKind) -> SearchConfig {
+    SearchConfig { alpha: 1.0, beta: 1.0, capacity: usize::MAX,
+                   kind, pair_cap: usize::MAX }
+}
+
+/// The three search regimes the satellite test matrix names.
+fn configs(n: usize) -> Vec<(&'static str, SearchConfig)> {
+    vec![
+        ("exact", exact(AggregateKind::Set)),
+        ("windowed",
+         SearchConfig { pair_cap: 8, ..exact(AggregateKind::Set) }),
+        ("capped",
+         SearchConfig { capacity: (n / 8).max(1),
+                        ..exact(AggregateKind::Set) }),
+    ]
+}
+
+fn community() -> Graph {
+    community_graph(&CommunityCfg { n: 160, e: 1600, communities: 4,
+                                    intra_frac: 0.9, zipf_exp: 0.9,
+                                    clone_frac: 0.5 }, 11).0
+}
+
+fn ego_union() -> Graph {
+    let (graphs, _) = ego_clique_set(
+        &EgoCliqueCfg { num_graphs: 5, total_nodes: 100,
+                        total_edges: 700, classes: 2 }, 7);
+    Graph::disjoint_union(&graphs).0
+}
+
+/// Hub + chain + a clique of shared consumers: tiny, but exercises
+/// every plan shape (hub band skew, a level hierarchy, empty rows).
+fn star_chain() -> Graph {
+    let mut edges = Vec::new();
+    for u in 1..33u32 {
+        edges.push((u, 0)); // hub
+    }
+    for v in 33..64u32 {
+        edges.push((v - 1, v)); // chain
+    }
+    for v in 64..72u32 {
+        for u in 1..5u32 {
+            edges.push((u, v)); // shared {1,2,3,4} consumers
+        }
+    }
+    Graph::from_edges(72, &edges)
+}
+
+fn single(name: &str, g: Graph, cfg: &SearchConfig) -> Artifact {
+    let (hag, _) = hag_search(&g, cfg);
+    let plan = build_plan(&g, &hag, &PlanConfig::default());
+    let claimed = (hag.aggregations(), hag.data_transfers());
+    Artifact { name: name.to_string(), graph: g, hag,
+               plan: Some(plan), capacity: Some(cfg.capacity),
+               claimed_terms: Some(claimed), part: None,
+               locals: None }
+}
+
+fn sharded(name: &str, g: Graph, shards: usize,
+           cfg: &SearchConfig) -> Artifact {
+    let part = partition_bfs(&g, &PartitionConfig::new(shards));
+    let local_ids = part.local_ids();
+    let locals: Vec<Hag> = (0..part.n_shards)
+        .map(|s| hag_search(&subgraph(&g, &part, &local_ids, s),
+                            cfg).0)
+        .collect();
+    let hag = stitch_hags(&g, &part, &locals);
+    let plan = build_plan(&g, &hag, &PlanConfig::default());
+    let claimed = (hag.aggregations(), hag.data_transfers());
+    Artifact { name: name.to_string(), graph: g, hag,
+               plan: Some(plan), capacity: None,
+               claimed_terms: Some(claimed), part: Some(part),
+               locals: Some(locals) }
+}
+
+/// Drive a seeded delta stream (deletes with fallback, inserts, node
+/// adds, then a windowed re-merge) through an [`IncrementalHag`];
+/// returns the post-delta graph and the repaired incremental HAG.
+pub fn repaired_stream() -> (Graph, IncrementalHag) {
+    let g = community();
+    let (h, _) = hag_search(&g, &exact(AggregateKind::Set));
+    let mut ih = IncrementalHag::from_hag(&h);
+    // adjacency mirror (in-neighbor lists), maintained alongside
+    let mut adj: Vec<Vec<u32>> =
+        g.iter().map(|(_, ns)| ns.to_vec()).collect();
+    let mut rng = crate::util::Rng::seed_from_u64(23);
+    let mut dirty: Vec<u32> = Vec::new();
+    for step in 0..160usize {
+        let v = rng.range_u32(0, adj.len() as u32);
+        if step % 3 == 0 && !adj[v as usize].is_empty() {
+            // delete a random existing in-edge of v
+            let k = rng.range_usize(0, adj[v as usize].len());
+            let u = adj[v as usize].remove(k);
+            let nn = adj[v as usize].clone();
+            ih.delete_edge(u, v, &nn);
+            dirty.push(v);
+        } else {
+            // insert a fresh in-edge u -> v
+            let u = rng.range_u32(0, adj.len() as u32);
+            if u != v && !adj[v as usize].contains(&u) {
+                adj[v as usize].push(u);
+                ih.insert_edge(u, v);
+                dirty.push(v);
+            }
+        }
+    }
+    ih.add_node();
+    adj.push(Vec::new());
+    let w = (adj.len() - 1) as u32;
+    adj[w as usize].push(0);
+    ih.insert_edge(0, w);
+    dirty.push(w);
+    dirty.sort_unstable();
+    dirty.dedup();
+    ih.local_remerge(&dirty, 16, 64, usize::MAX);
+    // rebuild the post-delta graph from the adjacency mirror
+    let mut edges = Vec::new();
+    for (v, ns) in adj.iter().enumerate() {
+        for &u in ns {
+            edges.push((u, v as u32));
+        }
+    }
+    (Graph::from_edges(adj.len(), &edges), ih)
+}
+
+fn repaired(name: &str) -> Artifact {
+    let (g, ih) = repaired_stream();
+    let hag = ih.to_hag();
+    let plan = build_plan(&g, &hag, &PlanConfig::default());
+    let claimed = (hag.aggregations(), hag.data_transfers());
+    Artifact { name: name.to_string(), graph: g, hag,
+               plan: Some(plan), capacity: None,
+               claimed_terms: Some(claimed), part: None,
+               locals: None }
+}
+
+/// Build the full corpus. Deterministic: seeded generators, no
+/// wall-clock or randomness outside the fixed seeds.
+pub fn corpus() -> Vec<Artifact> {
+    let mut arts = Vec::new();
+    for (label, build) in [
+        ("community", community as fn() -> Graph),
+        ("ego-union", ego_union as fn() -> Graph),
+        ("star-chain", star_chain as fn() -> Graph),
+    ] {
+        for (cname, cfg) in configs(build().n()) {
+            arts.push(single(&format!("{label}/{cname}"), build(),
+                             &cfg));
+        }
+    }
+    // order-sensitive covers (no stitching: Set-only)
+    {
+        let g = star_chain();
+        let cfg = exact(AggregateKind::Sequential);
+        arts.push(single("star-chain/sequential", g, &cfg));
+    }
+    arts.push(sharded("community/sharded4", community(), 4,
+                      &exact(AggregateKind::Set)));
+    arts.push(sharded("ego-union/sharded3", ego_union(), 3,
+                      &SearchConfig { pair_cap: 8,
+                                      ..exact(AggregateKind::Set) }));
+    arts.push(repaired("community/repaired"));
+    arts
+}
+
+/// Verify every corpus artifact plus the incremental-IR stream case;
+/// returns `(name, report)` pairs for the `haglint-v1` envelope.
+pub fn verify_corpus() -> Vec<(String, Report)> {
+    let mut out: Vec<(String, Report)> = corpus()
+        .iter()
+        .map(|a| (a.name.clone(), a.verify()))
+        .collect();
+    let (_, ih) = repaired_stream();
+    out.push(("community/repaired-incr".to_string(),
+              super::check_incremental(&ih)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_covers_all_lowering_paths() {
+        let arts = corpus();
+        assert!(arts.iter().any(|a| a.part.is_some()),
+                "corpus needs a stitched artifact");
+        assert!(arts.iter().any(
+                    |a| a.hag.kind == AggregateKind::Sequential),
+                "corpus needs a sequential artifact");
+        assert!(arts.iter().any(|a| !a.hag.agg_nodes.is_empty()),
+                "corpus needs hierarchical HAGs");
+        assert!(arts.iter().any(|a| a.plan.as_ref()
+                    .map_or(false, |p| p.levels >= 1)),
+                "corpus needs a leveled plan");
+    }
+}

@@ -1,0 +1,183 @@
+//! Cost-consistency passes: Definition-2 terms recomputed from raw
+//! structure must agree with everything downstream that claims them —
+//! the `Hag` cost methods, the producer's per-shard term claims, and
+//! the `cost.pred_*` gauges the serving path records (obs/cost.rs,
+//! DESIGN.md §11).
+
+use crate::hag::Hag;
+use crate::obs::metrics::StatsSnapshot;
+
+use super::{HagCtx, Report};
+
+/// Definition-2 terms counted directly off the raw field vectors —
+/// deliberately *not* via the `Hag` methods, so a broken method (or a
+/// claim derived from a different HAG) cannot agree by construction.
+fn recount(hag: &Hag) -> (usize, usize, usize) {
+    let na = hag.agg_nodes.len();
+    let final_edges: usize =
+        hag.in_edges.iter().map(|l| l.len()).sum();
+    let e_hat = 2 * na + final_edges;
+    let aggregations = na
+        + hag.in_edges.iter()
+            .map(|l| l.len().saturating_sub(1)).sum::<usize>();
+    (aggregations, e_hat, e_hat - na)
+}
+
+/// `cost.term_consistency`: recomputed terms vs `Hag::cost*` methods,
+/// the α/β cost identity, and (when the producer supplied them) the
+/// claimed `(aggregations, data_transfers)` pair.
+pub fn term_consistency(ctx: &HagCtx, r: &mut Report) {
+    const ID: &str = "cost.term_consistency";
+    r.ran(ID);
+    let hag = ctx.hag;
+    let (aggs, transfers, core) = recount(hag);
+    let mut err = |entity: &str, msg: String, hint: &'static str,
+                   r: &mut Report| {
+        r.error(ID, entity.to_string(), msg, hint);
+    };
+    if hag.aggregations() != aggs {
+        err("aggregations",
+            format!("Hag::aggregations() = {} but the structure \
+                     counts {aggs}", hag.aggregations()),
+            "Definition-2 term drift between method and structure",
+            r);
+    }
+    if hag.data_transfers() != transfers {
+        err("data_transfers",
+            format!("Hag::data_transfers() = {} but the structure \
+                     counts {transfers}", hag.data_transfers()),
+            "Definition-2 term drift between method and structure",
+            r);
+    }
+    if hag.cost_core() != core {
+        err("cost_core",
+            format!("Hag::cost_core() = {} but e_hat - |V_A| = \
+                     {core}", hag.cost_core()),
+            "cost_core is the quantity Algorithm 3 minimizes; the \
+             method and the structure disagree", r);
+    }
+    // The calibration identity DriftPolicy prices swaps with
+    // (obs/cost.rs::calibrated_cost): cost(α,β) = α·core + (β−α)·n.
+    for (alpha, beta) in [(1.0f64, 1.0f64), (2.5, 0.8)] {
+        let want = alpha * core as f64
+            + (beta - alpha) * hag.n as f64;
+        let got = hag.cost(alpha, beta);
+        if (got - want).abs() > 1e-6 * want.abs().max(1.0) {
+            err("cost(alpha,beta)",
+                format!("cost({alpha},{beta}) = {got} but the \
+                         identity gives {want}"),
+                "Hag::cost must satisfy cost = alpha*cost_core + \
+                 (beta-alpha)*n; the drift policy prices swaps \
+                 through this identity", r);
+            break;
+        }
+    }
+    if let Some((claimed_aggs, claimed_transfers)) =
+        ctx.claimed_terms
+    {
+        if claimed_aggs != aggs || claimed_transfers != transfers {
+            err("claimed terms",
+                format!("producer claims (aggregations, transfers) \
+                         = ({claimed_aggs}, {claimed_transfers}), \
+                         structure counts ({aggs}, {transfers})"),
+                "the claimed Definition-2 terms (e.g. summed shard \
+                 terms) describe a different HAG than the one being \
+                 served", r);
+        }
+    }
+}
+
+/// `cost.gauges_match`: the `cost.pred_*` gauges
+/// (`record_plan_terms`) against the served HAG's recomputed terms
+/// and the session's per-shard term claims. Run right after the
+/// gauges are recorded on a swap.
+pub fn gauges_match(snap: &StatsSnapshot, hag: &Hag,
+                    shard_terms: &[(usize, usize)],
+                    r: &mut Report) {
+    const ID: &str = "cost.gauges_match";
+    r.ran(ID);
+    let (aggs, transfers, _) = recount(hag);
+    let check = |name: String, want: i64, r: &mut Report| {
+        let got = snap.gauge(&name);
+        if got != want {
+            r.error(ID, name,
+                    format!("gauge reads {got}, recomputed \
+                             Definition-2 term is {want}"),
+                    "cost.pred_* gauges are set-to-absolute from the \
+                     HAG at swap time (record_plan_terms); a \
+                     mismatch means the gauges describe a stale or \
+                     different plan");
+        }
+    };
+    check("cost.pred_aggregations".to_string(), aggs as i64, r);
+    check("cost.pred_transfers".to_string(), transfers as i64, r);
+    let mut sum_a = 0usize;
+    let mut sum_t = 0usize;
+    for (i, &(a, t)) in shard_terms.iter().enumerate() {
+        check(format!("cost.shard{i}.pred_aggregations"), a as i64,
+              r);
+        check(format!("cost.shard{i}.pred_transfers"), t as i64, r);
+        sum_a += a;
+        sum_t += t;
+    }
+    // Stitching only adds cross-shard work on top of shard-local
+    // terms, so the shard sums can never exceed the stitched totals.
+    if !shard_terms.is_empty() && (sum_a > aggs || sum_t > transfers)
+    {
+        r.error(ID, "shard term sums".to_string(),
+                format!("per-shard sums ({sum_a}, {sum_t}) exceed \
+                         stitched totals ({aggs}, {transfers})"),
+                "shard-local Definition-2 terms are a lower bound on \
+                 the stitched plan's; the shard claims are stale");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::hag::AggregateKind;
+    use crate::obs::cost::record_plan_terms;
+    use crate::obs::metrics::MetricsRegistry;
+
+    fn star() -> (Graph, Hag) {
+        let g = Graph::from_edges(
+            5, &[(1, 0), (2, 0), (3, 0), (4, 0)]);
+        let h = Hag::from_graph(&g, AggregateKind::Set);
+        (g, h)
+    }
+
+    #[test]
+    fn claimed_term_skew_is_caught() {
+        let (g, h) = star();
+        let ctx = crate::analysis::HagCtx::new(&g, &h)
+            .with_claimed_terms(h.aggregations() + 1,
+                                h.data_transfers());
+        let mut r = Report::new();
+        term_consistency(&ctx, &mut r);
+        assert!(r.flagged("cost.term_consistency"), "{}", r.format());
+        // and the honest claim is clean
+        let ctx = crate::analysis::HagCtx::new(&g, &h)
+            .with_claimed_terms(h.aggregations(),
+                                h.data_transfers());
+        let mut r = Report::new();
+        term_consistency(&ctx, &mut r);
+        assert!(r.is_clean(), "{}", r.format());
+    }
+
+    #[test]
+    fn gauge_skew_is_caught() {
+        let (_, h) = star();
+        let reg = MetricsRegistry::new();
+        let shards = [(h.aggregations(), h.data_transfers())];
+        record_plan_terms(&reg, &h, &shards);
+        let mut r = Report::new();
+        gauges_match(&reg.snapshot(), &h, &shards, &mut r);
+        assert!(r.is_clean(), "{}", r.format());
+        // desync one gauge: the audit must notice
+        reg.gauge("cost.pred_transfers").add(1);
+        let mut r = Report::new();
+        gauges_match(&reg.snapshot(), &h, &shards, &mut r);
+        assert!(r.flagged("cost.gauges_match"), "{}", r.format());
+    }
+}

@@ -1,0 +1,222 @@
+//! Cross-shard passes: a stitched HAG against the per-shard HAGs and
+//! partition it was stitched from (partition/stitch.rs).
+//!
+//! The stitcher's contract is fully deterministic — shard agg blocks
+//! concatenate in shard order with originals remapped through
+//! `members[s]`, then every cross-shard edge is appended verbatim as
+//! a direct slot — so these passes verify it by independent
+//! reconstruction: recompute each remap and compare entity by entity,
+//! with graceful diagnostics where the stitcher itself would assert.
+
+use std::borrow::Borrow;
+
+use crate::graph::Graph;
+use crate::hag::{Hag, Slot};
+use crate::partition::Partition;
+
+use super::Report;
+
+/// Run the three stitch passes.
+pub fn stitch_passes<H: Borrow<Hag>>(g: &Graph, part: &Partition,
+                                     locals: &[H],
+                                     stitched: &Hag) -> Report {
+    let mut r = Report::new();
+    if !preconditions(g, part, locals, stitched, &mut r) {
+        return r;
+    }
+    shard_blocks(part, locals, stitched, &mut r);
+    cross_edges(g, part, locals, stitched, &mut r);
+    term_sums(g, part, locals, stitched, &mut r);
+    r
+}
+
+/// Shared shape preconditions; reported under `stitch.shard_blocks`
+/// (the pass that owns block layout).
+fn preconditions<H: Borrow<Hag>>(g: &Graph, part: &Partition,
+                                 locals: &[H], stitched: &Hag,
+                                 r: &mut Report) -> bool {
+    const ID: &str = "stitch.shard_blocks";
+    let mut ok = true;
+    if locals.len() != part.n_shards {
+        r.error(ID, "locals".to_string(),
+                format!("{} shard HAGs for {} shards", locals.len(),
+                        part.n_shards),
+                "stitching takes exactly one HAG per shard");
+        ok = false;
+    }
+    if stitched.n != g.n() || part.shard_of.len() != g.n() {
+        r.error(ID, "n".to_string(),
+                format!("stitched.n = {}, |shard_of| = {}, graph n \
+                         = {}", stitched.n, part.shard_of.len(),
+                        g.n()),
+                "the stitched HAG and partition must cover the \
+                 input graph's node set");
+        ok = false;
+    }
+    for (s, lh) in locals.iter().enumerate() {
+        if s < part.members.len()
+            && lh.borrow().n != part.members[s].len()
+        {
+            r.error(ID, format!("shard {s}"),
+                    format!("shard HAG has {} nodes, member list has \
+                             {}", lh.borrow().n,
+                            part.members[s].len()),
+                    "each shard HAG is searched over exactly its \
+                     member subgraph");
+            ok = false;
+        }
+    }
+    ok
+}
+
+/// `stitch.shard_blocks`: shard agg blocks are contiguous in shard
+/// order, every operand remapped through the shard's own member list
+/// or its own earlier block — never another shard's slots — and each
+/// member node's in-list prefix is its remapped local list.
+fn shard_blocks<H: Borrow<Hag>>(part: &Partition, locals: &[H],
+                                stitched: &Hag, r: &mut Report) {
+    const ID: &str = "stitch.shard_blocks";
+    r.ran(ID);
+    let n = stitched.n;
+    let total_agg: usize =
+        locals.iter().map(|h| h.borrow().agg_nodes.len()).sum();
+    if stitched.agg_nodes.len() != total_agg {
+        r.error(ID, "agg_nodes".to_string(),
+                format!("stitched carries {} agg nodes, shard blocks \
+                         sum to {total_agg}",
+                        stitched.agg_nodes.len()),
+                "stitching concatenates shard agg blocks exactly; \
+                 no merges appear or vanish");
+        return;
+    }
+    let mut base = n;
+    for (s, lh) in locals.iter().enumerate() {
+        let lh = lh.borrow();
+        let mem = &part.members[s];
+        let remap = |slot: Slot| -> Slot {
+            if (slot as usize) < lh.n {
+                mem[slot as usize]
+            } else {
+                (base + (slot as usize - lh.n)) as Slot
+            }
+        };
+        for (i, a) in lh.agg_nodes.iter().enumerate() {
+            let got = stitched.agg_nodes[base - n + i];
+            let (wl, wr) = (remap(a.left), remap(a.right));
+            if got.left != wl || got.right != wr {
+                r.error(ID, format!("shard {s} agg {i}"),
+                        format!("stitched operands ({}, {}) != \
+                                 remapped local operands ({wl}, \
+                                 {wr})", got.left, got.right),
+                        "a shard's merges may only reference its own \
+                         members and its own earlier block slots; \
+                         re-stitch from the shard HAGs");
+                return;
+            }
+        }
+        for (lv, list) in lh.in_edges.iter().enumerate() {
+            let v = mem[lv] as usize;
+            let got = &stitched.in_edges[v];
+            if got.len() < list.len()
+                || got[..list.len()].iter().zip(list.iter())
+                    .any(|(&gs, &ls)| gs != remap(ls))
+            {
+                r.error(ID, format!("node {v} (shard {s})"),
+                        format!("in-list prefix does not match the \
+                                 remapped shard-local list of {} \
+                                 slot(s)", list.len()),
+                        "a member node's in-list is its shard-local \
+                         list (remapped) followed by cross-shard \
+                         fallback edges only");
+                return;
+            }
+        }
+        base += lh.agg_nodes.len();
+    }
+}
+
+/// `stitch.cross_edges`: after the shard-local prefix, each node's
+/// in-list carries exactly its cross-shard neighbors, verbatim as
+/// direct original slots (the direct-aggregation fallback), and
+/// nothing else.
+fn cross_edges<H: Borrow<Hag>>(g: &Graph, part: &Partition,
+                               locals: &[H], stitched: &Hag,
+                               r: &mut Report) {
+    const ID: &str = "stitch.cross_edges";
+    r.ran(ID);
+    // local in-list length per node (the prefix the shard owns)
+    let mut local_len = vec![0usize; stitched.n];
+    for (s, lh) in locals.iter().enumerate() {
+        let lh = lh.borrow();
+        for (lv, list) in lh.in_edges.iter().enumerate() {
+            local_len[part.members[s][lv] as usize] = list.len();
+        }
+    }
+    for (v, ns) in g.iter() {
+        let sv = part.shard_of[v as usize];
+        let want: Vec<Slot> = ns.iter().copied()
+            .filter(|&u| part.shard_of[u as usize] != sv)
+            .collect();
+        let list = &stitched.in_edges[v as usize];
+        let ll = local_len[v as usize].min(list.len());
+        let got = &list[ll..];
+        if got != want.as_slice() {
+            r.error(ID, format!("node {v}"),
+                    format!("cross-shard tail has {} slot(s), the \
+                             graph cuts {} edge(s) at this node",
+                            got.len(), want.len()),
+                    "every cut edge falls back to one direct \
+                     aggregation slot, appended in neighbor order; \
+                     a dropped or reordered tail breaks Theorem-1 \
+                     equivalence");
+            return;
+        }
+    }
+}
+
+/// `stitch.term_sums`: the stitch cost identity
+/// `cost_core(stitched) = sum_s cost_core(shard_s) + cut_edges`
+/// (partition/stitch.rs module docs), and per-shard Definition-2
+/// term sums never exceed the stitched totals.
+fn term_sums<H: Borrow<Hag>>(g: &Graph, part: &Partition,
+                             locals: &[H], stitched: &Hag,
+                             r: &mut Report) {
+    const ID: &str = "stitch.term_sums";
+    r.ran(ID);
+    let cut_edges: usize = g.iter()
+        .map(|(v, ns)| {
+            let sv = part.shard_of[v as usize];
+            ns.iter()
+                .filter(|&&u| part.shard_of[u as usize] != sv)
+                .count()
+        })
+        .sum();
+    let local_core: usize =
+        locals.iter().map(|h| h.borrow().cost_core()).sum();
+    if stitched.cost_core() != local_core + cut_edges {
+        r.error(ID, "cost_core".to_string(),
+                format!("stitched cost_core = {} but shard sum {} + \
+                         cut edges {cut_edges} = {}",
+                        stitched.cost_core(), local_core,
+                        local_core + cut_edges),
+                "the stitch identity (shard cores plus cut edges) \
+                 must hold exactly; a shard HAG or the stitched \
+                 in-lists were modified after stitching");
+    }
+    let sum_aggs: usize =
+        locals.iter().map(|h| h.borrow().aggregations()).sum();
+    let sum_transfers: usize =
+        locals.iter().map(|h| h.borrow().data_transfers()).sum();
+    if sum_aggs > stitched.aggregations()
+        || sum_transfers > stitched.data_transfers()
+    {
+        r.error(ID, "shard terms".to_string(),
+                format!("per-shard sums ({sum_aggs}, \
+                         {sum_transfers}) exceed stitched totals \
+                         ({}, {})", stitched.aggregations(),
+                        stitched.data_transfers()),
+                "shard-local terms lower-bound the stitched plan's; \
+                 the shard HAGs are stale relative to the stitched \
+                 one");
+    }
+}

@@ -1,0 +1,94 @@
+//! Semantic exactness: the static Theorem-1 check.
+//!
+//! `hag.cover_exact` symbolically expands every aggregation node's
+//! cover (paper Eq. 2/3) with one memoized pass in creation order —
+//! creation order is topological, so each operand's cover is already
+//! available — then checks, per original node, that the concatenated
+//! covers of its final in-list reproduce its input-graph neighborhood
+//! exactly: as a multiset for `Set` aggregation (catching both missed
+//! and double-counted neighbors), verbatim in order for `Sequential`.
+//! This subsumes the probabilistic oracle
+//! (`hag/equivalence.rs::check_equivalence_probabilistic`) on swap
+//! paths: no execution, no false negatives.
+//!
+//! Only runs on a structurally clean HAG (gated by
+//! [`super::structural::hag_passes`]) so cover expansion can index
+//! operands unchecked.
+
+use crate::hag::AggregateKind;
+
+use super::{HagCtx, Report};
+
+/// `hag.cover_exact`.
+pub fn cover_exact(ctx: &HagCtx, r: &mut Report) {
+    const ID: &str = "hag.cover_exact";
+    r.ran(ID);
+    let hag = ctx.hag;
+    let g = ctx.graph;
+    if g.n() != hag.n {
+        r.error(ID, "n".to_string(),
+                format!("HAG has {} original nodes, graph has {}",
+                        hag.n, g.n()),
+                "a HAG is only equivalent to the graph it was built \
+                 from");
+        return;
+    }
+    let n = hag.n;
+    let set = hag.kind == AggregateKind::Set;
+
+    // Memoized cover expansion, creation order (topological).
+    let mut covers: Vec<Vec<u32>> = Vec::with_capacity(
+        hag.agg_nodes.len());
+    for a in &hag.agg_nodes {
+        let mut c = Vec::new();
+        for op in [a.left, a.right] {
+            if (op as usize) < n {
+                c.push(op);
+            } else {
+                c.extend_from_slice(&covers[op as usize - n]);
+            }
+        }
+        if set {
+            c.sort_unstable();
+        }
+        covers.push(c);
+    }
+
+    let mut got = Vec::new();
+    let mut want = Vec::new();
+    for v in 0..n {
+        got.clear();
+        for &s in &hag.in_edges[v] {
+            if (s as usize) < n {
+                got.push(s);
+            } else {
+                got.extend_from_slice(&covers[s as usize - n]);
+            }
+        }
+        want.clear();
+        want.extend_from_slice(g.neighbors(v as u32));
+        if set {
+            got.sort_unstable();
+            want.sort_unstable();
+        }
+        if got != want {
+            // classify the first divergence for the diagnostic
+            let detail = if got.len() != want.len() {
+                format!("cover has {} element(s), N(v) has {}",
+                        got.len(), want.len())
+            } else {
+                let i = got.iter().zip(want.iter())
+                    .position(|(a, b)| a != b).unwrap_or(0);
+                format!("first divergence at position {i}: cover \
+                         yields {}, N(v) has {}", got[i], want[i])
+            };
+            r.error(ID, format!("node {v}"), detail,
+                    "the final in-list's expanded covers must \
+                     reproduce the node's neighborhood exactly \
+                     (Theorem 1); the producing search/stitch/repair \
+                     step dropped, duplicated or reordered a \
+                     contribution");
+            return; // one witness is enough; avoid diagnostic floods
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Incremental-IR passes over [`IncrementalHag`]'s raw state
+//! (incremental/repair.rs): the bit-31 agg-id-space discipline,
+//! liveness/ordering of references, refcount exactness, and the
+//! maintained counters. `IncrementalHag::check` is a thin wrapper
+//! over [`incr_passes`], so the engine's self-check and the verifier
+//! can never disagree.
+//!
+//! The mutation-kill tests for these passes live here (not in
+//! `rust/tests/analysis.rs`): corrupting an `IncrementalHag` needs
+//! the crate-internal `raw_parts_mut` window.
+
+use crate::incremental::repair::{agg_id, is_agg};
+use crate::incremental::IncrementalHag;
+
+use super::Report;
+
+/// Run the four incremental passes in dependency order (reference
+/// decoding gates everything that indexes through agg ids).
+pub fn incr_passes(ih: &IncrementalHag) -> Report {
+    let mut r = Report::new();
+    id_space(ih, &mut r);
+    if !r.is_clean() {
+        return r;
+    }
+    topo_order(ih, &mut r);
+    refcounts(ih, &mut r);
+    counters(ih, &mut r);
+    r
+}
+
+/// `incr.id_space`: every internal slot — live agg operands and final
+/// in-slots — decodes to a real node (`< n`) or an allocated agg id.
+fn id_space(ih: &IncrementalHag, r: &mut Report) {
+    const ID: &str = "incr.id_space";
+    r.ran(ID);
+    let (n, aggs, _, in_edges, _, _) = ih.raw_parts();
+    let mut check = |entity: String, s: u32, r: &mut Report| {
+        if is_agg(s) {
+            if agg_id(s) >= aggs.len() {
+                r.error(ID, entity,
+                        format!("agg id {} >= allocated id space {}",
+                                agg_id(s), aggs.len()),
+                        "bit-31 slots must decode to an allocated \
+                         aggregation id; ids are append-only");
+            }
+        } else if (s as usize) >= n {
+            r.error(ID, entity,
+                    format!("node slot {s} >= n = {n}"),
+                    "untagged slots are original node ids");
+        }
+    };
+    for (i, a) in aggs.iter().enumerate() {
+        if let Some(a) = a {
+            check(format!("agg {i}"), a.left, r);
+            check(format!("agg {i}"), a.right, r);
+        }
+    }
+    for (v, l) in in_edges.iter().enumerate() {
+        for &s in l {
+            check(format!("node {v}"), s, r);
+        }
+    }
+}
+
+/// `incr.topo_order`: live-reference discipline — a live agg's
+/// operands reference *live*, *earlier* aggs (id order is creation
+/// order, hence topological), and finals never consume GC'd nodes.
+fn topo_order(ih: &IncrementalHag, r: &mut Report) {
+    const ID: &str = "incr.topo_order";
+    r.ran(ID);
+    let (_, aggs, _, in_edges, _, _) = ih.raw_parts();
+    for (i, a) in aggs.iter().enumerate() {
+        if let Some(a) = a {
+            for op in [a.left, a.right] {
+                if !is_agg(op) {
+                    continue;
+                }
+                if aggs[agg_id(op)].is_none() {
+                    r.error(ID, format!("agg {i}"),
+                            format!("references garbage-collected \
+                                     agg {}", agg_id(op)),
+                            "the refcount cascade must keep every \
+                             referenced node alive");
+                } else if agg_id(op) >= i {
+                    r.error(ID, format!("agg {i}"),
+                            format!("references non-earlier agg {}",
+                                    agg_id(op)),
+                            "ids are append-only, so a merge may \
+                             only consume already-created nodes");
+                }
+            }
+        }
+    }
+    for (v, l) in in_edges.iter().enumerate() {
+        for &s in l {
+            if is_agg(s) && aggs[agg_id(s)].is_none() {
+                r.error(ID, format!("node {v}"),
+                        format!("in-list references \
+                                 garbage-collected agg {}",
+                                agg_id(s)),
+                        "finals hold a reference; collection of a \
+                         still-consumed node is a refcount bug");
+            }
+        }
+    }
+}
+
+/// `incr.refcounts`: stored refcounts equal the recomputed live
+/// reference counts (finals + live agg operands).
+fn refcounts(ih: &IncrementalHag, r: &mut Report) {
+    const ID: &str = "incr.refcounts";
+    r.ran(ID);
+    let (_, aggs, refs, in_edges, _, _) = ih.raw_parts();
+    let mut want = vec![0u32; aggs.len()];
+    for a in aggs.iter().flatten() {
+        for op in [a.left, a.right] {
+            if is_agg(op) {
+                want[agg_id(op)] += 1;
+            }
+        }
+    }
+    for l in in_edges {
+        for &s in l {
+            if is_agg(s) {
+                want[agg_id(s)] += 1;
+            }
+        }
+    }
+    for (i, (&got, &want)) in
+        refs.iter().zip(want.iter()).enumerate()
+    {
+        if aggs[i].is_some() && got != want {
+            r.error(ID, format!("agg {i}"),
+                    format!("stored refcount {got} != recomputed \
+                             {want}"),
+                    "acquire/release must bracket every rewire; a \
+                     desynced refcount GCs live nodes or leaks dead \
+                     ones");
+        }
+    }
+}
+
+/// `incr.counters`: the maintained `live` / `final_edges` counters
+/// are exact and in-lists are duplicate-free (set AGGREGATE).
+fn counters(ih: &IncrementalHag, r: &mut Report) {
+    const ID: &str = "incr.counters";
+    r.ran(ID);
+    let (_, aggs, _, in_edges, live, final_edges) = ih.raw_parts();
+    let actual_live = aggs.iter().filter(|a| a.is_some()).count();
+    if actual_live != live {
+        r.error(ID, "live".to_string(),
+                format!("maintained live count {live} != actual \
+                         {actual_live}"),
+                "live is the cost-model input (cost_core = live + \
+                 final_edges); every take()/push must adjust it");
+    }
+    let actual_edges: usize =
+        in_edges.iter().map(|l| l.len()).sum();
+    if actual_edges != final_edges {
+        r.error(ID, "final_edges".to_string(),
+                format!("maintained edge count {final_edges} != \
+                         actual {actual_edges}"),
+                "final_edges is the cost-model input; every in-list \
+                 edit must adjust it");
+    }
+    let mut scratch = Vec::new();
+    for (v, l) in in_edges.iter().enumerate() {
+        scratch.clear();
+        scratch.extend_from_slice(l);
+        scratch.sort_unstable();
+        let before = scratch.len();
+        scratch.dedup();
+        if scratch.len() != before {
+            r.error(ID, format!("node {v}"),
+                    format!("in-list of {before} slots has \
+                             duplicates"),
+                    "set-AGGREGATE in-lists are duplicate-free; a \
+                     repeated slot double-counts its cover");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::hag::{hag_search, AggregateKind, SearchConfig};
+    use crate::incremental::repair::agg_slot;
+
+    /// finals 3,4,5 share {0,1,2}: the exact search chains two merges
+    /// (agg0 = (0,1), agg1 = (agg0, 2)), giving a deterministic
+    /// two-agg incremental HAG to corrupt.
+    fn chained() -> IncrementalHag {
+        let mut edges = Vec::new();
+        for v in 3..6u32 {
+            for u in 0..3u32 {
+                edges.push((u, v));
+            }
+        }
+        let g = Graph::from_edges(6, &edges);
+        let (h, _) = hag_search(&g, &SearchConfig {
+            alpha: 1.0, beta: 1.0, capacity: usize::MAX,
+            kind: AggregateKind::Set, pair_cap: usize::MAX });
+        let ih = IncrementalHag::from_hag(&h);
+        assert_eq!(ih.live_aggs(), 2, "fixture needs a chain");
+        assert!(incr_passes(&ih).is_clean());
+        ih
+    }
+
+    #[test]
+    fn kill_id_space_on_unallocated_agg_id() {
+        let mut ih = chained();
+        {
+            let (aggs, _, in_edges, _, final_edges) =
+                ih.raw_parts_mut();
+            let bogus = agg_slot(aggs.len() + 7);
+            in_edges[0].push(bogus);
+            *final_edges += 1; // keep incr.counters honest
+        }
+        let r = incr_passes(&ih);
+        assert!(r.flagged("incr.id_space"), "{}", r.format());
+        assert!(ih.check().is_err());
+    }
+
+    #[test]
+    fn kill_topo_order_on_forward_reference() {
+        let mut ih = chained();
+        {
+            // agg0's left operand (an original) now points forward at
+            // agg1; bump agg1's refcount so only the ordering pass,
+            // not incr.refcounts, can catch it.
+            let (aggs, refs, _, _, _) = ih.raw_parts_mut();
+            let a0 = aggs[0].as_mut().expect("agg0 live");
+            assert!(!crate::incremental::repair::is_agg(a0.left));
+            a0.left = agg_slot(1);
+            refs[1] += 1;
+        }
+        let r = incr_passes(&ih);
+        assert!(r.flagged("incr.topo_order"), "{}", r.format());
+        assert!(!r.flagged("incr.refcounts"),
+                "mutation must be invisible to the refcount pass: {}",
+                r.format());
+    }
+
+    #[test]
+    fn kill_refcounts_on_desync() {
+        let mut ih = chained();
+        {
+            let (_, refs, _, _, _) = ih.raw_parts_mut();
+            refs[0] += 1;
+        }
+        let r = incr_passes(&ih);
+        assert!(r.flagged("incr.refcounts"), "{}", r.format());
+        assert!(!r.flagged("incr.topo_order"), "{}", r.format());
+    }
+
+    #[test]
+    fn kill_counters_on_live_skew() {
+        let mut ih = chained();
+        {
+            let (_, _, _, live, _) = ih.raw_parts_mut();
+            *live += 1;
+        }
+        let r = incr_passes(&ih);
+        assert!(r.flagged("incr.counters"), "{}", r.format());
+    }
+
+    #[test]
+    fn kill_counters_on_duplicate_inslot() {
+        let mut ih = chained();
+        {
+            // repeat an original (untagged) slot so refcounts stay
+            // untouched and only the duplicate check can fire
+            let (_, _, in_edges, _, final_edges) =
+                ih.raw_parts_mut();
+            in_edges[0].push(2);
+            in_edges[0].push(2);
+            *final_edges += 2;
+        }
+        let r = incr_passes(&ih);
+        assert!(r.flagged("incr.counters"), "{}", r.format());
+        assert!(!r.flagged("incr.refcounts"), "{}", r.format());
+    }
+}

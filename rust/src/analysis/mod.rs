@@ -1,0 +1,567 @@
+//! `haglint` — multi-pass static verification of HAGs and plans.
+//!
+//! Every correctness claim the paper makes about a lowered artifact —
+//! Theorem-1 equivalence of a HAG to its GNN-graph, Definition-2 cost
+//! terms, the plan tensors' encoding contract — is checked here
+//! *statically*: by inspecting the artifact's structure, never by
+//! executing it. The dynamic oracles (`hag/equivalence.rs`'s
+//! probabilistic check, `plan() == plan_fresh()` tensor identity)
+//! stay as test-time ground truth; this module is the cheap,
+//! execution-free gate the serving path can afford to run on every
+//! stitch / repair / hot swap.
+//!
+//! Structure:
+//! * a pass inventory ([`PASSES`]) over three IRs —
+//!   [`Hag`](crate::hag::Hag) vs its [`Graph`](crate::graph::Graph),
+//!   the compiled [`ExecutionPlan`](crate::hag::ExecutionPlan), and
+//!   the [`IncrementalHag`](crate::incremental::IncrementalHag) — in
+//!   five classes: structural, exactness, cost, cross-shard,
+//!   incremental;
+//! * typed diagnostics ([`Diagnostic`]: pass id, severity, offending
+//!   entity, fix hint) collected into a [`Report`] with a
+//!   machine-readable `haglint-v1` JSON form;
+//! * hot-path gates ([`gate_plan`] / [`gate_hag`] /
+//!   [`gate_stitched`] / [`gate_cost_gauges`]) wired into
+//!   `Session::plan`, the stitcher, `StreamEngine::install_hag` and
+//!   the serving swap path — always on in debug builds, opt-in via
+//!   `REPRO_VERIFY=1` in release, with `verify.*` metrics so the
+//!   gate's own cost is observable;
+//! * a mutation harness ([`mutate`]) proving no pass is vacuous: one
+//!   targeted corruption per pass, each killed by exactly the pass
+//!   that owns it (`rust/tests/analysis.rs` and the in-crate
+//!   incremental kill tests);
+//! * a shared verification [`corpus`] (generator graphs × search
+//!   configs × single/stitched/repaired artifacts) behind the
+//!   `repro verify --corpus` CI gate and `benches/verify_overhead.rs`.
+//!
+//! Pass ordering is dependency-gated: exactness / cost / plan passes
+//! only run once the structural passes they index through are clean,
+//! so a corrupt artifact produces diagnostics, never a panic.
+
+pub mod corpus;
+pub mod cost;
+pub mod crosshard;
+pub mod exactness;
+pub mod incremental;
+pub mod mutate;
+pub mod srclint;
+pub mod structural;
+
+use std::borrow::Borrow;
+use std::sync::OnceLock;
+
+use crate::graph::Graph;
+use crate::hag::{ExecutionPlan, Hag};
+use crate::incremental::IncrementalHag;
+use crate::obs::metrics::{MetricsRegistry, StatsSnapshot};
+use crate::partition::Partition;
+use crate::util::json::{arr, num, obj, str_, Value};
+
+/// Diagnostic severity. `Error` fails gates and CI; `Warning` is
+/// surfaced but never fails a verification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One finding: which pass, how bad, where, what, and how to fix it.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Pass id from [`PASSES`] (e.g. `"hag.cover_exact"`).
+    pub pass: &'static str,
+    pub severity: Severity,
+    /// The offending entity (`"agg 7"`, `"node 12"`, `"band 2"`, …).
+    pub entity: String,
+    pub message: String,
+    /// Actionable fix hint.
+    pub hint: &'static str,
+}
+
+/// The result of running a set of passes over one artifact.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Pass ids that ran to completion (skipped dependents absent).
+    pub passes_run: Vec<&'static str>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub(crate) fn ran(&mut self, pass: &'static str) {
+        if !self.passes_run.contains(&pass) {
+            self.passes_run.push(pass);
+        }
+    }
+
+    pub(crate) fn error(&mut self, pass: &'static str, entity: String,
+                        message: String, hint: &'static str) {
+        self.diagnostics.push(Diagnostic {
+            pass,
+            severity: Severity::Error,
+            entity,
+            message,
+            hint,
+        });
+    }
+
+    /// Errors only (warnings never fail a gate).
+    pub fn errors(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Did `pass` emit at least one error? (The mutation-kill
+    /// assertion.)
+    pub fn flagged(&self, pass: &str) -> bool {
+        self.diagnostics
+            .iter()
+            .any(|d| d.pass == pass && d.severity == Severity::Error)
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        for p in other.passes_run {
+            self.ran(p);
+        }
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    /// Human-readable listing, one line per diagnostic.
+    pub fn format(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{:7} [{}] {}: {} (fix: {})\n",
+                                  d.severity.as_str(), d.pass,
+                                  d.entity, d.message, d.hint));
+        }
+        out
+    }
+
+    /// JSON form of this report's body (the `haglint-v1` envelope is
+    /// assembled per-run by [`corpus_report_json`]).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("passes_run",
+             arr(self.passes_run.iter().map(|p| str_(*p)).collect())),
+            ("errors", num(self.errors() as f64)),
+            ("diagnostics",
+             arr(self.diagnostics.iter().map(|d| {
+                 obj(vec![
+                     ("pass", str_(d.pass)),
+                     ("severity", str_(d.severity.as_str())),
+                     ("entity", str_(d.entity.clone())),
+                     ("message", str_(d.message.clone())),
+                     ("hint", str_(d.hint)),
+                 ])
+             }).collect())),
+        ])
+    }
+}
+
+/// Pass classes (ISSUE taxonomy; DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassClass {
+    Structural,
+    Exactness,
+    Cost,
+    CrossShard,
+    Incremental,
+}
+
+impl PassClass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PassClass::Structural => "structural",
+            PassClass::Exactness => "exactness",
+            PassClass::Cost => "cost",
+            PassClass::CrossShard => "cross-shard",
+            PassClass::Incremental => "incremental",
+        }
+    }
+}
+
+/// Static metadata for one pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PassInfo {
+    pub id: &'static str,
+    pub class: PassClass,
+    pub desc: &'static str,
+}
+
+/// The full pass inventory. Every id a [`Diagnostic`] can carry is
+/// listed here; `repro verify --list` prints it and DESIGN.md §13
+/// documents it.
+pub const PASSES: &[PassInfo] = &[
+    PassInfo { id: "hag.topo_order", class: PassClass::Structural,
+               desc: "aggregation nodes reference earlier slots only \
+                      (creation order is topological; acyclicity)" },
+    PassInfo { id: "hag.slot_range", class: PassClass::Structural,
+               desc: "final in-edges reference existing slots" },
+    PassInfo { id: "hag.dup_inslots", class: PassClass::Structural,
+               desc: "set-AGGREGATE in-lists are duplicate-free" },
+    PassInfo { id: "hag.orphan_agg", class: PassClass::Structural,
+               desc: "every aggregation node is consumed by a final \
+                      or another aggregation node" },
+    PassInfo { id: "hag.capacity_fit", class: PassClass::Structural,
+               desc: "|V_A| fits the declared capacity budget \
+                      (paper §3.2 a-hat memory bound)" },
+    PassInfo { id: "plan.shape", class: PassClass::Structural,
+               desc: "padded dims and tensor lengths are mutually \
+                      consistent (n_pad/l_pad quanta, band extents)" },
+    PassInfo { id: "plan.perm_bijection", class: PassClass::Structural,
+               desc: "degree-sort perm and inv_perm are mutually \
+                      inverse bijections over 0..n" },
+    PassInfo { id: "plan.index_range", class: PassClass::Structural,
+               desc: "level/band indices stay inside the value \
+                      buffer; band rows inside the block height" },
+    PassInfo { id: "plan.level_order", class: PassClass::Structural,
+               desc: "level-combine operands come from originals or \
+                      strictly earlier levels" },
+    PassInfo { id: "plan.encodes_hag", class: PassClass::Structural,
+               desc: "level tensors, band gather lists and degrees \
+                      encode exactly the HAG they were compiled from" },
+    PassInfo { id: "hag.cover_exact", class: PassClass::Exactness,
+               desc: "symbolic cover expansion: every node's multiset \
+                      neighborhood is reproduced exactly (static \
+                      Theorem-1 check)" },
+    PassInfo { id: "cost.term_consistency", class: PassClass::Cost,
+               desc: "Definition-2 terms recomputed from structure \
+                      match Hag::cost and the producer's claimed \
+                      terms" },
+    PassInfo { id: "cost.gauges_match", class: PassClass::Cost,
+               desc: "cost.pred_* registry gauges match the served \
+                      HAG's recomputed Definition-2 terms" },
+    PassInfo { id: "stitch.shard_blocks", class: PassClass::CrossShard,
+               desc: "shard agg blocks are remapped contiguously and \
+                      never reference another shard's slots" },
+    PassInfo { id: "stitch.cross_edges", class: PassClass::CrossShard,
+               desc: "every cross-shard edge falls back to a direct \
+                      aggregation slot, and nothing else is appended" },
+    PassInfo { id: "stitch.term_sums", class: PassClass::CrossShard,
+               desc: "sum of shard cost_core plus cut edges equals \
+                      the stitched cost_core; per-shard terms never \
+                      exceed stitched totals" },
+    PassInfo { id: "incr.id_space", class: PassClass::Incremental,
+               desc: "bit-31 agg-id-space discipline: every internal \
+                      slot decodes to a real node or agg id" },
+    PassInfo { id: "incr.topo_order", class: PassClass::Incremental,
+               desc: "references point at live, earlier aggregation \
+                      nodes (GC'd nodes are never consumed)" },
+    PassInfo { id: "incr.refcounts", class: PassClass::Incremental,
+               desc: "stored refcounts equal recomputed live \
+                      reference counts" },
+    PassInfo { id: "incr.counters", class: PassClass::Incremental,
+               desc: "maintained live/final-edge counters are exact \
+                      and in-lists are duplicate-free" },
+];
+
+/// Everything the core hag/plan pipeline verifies against.
+pub struct HagCtx<'a> {
+    pub graph: &'a Graph,
+    pub hag: &'a Hag,
+    pub plan: Option<&'a ExecutionPlan>,
+    /// `|V_A|` budget the producer searched under, if known.
+    pub capacity: Option<usize>,
+    /// Producer-claimed `(aggregations, data_transfers)` — e.g. a
+    /// session's summed shard terms — cross-checked by
+    /// `cost.term_consistency`.
+    pub claimed_terms: Option<(usize, usize)>,
+}
+
+impl<'a> HagCtx<'a> {
+    pub fn new(graph: &'a Graph, hag: &'a Hag) -> HagCtx<'a> {
+        HagCtx { graph, hag, plan: None, capacity: None,
+                 claimed_terms: None }
+    }
+
+    pub fn with_plan(mut self, plan: &'a ExecutionPlan) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    pub fn with_claimed_terms(mut self, aggs: usize,
+                              transfers: usize) -> Self {
+        self.claimed_terms = Some((aggs, transfers));
+        self
+    }
+}
+
+/// Run the hag/plan pipeline: structural passes first, then (only on
+/// a structurally clean HAG, so cover expansion cannot index out of
+/// bounds) exactness and cost, then the plan passes in dependency
+/// order. The single entry every gate and CLI path funnels through.
+pub fn verify(ctx: &HagCtx) -> Report {
+    let mut r = Report::new();
+    structural::hag_passes(ctx, &mut r);
+    let hag_clean = r.is_clean();
+    if hag_clean {
+        exactness::cover_exact(ctx, &mut r);
+        cost::term_consistency(ctx, &mut r);
+    }
+    if let Some(plan) = ctx.plan {
+        if hag_clean {
+            structural::plan_passes(ctx, plan, &mut r);
+        }
+    }
+    r
+}
+
+/// HAG-only verification (structural + exactness + cost).
+pub fn verify_hag(g: &Graph, hag: &Hag) -> Report {
+    verify(&HagCtx::new(g, hag))
+}
+
+/// HAG + plan verification.
+pub fn verify_plan(g: &Graph, hag: &Hag,
+                   plan: &ExecutionPlan) -> Report {
+    verify(&HagCtx::new(g, hag).with_plan(plan))
+}
+
+/// Cross-shard verification of a stitched HAG against its per-shard
+/// inputs (see [`crosshard`]).
+pub fn verify_stitched<H: Borrow<Hag>>(g: &Graph, part: &Partition,
+                                       locals: &[H],
+                                       stitched: &Hag) -> Report {
+    crosshard::stitch_passes(g, part, locals, stitched)
+}
+
+/// Incremental-IR verification (see [`incremental`]); the engine's
+/// `IncrementalHag::check` is a thin wrapper over this.
+pub fn check_incremental(ih: &IncrementalHag) -> Report {
+    incremental::incr_passes(ih)
+}
+
+/// Registry-gauge cost audit (see [`cost::gauges_match`]).
+pub fn check_cost_gauges(snap: &StatsSnapshot, hag: &Hag,
+                         shard_terms: &[(usize, usize)]) -> Report {
+    let mut r = Report::new();
+    cost::gauges_match(snap, hag, shard_terms, &mut r);
+    r
+}
+
+/// `Hag::validate`, reimplemented over the analysis structural
+/// passes so the two can never disagree: first structural error
+/// message, or `Ok`.
+pub fn validate_hag(hag: &Hag) -> Result<(), String> {
+    // Validation is graph-independent; an empty graph placeholder
+    // keeps the ctx honest (no structural pass reads it).
+    let g = Graph::from_edges(hag.n, &[]);
+    let mut r = Report::new();
+    structural::hag_passes(&HagCtx::new(&g, hag), &mut r);
+    match r.diagnostics.iter()
+        .find(|d| d.severity == Severity::Error)
+    {
+        None => Ok(()),
+        Some(d) => Err(format!("[{}] {}: {}", d.pass, d.entity,
+                               d.message)),
+    }
+}
+
+// ---------------------------------------------------------------
+// Hot-path gates
+// ---------------------------------------------------------------
+
+/// Is the verify gate live? Debug builds: always (the ISSUE's
+/// "swap-path verify gate enabled in debug test runs"). Release:
+/// opt-in via `REPRO_VERIFY=1`/`on` (and explicitly disableable in
+/// debug with `REPRO_VERIFY=0`/`off`). Read once per process.
+pub fn verify_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        match std::env::var("REPRO_VERIFY") {
+            Ok(v) => {
+                let v = v.trim().to_ascii_lowercase();
+                !(v == "0" || v == "off" || v == "false" || v.is_empty())
+            }
+            Err(_) => cfg!(debug_assertions),
+        }
+    })
+}
+
+/// Shared gate tail: record `verify.runs`/`verify.ns` (and
+/// `verify.failures` + a flight dump on a dirty report), then either
+/// pass, panic (debug — a corrupt artifact on a hot path is a bug,
+/// not an operational condition), or refuse (release).
+fn finish_gate(reg: &MetricsRegistry, site: &str, report: &Report,
+               t0: std::time::Instant) -> bool {
+    reg.counter("verify.runs").inc();
+    reg.histogram("verify.ns")
+        .record_ns(t0.elapsed().as_nanos() as u64);
+    if report.is_clean() {
+        return true;
+    }
+    reg.counter("verify.failures").inc();
+    for d in report.diagnostics.iter()
+        .filter(|d| d.severity == Severity::Error).take(8)
+    {
+        crate::obs_error!("[haglint] {site}: [{}] {}: {}", d.pass,
+                          d.entity, d.message);
+    }
+    crate::obs::flight::dump("verify-failed", reg);
+    if cfg!(debug_assertions) {
+        panic!("haglint gate failed at {site}: {} error(s)\n{}",
+               report.errors(), report.format());
+    }
+    false
+}
+
+/// Gate a freshly compiled (hag, plan) pair before it is served or
+/// cached. Returns `true` to proceed.
+pub fn gate_plan(reg: &MetricsRegistry, site: &str, g: &Graph,
+                 hag: &Hag, plan: &ExecutionPlan,
+                 capacity: Option<usize>) -> bool {
+    let t0 = std::time::Instant::now();
+    let mut ctx = HagCtx::new(g, hag).with_plan(plan);
+    ctx.capacity = capacity;
+    let report = verify(&ctx);
+    finish_gate(reg, site, &report, t0)
+}
+
+/// Gate a HAG about to be adopted (e.g. `StreamEngine::install_hag`).
+pub fn gate_hag(reg: &MetricsRegistry, site: &str, g: &Graph,
+                hag: &Hag) -> bool {
+    let t0 = std::time::Instant::now();
+    let report = verify_hag(g, hag);
+    finish_gate(reg, site, &report, t0)
+}
+
+/// Gate a stitched HAG against its per-shard inputs.
+pub fn gate_stitched<H: Borrow<Hag>>(reg: &MetricsRegistry,
+                                     site: &str, g: &Graph,
+                                     part: &Partition, locals: &[H],
+                                     stitched: &Hag) -> bool {
+    let t0 = std::time::Instant::now();
+    let report = verify_stitched(g, part, locals, stitched);
+    finish_gate(reg, site, &report, t0)
+}
+
+/// Gate the `cost.pred_*` gauges right after they were recorded for
+/// a newly served plan.
+pub fn gate_cost_gauges(reg: &MetricsRegistry, site: &str, hag: &Hag,
+                        shard_terms: &[(usize, usize)]) -> bool {
+    let t0 = std::time::Instant::now();
+    let snap = reg.snapshot();
+    let report = check_cost_gauges(&snap, hag, shard_terms);
+    finish_gate(reg, site, &report, t0)
+}
+
+/// Assemble the `haglint-v1` JSON envelope for a verification run
+/// (the `repro verify --json` artifact `repro obs --check-verify`
+/// validates).
+pub fn corpus_report_json(cases: &[(String, Report)]) -> Value {
+    let total: usize = cases.iter().map(|(_, r)| r.errors()).sum();
+    obj(vec![
+        ("schema", str_("haglint-v1")),
+        ("clean", Value::Bool(total == 0)),
+        ("total_errors", num(total as f64)),
+        ("passes",
+         arr(PASSES.iter().map(|p| {
+             obj(vec![
+                 ("id", str_(p.id)),
+                 ("class", str_(p.class.as_str())),
+                 ("desc", str_(p.desc)),
+             ])
+         }).collect())),
+        ("cases",
+         arr(cases.iter().map(|(name, r)| {
+             let mut body = r.to_value();
+             if let Value::Obj(fields) = &mut body {
+                 fields.insert("name".to_string(), str_(name.clone()));
+             }
+             body
+         }).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::{hag_search, AggregateKind, SearchConfig};
+
+    fn k6() -> Graph {
+        let mut edges = Vec::new();
+        for u in 0..6u32 {
+            for v in 0..6u32 {
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Graph::from_edges(6, &edges)
+    }
+
+    #[test]
+    fn searched_hag_and_plan_verify_clean() {
+        let g = k6();
+        let cfg = SearchConfig { alpha: 1.0, beta: 1.0,
+                                 capacity: usize::MAX,
+                                 kind: AggregateKind::Set,
+                                 pair_cap: usize::MAX };
+        let (hag, _) = hag_search(&g, &cfg);
+        let plan = crate::hag::build_plan(
+            &g, &hag, &crate::hag::PlanConfig::default());
+        let r = verify(&HagCtx::new(&g, &hag).with_plan(&plan)
+                           .with_capacity(usize::MAX)
+                           .with_claimed_terms(hag.aggregations(),
+                                               hag.data_transfers()));
+        assert!(r.is_clean(), "{}", r.format());
+        // every hag/plan/cost pass actually ran
+        for id in ["hag.topo_order", "hag.cover_exact", "plan.shape",
+                   "plan.encodes_hag", "cost.term_consistency"] {
+            assert!(r.passes_run.contains(&id), "{id} did not run");
+        }
+    }
+
+    #[test]
+    fn pass_inventory_ids_are_unique() {
+        for (i, a) in PASSES.iter().enumerate() {
+            for b in &PASSES[i + 1..] {
+                assert_ne!(a.id, b.id);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_hag_reports_first_structural_error() {
+        let mut h = Hag::from_graph(&k6(), AggregateKind::Set);
+        h.in_edges[0].push(99);
+        let err = validate_hag(&h).unwrap_err();
+        assert!(err.contains("hag.slot_range"), "{err}");
+    }
+
+    #[test]
+    fn report_json_envelope_is_haglint_v1() {
+        let g = k6();
+        let hag = Hag::from_graph(&g, AggregateKind::Set);
+        let r = verify_hag(&g, &hag);
+        let doc = corpus_report_json(&[("k6".into(), r)]);
+        assert_eq!(doc.req_str("schema").unwrap(), "haglint-v1");
+        assert_eq!(doc.get("clean").and_then(|v| v.as_bool()),
+                   Some(true));
+        assert!(!doc.req_arr("cases").unwrap().is_empty());
+        assert_eq!(doc.req_arr("passes").unwrap().len(), PASSES.len());
+    }
+}

@@ -1,0 +1,334 @@
+//! The corruption harness: one targeted, minimal defect per pass
+//! class, applied to a corpus [`Artifact`]. Each mutant is designed
+//! so its owning pass *must* fire — the mutation-kill matrix in
+//! `rust/tests/analysis.rs` asserts exactly that, which is the proof
+//! that no analysis pass is vacuous. (The incremental-IR mutants
+//! need crate-private state and live in `analysis/incremental.rs`;
+//! the `cost.gauges_match` kill drives a real registry and lives in
+//! the test crate.)
+//!
+//! Mutations are deliberately *surgical*: they corrupt exactly one
+//! invariant, keeping everything upstream of the owning pass clean so
+//! dependency gating cannot hide the kill. Passes downstream of the
+//! defect may fire too — the kill assertion is membership of the
+//! expected pass id, not exclusivity.
+
+use crate::hag::AggregateKind;
+
+use super::corpus::Artifact;
+
+/// Every public mutant, one (or more) per analysis pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutant {
+    /// Agg operand points at its own slot -> `hag.topo_order`.
+    HagForwardRef,
+    /// Final in-edge past the slot space -> `hag.slot_range`.
+    HagSlotOob,
+    /// Repeated slot in a set in-list -> `hag.dup_inslots`.
+    HagDupInSlot,
+    /// Unconsumed aggregation node appended -> `hag.orphan_agg`.
+    HagOrphanAgg,
+    /// Declared capacity below `|V_A|` -> `hag.capacity_fit`.
+    HagCapacityBust,
+    /// Original slot dropped from an in-list -> `hag.cover_exact`.
+    HagCoverDrop,
+    /// Claimed Definition-2 terms skewed -> `cost.term_consistency`.
+    CostClaimSkew,
+    /// `n_pad` inflated without repadding -> `plan.shape`.
+    PlanShapePad,
+    /// `perm` swapped without fixing `inv_perm` ->
+    /// `plan.perm_bijection`.
+    PlanPermSwap,
+    /// Band gather index past the buffer -> `plan.index_range`.
+    PlanIndexOob,
+    /// Level operand reads its own level -> `plan.level_order`.
+    PlanLevelOrder,
+    /// Two band entries' destination rows swapped ->
+    /// `plan.encodes_hag`.
+    PlanBandRowSwap,
+    /// Level operand retargeted to a different original ->
+    /// `plan.encodes_hag`.
+    PlanLvlSkew,
+    /// Stitched agg operand leaks into another shard ->
+    /// `stitch.shard_blocks`.
+    StitchBlockLeak,
+    /// Cross-shard fallback edge dropped -> `stitch.cross_edges`.
+    StitchCrossDrop,
+    /// Shard-local HAG edited after stitching ->
+    /// `stitch.term_sums`.
+    StitchLocalSkew,
+}
+
+/// All public mutants, matrix order.
+pub const ALL_MUTANTS: &[Mutant] = &[
+    Mutant::HagForwardRef,
+    Mutant::HagSlotOob,
+    Mutant::HagDupInSlot,
+    Mutant::HagOrphanAgg,
+    Mutant::HagCapacityBust,
+    Mutant::HagCoverDrop,
+    Mutant::CostClaimSkew,
+    Mutant::PlanShapePad,
+    Mutant::PlanPermSwap,
+    Mutant::PlanIndexOob,
+    Mutant::PlanLevelOrder,
+    Mutant::PlanBandRowSwap,
+    Mutant::PlanLvlSkew,
+    Mutant::StitchBlockLeak,
+    Mutant::StitchCrossDrop,
+    Mutant::StitchLocalSkew,
+];
+
+impl Mutant {
+    /// The pass that owns this corruption class and must catch it.
+    pub fn expected_pass(self) -> &'static str {
+        match self {
+            Mutant::HagForwardRef => "hag.topo_order",
+            Mutant::HagSlotOob => "hag.slot_range",
+            Mutant::HagDupInSlot => "hag.dup_inslots",
+            Mutant::HagOrphanAgg => "hag.orphan_agg",
+            Mutant::HagCapacityBust => "hag.capacity_fit",
+            Mutant::HagCoverDrop => "hag.cover_exact",
+            Mutant::CostClaimSkew => "cost.term_consistency",
+            Mutant::PlanShapePad => "plan.shape",
+            Mutant::PlanPermSwap => "plan.perm_bijection",
+            Mutant::PlanIndexOob => "plan.index_range",
+            Mutant::PlanLevelOrder => "plan.level_order",
+            Mutant::PlanBandRowSwap => "plan.encodes_hag",
+            Mutant::PlanLvlSkew => "plan.encodes_hag",
+            Mutant::StitchBlockLeak => "stitch.shard_blocks",
+            Mutant::StitchCrossDrop => "stitch.cross_edges",
+            Mutant::StitchLocalSkew => "stitch.term_sums",
+        }
+    }
+}
+
+/// Apply `m` to `art` in place. Returns `false` when the artifact
+/// cannot host this mutant (e.g. no aggregation nodes, no levels, no
+/// cut edges) — the kill matrix requires each mutant to land on at
+/// least one corpus artifact, not on all of them.
+pub fn apply(m: Mutant, art: &mut Artifact) -> bool {
+    match m {
+        Mutant::HagForwardRef => {
+            if art.hag.agg_nodes.is_empty() {
+                return false;
+            }
+            // self-reference: the minimal non-earlier operand
+            art.hag.agg_nodes[0].left = art.hag.n as u32;
+            true
+        }
+        Mutant::HagSlotOob => {
+            let oob = art.hag.slots() as u32 + 3;
+            art.hag.in_edges[0].push(oob);
+            true
+        }
+        Mutant::HagDupInSlot => {
+            if art.hag.kind != AggregateKind::Set {
+                return false;
+            }
+            let Some(list) = art.hag.in_edges.iter_mut()
+                .find(|l| !l.is_empty())
+            else {
+                return false;
+            };
+            let s = list[0];
+            list.push(s);
+            true
+        }
+        Mutant::HagOrphanAgg => {
+            if art.hag.n < 2 {
+                return false;
+            }
+            art.hag.agg_nodes.push(
+                crate::hag::AggNode { left: 0, right: 1 });
+            true
+        }
+        Mutant::HagCapacityBust => {
+            if art.hag.agg_nodes.is_empty() {
+                return false;
+            }
+            art.capacity = Some(art.hag.agg_nodes.len() - 1);
+            true
+        }
+        Mutant::HagCoverDrop => {
+            // Drop an *original* slot so no agg is orphaned and the
+            // structural passes stay clean — only the Theorem-1
+            // check can see the missing contribution.
+            let n = art.hag.n as u32;
+            for list in art.hag.in_edges.iter_mut() {
+                if let Some(pos) =
+                    list.iter().position(|&s| s < n)
+                {
+                    list.remove(pos);
+                    return true;
+                }
+            }
+            false
+        }
+        Mutant::CostClaimSkew => {
+            let (a, t) = art.claimed_terms.unwrap_or((
+                art.hag.aggregations(), art.hag.data_transfers()));
+            art.claimed_terms = Some((a + 1, t));
+            true
+        }
+        Mutant::PlanShapePad => {
+            let Some(plan) = art.plan.as_mut() else {
+                return false;
+            };
+            plan.n_pad += plan.br.max(1);
+            true
+        }
+        Mutant::PlanPermSwap => {
+            let Some(plan) = art.plan.as_mut() else {
+                return false;
+            };
+            if plan.n < 2 {
+                return false;
+            }
+            plan.perm.swap(0, 1); // inv_perm left stale
+            true
+        }
+        Mutant::PlanIndexOob => {
+            let Some(plan) = art.plan.as_mut() else {
+                return false;
+            };
+            let m_pad = plan.m_pad() as i32;
+            let Some(cols) = plan.band_cols.first_mut() else {
+                return false;
+            };
+            if cols.is_empty() {
+                return false;
+            }
+            cols[0] = m_pad;
+            true
+        }
+        Mutant::PlanLevelOrder => {
+            let Some(plan) = art.plan.as_mut() else {
+                return false;
+            };
+            if plan.levels == 0 {
+                return false;
+            }
+            // first level-1 entry is always real; point its operand
+            // at its own level's base
+            plan.lvl_left[0] = plan.n_pad as i32;
+            true
+        }
+        Mutant::PlanBandRowSwap => {
+            let Some(plan) = art.plan.as_mut() else {
+                return false;
+            };
+            let zero = plan.zero_slot();
+            for (bi, &(nb, nnzb)) in
+                plan.bands.clone().iter().enumerate()
+            {
+                for b in 0..nb {
+                    // two real entries in one block with different
+                    // destination rows and different columns
+                    let idx = |j: usize| b * nnzb + j;
+                    for j1 in 0..nnzb {
+                        if plan.band_cols[bi][idx(j1)] == zero {
+                            continue;
+                        }
+                        for j2 in (j1 + 1)..nnzb {
+                            if plan.band_cols[bi][idx(j2)] == zero {
+                                continue;
+                            }
+                            if plan.band_rows[bi][idx(j1)]
+                                != plan.band_rows[bi][idx(j2)]
+                                && plan.band_cols[bi][idx(j1)]
+                                    != plan.band_cols[bi][idx(j2)]
+                            {
+                                plan.band_rows[bi]
+                                    .swap(idx(j1), idx(j2));
+                                return true;
+                            }
+                        }
+                    }
+                }
+            }
+            false
+        }
+        Mutant::PlanLvlSkew => {
+            let Some(plan) = art.plan.as_mut() else {
+                return false;
+            };
+            if plan.levels == 0 {
+                return false;
+            }
+            // Level-1 operands are originals (< n_pad), so a +-1
+            // retarget stays a valid, well-ordered buffer index —
+            // only the encoding check can see it.
+            let v = plan.lvl_left[0];
+            plan.lvl_left[0] = if (v as usize) + 1
+                < plan.n_pad { v + 1 } else { v - 1 };
+            true
+        }
+        Mutant::StitchBlockLeak => {
+            let (Some(part), Some(_)) = (&art.part, &art.locals)
+            else {
+                return false;
+            };
+            if art.hag.agg_nodes.is_empty() {
+                return false;
+            }
+            // retarget agg 0's operand at a node of a different
+            // shard than its old operand's
+            let a = art.hag.agg_nodes[0];
+            let owner = |s: u32| -> u32 {
+                if (s as usize) < art.hag.n {
+                    part.shard_of[s as usize]
+                } else {
+                    u32::MAX
+                }
+            };
+            let old = owner(a.left);
+            let Some(w) = (0..art.hag.n as u32).find(
+                |&w| part.shard_of[w as usize] != old
+                    && w != a.left)
+            else {
+                return false;
+            };
+            art.hag.agg_nodes[0].left = w;
+            true
+        }
+        Mutant::StitchCrossDrop => {
+            let (Some(part), Some(locals)) =
+                (&art.part, &art.locals)
+            else {
+                return false;
+            };
+            // find a node with a non-empty cross-shard tail and
+            // drop the tail's last (direct fallback) slot
+            let mut local_len = vec![0usize; art.hag.n];
+            for (s, lh) in locals.iter().enumerate() {
+                for (lv, list) in lh.in_edges.iter().enumerate() {
+                    local_len[part.members[s][lv] as usize] =
+                        list.len();
+                }
+            }
+            for (v, list) in art.hag.in_edges.iter_mut().enumerate()
+            {
+                if list.len() > local_len[v] {
+                    list.pop();
+                    return true;
+                }
+            }
+            false
+        }
+        Mutant::StitchLocalSkew => {
+            let Some(locals) = art.locals.as_mut() else {
+                return false;
+            };
+            for lh in locals.iter_mut() {
+                if let Some(list) = lh.in_edges.iter_mut()
+                    .find(|l| !l.is_empty())
+                {
+                    list.pop();
+                    return true;
+                }
+            }
+            false
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Source-convention lint (`repro lint-src`): a std-only line scanner
+//! over `rust/src/` enforcing three repo conventions that rustc cannot
+//! see:
+//!
+//! - **R1 `no-panic-path`** — no `.unwrap()` / `.expect("...")` /
+//!   `panic!(` in the request path (`net/` and
+//!   `coordinator/server.rs`): a poisoned lock or malformed frame must
+//!   degrade to a protocol error, never take the serving thread down.
+//! - **R2 `metric-name`** — literal metric names registered via
+//!   `.counter("...")` / `.gauge("...")` / `.histogram("...")` follow
+//!   the `subsystem.noun_verb` shape (`[a-z][a-z0-9_]*` segments, >= 2,
+//!   dot-separated) that `repro obs` checkers and the dashboards key
+//!   on.
+//! - **R3 `no-deprecated`** — the deprecated one-shot wrappers
+//!   (`coordinator::lower_dataset`, `coordinator::emit_buckets`) are
+//!   not referenced outside `coordinator/` itself; everything else
+//!   goes through sessions. (The `-D deprecated` CI job catches typed
+//!   uses; this catches path strings in macros and generated dispatch
+//!   the attribute misses.)
+//!
+//! Known-good exceptions live in `tools/srclint-allow.txt`
+//! (`<path-suffix>|<line-substring>` per line); trailing
+//! `#[cfg(test)] mod tests` regions are skipped, since tests *should*
+//! unwrap. Needles are assembled at runtime so the linter's own
+//! source never matches them.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint hit: file (repo-relative, `/`-separated), 1-based line,
+/// rule id, and the offending line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub excerpt: String,
+}
+
+impl Finding {
+    pub fn format(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule,
+                self.excerpt.trim())
+    }
+}
+
+/// Parse `tools/srclint-allow.txt`: `path-suffix|line-substring`
+/// entries, `#` comments and blank lines ignored. A missing file is
+/// an empty allowlist, not an error.
+pub fn load_allowlist(path: &Path) -> Vec<(String, String)> {
+    let Ok(text) = fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            l.split_once('|')
+                .map(|(p, n)| (p.trim().to_string(),
+                               n.trim().to_string()))
+        })
+        .collect()
+}
+
+fn allowed(allow: &[(String, String)], file: &str,
+           line: &str) -> bool {
+    allow.iter().any(|(p, n)| {
+        (file == p || file.ends_with(p)) && line.contains(n)
+    })
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Index of the first line of the trailing `#[cfg(test)]` + `mod ...`
+/// region, or `len` when the file has none. Inline `#[cfg(test)]`
+/// attributes on items other than modules do not end the scan.
+fn test_region_start(lines: &[&str]) -> usize {
+    for (i, l) in lines.iter().enumerate() {
+        if l.trim() != format!("#[cfg({})]", "test") {
+            continue;
+        }
+        let next = lines[i + 1..].iter()
+            .map(|l| l.trim())
+            .find(|l| !l.is_empty());
+        if next.is_some_and(
+            |l| l.starts_with("mod ") || l.starts_with("pub mod "))
+        {
+            return i;
+        }
+    }
+    lines.len()
+}
+
+/// `subsystem.noun_verb`: >= 2 dot-separated `[a-z0-9_]+` segments,
+/// first segment starting with a letter.
+fn metric_name_ok(name: &str) -> bool {
+    let segs: Vec<&str> = name.split('.').collect();
+    segs.len() >= 2
+        && name.starts_with(|c: char| c.is_ascii_lowercase())
+        && segs.iter().all(|s| {
+            !s.is_empty()
+                && s.bytes().all(
+                    |b| b.is_ascii_lowercase()
+                        || b.is_ascii_digit() || b == b'_')
+        })
+}
+
+/// Lint every `.rs` file under `src_root`. Deterministic order;
+/// returns findings not covered by `allow`.
+pub fn run(src_root: &Path, allow: &[(String, String)])
+           -> Result<Vec<Finding>, String> {
+    // runtime-assembled needles: this file must not lint itself
+    let panic_needles: Vec<String> = vec![
+        format!(".{}()", "unwrap"),
+        format!(".{}(\"", "expect"),
+        format!("{}!(", "panic"),
+    ];
+    let metric_needles: Vec<String> =
+        ["counter", "gauge", "histogram"]
+            .iter().map(|k| format!(".{k}(\"")).collect();
+    let deprecated_needles: Vec<String> =
+        ["lower_dataset", "emit_buckets"]
+            .iter().map(|f| format!("{}::{f}", "coordinator"))
+            .collect();
+
+    let mut files = Vec::new();
+    rs_files(src_root, &mut files)?;
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path.strip_prefix(src_root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let lines: Vec<&str> = text.lines().collect();
+        let end = test_region_start(&lines);
+        let in_request_path = rel.starts_with("net/")
+            || rel == "coordinator/server.rs";
+        let in_coordinator = rel.starts_with("coordinator/");
+        for (i, &line) in lines[..end].iter().enumerate() {
+            if line.trim_start().starts_with("//") {
+                continue;
+            }
+            let mut hit = |rule: &'static str| {
+                if !allowed(allow, &rel, line) {
+                    findings.push(Finding {
+                        file: rel.clone(), line: i + 1, rule,
+                        excerpt: line.to_string(),
+                    });
+                }
+            };
+            if in_request_path
+                && panic_needles.iter().any(|n| line.contains(n))
+            {
+                hit("no-panic-path");
+            }
+            if !in_coordinator
+                && deprecated_needles.iter()
+                    .any(|n| line.contains(n))
+            {
+                hit("no-deprecated");
+            }
+            for needle in &metric_needles {
+                let mut rest = line;
+                while let Some(pos) = rest.find(needle.as_str()) {
+                    rest = &rest[pos + needle.len()..];
+                    if let Some(q) = rest.find('"') {
+                        if !metric_name_ok(&rest[..q]) {
+                            hit("metric-name");
+                        }
+                        rest = &rest[q + 1..];
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct TempTree(PathBuf);
+
+    impl TempTree {
+        fn new(tag: &str) -> Self {
+            let dir = std::env::temp_dir().join(format!(
+                "srclint-{tag}-{}", std::process::id()));
+            let _ = fs::remove_dir_all(&dir);
+            fs::create_dir_all(&dir).unwrap();
+            TempTree(dir)
+        }
+
+        fn write(&self, rel: &str, body: &str) {
+            let p = self.0.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(p, body).unwrap();
+        }
+    }
+
+    impl Drop for TempTree {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn flags_panic_in_request_path_only() {
+        let t = TempTree::new("panic");
+        let body = format!("fn f() {{ x.{}(); }}\n", "unwrap");
+        t.write("net/a.rs", &body);
+        t.write("util/b.rs", &body);
+        let f = run(&t.0, &[]).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].file, "net/a.rs");
+        assert_eq!(f[0].rule, "no-panic-path");
+    }
+
+    #[test]
+    fn skips_trailing_test_module() {
+        let t = TempTree::new("testmod");
+        let body = format!(
+            "fn f() {{}}\n#[cfg({})]\nmod tests {{\n    fn g() {{ \
+             x.{}(); }}\n}}\n", "test", "unwrap");
+        t.write("net/a.rs", &body);
+        assert!(run(&t.0, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_suffix_and_substring() {
+        let t = TempTree::new("allow");
+        let body = format!("fn f() {{ lock.{}(); }}\n", "unwrap");
+        t.write("net/a.rs", &body);
+        let needle = format!("lock.{}()", "unwrap");
+        let allow = vec![("net/a.rs".to_string(), needle)];
+        assert!(run(&t.0, &allow).unwrap().is_empty());
+        // a different line in the same file still fires
+        let other = format!("fn f() {{ other.{}(); }}\n", "unwrap");
+        t.write("net/a.rs", &other);
+        assert_eq!(run(&t.0, &allow).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn flags_malformed_metric_names_anywhere() {
+        let t = TempTree::new("metric");
+        let body = format!(
+            "fn f(r: &R) {{\n    r.{}(\"serve.requests\");\n    \
+             r.{}(\"BadName\");\n    r.{}(\"noseparator\");\n}}\n",
+            "counter", "gauge", "histogram");
+        t.write("util/m.rs", &body);
+        let f = run(&t.0, &[]).unwrap();
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "metric-name"));
+    }
+
+    #[test]
+    fn flags_deprecated_wrappers_outside_coordinator() {
+        let t = TempTree::new("deprecated");
+        let call = format!("    {}::{}(x);\n",
+                           "coordinator", "lower_dataset");
+        let body = format!("fn f() {{\n{call}}}\n");
+        t.write("session/a.rs", &body);
+        t.write("coordinator/a.rs", &body);
+        // doc comments are exempt: migration notes may name them
+        t.write("util/doc.rs", &format!("//! uses {}::{}\n",
+                                        "coordinator",
+                                        "lower_dataset"));
+        let f = run(&t.0, &[]).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].file, "session/a.rs");
+        assert_eq!(f[0].rule, "no-deprecated");
+    }
+}

@@ -1,0 +1,560 @@
+//! Structural well-formedness passes over [`Hag`] and
+//! [`ExecutionPlan`].
+//!
+//! These run first and gate everything else: the exactness / cost /
+//! plan passes index through agg operands and permutations, so they
+//! are only attempted once the structure they index through is known
+//! sound (a corrupt artifact must yield diagnostics, never a panic).
+
+use crate::hag::{AggregateKind, ExecutionPlan, Hag};
+
+use super::{HagCtx, Report};
+
+fn round_up(x: usize, q: usize) -> usize {
+    if q == 0 { x } else { x.div_ceil(q) * q }
+}
+
+/// Run the five HAG structural passes.
+pub fn hag_passes(ctx: &HagCtx, r: &mut Report) {
+    topo_order(ctx.hag, r);
+    slot_range(ctx.hag, r);
+    dup_inslots(ctx.hag, r);
+    // orphan/capacity only make sense once references are in-range
+    if r.is_clean() {
+        orphan_agg(ctx.hag, r);
+    }
+    capacity_fit(ctx.hag, ctx.capacity, r);
+}
+
+/// `hag.topo_order`: each aggregation node's operands reference
+/// strictly earlier slots. Creation order is topological by
+/// construction (hag/mod.rs module docs), so this is also the
+/// acyclicity check: a forward reference is the only way a cycle
+/// could be encoded.
+fn topo_order(hag: &Hag, r: &mut Report) {
+    const ID: &str = "hag.topo_order";
+    r.ran(ID);
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        let self_slot = (hag.n + i) as u32;
+        if a.left >= self_slot || a.right >= self_slot {
+            r.error(ID, format!("agg {i}"),
+                    format!("operands ({}, {}) must be < own slot \
+                             {self_slot}", a.left, a.right),
+                    "merges may only reference already-created slots; \
+                     re-emit aggregation nodes in creation order");
+        }
+    }
+}
+
+/// `hag.slot_range`: every final in-edge names an existing slot.
+fn slot_range(hag: &Hag, r: &mut Report) {
+    const ID: &str = "hag.slot_range";
+    r.ran(ID);
+    let max_slot = hag.slots() as u32;
+    for (v, l) in hag.in_edges.iter().enumerate() {
+        for &s in l {
+            if s >= max_slot {
+                r.error(ID, format!("node {v}"),
+                        format!("in-edge slot {s} >= slot count \
+                                 {max_slot}"),
+                        "final in-edges must point at an original \
+                         node or a materialized aggregation node");
+            }
+        }
+    }
+    if hag.in_edges.len() != hag.n {
+        r.error(ID, "in_edges".to_string(),
+                format!("{} final lists for {} original nodes",
+                        hag.in_edges.len(), hag.n),
+                "in_edges must carry exactly one list per original \
+                 node");
+    }
+}
+
+/// `hag.dup_inslots`: for `Set` aggregation, a node's in-list is a
+/// set — a duplicate slot would double-count its cover.
+fn dup_inslots(hag: &Hag, r: &mut Report) {
+    const ID: &str = "hag.dup_inslots";
+    r.ran(ID);
+    if hag.kind != AggregateKind::Set {
+        return;
+    }
+    let mut scratch = Vec::new();
+    for (v, l) in hag.in_edges.iter().enumerate() {
+        scratch.clear();
+        scratch.extend_from_slice(l);
+        scratch.sort_unstable();
+        let before = scratch.len();
+        scratch.dedup();
+        if scratch.len() != before {
+            r.error(ID, format!("node {v}"),
+                    format!("in-list of {} slots has {} duplicate(s)",
+                            before, before - scratch.len()),
+                    "deduplicate the in-list; a repeated slot \
+                     double-counts its cover under set aggregation");
+        }
+    }
+}
+
+/// `hag.orphan_agg`: every aggregation node is consumed by at least
+/// one final in-list or later aggregation node. An orphan is never
+/// produced by the search/stitch/repair pipeline and silently skews
+/// every Definition-2 term (`e_hat` counts 2 operand edges per agg).
+fn orphan_agg(hag: &Hag, r: &mut Report) {
+    const ID: &str = "hag.orphan_agg";
+    r.ran(ID);
+    let na = hag.agg_nodes.len();
+    if na == 0 {
+        return;
+    }
+    let mut referenced = vec![false; na];
+    let mut mark = |s: u32, referenced: &mut Vec<bool>| {
+        if let Some(i) = (s as usize).checked_sub(hag.n) {
+            referenced[i] = true;
+        }
+    };
+    for a in &hag.agg_nodes {
+        mark(a.left, &mut referenced);
+        mark(a.right, &mut referenced);
+    }
+    for l in &hag.in_edges {
+        for &s in l {
+            mark(s, &mut referenced);
+        }
+    }
+    for (i, refd) in referenced.iter().enumerate() {
+        if !refd {
+            r.error(ID, format!("agg {i}"),
+                    "aggregation node is consumed by no final list \
+                     or later merge".to_string(),
+                    "garbage-collect unconsumed merges before \
+                     exporting a HAG");
+        }
+    }
+}
+
+/// `hag.capacity_fit`: `|V_A|` within the producer's declared budget
+/// (the paper §3.2 a-hat memory bound the search was run under).
+fn capacity_fit(hag: &Hag, capacity: Option<usize>, r: &mut Report) {
+    const ID: &str = "hag.capacity_fit";
+    let Some(cap) = capacity else { return };
+    r.ran(ID);
+    if hag.agg_nodes.len() > cap {
+        r.error(ID, "agg_nodes".to_string(),
+                format!("|V_A| = {} exceeds capacity budget {cap}",
+                        hag.agg_nodes.len()),
+                "the search/remerge must stop materializing merges \
+                 at the capacity bound; rebuild with the declared \
+                 budget");
+    }
+}
+
+/// Run the plan passes in dependency order: `shape` ->
+/// `perm_bijection` -> `index_range` -> `level_order` ->
+/// `encodes_hag`; each later pass only runs once everything it
+/// indexes through has been proven sound.
+pub fn plan_passes(ctx: &HagCtx, plan: &ExecutionPlan,
+                   r: &mut Report) {
+    let before = r.errors();
+    plan_shape(ctx.hag, plan, r);
+    if r.errors() > before {
+        return;
+    }
+    plan_perm_bijection(plan, r);
+    if r.errors() > before {
+        return;
+    }
+    plan_index_range(plan, r);
+    if r.errors() > before {
+        return;
+    }
+    plan_level_order(plan, r);
+    if r.errors() > before {
+        return;
+    }
+    plan_encodes_hag(ctx, plan, r);
+}
+
+/// `plan.shape`: padded dims and tensor lengths obey the layout
+/// contract in schedule.rs (and python/compile/buckets.py).
+fn plan_shape(hag: &Hag, plan: &ExecutionPlan, r: &mut Report) {
+    const ID: &str = "plan.shape";
+    r.ran(ID);
+    let mut err = |entity: &str, msg: String, hint: &'static str| {
+        r.error(ID, entity.to_string(), msg, hint);
+    };
+    if plan.n != hag.n {
+        err("n", format!("plan.n = {} but hag.n = {}", plan.n, hag.n),
+            "a plan is only valid for the HAG it was compiled from");
+    }
+    if plan.br == 0 || plan.lvl_block == 0 {
+        err("br/lvl_block",
+            format!("br = {}, lvl_block = {} must be positive",
+                    plan.br, plan.lvl_block),
+            "layout quanta come from PlanConfig and are never zero");
+        return; // everything below divides by these
+    }
+    let want_n_pad = round_up(plan.n.max(1), 128_usize.max(plan.br));
+    if plan.n_pad != want_n_pad {
+        err("n_pad",
+            format!("n_pad = {} but round_up(max(n,1), max(128,br)) \
+                     = {want_n_pad}", plan.n_pad),
+            "n_pad is fully determined by n and br; recompile the \
+             plan");
+    }
+    if plan.levels == 0 {
+        if plan.l_pad != 0 {
+            err("l_pad",
+                format!("l_pad = {} with zero levels", plan.l_pad),
+                "a level-free plan has no level tensors; l_pad must \
+                 be 0");
+        }
+    } else if plan.l_pad == 0 || plan.l_pad % plan.lvl_block != 0 {
+        err("l_pad",
+            format!("l_pad = {} is not a positive multiple of \
+                     lvl_block {}", plan.l_pad, plan.lvl_block),
+            "l_pad is the max level size rounded up to lvl_block");
+    }
+    let rows: usize =
+        plan.bands.iter().map(|&(nb, _)| nb * plan.br).sum();
+    if rows != plan.n_pad {
+        err("bands",
+            format!("band row extents sum to {rows}, n_pad = {}",
+                    plan.n_pad),
+            "bands partition the padded row space exactly");
+    }
+    for (bi, &(nb, nnzb)) in plan.bands.iter().enumerate() {
+        if nb == 0 || nnzb == 0 {
+            err("bands",
+                format!("band {bi} has nb = {nb}, nnzb = {nnzb}"),
+                "every band spans at least one block and one entry");
+        }
+    }
+    if plan.band_cols.len() != plan.bands.len()
+        || plan.band_rows.len() != plan.bands.len()
+    {
+        err("band tensors",
+            format!("{} col / {} row tensors for {} bands",
+                    plan.band_cols.len(), plan.band_rows.len(),
+                    plan.bands.len()),
+            "one (cols, rows) tensor pair per band");
+        return;
+    }
+    for (bi, &(nb, nnzb)) in plan.bands.iter().enumerate() {
+        if plan.band_cols[bi].len() != nb * nnzb
+            || plan.band_rows[bi].len() != nb * nnzb
+        {
+            err("band tensors",
+                format!("band {bi}: cols/rows lengths ({}, {}) != \
+                         nb * nnzb = {}", plan.band_cols[bi].len(),
+                        plan.band_rows[bi].len(), nb * nnzb),
+                "band tensors are dense [nb * nnzb] row-major");
+        }
+    }
+    let want_lvl = plan.levels * plan.l_pad;
+    if plan.lvl_left.len() != want_lvl
+        || plan.lvl_right.len() != want_lvl
+    {
+        err("level tensors",
+            format!("lvl_left/right lengths ({}, {}) != levels * \
+                     l_pad = {want_lvl}", plan.lvl_left.len(),
+                    plan.lvl_right.len()),
+            "level tensors are dense [levels * l_pad] row-major");
+    }
+    if plan.deg.len() != plan.n_pad {
+        err("deg",
+            format!("deg length {} != n_pad {}", plan.deg.len(),
+                    plan.n_pad),
+            "deg carries one entry per padded row");
+    }
+    if plan.perm.len() != plan.n || plan.inv_perm.len() != plan.n {
+        err("perm",
+            format!("perm/inv_perm lengths ({}, {}) != n = {}",
+                    plan.perm.len(), plan.inv_perm.len(), plan.n),
+            "the degree-sort permutation covers exactly the real \
+             nodes");
+    }
+}
+
+/// `plan.perm_bijection`: `perm` and `inv_perm` are mutually inverse
+/// bijections over `0..n`.
+fn plan_perm_bijection(plan: &ExecutionPlan, r: &mut Report) {
+    const ID: &str = "plan.perm_bijection";
+    r.ran(ID);
+    let n = plan.n;
+    let mut seen = vec![false; n];
+    for (new, &old) in plan.perm.iter().enumerate() {
+        let old = old as usize;
+        if old >= n {
+            r.error(ID, format!("perm[{new}]"),
+                    format!("maps to {old} >= n = {n}"),
+                    "perm entries are original node ids");
+            return;
+        }
+        if seen[old] {
+            r.error(ID, format!("perm[{new}]"),
+                    format!("original node {old} appears twice"),
+                    "the degree sort is a permutation; repack the \
+                     plan");
+            return;
+        }
+        seen[old] = true;
+        if plan.inv_perm[old] as usize != new {
+            r.error(ID, format!("inv_perm[{old}]"),
+                    format!("= {} but perm[{new}] = {old}",
+                            plan.inv_perm[old]),
+                    "inv_perm must invert perm exactly; data packers \
+                     and score lookups both rely on it");
+            return;
+        }
+    }
+}
+
+/// `plan.index_range`: every level/band index lands inside the value
+/// buffer `[0, m_pad)`; band-local rows inside `[0, br)`.
+fn plan_index_range(plan: &ExecutionPlan, r: &mut Report) {
+    const ID: &str = "plan.index_range";
+    r.ran(ID);
+    let m_pad = plan.m_pad() as i64;
+    let check = |name: &str, idx: usize, v: i32, r: &mut Report| {
+        if (v as i64) < 0 || (v as i64) >= m_pad {
+            r.error(ID, format!("{name}[{idx}]"),
+                    format!("buffer index {v} outside [0, {m_pad})"),
+                    "all gather/combine operands index the padded \
+                     value buffer; padding points at the zero slot");
+        }
+    };
+    for (i, &v) in plan.lvl_left.iter().enumerate() {
+        check("lvl_left", i, v, r);
+    }
+    for (i, &v) in plan.lvl_right.iter().enumerate() {
+        check("lvl_right", i, v, r);
+    }
+    for (bi, cols) in plan.band_cols.iter().enumerate() {
+        for (i, &v) in cols.iter().enumerate() {
+            check(&format!("band_cols[{bi}]"), i, v, r);
+        }
+    }
+    for (bi, rows) in plan.band_rows.iter().enumerate() {
+        for (i, &v) in rows.iter().enumerate() {
+            if v < 0 || v as usize >= plan.br {
+                r.error(ID, format!("band_rows[{bi}][{i}]"),
+                        format!("local row {v} outside [0, {})",
+                                plan.br),
+                        "band rows are block-local destinations");
+            }
+        }
+    }
+}
+
+/// `plan.level_order`: level-`l` combine operands read originals or
+/// strictly earlier levels — never their own or a later level (the
+/// level kernel executes one dense slice at a time).
+fn plan_level_order(plan: &ExecutionPlan, r: &mut Report) {
+    const ID: &str = "plan.level_order";
+    r.ran(ID);
+    let zero = plan.zero_slot();
+    for l in 0..plan.levels {
+        let level_base = (plan.n_pad + l * plan.l_pad) as i32;
+        for j in 0..plan.l_pad {
+            let li = plan.lvl_left[l * plan.l_pad + j];
+            let ri = plan.lvl_right[l * plan.l_pad + j];
+            if li == zero && ri == zero {
+                continue; // padding entry
+            }
+            for v in [li, ri] {
+                if v >= level_base && v != zero {
+                    r.error(ID, format!("level {l} entry {j}"),
+                            format!("operand {v} reads its own or a \
+                                     later level (level base \
+                                     {level_base})"),
+                            "a combine may only read originals or \
+                             already-computed levels; re-level the \
+                             HAG");
+                }
+            }
+        }
+    }
+}
+
+/// `plan.encodes_hag`: the plan's tensors encode exactly the HAG they
+/// were compiled from. The leveling and slot map are recomputed
+/// independently from the HAG; then
+/// * every real level entry must carry `slot_of(left/right)` of its
+///   agg node and every padding entry the zero slot;
+/// * per permuted row, the multiset of band gather columns must equal
+///   the multiset of `slot_of(final in-edges)`;
+/// * `deg[new]` must be the true graph degree of `perm[new]`.
+fn plan_encodes_hag(ctx: &HagCtx, plan: &ExecutionPlan,
+                    r: &mut Report) {
+    const ID: &str = "plan.encodes_hag";
+    r.ran(ID);
+    let hag = ctx.hag;
+    let n = hag.n;
+    let na = hag.agg_nodes.len();
+
+    // Recompute the leveling (schedule.rs step 1) from the HAG.
+    let mut level = vec![0u32; na];
+    let mut max_level = 0u32;
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        let lv = |s: u32| -> u32 {
+            if (s as usize) < n { 0 } else { level[s as usize - n] }
+        };
+        level[i] = 1 + lv(a.left).max(lv(a.right));
+        max_level = max_level.max(level[i]);
+    }
+    if plan.levels != max_level as usize {
+        r.error(ID, "levels".to_string(),
+                format!("plan.levels = {} but the HAG levels to {}",
+                        plan.levels, max_level),
+                "recompile: the plan was built from a different HAG");
+        return;
+    }
+    let mut level_sizes = vec![0usize; plan.levels + 1];
+    let mut idx_in_level = vec![0usize; na];
+    for i in 0..na {
+        let l = level[i] as usize;
+        idx_in_level[i] = level_sizes[l];
+        level_sizes[l] += 1;
+    }
+    if plan.levels > 0 {
+        let want_l_pad = round_up(
+            level_sizes[1..].iter().copied().max().unwrap_or(0)
+                .max(1),
+            plan.lvl_block);
+        if plan.l_pad != want_l_pad {
+            r.error(ID, "l_pad".to_string(),
+                    format!("l_pad = {} but the HAG's max level size \
+                             rounds to {want_l_pad}", plan.l_pad),
+                    "recompile: level occupancy changed");
+            return;
+        }
+        if let Some(&max_sz) = level_sizes[1..].iter().max() {
+            if max_sz > plan.l_pad {
+                // unreachable given the l_pad check, but keeps the
+                // slot map below in-bounds under all edits
+                return;
+            }
+        }
+    } else if na > 0 {
+        return; // inconsistent; levels check above already fired
+    }
+
+    let zero = plan.zero_slot();
+    let slot_of = |s: u32| -> i32 {
+        if (s as usize) < n {
+            plan.inv_perm[s as usize] as i32
+        } else {
+            let i = s as usize - n;
+            (plan.n_pad + (level[i] as usize - 1) * plan.l_pad
+                + idx_in_level[i]) as i32
+        }
+    };
+
+    // Level tensors, entry by entry.
+    let mut expect_left = vec![zero; plan.levels * plan.l_pad];
+    let mut expect_right = vec![zero; plan.levels * plan.l_pad];
+    for (i, a) in hag.agg_nodes.iter().enumerate() {
+        let l = level[i] as usize - 1;
+        let j = idx_in_level[i];
+        expect_left[l * plan.l_pad + j] = slot_of(a.left);
+        expect_right[l * plan.l_pad + j] = slot_of(a.right);
+    }
+    for (idx, (&got, &want)) in plan.lvl_left.iter()
+        .zip(expect_left.iter()).enumerate()
+    {
+        if got != want {
+            r.error(ID, format!("lvl_left[{idx}]"),
+                    format!("= {got}, HAG encodes {want}"),
+                    "level tensors must encode each merge's operand \
+                     slots; recompile the plan");
+            return;
+        }
+    }
+    for (idx, (&got, &want)) in plan.lvl_right.iter()
+        .zip(expect_right.iter()).enumerate()
+    {
+        if got != want {
+            r.error(ID, format!("lvl_right[{idx}]"),
+                    format!("= {got}, HAG encodes {want}"),
+                    "level tensors must encode each merge's operand \
+                     slots; recompile the plan");
+            return;
+        }
+    }
+
+    // Band tensors: per permuted row, multiset of real gather
+    // columns == multiset of slot_of(final in-edges). Real entries
+    // never carry the zero slot (all real slots are < m_pad - 1), so
+    // zero-col entries are padding and must carry row 0.
+    let mut row0 = 0usize;
+    for (bi, &(nb, nnzb)) in plan.bands.iter().enumerate() {
+        for b in 0..nb {
+            let mut per_row: Vec<Vec<i32>> = vec![Vec::new(); plan.br];
+            for j in 0..nnzb {
+                let col = plan.band_cols[bi][b * nnzb + j];
+                let row = plan.band_rows[bi][b * nnzb + j] as usize;
+                if col == zero {
+                    if row != 0 {
+                        r.error(ID,
+                                format!("band {bi} block {b} entry \
+                                         {j}"),
+                                format!("padding entry targets row \
+                                         {row}, not 0"),
+                                "padding gathers the zero slot into \
+                                 row 0 so padded contributions \
+                                 vanish");
+                        return;
+                    }
+                    continue;
+                }
+                per_row[row].push(col);
+            }
+            for lr in 0..plan.br {
+                let new = row0 + b * plan.br + lr;
+                let mut want: Vec<i32> = if new < n {
+                    hag.in_edges[plan.perm[new] as usize].iter()
+                        .map(|&s| slot_of(s)).collect()
+                } else {
+                    Vec::new()
+                };
+                let mut got = per_row[lr].clone();
+                // padding entries into row 0 contribute zero and are
+                // skipped above; compare as multisets (execution is
+                // a sum — order within a row is not semantic)
+                got.sort_unstable();
+                want.sort_unstable();
+                if got != want {
+                    r.error(ID,
+                            format!("band {bi} block {b} row {lr}"),
+                            format!("row gathers {} column(s), HAG \
+                                     in-list encodes {} (first \
+                                     mismatch after sorting)",
+                                    got.len(), want.len()),
+                            "band gather lists must enumerate \
+                             exactly each row's final in-edges; \
+                             recompile the plan");
+                    return;
+                }
+            }
+        }
+        row0 += nb * plan.br;
+    }
+
+    // True degrees, permuted.
+    for new in 0..plan.n_pad {
+        let want = if new < n {
+            ctx.graph.degree(plan.perm[new]) as f32
+        } else {
+            0.0
+        };
+        if plan.deg[new] != want {
+            r.error(ID, format!("deg[{new}]"),
+                    format!("= {}, true graph degree is {want}",
+                            plan.deg[new]),
+                    "deg is the unpermuted input-graph in-degree \
+                     (GCN normalizer), not the HAG in-list length");
+            return;
+        }
+    }
+}

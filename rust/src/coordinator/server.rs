@@ -858,6 +858,19 @@ impl Worker {
             sp.cancel();
             return;
         }
+        // haglint gate: a corrupt re-plan must never become the
+        // serving state (debug: always; release: REPRO_VERIFY=1).
+        if crate::analysis::verify_enabled() {
+            let g = res.session.graph();
+            if !crate::analysis::gate_plan(&c.registry,
+                                           "serve.swap_verify", &g,
+                                           &hag, &plan, None)
+            {
+                c.swaps_skipped.inc();
+                sp.cancel();
+                return;
+            }
+        }
         // Install into the engine only once the serving state actually
         // swapped: an install resets the drift tracker, and resetting
         // it while still serving the old plan would stop tracking that
@@ -883,6 +896,13 @@ impl Worker {
                     &c.registry, c.meas_aggs.get(),
                     c.meas_transfers.get(),
                     res.session.shard_terms());
+                // Audit the pred_* gauges the attribution report
+                // will divide by, right after they were recorded.
+                if crate::analysis::verify_enabled() {
+                    crate::analysis::gate_cost_gauges(
+                        &c.registry, "serve.cost_gauges", &hag,
+                        res.session.shard_terms());
+                }
             }
             Ok(false) => {
                 c.swaps_skipped.inc();

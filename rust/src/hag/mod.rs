@@ -154,35 +154,16 @@ impl Hag {
     /// Structural sanity: every agg node references earlier slots only,
     /// every final edge references a valid slot, and (for `Set`) no
     /// duplicate slots in a node's in-list.
+    ///
+    /// Thin wrapper over the structural passes of
+    /// [`crate::analysis`] (`hag.topo_order`, `hag.slot_range`,
+    /// `hag.dup_inslots`, `hag.orphan_agg`) — the self-check and the
+    /// standalone verifier share one implementation so they can never
+    /// disagree. Use [`crate::analysis::verify_hag`] directly for the
+    /// full typed diagnostics (and the Theorem-1 exactness pass,
+    /// which needs the source graph).
     pub fn validate(&self) -> Result<(), String> {
-        for (i, a) in self.agg_nodes.iter().enumerate() {
-            let self_slot = (self.n + i) as u32;
-            if a.left >= self_slot || a.right >= self_slot {
-                return Err(format!(
-                    "agg node {i} references non-earlier slot \
-                     ({}, {}) >= {self_slot}",
-                    a.left, a.right
-                ));
-            }
-        }
-        let max_slot = self.slots() as u32;
-        for (v, l) in self.in_edges.iter().enumerate() {
-            for &s in l {
-                if s >= max_slot {
-                    return Err(format!("node {v} references slot {s} \
-                                        >= {max_slot}"));
-                }
-            }
-            if self.kind == AggregateKind::Set {
-                let mut sorted = l.clone();
-                sorted.sort_unstable();
-                sorted.dedup();
-                if sorted.len() != l.len() {
-                    return Err(format!("node {v} has duplicate in-slots"));
-                }
-            }
-        }
-        Ok(())
+        crate::analysis::validate_hag(self)
     }
 }
 
@@ -267,7 +248,7 @@ mod tests {
         let mut h = Hag {
             n: 2,
             agg_nodes: vec![AggNode { left: 3, right: 0 }],
-            in_edges: vec![vec![], vec![]],
+            in_edges: vec![vec![2], vec![]], // node 0 consumes the agg
             kind: AggregateKind::Set,
         };
         assert!(h.validate().is_err());

@@ -386,6 +386,15 @@ impl StreamEngine {
         }
         assert_eq!(hag.n, self.overlay.n(),
                    "installed HAG is not over the current graph");
+        if crate::analysis::verify_enabled() {
+            let g = self.overlay.to_graph();
+            if !crate::analysis::gate_hag(
+                crate::obs::metrics::MetricsRegistry::global(),
+                "incr.install", &g, hag)
+            {
+                return false;
+            }
+        }
         self.tracker.record_search(hag.cost_core(), self.overlay.e());
         self.hag = IncrementalHag::from_hag(hag);
         self.dirty.clear();

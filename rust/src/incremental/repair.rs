@@ -413,72 +413,45 @@ impl IncrementalHag {
 
     /// Internal consistency: refcounts exact, live count exact, live
     /// operands alive, finals reference live nodes, in-lists
-    /// duplicate-free, maintained edge count exact.
+    /// duplicate-free, maintained edge count exact. Thin wrapper over
+    /// the analysis incremental passes
+    /// ([`crate::analysis::check_incremental`]: `incr.id_space`,
+    /// `incr.topo_order`, `incr.refcounts`, `incr.counters`) so this
+    /// method and the verifier can never disagree; the first error
+    /// diagnostic becomes the `Err` message.
     pub fn check(&self) -> Result<(), String> {
-        let mut want_refs = vec![0u32; self.aggs.len()];
-        let mut live = 0usize;
-        for (i, a) in self.aggs.iter().enumerate() {
-            if let Some(a) = a {
-                live += 1;
-                for op in [a.left, a.right] {
-                    if is_agg(op) {
-                        if self.aggs[agg_id(op)].is_none() {
-                            return Err(format!(
-                                "agg {i} references dead agg {}",
-                                agg_id(op)));
-                        }
-                        if agg_id(op) >= i {
-                            return Err(format!(
-                                "agg {i} references non-earlier agg {}",
-                                agg_id(op)));
-                        }
-                        want_refs[agg_id(op)] += 1;
-                    } else if (op as usize) >= self.n {
-                        return Err(format!(
-                            "agg {i} references missing node {op}"));
-                    }
-                }
-            }
-        }
-        let mut final_edges = 0usize;
-        for (v, l) in self.in_edges.iter().enumerate() {
-            final_edges += l.len();
-            let mut sorted = l.clone();
-            sorted.sort_unstable();
-            sorted.dedup();
-            if sorted.len() != l.len() {
-                return Err(format!("node {v} has duplicate in-slots"));
-            }
-            for &s in l {
-                if is_agg(s) {
-                    if self.aggs[agg_id(s)].is_none() {
-                        return Err(format!(
-                            "node {v} references dead agg {}",
-                            agg_id(s)));
-                    }
-                    want_refs[agg_id(s)] += 1;
-                } else if (s as usize) >= self.n {
-                    return Err(format!(
-                        "node {v} references missing node {s}"));
-                }
-            }
-        }
-        if live != self.live {
-            return Err(format!("live count {} != {}", self.live, live));
-        }
-        if final_edges != self.final_edges {
-            return Err(format!("final edge count {} != {}",
-                               self.final_edges, final_edges));
-        }
-        for (i, (&got, &want)) in
-            self.refs.iter().zip(want_refs.iter()).enumerate()
+        let report = crate::analysis::check_incremental(self);
+        match report.diagnostics.iter().find(
+            |d| d.severity == crate::analysis::Severity::Error)
         {
-            if self.aggs[i].is_some() && got != want {
-                return Err(format!(
-                    "agg {i}: refcount {got} != actual {want}"));
-            }
+            None => Ok(()),
+            Some(d) => Err(format!("[{}] {}: {}", d.pass, d.entity,
+                                   d.message)),
         }
-        Ok(())
+    }
+
+    /// Raw field views for the analysis incremental passes
+    /// (`analysis/incremental.rs`):
+    /// `(n, aggs, refs, in_edges, live, final_edges)`. The fields
+    /// stay private — this is a read-only window, crate-internal.
+    pub(crate) fn raw_parts(&self)
+        -> (usize, &[Option<AggNode>], &[u32], &[Vec<u32>], usize,
+            usize)
+    {
+        (self.n, &self.aggs, &self.refs, &self.in_edges, self.live,
+         self.final_edges)
+    }
+
+    /// Mutable field views for the mutation-kill tests only:
+    /// `(aggs, refs, in_edges, live, final_edges)`. Corrupting these
+    /// is how the tests prove the incremental passes are not vacuous.
+    #[cfg(test)]
+    pub(crate) fn raw_parts_mut(&mut self)
+        -> (&mut Vec<Option<AggNode>>, &mut Vec<u32>,
+            &mut Vec<Vec<u32>>, &mut usize, &mut usize)
+    {
+        (&mut self.aggs, &mut self.refs, &mut self.in_edges,
+         &mut self.live, &mut self.final_edges)
     }
 }
 

@@ -21,6 +21,7 @@
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod datasets;

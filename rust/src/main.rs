@@ -61,8 +61,18 @@ SUBCOMMANDS
   obs            telemetry tools: demo the metrics registry + event
                  tracer on a small search, or validate exported
                  artifacts (--check-snapshot / --check-trace /
-                 --check-cost, used by CI on the serve smoke's
-                 exports)
+                 --check-cost / --check-verify, used by CI on the
+                 serve smoke's exports and the verify gate)
+  verify         haglint: multi-pass static verification of HAGs and
+                 execution plans (--corpus runs the seeded artifact
+                 corpus — the hard CI gate; --dataset verifies one
+                 session lowering; --list prints the pass inventory;
+                 --json P writes a haglint-v1 report)
+  lint-src       source-convention lint over rust/src: no
+                 unwrap/expect/panic! in the request path, metric
+                 names shaped subsystem.noun_verb, no deprecated
+                 wrapper references (allowlist:
+                 tools/srclint-allow.txt; hard CI gate)
   cost-audit     measured-vs-predicted cost-model audit: run the host
                  reference executor over the generator corpus, meter
                  every batch into the online α̂/β̂ calibration, and
@@ -146,6 +156,14 @@ REPRO_LOG=error|warn|info|trace)
   --check-cost P    (obs) validate a --cost-audit / cost-audit --json
                     export: calibration populated, predicted and
                     measured terms present and positive
+  --check-verify P  (obs) validate a verify --json haglint-v1 export:
+                    clean, zero errors, non-empty pass inventory and
+                    case list
+  --corpus          (verify) run the seeded verification corpus
+  --list            (verify) print the pass inventory
+  --src-root DIR    (lint-src) source root         [src]
+  --allowlist P     (lint-src) known-good exceptions
+                    [tools/srclint-allow.txt]
 ";
 
 fn main() -> Result<()> {
@@ -167,6 +185,8 @@ fn main() -> Result<()> {
         "infer" => cmd_infer(&args, &artifacts, scale, seed),
         "serve" => cmd_serve(&args, &artifacts, scale, seed),
         "obs" => cmd_obs(&args, scale, seed),
+        "verify" => cmd_verify(&args, scale, seed),
+        "lint-src" => cmd_lint_src(&args),
         "cost-audit" => cmd_cost_audit(&args, scale, seed),
         "bench-fig2" => repro::bench::fig2(
             &artifacts, args.get_all("datasets"), scale, seed,
@@ -1046,8 +1066,9 @@ fn cmd_obs(args: &Args, scale: f64, seed: u64) -> Result<()> {
     let check_snap = args.get::<String>("check-snapshot")?;
     let check_trace = args.get::<String>("check-trace")?;
     let check_cost = args.get::<String>("check-cost")?;
+    let check_verify = args.get::<String>("check-verify")?;
     if check_snap.is_some() || check_trace.is_some()
-        || check_cost.is_some()
+        || check_cost.is_some() || check_verify.is_some()
     {
         if let Some(path) = check_snap {
             obs_check_snapshot(&path)?;
@@ -1057,6 +1078,9 @@ fn cmd_obs(args: &Args, scale: f64, seed: u64) -> Result<()> {
         }
         if let Some(path) = check_cost {
             obs_check_cost(&path)?;
+        }
+        if let Some(path) = check_verify {
+            obs_check_verify(&path)?;
         }
         return Ok(());
     }
@@ -1225,5 +1249,158 @@ fn obs_check_trace(path: &str) -> Result<()> {
         bail!("{path}: no completed spans in {} events", events.len());
     }
     println!("check-trace OK: {spans} spans + {instants} instants");
+    Ok(())
+}
+
+/// CI check: a `repro verify --json` export must be one `haglint-v1`
+/// document that is clean — zero total errors, zero per-case errors —
+/// with a non-empty pass inventory and case list.
+fn obs_check_verify(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let doc = repro::util::json::parse(&text)
+        .with_context(|| format!("{path}: invalid JSON"))?;
+    let schema = doc.req_str("schema")
+        .with_context(|| path.to_string())?;
+    if schema != "haglint-v1" {
+        bail!("{path}: schema {schema:?}, want haglint-v1");
+    }
+    if doc.get("clean").and_then(|v| v.as_bool()) != Some(true) {
+        bail!("{path}: report is not clean");
+    }
+    let total = doc.req_f64("total_errors")
+        .with_context(|| path.to_string())?;
+    if total != 0.0 {
+        bail!("{path}: total_errors = {total}, want 0");
+    }
+    let passes = doc.req_arr("passes")
+        .with_context(|| path.to_string())?;
+    if passes.is_empty() {
+        bail!("{path}: empty pass inventory");
+    }
+    let cases = doc.req_arr("cases")
+        .with_context(|| path.to_string())?;
+    if cases.is_empty() {
+        bail!("{path}: no verification cases");
+    }
+    for (i, c) in cases.iter().enumerate() {
+        let errs = c.req_f64("errors")
+            .with_context(|| format!("{path}: case {i}"))?;
+        if errs != 0.0 {
+            bail!("{path}: case {i} carries {errs} error(s)");
+        }
+        if c.req_arr("passes_run")
+            .with_context(|| format!("{path}: case {i}"))?
+            .is_empty()
+        {
+            bail!("{path}: case {i} ran no passes");
+        }
+    }
+    println!("check-verify OK: {} case(s) clean across {} pass(es)",
+             cases.len(), passes.len());
+    Ok(())
+}
+
+/// `repro verify` — run haglint over the seeded corpus (`--corpus`,
+/// the hard CI gate) or one dataset lowering (`--dataset`), print a
+/// per-case table, optionally export the `haglint-v1` report
+/// (`--json P`), and fail on any error diagnostic.
+fn cmd_verify(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    use repro::analysis;
+
+    if args.flag("list")? {
+        println!("haglint pass inventory ({} passes):",
+                 analysis::PASSES.len());
+        for p in analysis::PASSES {
+            println!("  {:<22} [{:<11}] {}", p.id, p.class.as_str(),
+                     p.desc);
+        }
+        return Ok(());
+    }
+    let json_out = args.get::<String>("json")?;
+    let cases: Vec<(String, analysis::Report)> =
+        if args.flag("corpus")? {
+            analysis::corpus::verify_corpus()
+        } else {
+            let name = req_dataset(args)?;
+            let ds = datasets::load(
+                &name, repro::bench::effective_scale(&name, scale),
+                seed);
+            let spec = SpecArgs::parse(args)?.spec;
+            let capacity = spec.resolved_capacity(ds.graph.n());
+            let mut sess = Session::new(&ds, spec);
+            let (hag, plan) = sess.plan();
+            let g = sess.graph();
+            let ctx = analysis::HagCtx::new(&g, &hag)
+                .with_plan(&plan)
+                .with_capacity(capacity);
+            vec![(format!("{}/session", ds.name),
+                  analysis::verify(&ctx))]
+        };
+
+    println!("{:<28} {:>6} {:>7}", "case", "passes", "errors");
+    let mut total = 0usize;
+    for (name, r) in &cases {
+        total += r.errors();
+        println!("{:<28} {:>6} {:>7}", name, r.passes_run.len(),
+                 r.errors());
+        if !r.is_clean() {
+            print!("{}", r.format());
+        }
+    }
+    if let Some(path) = json_out {
+        let doc = analysis::corpus_report_json(&cases);
+        std::fs::write(&path, doc.to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("verify json : haglint-v1 -> {path}");
+    }
+    if total > 0 {
+        bail!("haglint: {total} error(s) across {} case(s)",
+              cases.len());
+    }
+    println!("haglint OK: {} case(s) clean", cases.len());
+    Ok(())
+}
+
+/// `repro lint-src` — source-convention lint (see
+/// `analysis::srclint`). Run from `rust/` (CI) or the repo root; the
+/// defaults probe both layouts.
+fn cmd_lint_src(args: &Args) -> Result<()> {
+    use repro::analysis::srclint;
+
+    let root = match args.get::<String>("src-root")? {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let local = PathBuf::from("src");
+            if local.join("lib.rs").is_file() {
+                local
+            } else {
+                PathBuf::from("rust/src")
+            }
+        }
+    };
+    let allow_path = match args.get::<String>("allowlist")? {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let local = PathBuf::from("tools/srclint-allow.txt");
+            if local.is_file() {
+                local
+            } else {
+                PathBuf::from("../tools/srclint-allow.txt")
+            }
+        }
+    };
+    let allow = srclint::load_allowlist(&allow_path);
+    let findings = srclint::run(&root, &allow)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    for f in &findings {
+        println!("{}", f.format());
+    }
+    if !findings.is_empty() {
+        bail!("lint-src: {} finding(s) (allowlist: {})",
+              findings.len(), allow_path.display());
+    }
+    println!("lint-src OK: {} clean ({} allowlist entries)",
+             root.display(), allow.len());
     Ok(())
 }

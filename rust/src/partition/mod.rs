@@ -163,6 +163,11 @@ pub fn search_partitioned(g: &Graph, part: &Partition,
         per_shard.push(s);
     }
     let hag = stitch_hags(g, part, &locals);
+    if crate::analysis::verify_enabled() {
+        crate::analysis::gate_stitched(
+            crate::obs::metrics::MetricsRegistry::global(),
+            "partition.stitch", g, part, &locals, &hag);
+    }
 
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let total = SearchStats {

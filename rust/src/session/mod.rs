@@ -488,7 +488,25 @@ impl Session {
         self.shard_terms = locals.iter()
             .map(|h| (h.aggregations(), h.data_transfers()))
             .collect();
-        Arc::new(stitch_hags(g, &self.part, &locals))
+        let stitched = Arc::new(stitch_hags(g, &self.part, &locals));
+        if crate::analysis::verify_enabled() {
+            crate::analysis::gate_stitched(
+                crate::obs::metrics::MetricsRegistry::global(),
+                "session.stitch", g, &self.part, &locals, &stitched);
+        }
+        stitched
+    }
+
+    /// The spec's total `|V_A|` budget, when every shard budget is
+    /// finite (what the `hag.capacity_fit` gate checks against).
+    fn total_budget(&self) -> Option<usize> {
+        if self.budgets.is_empty()
+            || self.budgets.contains(&usize::MAX)
+        {
+            return None;
+        }
+        Some(self.budgets.iter()
+            .fold(0usize, |a, &b| a.saturating_add(b)))
     }
 
     /// The maintained plan: re-searches dirty shards only, splices
@@ -506,6 +524,12 @@ impl Session {
         let g = self.graph.to_graph();
         let hag = self.build_hag(&g, true);
         let plan = Arc::new(build_plan(&g, &hag, &self.spec.plan));
+        if crate::analysis::verify_enabled() {
+            crate::analysis::gate_plan(
+                crate::obs::metrics::MetricsRegistry::global(),
+                "session.plan", &g, &hag, &plan,
+                self.total_budget());
+        }
         self.cache.insert_plan(self.fp, self.version, hag.clone(),
                                plan.clone());
         (hag, plan)

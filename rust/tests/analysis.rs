@@ -1,0 +1,99 @@
+//! haglint integration tests: the corpus-clean property (every
+//! artifact the pipeline can legitimately produce verifies with zero
+//! diagnostics) and the mutation-kill matrix (every public analysis
+//! pass catches the one targeted corruption that owns it — the proof
+//! the verifier is not vacuous). The incremental-IR kills live
+//! in-crate (`analysis/incremental.rs`, they need private state);
+//! `cost.gauges_match` is killed here against a real registry.
+
+use repro::analysis::{self, corpus, mutate};
+use repro::analysis::mutate::ALL_MUTANTS;
+use repro::obs::metrics::MetricsRegistry;
+
+/// Generator graphs x {exact, windowed, capacity-capped} x
+/// {single, sharded/stitched, repaired} all verify clean — including
+/// the incremental-IR stream case.
+#[test]
+fn corpus_verifies_clean() {
+    let cases = corpus::verify_corpus();
+    assert!(cases.len() >= 10, "corpus shrank to {}", cases.len());
+    for (name, r) in cases {
+        assert!(r.is_clean(), "{name}:\n{}", r.format());
+        assert!(!r.passes_run.is_empty(), "{name}: no passes ran");
+    }
+}
+
+/// Every mutant lands on at least one corpus artifact and is flagged
+/// by exactly the pass that owns its corruption class (other passes
+/// may fire too — gating only guarantees the owner sees it).
+#[test]
+fn mutation_kill_matrix() {
+    let arts = corpus::corpus();
+    let mut killed: Vec<&'static str> = Vec::new();
+    for &m in ALL_MUTANTS {
+        let pass = m.expected_pass();
+        let mut applied = 0usize;
+        for art in &arts {
+            let mut corrupt = art.clone();
+            if !mutate::apply(m, &mut corrupt) {
+                continue;
+            }
+            applied += 1;
+            let r = corrupt.verify();
+            assert!(r.flagged(pass),
+                    "{m:?} on {} escaped pass {pass}; report:\n{}",
+                    art.name, r.format());
+        }
+        assert!(applied > 0,
+                "{m:?} was inapplicable to every corpus artifact");
+        if !killed.contains(&pass) {
+            killed.push(pass);
+        }
+    }
+    // coverage: every pass in the inventory has a kill somewhere —
+    // here, or in the in-crate incremental/gauge suites
+    for p in analysis::PASSES {
+        if p.id.starts_with("incr.") || p.id == "cost.gauges_match" {
+            continue;
+        }
+        assert!(killed.contains(&p.id),
+                "pass {} has no mutation kill", p.id);
+    }
+}
+
+/// `cost.gauges_match` kill: honest `cost.pred_*` gauges verify
+/// clean; a one-off skew of a recorded gauge is caught.
+#[test]
+fn gauge_skew_is_killed() {
+    let reg = MetricsRegistry::new();
+    let arts = corpus::corpus();
+    let art = arts.iter()
+        .find(|a| !a.hag.agg_nodes.is_empty() && a.part.is_none())
+        .expect("corpus has a single-shard hierarchical artifact");
+    let terms = vec![(art.hag.aggregations(),
+                      art.hag.data_transfers())];
+    repro::obs::cost::record_plan_terms(&reg, &art.hag, &terms);
+    let clean = analysis::check_cost_gauges(&reg.snapshot(),
+                                            &art.hag, &terms);
+    assert!(clean.is_clean(), "{}", clean.format());
+
+    reg.gauge("cost.pred_transfers").add(1);
+    let dirty = analysis::check_cost_gauges(&reg.snapshot(),
+                                            &art.hag, &terms);
+    assert!(dirty.flagged("cost.gauges_match"), "{}", dirty.format());
+}
+
+/// The corpus JSON envelope round-trips through the same checks CI's
+/// `repro obs --check-verify` applies.
+#[test]
+fn corpus_report_envelope() {
+    let cases = corpus::verify_corpus();
+    let doc = analysis::corpus_report_json(&cases);
+    assert_eq!(doc.req_str("schema").unwrap(), "haglint-v1");
+    assert_eq!(doc.get("clean").and_then(|v| v.as_bool()),
+               Some(true));
+    assert_eq!(doc.req_f64("total_errors").unwrap(), 0.0);
+    assert_eq!(doc.req_arr("cases").unwrap().len(), cases.len());
+    assert_eq!(doc.req_arr("passes").unwrap().len(),
+               analysis::PASSES.len());
+}
