@@ -1,0 +1,159 @@
+//! Durability-plane overhead (DESIGN.md §14): WAL group-commit cost
+//! per journaled delta, crash-recovery wall time as a function of
+//! replay length, and the disarmed `fault::point` tax on the hot
+//! path. The operational claims: journaling stays far below exec
+//! cost per update batch, recovery scales linearly in the replayed
+//! suffix (snapshots bound it), and a disarmed fault point costs a
+//! few nanoseconds — cheap enough to leave compiled into production
+//! binaries. Advisory — no hard threshold; shared runners are noisy.
+//!
+//! Run: `cargo bench --bench recovery` (CI passes `--smoke` for one
+//! bounded replay length). Results land in `BENCH_recovery.json`
+//! (override with `BENCH_JSON=...`) in the `benchkit-v1` schema.
+
+use std::path::{Path, PathBuf};
+
+use repro::durability::{recover, resume_pair, Wal};
+use repro::graph::Graph;
+use repro::incremental::{GraphDelta, StreamConfig, StreamEngine};
+use repro::session::{LowerSpec, Session};
+use repro::util::benchkit::{BenchJson, Bencher};
+
+const BASE_N: u32 = 64;
+const GROUP: usize = 64;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "repro-bench-recovery-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn base_graph() -> Graph {
+    let edges: Vec<(u32, u32)> =
+        (0..BASE_N).map(|i| (i, (i + 1) % BASE_N)).collect();
+    Graph::from_edges(BASE_N as usize, &edges)
+}
+
+/// Valid unbounded history over the ring base: alternate NodeAdd
+/// with an insert wiring the new node in, so every prefix replays.
+fn delta_at(i: usize) -> GraphDelta {
+    let k = (i / 2) as u32;
+    if i % 2 == 0 {
+        GraphDelta::NodeAdd
+    } else {
+        GraphDelta::EdgeInsert { src: k % BASE_N, dst: BASE_N + k }
+    }
+}
+
+fn build_wal(dir: &Path, len: usize) {
+    let mut w = Wal::open(dir, 1).unwrap();
+    w.set_segment_bytes(1 << 20);
+    for i in 0..len {
+        w.append(delta_at(i)).unwrap();
+        if i % GROUP == GROUP - 1 {
+            w.commit().unwrap();
+        }
+    }
+    if len % GROUP != 0 {
+        w.commit().unwrap();
+    }
+}
+
+fn dir_bytes(dir: &Path) -> u64 {
+    std::fs::read_dir(dir).map(|rd| {
+        rd.flatten()
+            .filter_map(|e| e.metadata().ok())
+            .map(|m| m.len())
+            .sum()
+    }).unwrap_or(0)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = Bencher::quick();
+    let mut json = BenchJson::new();
+
+    // Any REPRO_FAULTS in the environment would skew every number.
+    repro::fault::reset();
+
+    // 1) Journal cost: append + group-commit fsync, amortized per
+    //    delta across a GROUP-sized batch (the serve-path shape).
+    {
+        let dir = tmpdir("append");
+        let mut w = Wal::open(&dir, 1).unwrap();
+        w.set_segment_bytes(8 << 20);
+        let mut i = 0usize;
+        let s = b.run("recovery/wal_group_commit_batch64", || {
+            for _ in 0..GROUP {
+                w.append(delta_at(i)).unwrap();
+                i += 1;
+            }
+            w.commit().unwrap();
+        });
+        json.push(&s);
+        let per = s.median.as_secs_f64() * 1e9 / GROUP as f64;
+        json.derived_num("recovery/wal_append_ns_per_delta", per);
+        println!("  wal group-commit: {:.0} ns/delta \
+                  (batch of {GROUP}, fsync included)", per);
+        drop(w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // 2) Recovery wall time vs replay length: scan + CRC-validate
+    //    the WAL, then replay into a fresh engine + session pair.
+    let lens: &[usize] =
+        if smoke { &[256] } else { &[256, 1_024, 4_096] };
+    for &len in lens {
+        let dir = tmpdir(&format!("replay{len}"));
+        build_wal(&dir, len);
+        let g = base_graph();
+        let cfg = StreamConfig::default();
+        let s = b.run(&format!("recovery/replay_{len}"), || {
+            let rec = recover(&dir).expect("recover");
+            assert_eq!(rec.deltas.len(), len);
+            let mut engine = StreamEngine::new(&g, cfg.clone());
+            let mut session =
+                Session::from_graph(&g, LowerSpec::default());
+            let rep = resume_pair(&rec, &mut engine, &mut session,
+                                  &cfg).expect("replay");
+            assert_eq!(rep.session_replayed, len);
+        });
+        json.push(&s);
+        let ms = s.median.as_secs_f64() * 1e3;
+        json.derived_num(&format!("recovery/replay_{len}/ms"), ms);
+        json.derived_num(&format!("recovery/replay_{len}/wal_bytes"),
+                         dir_bytes(&dir) as f64);
+        json.derived_num(
+            &format!("recovery/replay_{len}/ms_per_1k_deltas"),
+            ms * 1e3 / len as f64);
+        println!("  recover+replay {len} deltas: {ms:.2} ms \
+                  ({:.2} ms/1k)", ms * 1e3 / len as f64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // 3) Disarmed fault-point overhead: one relaxed atomic load per
+    //    call. The acceptance target is single-digit nanoseconds.
+    {
+        let mut fired = 0u64;
+        let s = b.run("recovery/fault_point_disarmed_x1000", || {
+            for _ in 0..1_000 {
+                if repro::fault::point("wal.append").is_err() {
+                    fired += 1;
+                }
+            }
+        });
+        assert_eq!(fired, 0, "no fault is armed in this bench");
+        json.push(&s);
+        let ns = s.median.as_secs_f64() * 1e9 / 1_000.0;
+        json.derived_num("recovery/fault_point_disarmed_ns", ns);
+        println!("  disarmed fault::point: {ns:.1} ns/call");
+    }
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_recovery.json".to_string());
+    json.write(Path::new(&out))
+        .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("wrote {out}");
+}

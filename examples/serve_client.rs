@@ -22,7 +22,8 @@
 
 use std::time::Duration;
 
-use repro::net::{Client, NetConfig, NetServer, Outcome};
+use repro::net::{Client, NetConfig, NetServer, Outcome,
+                 RetryPolicy};
 
 fn parse_args() -> (Option<String>, usize) {
     let mut addr = None;
@@ -96,9 +97,13 @@ fn main() -> anyhow::Result<()> {
     let epoch = client.ping()?;
     println!("ping       : serving plan epoch {epoch}");
 
-    // 2. Scoring load with client-side latency accounting. Node ids
-    //    above the graph size come back as explicit
-    //    node_out_of_range rejections — count both outcomes.
+    // 2. Scoring load with client-side latency accounting, through
+    //    the retrying wrapper: transient admission sheds
+    //    (retry_after / draining) are absorbed by capped jittered
+    //    backoff honoring the server's hint, while semantic
+    //    rejections (ids above the graph size come back as explicit
+    //    node_out_of_range) surface immediately — count both.
+    let retry = RetryPolicy::default();
     let mut lat_us: Vec<u64> = Vec::new();
     let (mut ok, mut rejected) = (0usize, 0usize);
     let mut state = 0x9e3779b97f4a7c15u64;
@@ -114,7 +119,7 @@ fn main() -> anyhow::Result<()> {
             .map(|_| (rand() % 2000) as f32 / 1000.0 - 1.0)
             .collect();
         let t = std::time::Instant::now();
-        match client.score(node, &features)? {
+        match client.score_with_retry(node, &features, &retry)? {
             Outcome::Ok(score) => {
                 ok += 1;
                 lat_us.push(t.elapsed().as_micros() as u64);

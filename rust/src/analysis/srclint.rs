@@ -3,9 +3,12 @@
 //! see:
 //!
 //! - **R1 `no-panic-path`** — no `.unwrap()` / `.expect("...")` /
-//!   `panic!(` in the request path (`net/` and
-//!   `coordinator/server.rs`): a poisoned lock or malformed frame must
-//!   degrade to a protocol error, never take the serving thread down.
+//!   `panic!(` in the request path (`net/`, `durability/`, `fault/`,
+//!   and `coordinator/server.rs`): a poisoned lock, malformed frame,
+//!   or failed fsync must degrade to a protocol error or a nack,
+//!   never take the serving thread down. (The fault plane's Panic
+//!   action is the one allowlisted exception — it panics by
+//!   contract.)
 //! - **R2 `metric-name`** — literal metric names registered via
 //!   `.counter("...")` / `.gauge("...")` / `.histogram("...")` follow
 //!   the `subsystem.noun_verb` shape (`[a-z][a-z0-9_]*` segments, >= 2,
@@ -153,6 +156,8 @@ pub fn run(src_root: &Path, allow: &[(String, String)])
         let lines: Vec<&str> = text.lines().collect();
         let end = test_region_start(&lines);
         let in_request_path = rel.starts_with("net/")
+            || rel.starts_with("durability/")
+            || rel.starts_with("fault/")
             || rel == "coordinator/server.rs";
         let in_coordinator = rel.starts_with("coordinator/");
         for (i, &line) in lines[..end].iter().enumerate() {

@@ -163,7 +163,7 @@ pub fn write_buckets_json(buckets: &[BucketSpec],
     if let Some(parent) = out.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    std::fs::write(out, doc.to_string_pretty())?;
+    crate::util::atomic_write(out, doc.to_string_pretty().as_bytes())?;
     Ok(())
 }
 

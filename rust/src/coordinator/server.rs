@@ -73,6 +73,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::durability::DurabilityState;
 use crate::graph::Graph;
 use crate::hag::{AggregateKind, ExecutionPlan, Hag};
 use crate::incremental::{ApplyOutcome, GraphDelta, RebuildEvent,
@@ -298,6 +299,15 @@ pub struct Resident {
     pub engine: StreamEngine,
     pub session: Session,
     pub swap: SwapPolicy,
+    /// Crash-safe journaling (DESIGN.md §14): when present, every
+    /// coalesced update batch is fsync'd into the WAL *before* it is
+    /// applied or acknowledged, and a snapshot is cut on the
+    /// configured epoch cadence after each landed swap.
+    pub durability: Option<DurabilityState>,
+    /// Run one forced swap check before the first batch (recovery
+    /// resumes serving the recovered session plan immediately
+    /// instead of waiting for the next due drift check).
+    pub force_initial_swap: bool,
     /// Serving-side drift threshold, from the session spec. Negative
     /// values trigger a swap check at every flush (CI/test forcing
     /// knob — see `DriftPolicy::threshold`).
@@ -326,19 +336,59 @@ impl Resident {
             swap_plans: swap.swap_plans && swappable,
             max_pending: swap.max_pending.max(1),
         };
-        let mut cfg = spec.stream_config();
-        if swap.swap_plans {
-            cfg.policy.threshold = f64::INFINITY;
-        } else {
-            cfg.policy.background = true;
-        }
+        let cfg = Self::engine_config(&spec, swap.swap_plans);
         let engine = if swappable {
             StreamEngine::from_hag(g, cfg, hag)
         } else {
             StreamEngine::new(g, cfg)
         };
-        Resident { engine, session, swap,
+        Resident { engine, session, swap, durability: None,
+                   force_initial_swap: false,
                    threshold: spec.drift.threshold }
+    }
+
+    /// The engine config a resident runs under: with plan swapping
+    /// the engine's own drift rebuild is disabled (the session owns
+    /// re-planning), otherwise rebuilds go to the background thread.
+    fn engine_config(spec: &crate::session::LowerSpec,
+                     swap_plans: bool)
+                     -> crate::incremental::StreamConfig {
+        let mut cfg = spec.stream_config();
+        if swap_plans {
+            cfg.policy.threshold = f64::INFINITY;
+        } else {
+            cfg.policy.background = true;
+        }
+        cfg
+    }
+
+    /// Replay recovered durability state into this resident pair:
+    /// snapshot adoption plus WAL suffix for the engine, full history
+    /// for the session (see [`crate::durability::resume_pair`]).
+    /// Combine with [`Resident::with_initial_swap`] so the recovered
+    /// topology's plan is served from the first batch.
+    pub fn resume(&mut self, rec: &crate::durability::Recovered)
+                  -> Result<crate::durability::ReplayReport, String> {
+        let cfg = Self::engine_config(self.session.spec(),
+                                      self.swap.swap_plans);
+        crate::durability::resume_pair(rec, &mut self.engine,
+                                       &mut self.session, &cfg)
+    }
+
+    /// Attach crash-safe journaling: the update path becomes
+    /// journal-then-ack against this WAL.
+    pub fn with_durability(mut self, dur: DurabilityState)
+                           -> Resident {
+        self.durability = Some(dur);
+        self
+    }
+
+    /// Serve the session's current plan from the first batch onward
+    /// (recovery resume: the recovered topology is ahead of the
+    /// lowered plan, so waiting for drift would serve stale state).
+    pub fn with_initial_swap(mut self) -> Resident {
+        self.force_initial_swap = true;
+        self
     }
 }
 
@@ -375,6 +425,14 @@ pub struct ServeStats {
     pub shard_searches: usize,
     /// Per-shard searches the session's plan cache absorbed.
     pub shard_cache_hits: usize,
+    /// Batcher rounds that panicked and were restarted by the
+    /// supervision loop (bounded; see `MAX_WORKER_RESTARTS`).
+    pub worker_restarts: usize,
+    /// Update batches nacked because their WAL commit failed (every
+    /// delta in the batch was refused; none were applied).
+    pub wal_nacked_batches: usize,
+    /// Snapshots cut at epoch boundaries by the durability handle.
+    pub snapshots_written: usize,
     /// Shutdown contract check (swap-enabled residents only):
     /// session `plan()` == `plan_fresh()` with full tensor equality.
     pub plan_matches_fresh: Option<bool>,
@@ -624,6 +682,29 @@ impl Backend {
     }
 }
 
+/// Restart budget for the batcher supervision loop: a worker that
+/// panics this many times shuts down instead of spinning (each
+/// restart already flight-recorded its panic for diagnosis).
+const MAX_WORKER_RESTARTS: usize = 3;
+
+/// Outcome of one supervised serving round.
+enum Round {
+    Continue,
+    Shutdown,
+}
+
+/// Best-effort text of a caught panic payload (panics carry `&str`
+/// or `String` in practice; anything else is reported opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// The batcher thread's serving state.
 struct Worker {
     backend: Backend,
@@ -771,6 +852,27 @@ impl Worker {
         let tr = Instant::now();
         let deltas: Vec<GraphDelta> =
             pending.iter().map(|u| u.delta).collect();
+        // Journal-then-ack (DESIGN.md §14): the whole coalesced
+        // batch must be durable before any of it is applied or
+        // acknowledged. A failed WAL commit nacks the batch by
+        // dropping every reply sender — the wire front end surfaces
+        // the closed channel as an Internal error — and applies
+        // nothing, so the graph and the WAL stay at the same durable
+        // point together.
+        if let Some(dur) = resident.as_mut()
+            .and_then(|r| r.durability.as_mut())
+        {
+            if let Err(e) = dur.journal(&deltas) {
+                crate::obs_error!("[serve] WAL commit failed; \
+                                   nacking {} update(s): {e}",
+                                  deltas.len());
+                c.wal_nacks.inc();
+                obs::flight::dump("wal-commit-failed", &c.registry);
+                pending.clear();
+                c.t_repair.record(tr.elapsed());
+                return;
+            }
+        }
         let order = match resident.as_ref() {
             Some(res) => coalesce_order(&deltas, |v| {
                 res.session.shard_of_checked(v).unwrap_or(u32::MAX)
@@ -811,25 +913,30 @@ impl Worker {
         // repair inside `engine.apply`); the swap check accounts to
         // the plan bucket separately.
         c.t_repair.record(tr.elapsed());
-        self.maybe_swap(resident, c);
+        self.maybe_swap(resident, c, false);
     }
 
     /// Drift check + session-fed hot swap. The dirty-shard re-plan
     /// runs synchronously here — it is the cheap per-shard unit of
     /// work the cache was built for, not a whole-graph search.
+    /// `force` bypasses the drift-due check (recovery resume serves
+    /// the recovered plan before the first batch); the verify gate
+    /// and the swap protocol itself are never bypassed.
     fn maybe_swap(&mut self, resident: &mut Option<Resident>,
-                  c: &mut Counters) {
+                  c: &mut Counters, force: bool) {
         let Some(res) = resident.as_mut() else { return };
         if !res.swap.swap_plans || res.engine.rebuild_in_flight() {
             return;
         }
-        let due = res.engine.drift() > res.threshold;
+        let due = force || res.engine.drift() > res.threshold;
         crate::obs_event!("serve.drift_check", due as u64);
         if !due {
             return;
         }
         // Nothing changed since the plan we already serve: skip.
-        if self.served_session_plan && res.session.plan_current() {
+        if !force && self.served_session_plan
+            && res.session.plan_current()
+        {
             return;
         }
         // Span the whole swap attempt; cancelled on every path that
@@ -874,8 +981,14 @@ impl Worker {
         // Install into the engine only once the serving state actually
         // swapped: an install resets the drift tracker, and resetting
         // it while still serving the old plan would stop tracking that
-        // plan's (unbounded) staleness.
-        match self.swap_to(plan) {
+        // plan's (unbounded) staleness. The `serve.swap` fault point
+        // models the whole protocol failing (upload error, torn
+        // rebind): it must roll back to the old plan cleanly.
+        let attempt = match crate::fault::point("serve.swap") {
+            Ok(()) => self.swap_to(plan),
+            Err(e) => Err(anyhow::Error::new(e)),
+        };
+        match attempt {
             Ok(true) => {
                 res.engine.install_hag(&hag);
                 c.plan_swaps.inc();
@@ -902,6 +1015,19 @@ impl Worker {
                     crate::analysis::gate_cost_gauges(
                         &c.registry, "serve.cost_gauges", &hag,
                         res.session.shard_terms());
+                }
+                // Plan-epoch boundary: cut a snapshot on the
+                // configured cadence. Best effort — the WAL alone is
+                // always sufficient; a failure is counted and
+                // serving continues (conformance e19).
+                if let Some(dur) = res.durability.as_mut() {
+                    if dur.maybe_snapshot(e, res.session.graph(),
+                                          (*hag).clone())
+                    {
+                        c.registry
+                            .counter("durability.snapshots")
+                            .inc();
+                    }
                 }
             }
             Ok(false) => {
@@ -1000,8 +1126,78 @@ impl Worker {
                                          &res.engine.to_hag(),
                                          res.session.shard_terms());
         }
+        // Recovery resume: serve the recovered session plan from the
+        // first batch onward instead of waiting for the next due
+        // drift check (the lowered plan predates the replayed WAL).
+        if resident.as_ref().is_some_and(|r| r.force_initial_swap) {
+            self.maybe_swap(&mut resident, &mut c, true);
+        }
         let t_start = Instant::now();
-        'serve: loop {
+        // Bounded-restart supervision (DESIGN.md §14): each serving
+        // round runs under `catch_unwind`. A panic drops that
+        // round's in-flight reply channels (clients observe them as
+        // closed — an explicit failure, not a hang), flight-records
+        // the payload, and the next round resumes from the last good
+        // serving plan. The restart budget keeps a deterministically
+        // crashing worker from spinning; exhausting it exits the
+        // loop cleanly, which closes the queue and turns all
+        // subsequent traffic into "batcher is gone" errors at the
+        // front end.
+        let mut restarts = 0usize;
+        loop {
+            let round = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    self.serve_round(&rx, &policy, max_pending,
+                                     &mut resident, &mut pending,
+                                     &mut c)
+                }));
+            match round {
+                Ok(Round::Continue) => {}
+                Ok(Round::Shutdown) => break,
+                Err(payload) => {
+                    restarts += 1;
+                    c.worker_restarts.inc();
+                    crate::obs_error!(
+                        "[serve] worker panicked ({}); restart \
+                         {restarts}/{MAX_WORKER_RESTARTS}",
+                        panic_message(payload.as_ref()));
+                    obs::flight::dump("worker-panic", &c.registry);
+                    if restarts >= MAX_WORKER_RESTARTS {
+                        crate::obs_error!(
+                            "[serve] restart budget exhausted; \
+                             shutting down");
+                        break;
+                    }
+                }
+            }
+        }
+        // Drain leftovers, land in-flight rebuilds, and run the
+        // serving-path plan contract check.
+        self.flush_updates(&mut resident, &mut pending, &mut c);
+        let mut plan_matches_fresh = None;
+        if let Some(res) = resident.as_mut() {
+            res.engine.finish_rebuild();
+            if res.swap.swap_plans {
+                let (hag_c, plan_c) = res.session.plan();
+                let (hag_f, plan_f) = res.session.plan_fresh();
+                plan_matches_fresh =
+                    Some(*hag_c == hag_f && *plan_c == plan_f);
+            }
+        }
+        let stats = c.finalize(t_start.elapsed(), resident.as_ref(),
+                               plan_matches_fresh);
+        ServeOutcome { stats, resident }
+    }
+
+    /// One serving round: collect a batch, flush coalesced updates,
+    /// execute, reply. Extracted from the serve loop so the
+    /// supervisor can `catch_unwind` each round independently.
+    fn serve_round(&mut self, rx: &Receiver<ServerMsg>,
+                   policy: &BatchPolicy, max_pending: usize,
+                   resident: &mut Option<Resident>,
+                   pending: &mut Vec<UpdateRequest>,
+                   c: &mut Counters) -> Round {
+        {
             // Collect a batch: wait for the first valid scoring
             // request. With updates pending, wait at most max_wait so
             // their coalesced flush (and replies) stay bounded; with
@@ -1017,26 +1213,26 @@ impl Worker {
                 match msg {
                     Ok(ServerMsg::Score(r)) => {
                         match self.validate(&r) {
-                            Some(why) => self.reject(r, why, &mut c),
+                            Some(why) => self.reject(r, why, c),
                             None => break r,
                         }
                     }
                     Ok(ServerMsg::Update(u)) => {
                         pending.push(u);
                         if pending.len() >= max_pending {
-                            self.flush_updates(&mut resident,
-                                               &mut pending, &mut c);
+                            self.flush_updates(resident, pending, c);
                         }
                     }
                     Ok(ServerMsg::Stats(s)) => {
-                        publish_resident_stats(&resident, &c);
+                        publish_resident_stats(resident, c);
                         let _ = s.reply.send(c.registry.snapshot());
                     }
                     Err(RecvTimeoutError::Timeout) => {
-                        self.flush_updates(&mut resident, &mut pending,
-                                           &mut c);
+                        self.flush_updates(resident, pending, c);
                     }
-                    Err(RecvTimeoutError::Disconnected) => break 'serve,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Round::Shutdown;
+                    }
                 }
             };
             let mut batch = vec![first];
@@ -1049,14 +1245,14 @@ impl Worker {
                 }
                 match rx.recv_timeout(left) {
                     Ok(ServerMsg::Score(r)) => match self.validate(&r) {
-                        Some(why) => self.reject(r, why, &mut c),
+                        Some(why) => self.reject(r, why, c),
                         None => batch.push(r),
                     },
                     // Buffer only — updates never stretch the
                     // latency-critical batch window; they flush next.
                     Ok(ServerMsg::Update(u)) => pending.push(u),
                     Ok(ServerMsg::Stats(s)) => {
-                        publish_resident_stats(&resident, &c);
+                        publish_resident_stats(resident, c);
                         let _ = s.reply.send(c.registry.snapshot());
                     }
                     Err(RecvTimeoutError::Timeout)
@@ -1068,7 +1264,7 @@ impl Worker {
             if let Some(res) = resident.as_mut() {
                 res.engine.poll_rebuild();
             }
-            self.flush_updates(&mut resident, &mut pending, &mut c);
+            self.flush_updates(resident, pending, c);
             // Apply feature updates to the resident (permuted) h0.
             // Safe: nodes were validated and n only ever grows.
             let tp = Instant::now();
@@ -1083,7 +1279,13 @@ impl Worker {
             c.t_pack.record(tp.elapsed());
             let sp = crate::obs_span!("serve.batch", batch.len());
             let te = Instant::now();
-            let result = self.run_batch(&c);
+            // `batcher.exec` models the execute itself failing (or,
+            // with the panic action, the worker dying mid-batch —
+            // which the supervision loop above must absorb).
+            let result = match crate::fault::point("batcher.exec") {
+                Ok(()) => self.run_batch(c),
+                Err(e) => Err(anyhow::Error::new(e)),
+            };
             // Land the span before handling the result: a failing
             // batch's flight record must already carry it.
             drop(sp);
@@ -1116,27 +1318,12 @@ impl Worker {
                     obs::flight::dump("batch-exec-failed", &c.registry);
                     let message = format!("{e:#}");
                     for r in batch {
-                        self.reject_failed(r, &message, &mut c);
+                        self.reject_failed(r, &message, c);
                     }
                 }
             }
         }
-        // Drain leftovers, land in-flight rebuilds, and run the
-        // serving-path plan contract check.
-        self.flush_updates(&mut resident, &mut pending, &mut c);
-        let mut plan_matches_fresh = None;
-        if let Some(res) = resident.as_mut() {
-            res.engine.finish_rebuild();
-            if res.swap.swap_plans {
-                let (hag_c, plan_c) = res.session.plan();
-                let (hag_f, plan_f) = res.session.plan_fresh();
-                plan_matches_fresh =
-                    Some(*hag_c == hag_f && *plan_c == plan_f);
-            }
-        }
-        let stats = c.finalize(t_start.elapsed(), resident.as_ref(),
-                               plan_matches_fresh);
-        ServeOutcome { stats, resident }
+        Round::Continue
     }
 
     fn reject_failed(&self, r: ScoreRequest, message: &str,
@@ -1482,6 +1669,8 @@ struct Counters {
     plan_swaps: Counter,
     swaps_skipped: Counter,
     exec_failures: Counter,
+    worker_restarts: Counter,
+    wal_nacks: Counter,
     /// Queue + batch + execute latency per answered request.
     lat: Histogram,
     /// Batch execute wall time.
@@ -1525,6 +1714,9 @@ impl Counters {
             plan_swaps: registry.counter("serve.plan_swaps"),
             swaps_skipped: registry.counter("serve.swaps_skipped"),
             exec_failures: registry.counter("serve.exec_failures"),
+            worker_restarts:
+                registry.counter("serve.worker_restarts"),
+            wal_nacks: registry.counter("durability.wal_nacks"),
             lat: registry.histogram("serve.latency"),
             exec: registry.histogram("serve.exec"),
             t_pack: registry.histogram("cost.pack"),
@@ -1580,6 +1772,11 @@ impl Counters {
             exec_failures: self.exec_failures.get() as usize,
             shard_searches,
             shard_cache_hits,
+            worker_restarts: self.worker_restarts.get() as usize,
+            wal_nacked_batches: self.wal_nacks.get() as usize,
+            snapshots_written: resident
+                .and_then(|r| r.durability.as_ref())
+                .map_or(0, |d| d.snapshots_written() as usize),
             plan_matches_fresh,
         }
     }
@@ -1617,6 +1814,14 @@ fn publish_resident_stats(resident: &Option<Resident>, c: &Counters) {
     reg.gauge("incr.remerge_merges").set(e.remerge_merges as i64);
     reg.gauge("incr.rebuild_swaps").set(e.rebuild_swaps as i64);
     reg.gauge("incr.installs").set(e.installs as i64);
+    if let Some(d) = res.durability.as_ref() {
+        reg.gauge("durability.last_seq")
+            .set(d.last_durable_seq() as i64);
+        reg.gauge("durability.snapshots_written")
+            .set(d.snapshots_written() as i64);
+        reg.gauge("durability.snapshot_failures")
+            .set(d.snapshot_failures() as i64);
+    }
 }
 
 #[cfg(test)]

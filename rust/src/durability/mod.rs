@@ -1,0 +1,178 @@
+//! Crash-safe delta durability (DESIGN.md §14).
+//!
+//! Three layers, smallest surface on top:
+//!
+//! * [`wal`] — append-only delta log: length-prefixed CRC32 records,
+//!   group-commit fsync batching, segment rotation.
+//! * [`snapshot`] — periodic graph + HAG JSON snapshots at plan-epoch
+//!   boundaries (atomic tmp+fsync+rename via `util::atomic_write`).
+//! * [`recover`] — startup recovery: newest valid snapshot, torn-tail
+//!   truncation, suffix replay into the resident engine/session pair.
+//!
+//! [`DurabilityState`] is the handle the serving path (and the
+//! `serve`/`recover` CLI) holds: journal-then-ack on the update path,
+//! best-effort snapshots after hot swaps. The ordering contract the
+//! whole subsystem enforces: **no delta is acknowledged to a client
+//! before its WAL commit fsync returns**, and conversely a WAL commit
+//! failure nacks the whole batch (the clients' reply channels are
+//! dropped) without applying any of it.
+
+pub mod recover;
+pub mod snapshot;
+pub mod wal;
+
+pub use recover::{recover, resume_pair, Recovered, ReplayReport};
+pub use snapshot::Snapshot;
+pub use wal::Wal;
+
+use std::path::Path;
+
+use crate::graph::Graph;
+use crate::hag::Hag;
+use crate::incremental::GraphDelta;
+
+/// Durability handle carried by a serving resident (or the CLI).
+pub struct DurabilityState {
+    wal: Wal,
+    /// Snapshot every N landed plan epochs (0 = never snapshot).
+    snapshot_every: u64,
+    /// Highest sequence number whose commit has returned `Ok`.
+    last_durable_seq: u64,
+    snapshots_written: u64,
+    snapshot_failures: u64,
+}
+
+impl DurabilityState {
+    /// Open (or create) durability state in `dir`, resuming sequence
+    /// numbering after `tail_seq` (0 for a fresh log).
+    pub fn open(dir: &Path, tail_seq: u64, snapshot_every: u64)
+                -> std::io::Result<DurabilityState> {
+        let wal = Wal::open(dir, tail_seq + 1)?;
+        Ok(DurabilityState {
+            wal,
+            snapshot_every,
+            last_durable_seq: tail_seq,
+            snapshots_written: 0,
+            snapshot_failures: 0,
+        })
+    }
+
+    /// Journal a batch of deltas: stage all, fsync once. On `Ok`,
+    /// every delta in the batch is durable and may be acknowledged
+    /// and applied. On `Err`, NONE are durable — the caller must
+    /// nack the whole batch and apply nothing.
+    pub fn journal(&mut self, deltas: &[GraphDelta])
+                   -> std::io::Result<u64> {
+        for &d in deltas {
+            self.wal.append(d)?;
+        }
+        self.wal.commit()?;
+        self.last_durable_seq = self.wal.next_seq() - 1;
+        Ok(self.last_durable_seq)
+    }
+
+    /// Cut a snapshot if this epoch is on the configured cadence.
+    /// Best effort: failures are counted and logged, never fatal —
+    /// the WAL alone is always sufficient for recovery.
+    pub fn maybe_snapshot(&mut self, epoch: u64, graph: Graph,
+                          hag: Hag) -> bool {
+        if self.snapshot_every == 0
+            || epoch % self.snapshot_every != 0
+        {
+            return false;
+        }
+        let s = Snapshot {
+            seq: self.last_durable_seq,
+            epoch,
+            graph,
+            hag,
+        };
+        match snapshot::write(self.wal.dir(), &s) {
+            Ok(path) => {
+                self.snapshots_written += 1;
+                crate::obs_info!("[durability] snapshot {} (seq {})",
+                                 path.display(), s.seq);
+                true
+            }
+            Err(e) => {
+                self.snapshot_failures += 1;
+                crate::obs_warn!("[durability] snapshot failed \
+                                  (serving continues): {e}");
+                false
+            }
+        }
+    }
+
+    /// Highest acknowledged-durable sequence number.
+    pub fn last_durable_seq(&self) -> u64 {
+        self.last_durable_seq
+    }
+
+    /// Snapshots successfully written by this handle.
+    pub fn snapshots_written(&self) -> u64 {
+        self.snapshots_written
+    }
+
+    /// Snapshot attempts that failed (serving continued).
+    pub fn snapshot_failures(&self) -> u64 {
+        self.snapshot_failures
+    }
+
+    /// WAL directory.
+    pub fn dir(&self) -> &Path {
+        self.wal.dir()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_then_recover_round_trip() {
+        let _g = crate::fault::exclusive();
+        crate::fault::reset();
+        let d = std::env::temp_dir().join(
+            format!("repro-dur-state-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        let mut st = DurabilityState::open(&d, 0, 0).unwrap();
+        let batch = [
+            GraphDelta::EdgeInsert { src: 0, dst: 1 },
+            GraphDelta::NodeAdd,
+        ];
+        assert_eq!(st.journal(&batch).unwrap(), 2);
+        assert_eq!(st.last_durable_seq(), 2);
+        assert_eq!(st.journal(&[]).unwrap(), 2, "empty batch no-op");
+        drop(st);
+        let rec = recover(&d).unwrap();
+        assert_eq!(rec.tail_seq, 2);
+        assert_eq!(rec.deltas.len(), 2);
+        // Reopen resumes numbering after the recovered tail.
+        let mut st = DurabilityState::open(&d, rec.tail_seq, 0)
+            .unwrap();
+        assert_eq!(st.journal(&[GraphDelta::NodeAdd]).unwrap(), 3);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn failed_journal_batch_is_all_or_nothing() {
+        let _g = crate::fault::exclusive();
+        crate::fault::reset();
+        let d = std::env::temp_dir().join(
+            format!("repro-dur-nack-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        let mut st = DurabilityState::open(&d, 0, 0).unwrap();
+        st.journal(&[GraphDelta::EdgeInsert { src: 0, dst: 1 }])
+            .unwrap();
+        crate::fault::arm("wal.fsync", crate::fault::Trigger::Nth(1),
+                          crate::fault::FaultAction::Error, 0);
+        let batch = [GraphDelta::NodeAdd, GraphDelta::NodeAdd];
+        assert!(st.journal(&batch).is_err());
+        assert_eq!(st.last_durable_seq(), 1, "nothing acked");
+        crate::fault::reset();
+        drop(st);
+        let rec = recover(&d).unwrap();
+        assert_eq!(rec.deltas.len(), 1, "failed batch not replayed");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,363 @@
+//! Periodic graph + HAG snapshots.
+//!
+//! A snapshot bounds replay work at recovery: instead of replaying
+//! the whole WAL from an empty base, recovery loads the newest valid
+//! snapshot and replays only the delta suffix with `seq >
+//! snapshot.seq`. Snapshots are cut at plan-epoch boundaries (right
+//! after a hot swap lands), so the saved HAG is exactly the engine's
+//! maintained HAG at a served epoch — recovery can adopt it via
+//! `StreamEngine::from_hag` without a cold search.
+//!
+//! Format: one JSON document (`schema: repro-snap-v1`) written with
+//! [`crate::util::atomic_write`], named `snap-<seq:020>.json` in the
+//! WAL directory. The newest [`KEEP`] snapshots are retained; older
+//! ones are best-effort deleted. Snapshots are *best effort*:
+//! every bit of state is reconstructible from the WAL alone, so a
+//! failed snapshot write degrades recovery time, never correctness
+//! (conformance e19 proves this with an always-on snapshot fault).
+
+use std::path::{Path, PathBuf};
+
+use crate::graph::Graph;
+use crate::hag::{AggNode, AggregateKind, Hag};
+use crate::util::json::{self, Value};
+
+/// Retained snapshot generations.
+pub const KEEP: usize = 4;
+
+/// Schema tag inside every snapshot document.
+pub const SCHEMA: &str = "repro-snap-v1";
+
+/// A materialized snapshot: everything needed to rebuild the resident
+/// engine/session pair without replaying history before `seq`.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Highest WAL sequence number folded into this state.
+    pub seq: u64,
+    /// Serving epoch at the time of the cut (informational).
+    pub epoch: u64,
+    pub graph: Graph,
+    pub hag: Hag,
+}
+
+/// Snapshot file name for a WAL sequence number.
+pub fn snapshot_name(seq: u64) -> String {
+    format!("snap-{seq:020}.json")
+}
+
+/// Parse a snapshot file name back to its sequence number.
+pub fn parse_snapshot_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("snap-")?.strip_suffix(".json")?;
+    if digits.len() != 20 || !digits.bytes().all(|b| b.is_ascii_digit())
+    {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+fn kind_str(k: AggregateKind) -> &'static str {
+    match k {
+        AggregateKind::Set => "set",
+        AggregateKind::Sequential => "seq",
+    }
+}
+
+fn kind_from_str(s: &str) -> Result<AggregateKind, String> {
+    match s {
+        "set" => Ok(AggregateKind::Set),
+        "seq" => Ok(AggregateKind::Sequential),
+        other => Err(format!("unknown hag kind {other:?}")),
+    }
+}
+
+/// Serialize a snapshot to its JSON document.
+pub fn to_json(s: &Snapshot) -> Value {
+    let mut edges = Vec::with_capacity(s.graph.e());
+    for (v, ns) in s.graph.iter() {
+        for &u in ns {
+            edges.push(json::arr(vec![
+                json::num(u as f64),
+                json::num(v as f64),
+            ]));
+        }
+    }
+    let aggs = s
+        .hag
+        .agg_nodes
+        .iter()
+        .map(|a| json::arr(vec![
+            json::num(a.left as f64),
+            json::num(a.right as f64),
+        ]))
+        .collect();
+    let in_edges = s
+        .hag
+        .in_edges
+        .iter()
+        .map(|l| json::arr(
+            l.iter().map(|&x| json::num(x as f64)).collect()))
+        .collect();
+    json::obj(vec![
+        ("schema", json::str_(SCHEMA)),
+        ("seq", json::num(s.seq as f64)),
+        ("epoch", json::num(s.epoch as f64)),
+        ("graph", json::obj(vec![
+            ("n", json::num(s.graph.n() as f64)),
+            ("edges", json::arr(edges)),
+        ])),
+        ("hag", json::obj(vec![
+            ("n", json::num(s.hag.n as f64)),
+            ("kind", json::str_(kind_str(s.hag.kind))),
+            ("aggs", json::arr(aggs)),
+            ("in_edges", json::arr(in_edges)),
+        ])),
+    ])
+}
+
+/// Parse and structurally validate a snapshot document. The returned
+/// HAG has passed [`Hag::validate`]; the Theorem-1 equivalence check
+/// against the graph is the caller's job (recovery runs it under the
+/// verify gate).
+pub fn from_json(doc: &Value) -> Result<Snapshot, String> {
+    let schema = doc.req_str("schema")?;
+    if schema != SCHEMA {
+        return Err(format!("snapshot schema {schema:?}, \
+                            want {SCHEMA:?}"));
+    }
+    let seq = doc.req_f64("seq")? as u64;
+    let epoch = doc.req_f64("epoch")? as u64;
+
+    let gv = doc.req("graph")?;
+    let n = gv.req_usize("n")?;
+    let mut edges = Vec::new();
+    for e in gv.req_arr("edges")? {
+        let pair = e.as_arr().ok_or("graph edge is not an array")?;
+        if pair.len() != 2 {
+            return Err("graph edge arity != 2".into());
+        }
+        let u = pair[0].as_usize().ok_or("bad edge src")?;
+        let v = pair[1].as_usize().ok_or("bad edge dst")?;
+        if u >= n || v >= n {
+            return Err(format!("edge ({u},{v}) out of range n={n}"));
+        }
+        edges.push((u as u32, v as u32));
+    }
+    let graph = Graph::from_edges(n, &edges);
+    if graph.e() != edges.len() {
+        return Err("snapshot edge list has duplicates".into());
+    }
+
+    let hv = doc.req("hag")?;
+    let hn = hv.req_usize("n")?;
+    if hn != n {
+        return Err(format!("hag n={hn} != graph n={n}"));
+    }
+    let kind = kind_from_str(hv.req_str("kind")?)?;
+    let mut agg_nodes = Vec::new();
+    for a in hv.req_arr("aggs")? {
+        let pair = a.as_arr().ok_or("agg node is not an array")?;
+        if pair.len() != 2 {
+            return Err("agg node arity != 2".into());
+        }
+        let l = pair[0].as_usize().ok_or("bad agg left")?;
+        let r = pair[1].as_usize().ok_or("bad agg right")?;
+        agg_nodes.push(AggNode { left: l as u32, right: r as u32 });
+    }
+    let mut in_edges = Vec::new();
+    for l in hv.req_arr("in_edges")? {
+        let slots = l.as_arr().ok_or("in_edges row is not an array")?;
+        let mut row = Vec::with_capacity(slots.len());
+        for s in slots {
+            row.push(s.as_usize().ok_or("bad in-edge slot")? as u32);
+        }
+        in_edges.push(row);
+    }
+    if in_edges.len() != n {
+        return Err(format!("hag in_edges rows {} != n={n}",
+                           in_edges.len()));
+    }
+    let hag = Hag { n, agg_nodes, in_edges, kind };
+    hag.validate()
+        .map_err(|e| format!("snapshot hag invalid: {e}"))?;
+    Ok(Snapshot { seq, epoch, graph, hag })
+}
+
+/// Write a snapshot atomically into `dir` and rotate old generations
+/// down to [`KEEP`].
+pub fn write(dir: &Path, s: &Snapshot) -> std::io::Result<PathBuf> {
+    crate::fault::point("snapshot.write")?;
+    let path = dir.join(snapshot_name(s.seq));
+    crate::util::atomic_write(
+        &path, to_json(s).to_string().as_bytes())?;
+    crate::obs_event!("durability.snapshot", s.seq);
+    // Rotation is best effort — a stale extra snapshot is harmless.
+    if let Ok(mut snaps) = list(dir) {
+        while snaps.len() > KEEP {
+            let (_, old) = snaps.remove(0);
+            let _ = std::fs::remove_file(old);
+        }
+    }
+    Ok(path)
+}
+
+/// List snapshot files sorted by sequence (oldest first).
+pub fn list(dir: &Path) -> std::io::Result<Vec<(u64, PathBuf)>> {
+    let mut snaps = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(seq) = parse_snapshot_name(name) {
+            snaps.push((seq, entry.path()));
+        }
+    }
+    snaps.sort_unstable_by_key(|&(s, _)| s);
+    Ok(snaps)
+}
+
+/// Load the newest snapshot that parses and validates, skipping (and
+/// reporting) corrupt ones — a torn or damaged snapshot must degrade
+/// to the next older generation, never abort recovery.
+pub fn load_latest(dir: &Path) -> Option<Snapshot> {
+    let snaps = list(dir).ok()?;
+    for (seq, path) in snaps.iter().rev() {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                crate::obs_warn!("[snapshot] unreadable {}: {e}",
+                                 path.display());
+                continue;
+            }
+        };
+        let parsed = json::parse(&text)
+            .map_err(|e| e.to_string())
+            .and_then(|doc| from_json(&doc));
+        match parsed {
+            Ok(s) => {
+                debug_assert_eq!(s.seq, *seq);
+                return Some(s);
+            }
+            Err(e) => {
+                crate::obs_warn!("[snapshot] invalid {}: {e}",
+                                 path.display());
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hag::SearchConfig;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("repro-snap-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> Snapshot {
+        let g = Graph::from_edges(
+            5,
+            &[(1, 0), (2, 0), (3, 0), (0, 1), (2, 1), (0, 2), (1, 2),
+              (4, 2), (1, 3), (2, 3), (2, 4), (3, 4)],
+        );
+        let (hag, _) = crate::hag::hag_search(
+            &g, &SearchConfig::paper_default(g.n()));
+        Snapshot { seq: 42, epoch: 3, graph: g, hag }
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let s = sample();
+        let doc = to_json(&s);
+        let text = doc.to_string();
+        let back = from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.seq, 42);
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.graph, s.graph);
+        assert_eq!(back.hag, s.hag);
+        crate::hag::check_equivalence(&s.graph, &back.hag).unwrap();
+    }
+
+    #[test]
+    fn write_load_and_rotate() {
+        let _g = crate::fault::exclusive();
+        crate::fault::reset();
+        let d = tmpdir("rot");
+        let mut s = sample();
+        for seq in 1..=(KEEP as u64 + 3) {
+            s.seq = seq;
+            write(&d, &s).unwrap();
+        }
+        let snaps = list(&d).unwrap();
+        assert_eq!(snaps.len(), KEEP, "rotated down to KEEP");
+        assert_eq!(snaps.last().unwrap().0, KEEP as u64 + 3);
+        let latest = load_latest(&d).unwrap();
+        assert_eq!(latest.seq, KEEP as u64 + 3);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_older() {
+        let _g = crate::fault::exclusive();
+        crate::fault::reset();
+        let d = tmpdir("corrupt");
+        let mut s = sample();
+        s.seq = 1;
+        write(&d, &s).unwrap();
+        s.seq = 2;
+        let newest = write(&d, &s).unwrap();
+        // Tear the newest snapshot mid-document.
+        let text = std::fs::read_to_string(&newest).unwrap();
+        std::fs::write(&newest, &text[..text.len() / 2]).unwrap();
+        let latest = load_latest(&d).unwrap();
+        assert_eq!(latest.seq, 1, "fell back past the torn file");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn invalid_hag_is_rejected() {
+        let s = sample();
+        let mut doc = to_json(&s);
+        // Point an in-edge at a nonexistent slot.
+        if let Value::Obj(ref mut kv) = doc {
+            for (k, v) in kv.iter_mut() {
+                if k == "hag" {
+                    if let Value::Obj(ref mut hkv) = v {
+                        for (hk, hv) in hkv.iter_mut() {
+                            if hk == "in_edges" {
+                                if let Value::Arr(rows) = hv {
+                                    if let Some(Value::Arr(r0)) =
+                                        rows.first_mut()
+                                    {
+                                        r0.push(json::num(9999.0));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let err = from_json(&doc).unwrap_err();
+        assert!(err.contains("invalid"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_fault_point_surfaces() {
+        let _g = crate::fault::exclusive();
+        crate::fault::reset();
+        let d = tmpdir("fault");
+        crate::fault::arm("snapshot.write",
+                          crate::fault::Trigger::Always,
+                          crate::fault::FaultAction::Error, 0);
+        assert!(write(&d, &sample()).is_err());
+        crate::fault::reset();
+        assert!(load_latest(&d).is_none(), "nothing was written");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,409 @@
+//! Deterministic fault injection: named points on the durability and
+//! serving paths that can be armed to fail on demand.
+//!
+//! Every risky effect the crash-safety story depends on is guarded by
+//! a call to [`point`] with a stable dotted name — the inventory
+//! (DESIGN.md §14):
+//!
+//! | point            | guarded effect                               |
+//! |------------------|----------------------------------------------|
+//! | `wal.append`     | staging a delta record into the WAL          |
+//! | `wal.fsync`      | the group-commit fsync                       |
+//! | `snapshot.write` | writing a graph+HAG snapshot                 |
+//! | `serve.swap`     | installing a re-planned HAG into the worker  |
+//! | `batcher.exec`   | executing a score batch (panic-capable)      |
+//! | `net.write`      | writing a reply frame to a client socket     |
+//!
+//! Disarmed cost is **one relaxed atomic load** — the plane is
+//! compiled in everywhere, always, so production binaries exercise
+//! the exact code paths the chaos suite proves out
+//! (`benches/recovery.rs` measures the disarmed ns/call).
+//!
+//! Arming is deterministic and seeded: via the `REPRO_FAULTS` env var
+//! (read once, at the first [`point`] hit) or the [`arm_spec`] /
+//! [`arm`] API. Spec grammar (also in DESIGN.md §14):
+//!
+//! ```text
+//! spec    := clause (';' clause)*
+//! clause  := name '=' trigger (',' opt)*
+//! trigger := 'nth:' K       fire on the K-th hit only (1-based)
+//!          | 'first:' K     fire on hits 1..=K
+//!          | 'prob:' P      fire each hit with probability P
+//!          | 'always'       fire on every hit
+//! opt     := 'panic'        fire by panicking instead of erroring
+//!          | 'seed:' S      per-point RNG seed for 'prob' (default 0)
+//! ```
+//!
+//! e.g. `REPRO_FAULTS="serve.swap=nth:2;wal.fsync=first:1"`. Every
+//! fired fault is traced (`fault.fired` event + counter on the global
+//! registry and an `obs_warn!` line), so a chaos run's injections are
+//! attributable after the fact.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::Rng;
+
+/// How an armed point fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// [`point`] returns `Err(FaultError)`.
+    Error,
+    /// [`point`] panics (exercises `catch_unwind` supervision).
+    Panic,
+}
+
+/// When an armed point fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Fire on the k-th hit only (1-based).
+    Nth(u64),
+    /// Fire on every hit up to and including the k-th.
+    First(u64),
+    /// Fire each hit independently with probability `p`, from a
+    /// seeded per-point RNG (deterministic per hit sequence).
+    Prob(f64),
+    /// Fire on every hit.
+    Always,
+}
+
+/// The error an injected (non-panic) fault surfaces.
+#[derive(Debug, Clone)]
+pub struct FaultError {
+    /// The point that fired.
+    pub point: String,
+    /// This point's lifetime hit number that fired (1-based).
+    pub hit: u64,
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        write!(f, "injected fault at {} (hit {})", self.point,
+               self.hit)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+impl From<FaultError> for std::io::Error {
+    fn from(e: FaultError) -> std::io::Error {
+        std::io::Error::other(e)
+    }
+}
+
+struct PointState {
+    trigger: Trigger,
+    action: FaultAction,
+    rng: Rng,
+    hits: u64,
+    fired: u64,
+}
+
+struct Plane {
+    points: HashMap<String, PointState>,
+}
+
+/// Number of armed points. Zero is the disarmed fast path; the
+/// sentinel [`UNINIT`] forces exactly one slow-path pass to parse
+/// `REPRO_FAULTS` before the steady state is reached.
+static ARMED: AtomicUsize = AtomicUsize::new(UNINIT);
+const UNINIT: usize = usize::MAX;
+
+fn plane() -> MutexGuard<'static, Plane> {
+    static PLANE: OnceLock<Mutex<Plane>> = OnceLock::new();
+    PLANE
+        .get_or_init(|| Mutex::new(Plane { points: HashMap::new() }))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn sync_armed(p: &Plane) {
+    ARMED.store(p.points.len(), Ordering::Release);
+}
+
+fn init_from_env() {
+    let mut p = plane();
+    if ARMED.load(Ordering::Acquire) != UNINIT {
+        return; // raced: another thread initialized first
+    }
+    if let Ok(spec) = std::env::var("REPRO_FAULTS") {
+        if let Err(e) = arm_spec_locked(&mut p, &spec) {
+            crate::obs_error!("[fault] bad REPRO_FAULTS spec: {e}");
+        }
+    }
+    sync_armed(&p);
+}
+
+/// One fault point. The disarmed steady state costs a single relaxed
+/// atomic load; an armed plane takes the registry lock on every hit
+/// of any point (armed planes are test/chaos configurations, never
+/// the production default).
+pub fn point(name: &str) -> Result<(), FaultError> {
+    let armed = ARMED.load(Ordering::Relaxed);
+    if armed == 0 {
+        return Ok(());
+    }
+    if armed == UNINIT {
+        init_from_env();
+        if ARMED.load(Ordering::Acquire) == 0 {
+            return Ok(());
+        }
+    }
+    let fired = {
+        let mut p = plane();
+        let Some(st) = p.points.get_mut(name) else {
+            return Ok(());
+        };
+        st.hits += 1;
+        let fire = match st.trigger {
+            Trigger::Nth(k) => st.hits == k,
+            Trigger::First(k) => st.hits <= k,
+            Trigger::Prob(pr) => st.rng.bool(pr),
+            Trigger::Always => true,
+        };
+        if !fire {
+            return Ok(());
+        }
+        st.fired += 1;
+        (st.hits, st.action)
+    };
+    let (hit, action) = fired;
+    crate::obs::metrics::MetricsRegistry::global()
+        .counter("fault.fired")
+        .inc();
+    crate::obs_event!("fault.fired", hit);
+    crate::obs_warn!("[fault] {name} fired (hit {hit}, {action:?})");
+    match action {
+        FaultAction::Error => Err(FaultError {
+            point: name.to_string(),
+            hit,
+        }),
+        // The one justified panic outside test code in this module:
+        // panic-action faults exist to prove the supervision story.
+        FaultAction::Panic => panic!("injected fault: {name}"),
+    }
+}
+
+/// Arm one point programmatically (tests, chaos drivers).
+pub fn arm(name: &str, trigger: Trigger, action: FaultAction,
+           seed: u64) {
+    let mut p = plane();
+    p.points.insert(name.to_string(), PointState {
+        trigger,
+        action,
+        rng: Rng::seed_from_u64(seed),
+        hits: 0,
+        fired: 0,
+    });
+    sync_armed(&p);
+}
+
+/// Disarm everything (including env-armed points) and reset hit
+/// counters. Tests call this before and after arming their own
+/// points.
+pub fn reset() {
+    let mut p = plane();
+    p.points.clear();
+    sync_armed(&p);
+}
+
+/// Lifetime fire count of a point (0 if never armed).
+pub fn fired(name: &str) -> u64 {
+    plane().points.get(name).map_or(0, |s| s.fired)
+}
+
+/// Lifetime hit count of a point while armed (0 if never armed).
+pub fn hits(name: &str) -> u64 {
+    plane().points.get(name).map_or(0, |s| s.hits)
+}
+
+/// Parse and arm a `REPRO_FAULTS`-grammar spec. Returns the number
+/// of points armed.
+pub fn arm_spec(spec: &str) -> Result<usize, String> {
+    let mut p = plane();
+    let n = arm_spec_locked(&mut p, spec)?;
+    sync_armed(&p);
+    Ok(n)
+}
+
+fn arm_spec_locked(p: &mut Plane, spec: &str)
+                   -> Result<usize, String> {
+    let mut n = 0usize;
+    for clause in spec.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (name, rest) = clause.split_once('=').ok_or_else(|| {
+            format!("clause {clause:?} is missing '='")
+        })?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("clause {clause:?} has no point name"));
+        }
+        let mut trigger: Option<Trigger> = None;
+        let mut action = FaultAction::Error;
+        let mut seed = 0u64;
+        for part in rest.split(',') {
+            let part = part.trim();
+            if part == "always" {
+                trigger = Some(Trigger::Always);
+            } else if part == "panic" {
+                action = FaultAction::Panic;
+            } else if let Some(k) = part.strip_prefix("nth:") {
+                let k: u64 = k.trim().parse().map_err(|_| {
+                    format!("bad nth count in {clause:?}")
+                })?;
+                trigger = Some(Trigger::Nth(k.max(1)));
+            } else if let Some(k) = part.strip_prefix("first:") {
+                let k: u64 = k.trim().parse().map_err(|_| {
+                    format!("bad first count in {clause:?}")
+                })?;
+                trigger = Some(Trigger::First(k));
+            } else if let Some(pr) = part.strip_prefix("prob:") {
+                let pr: f64 = pr.trim().parse().map_err(|_| {
+                    format!("bad probability in {clause:?}")
+                })?;
+                if !(0.0..=1.0).contains(&pr) {
+                    return Err(format!(
+                        "probability out of [0,1] in {clause:?}"));
+                }
+                trigger = Some(Trigger::Prob(pr));
+            } else if let Some(s) = part.strip_prefix("seed:") {
+                seed = s.trim().parse().map_err(|_| {
+                    format!("bad seed in {clause:?}")
+                })?;
+            } else {
+                return Err(format!(
+                    "unknown spec part {part:?} in {clause:?}"));
+            }
+        }
+        let trigger = trigger.ok_or_else(|| {
+            format!("clause {clause:?} has no trigger \
+                     (nth:/first:/prob:/always)")
+        })?;
+        p.points.insert(name.to_string(), PointState {
+            trigger,
+            action,
+            rng: Rng::seed_from_u64(seed),
+            hits: 0,
+            fired: 0,
+        });
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// Serializes tests (and chaos-sensitive live-serving tests) that
+/// touch the process-global fault plane: hold this guard for the
+/// duration of any test that arms points or would misbehave if a
+/// concurrent test armed them.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_points_pass() {
+        let _g = exclusive();
+        reset();
+        for _ in 0..1000 {
+            point("test.nowhere").unwrap();
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = exclusive();
+        reset();
+        arm("test.nth", Trigger::Nth(3), FaultAction::Error, 0);
+        let mut fails = Vec::new();
+        for i in 1..=6u64 {
+            if point("test.nth").is_err() {
+                fails.push(i);
+            }
+        }
+        assert_eq!(fails, vec![3]);
+        assert_eq!(fired("test.nth"), 1);
+        assert_eq!(hits("test.nth"), 6);
+        reset();
+    }
+
+    #[test]
+    fn first_fires_leading_hits() {
+        let _g = exclusive();
+        reset();
+        arm("test.first", Trigger::First(2), FaultAction::Error, 0);
+        let fails: Vec<bool> =
+            (0..4).map(|_| point("test.first").is_err()).collect();
+        assert_eq!(fails, vec![true, true, false, false]);
+        reset();
+    }
+
+    #[test]
+    fn prob_is_deterministic_per_seed() {
+        let _g = exclusive();
+        reset();
+        arm("test.prob", Trigger::Prob(0.5), FaultAction::Error, 42);
+        let a: Vec<bool> =
+            (0..64).map(|_| point("test.prob").is_err()).collect();
+        reset();
+        arm("test.prob", Trigger::Prob(0.5), FaultAction::Error, 42);
+        let b: Vec<bool> =
+            (0..64).map(|_| point("test.prob").is_err()).collect();
+        assert_eq!(a, b, "same seed, same fire pattern");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f),
+                "p=0.5 over 64 hits fires some and passes some");
+        reset();
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let _g = exclusive();
+        reset();
+        let n = arm_spec(
+            "a.x=nth:2; b.y=prob:0.25,seed:7; c.z=always,panic; \
+             d.w=first:3")
+            .unwrap();
+        assert_eq!(n, 4);
+        assert!(point("a.x").is_ok());
+        assert!(point("a.x").is_err());
+        assert!(point("a.x").is_ok());
+        assert!(point("d.w").is_err());
+        let err =
+            std::panic::catch_unwind(|| point("c.z")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault: c.z"), "{msg}");
+        reset();
+    }
+
+    #[test]
+    fn spec_errors_are_descriptive() {
+        let _g = exclusive();
+        reset();
+        assert!(arm_spec("nodots").unwrap_err().contains("'='"));
+        assert!(arm_spec("a.x=nth:zero").unwrap_err()
+            .contains("nth"));
+        assert!(arm_spec("a.x=prob:1.5").unwrap_err()
+            .contains("[0,1]"));
+        assert!(arm_spec("a.x=wiggle:3").unwrap_err()
+            .contains("unknown"));
+        assert!(arm_spec("a.x=seed:5").unwrap_err()
+            .contains("no trigger"));
+        reset();
+    }
+
+    #[test]
+    fn fault_error_converts_to_io_error() {
+        let e = FaultError { point: "wal.fsync".into(), hit: 4 };
+        let io: std::io::Error = e.into();
+        assert!(io.to_string().contains("wal.fsync"));
+    }
+}

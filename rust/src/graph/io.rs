@@ -5,7 +5,8 @@
 //! drops in through these loaders: an edge-list file per graph, or the
 //! JSON container for graph-classification sets.
 
-use std::io::{BufRead, BufReader, Write};
+use std::fmt::Write;
+use std::io::{BufRead, BufReader};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -68,15 +69,19 @@ pub fn load_edge_list(path: &Path, n: Option<usize>,
     })
 }
 
-/// Write a graph as a directed edge list (one `src dst` line per edge).
+/// Write a graph as a directed edge list (one `src dst` line per
+/// edge), atomically — a crash mid-save leaves the previous file
+/// intact rather than a truncated list that would load as a smaller
+/// graph.
 pub fn save_edge_list(g: &Graph, path: &Path) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "# n={} e={}", g.n(), g.e())?;
+    let mut out = String::new();
+    writeln!(out, "# n={} e={}", g.n(), g.e())?;
     for (v, ns) in g.iter() {
         for &u in ns {
-            writeln!(f, "{u} {v}")?;
+            writeln!(out, "{u} {v}")?;
         }
     }
+    crate::util::atomic_write(path, out.as_bytes())?;
     Ok(())
 }
 
@@ -140,7 +145,7 @@ impl GraphSet {
             ("name", json::str_(self.name.clone())),
             ("graphs", Value::Arr(graphs)),
         ]);
-        std::fs::write(path, doc.to_string())?;
+        crate::util::atomic_write(path, doc.to_string().as_bytes())?;
         Ok(())
     }
 

@@ -9,7 +9,9 @@
 //! * **L3 (this crate)** — graph substrate, the HAG search algorithm
 //!   (paper Algorithm 3), the partitioned/parallel search subsystem
 //!   ([`partition`]), the streaming incremental-maintenance subsystem
-//!   ([`incremental`]), the unified lowering [`session`] (spec +
+//!   ([`incremental`]), crash-safe delta durability (WAL + snapshots
+//!   + recovery, [`durability`]) with a deterministic fault-injection
+//!   plane ([`fault`]), the unified lowering [`session`] (spec +
 //!   per-shard plan cache), plan compiler, PJRT runtime, training
 //!   coordinator and inference server, dataset generators, benches,
 //!   and the [`obs`] telemetry substrate (metrics registry, event
@@ -25,6 +27,8 @@ pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod datasets;
+pub mod durability;
+pub mod fault;
 pub mod graph;
 pub mod hag;
 pub mod incremental;

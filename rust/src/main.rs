@@ -58,6 +58,12 @@ SUBCOMMANDS
                  deltas while serving; --plan-swap hot-swaps drifted
                  serving plans from the resident session's per-shard
                  plan cache)
+  recover        scan a WAL directory (repairing any torn tail in
+                 place, exactly as serve --recover would) and report
+                 what survives; --check additionally replays onto the
+                 dataset's base graph and fails unless the recovered
+                 plan is haglint-clean and identical to a
+                 from-scratch plan at the same topology
   obs            telemetry tools: demo the metrics registry + event
                  tracer on a small search, or validate exported
                  artifacts (--check-snapshot / --check-trace /
@@ -127,6 +133,20 @@ COMMON OPTIONS
                     --drift-threshold forces a swap at every flush)
   --update-batch N  (serve) pending topology deltas coalesced (by
                     shard) per flush outside the batch window  [64]
+  --wal DIR         (serve, recover) crash-safe delta durability:
+                    journal every update batch into an append-only
+                    WAL in DIR before acknowledging it, and cut
+                    graph+HAG snapshots on the epoch cadence
+                    (DESIGN.md §14)
+  --snapshot-every N  (serve --wal) snapshot every N landed plan
+                    epochs; 0 disables snapshots          [4]
+  --recover         (serve --wal) replay the WAL (and newest valid
+                    snapshot) into the resident pair before serving,
+                    truncating any torn tail; serving resumes at the
+                    recovered topology and sequence numbering
+  --check           (recover) replay + verify the recovered plan
+                    (haglint + from-scratch identity); needs the
+                    same --dataset / spec flags the serve run used
   --updates N       update stream length (stream / stream-stats /
                     serve)                  [10000 / 2000 / 0]
   --plan-every N    session re-plan cadence, in updates (stream)
@@ -184,6 +204,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args, &artifacts, scale, seed),
         "infer" => cmd_infer(&args, &artifacts, scale, seed),
         "serve" => cmd_serve(&args, &artifacts, scale, seed),
+        "recover" => cmd_recover(&args, scale, seed),
         "obs" => cmd_obs(&args, scale, seed),
         "verify" => cmd_verify(&args, scale, seed),
         "lint-src" => cmd_lint_src(&args),
@@ -641,6 +662,12 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     let max_inflight = args.get_or("max-inflight", 32usize)?;
     let shed_after = args.get_or("shed-after", 256usize)?;
     let linger_secs = args.get_or("linger-secs", 0u64)?;
+    let wal_dir = args.get::<String>("wal")?;
+    let snapshot_every = args.get_or("snapshot-every", 4u64)?;
+    let do_recover = args.flag("recover")?;
+    if do_recover && wal_dir.is_none() {
+        bail!("--recover requires --wal DIR");
+    }
     if trace_path.is_some() {
         repro::obs::trace::set_enabled(true);
     }
@@ -658,13 +685,50 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
     // forced onto a background thread so the batcher never stalls.
     let mut session = Session::new(&ds, spec.clone());
     let lowered = session.lower()?;
-    let resident = if updates > 0 || plan_swap {
-        Some(coordinator::Resident::new(
+    let resident = if updates > 0 || plan_swap || wal_dir.is_some() {
+        let mut r = coordinator::Resident::new(
             session, &ds.graph, &lowered.hag,
             coordinator::SwapPolicy {
                 swap_plans: plan_swap,
                 max_pending: update_batch,
-            }))
+            });
+        // Crash-safe journaling (DESIGN.md §14): --recover first
+        // replays the WAL (and newest snapshot) into the resident
+        // pair, then the WAL reopens after the recovered tail so the
+        // journal-then-ack update path resumes where the crashed
+        // process stopped.
+        if let Some(dir) = &wal_dir {
+            let dir = std::path::Path::new(dir);
+            let mut tail_seq = 0u64;
+            if do_recover {
+                let rec = repro::durability::recover(dir)
+                    .map_err(anyhow::Error::msg)?;
+                let report =
+                    r.resume(&rec).map_err(anyhow::Error::msg)?;
+                tail_seq = rec.tail_seq;
+                println!(
+                    "recovered  : {} deltas ({} replayed into the \
+                     engine past snapshot seq {}), {}B torn tail \
+                     truncated, {} stale segments removed",
+                    report.session_replayed, report.engine_replayed,
+                    report.snapshot_seq, rec.truncated_bytes,
+                    rec.removed_segments);
+                if report.session_replayed > 0
+                    || rec.snapshot.is_some()
+                {
+                    r = r.with_initial_swap();
+                }
+            }
+            let dur = repro::durability::DurabilityState::open(
+                dir, tail_seq, snapshot_every)
+                .with_context(|| format!("opening WAL in {}",
+                                         dir.display()))?;
+            println!("durability : WAL at {} (journal-then-ack; \
+                      snapshot every {} epochs; next seq {})",
+                     dir.display(), snapshot_every, tail_seq + 1);
+            r = r.with_durability(dur);
+        }
+        Some(r)
     } else {
         None
     };
@@ -922,6 +986,68 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf, scale: f64,
             .with_context(|| format!("writing trace {path}"))?;
         println!("trace      : Chrome trace_event JSON -> {path}");
     }
+    Ok(())
+}
+
+/// `repro recover --wal DIR [--check --dataset NAME]`: scan a WAL
+/// directory (truncating any torn tail in place, exactly as serve
+/// `--recover` would), report what survives, and with `--check`
+/// replay onto the dataset's base graph and hold the recovered plan
+/// to the serving bar: haglint clean and identical to a from-scratch
+/// plan at the same topology. Non-zero exit on any violation.
+fn cmd_recover(args: &Args, scale: f64, seed: u64) -> Result<()> {
+    let wal: String = args.get::<String>("wal")?
+        .context("--wal DIR is required")?;
+    let check = args.flag("check")?;
+    let dir = std::path::PathBuf::from(&wal);
+    let rec = repro::durability::recover(&dir)
+        .map_err(anyhow::Error::msg)?;
+    println!("wal        : {} valid deltas, tail seq {}, {} B \
+              torn/stale truncated, {} stale segments removed",
+             rec.deltas.len(), rec.tail_seq, rec.truncated_bytes,
+             rec.removed_segments);
+    match &rec.snapshot {
+        Some(s) => println!("snapshot   : seq {} at epoch {} \
+                             (n {}, |V_A| {})",
+                            s.seq, s.epoch, s.graph.n(),
+                            s.hag.agg_nodes.len()),
+        None => println!("snapshot   : none (replay starts at the \
+                          base graph)"),
+    }
+    if !check {
+        return Ok(());
+    }
+    let name = req_dataset(args)?;
+    let spec = SpecArgs::parse(args)?.spec;
+    let ds = datasets::load(
+        &name, repro::bench::effective_scale(&name, scale), seed);
+    let mut session = Session::new(&ds, spec.clone());
+    let lowered = session.lower()?;
+    let mut engine = StreamEngine::from_hag(
+        &ds.graph, spec.stream_config(), &lowered.hag);
+    let report = repro::durability::resume_pair(
+        &rec, &mut engine, &mut session, &spec.stream_config())
+        .map_err(anyhow::Error::msg)?;
+    println!("replayed   : {} deltas into the session, {} into the \
+              engine (snapshot seq {})",
+             report.session_replayed, report.engine_replayed,
+             report.snapshot_seq);
+    let (hag, plan) = session.plan();
+    let g = session.graph();
+    let lint = repro::analysis::verify(
+        &repro::analysis::HagCtx::new(&g, &hag).with_plan(&plan));
+    if !lint.is_clean() {
+        bail!("recovered plan fails haglint:\n{}", lint.format());
+    }
+    let (_, fresh_plan) = session.plan_fresh();
+    if *plan != fresh_plan {
+        bail!("recovered plan != from-scratch plan at the same \
+               topology");
+    }
+    println!("check      : OK — haglint clean ({} passes), plan == \
+              from-scratch (n {}, e {}, |V_A| {})",
+             lint.passes_run.len(), g.n(), g.e(),
+             hag.agg_nodes.len());
     Ok(())
 }
 

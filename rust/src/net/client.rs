@@ -11,8 +11,67 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
 
 use super::frame::{self, ErrorCode, Frame, FrameKind, Mode, WireError};
+
+/// Backoff schedule for [`Client::score_with_retry`].
+///
+/// Retries apply only to *recoverable load rejections* —
+/// [`ErrorCode::RetryAfter`] (admission shed) and
+/// [`ErrorCode::Draining`] — where the server explicitly invites a
+/// later attempt. Everything else (transport errors, protocol
+/// violations, semantic rejections like `node_out_of_range`) is
+/// returned to the caller immediately: retrying cannot change the
+/// answer.
+///
+/// The delay before attempt `k` is
+/// `max(server retry_after_ms hint, base * 2^k)` capped at `cap`,
+/// then stretched by up to +25% of deterministic jitter so a herd of
+/// shed clients does not re-arrive in lockstep. The hint is a floor,
+/// never reduced by the jitter or the cap.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// First-retry backoff before the exponential doubling.
+    pub base: Duration,
+    /// Upper bound on the computed backoff (the server hint may
+    /// still exceed it).
+    pub cap: Duration,
+    /// Seed for the deterministic jitter stream.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(1),
+            jitter_seed: 0x7265_7472_79,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Whether a rejection with `code` is worth retrying.
+    pub fn retryable(code: ErrorCode) -> bool {
+        matches!(code, ErrorCode::RetryAfter | ErrorCode::Draining)
+    }
+
+    /// Delay before retry number `attempt` (0-based), honoring the
+    /// server's `retry_after_ms` hint as a floor. Pure — the caller
+    /// owns the jitter stream, so schedules are reproducible.
+    pub fn delay(&self, attempt: u32, hint_ms: Option<u64>,
+                 rng: &mut Rng) -> Duration {
+        let shift = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        let backoff = self.base.saturating_mul(shift).min(self.cap);
+        let floor = Duration::from_millis(hint_ms.unwrap_or(0));
+        let target = backoff.max(floor);
+        target.mul_f64(1.0 + 0.25 * rng.f64())
+    }
+}
 
 /// A successful scoring answer.
 #[derive(Debug, Clone)]
@@ -271,6 +330,39 @@ impl Client {
         })
     }
 
+    /// [`score`](Client::score) wrapped in the retry loop described
+    /// on [`RetryPolicy`]: recoverable load rejections (`retry_after`
+    /// / `draining`) are retried up to `policy.max_attempts` with
+    /// capped jittered exponential backoff, honoring the server's
+    /// `retry_after_ms` hint as a floor. The final outcome — success
+    /// or the last rejection — is returned; transport errors and
+    /// non-recoverable rejections surface immediately.
+    pub fn score_with_retry(&mut self, node: u32, features: &[f32],
+                            policy: &RetryPolicy)
+                            -> Result<Outcome<Score>, ClientError> {
+        let mut rng = Rng::seed_from_u64(
+            policy.jitter_seed ^ (node as u64).rotate_left(17));
+        let mut attempt = 0u32;
+        loop {
+            let out = self.score(node, features)?;
+            let rej = match out.rejection() {
+                None => return Ok(out),
+                Some(r) => r,
+            };
+            if !RetryPolicy::retryable(rej.code)
+                || attempt + 1 >= policy.max_attempts.max(1)
+            {
+                return Ok(out);
+            }
+            let d = policy.delay(attempt, rej.retry_after_ms,
+                                 &mut rng);
+            crate::obs_event!("client.retry", attempt as u64,
+                              d.as_millis() as u64);
+            std::thread::sleep(d);
+            attempt += 1;
+        }
+    }
+
     fn update(&mut self, op: &str, src: Option<u32>, dst: Option<u32>)
               -> Result<Outcome<UpdateAck>, ClientError> {
         let mut pairs = vec![("op", json::str_(op))];
@@ -331,5 +423,76 @@ impl Client {
                 "expected pong, got {}", reply.kind.name())));
         }
         Ok(reply.epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_policy_backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(25),
+            cap: Duration::from_millis(200),
+            jitter_seed: 1,
+        };
+        let mut rng = Rng::seed_from_u64(p.jitter_seed);
+        let mut prev = Duration::ZERO;
+        for attempt in 0..8 {
+            let d = p.delay(attempt, None, &mut rng);
+            let raw = Duration::from_millis(25 << attempt.min(3))
+                .min(p.cap);
+            assert!(d >= raw, "jitter never shrinks the backoff");
+            assert!(d <= raw.mul_f64(1.25), "jitter bounded at +25%");
+            assert!(d >= prev.mul_f64(0.8),
+                    "schedule roughly monotone until the cap");
+            prev = d;
+        }
+        // Past the doubling horizon the cap holds.
+        let d = p.delay(31, None, &mut rng);
+        assert!(d <= p.cap.mul_f64(1.25));
+    }
+
+    #[test]
+    fn retry_policy_honors_server_hint_as_floor() {
+        let p = RetryPolicy::default();
+        let mut rng = Rng::seed_from_u64(7);
+        // Hint above both the backoff and the cap still wins.
+        let d = p.delay(0, Some(5_000), &mut rng);
+        assert!(d >= Duration::from_millis(5_000));
+        // Hint below the backoff is subsumed by it.
+        let d = p.delay(4, Some(1), &mut rng);
+        assert!(d >= Duration::from_millis(400));
+    }
+
+    #[test]
+    fn retry_policy_schedule_is_deterministic_per_seed() {
+        let p = RetryPolicy::default();
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut rng = Rng::seed_from_u64(seed);
+            (0..4).map(|a| p.delay(a, Some(50), &mut rng)).collect()
+        };
+        assert_eq!(schedule(42), schedule(42));
+        assert_ne!(schedule(42), schedule(43),
+                   "different seeds decorrelate the herd");
+    }
+
+    #[test]
+    fn retry_policy_classifies_codes() {
+        assert!(RetryPolicy::retryable(ErrorCode::RetryAfter));
+        assert!(RetryPolicy::retryable(ErrorCode::Draining));
+        for code in [
+            ErrorCode::BadFrame,
+            ErrorCode::Oversized,
+            ErrorCode::EpochMismatch,
+            ErrorCode::NodeOutOfRange,
+            ErrorCode::FeatureLen,
+            ErrorCode::ExecFailed,
+            ErrorCode::Internal,
+        ] {
+            assert!(!RetryPolicy::retryable(code), "{}", code.name());
+        }
     }
 }

@@ -432,6 +432,12 @@ fn flush_pending(shared: &Shared, stream: &TcpStream,
                 let entry = pending.swap_remove(i);
                 shared.inflight.fetch_sub(1, Ordering::AcqRel);
                 shared.frame_lat.record(entry.submitted().elapsed());
+                // `net.write` models the reply write failing (peer
+                // reset, kernel buffer error): the connection is
+                // torn down by the caller and the client must
+                // reconnect — inflight accounting above already
+                // released this entry.
+                crate::fault::point("net.write")?;
                 frame::write_frame(&mut &*stream, &f, entry.mode())?;
             }
         }

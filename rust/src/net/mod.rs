@@ -27,8 +27,8 @@ pub mod drain;
 pub mod frame;
 pub mod listener;
 
-pub use client::{Client, ClientError, Outcome, Score, UpdateAck,
-                 WireRejection};
+pub use client::{Client, ClientError, Outcome, RetryPolicy, Score,
+                 UpdateAck, WireRejection};
 pub use drain::NetStats;
 pub use frame::{ErrorCode, Frame, FrameKind, Mode, WireError};
 pub use listener::{NetConfig, NetServer};

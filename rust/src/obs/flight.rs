@@ -1,6 +1,7 @@
 //! Flight recorder: post-mortem artifacts for serving failures.
 //!
-//! [`dump`] atomically writes (`tmp` + rename) a timestamped JSON
+//! [`dump`] atomically writes (via [`crate::util::atomic_write`]'s
+//! tmp + fsync + rename idiom) a timestamped JSON
 //! file capturing the failure reason, the last
 //! [`KEEP_EVENTS`] trace events across all threads, and a full
 //! registry snapshot — turning a transient `[serve] batch failed`
@@ -81,9 +82,8 @@ pub fn dump(reason: &str, registry: &MetricsRegistry)
         ("trace", trace::events_to_value(&events)),
     ]);
 
-    let tmp = dir.join(format!(".obs-flight-{ms}-{seq}.tmp"));
-    let written = std::fs::write(&tmp, doc.to_string_pretty())
-        .and_then(|()| std::fs::rename(&tmp, &path));
+    let written = crate::util::atomic_write(
+        &path, doc.to_string_pretty().as_bytes());
     match written {
         Ok(()) => {
             *LAST.lock().unwrap() = Some(path.clone());
@@ -96,7 +96,6 @@ pub fn dump(reason: &str, registry: &MetricsRegistry)
             Some(path)
         }
         Err(e) => {
-            let _ = std::fs::remove_file(&tmp);
             crate::obs_error!("[obs] flight record write failed: {e}");
             None
         }

@@ -1,0 +1,137 @@
+//! Crash-safe file output: the tmp + fsync + rename idiom, extracted
+//! from the flight recorder so every artifact writer in the tree
+//! (flight records, edge lists, buckets.json, durability snapshots)
+//! shares one implementation and no output file can ever be observed
+//! half-written.
+//!
+//! Contract: after [`atomic_write`] returns `Ok`, a reader opening
+//! `path` sees either the previous complete contents or the new
+//! complete contents — never a prefix. The data is fsync'd before the
+//! rename, and the parent directory is fsync'd after it (best effort:
+//! some filesystems refuse directory fsync; the rename itself is
+//! still atomic there).
+
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Distinguishes concurrent writers targeting the same path from one
+/// process (the pid distinguishes processes).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` atomically: stage into a hidden sibling
+/// tmp file, flush + fsync, rename over `path`, then fsync the parent
+/// directory (best effort). On any error the tmp file is removed and
+/// `path` is untouched.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("atomic_write: no file name in {}",
+                    path.display())))?;
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp_name = format!(".{name}.{}.{seq}.tmp", std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    let staged = (|| -> io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    match staged {
+        Ok(()) => {
+            // Make the rename itself durable. Directory fsync is not
+            // portable everywhere; failure here cannot un-rename, so
+            // it is advisory.
+            if let Some(d) = dir {
+                if let Ok(df) = std::fs::File::open(d) {
+                    let _ = df.sync_all();
+                }
+            }
+            Ok(())
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("repro-fsio-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let d = tmpdir("basic");
+        let p = d.join("out.json");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second-longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second-longer");
+        // no tmp droppings
+        let names: Vec<String> = std::fs::read_dir(&d).unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(names, vec!["out.json".to_string()], "{names:?}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn failure_leaves_target_untouched_and_no_tmp() {
+        let d = tmpdir("fail");
+        let p = d.join("out.bin");
+        atomic_write(&p, b"keep me").unwrap();
+        // a directory in the way of the rename forces the error path
+        let blocked = d.join("sub");
+        std::fs::create_dir_all(blocked.join("x")).unwrap();
+        assert!(atomic_write(&d.join("sub"), b"nope").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"keep me");
+        let tmps = std::fs::read_dir(&d).unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name()
+                    .to_string_lossy().ends_with(".tmp")
+            })
+            .count();
+        assert_eq!(tmps, 0, "tmp file cleaned up on failure");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear() {
+        let d = tmpdir("race");
+        let p = d.join("race.txt");
+        let bodies: Vec<Vec<u8>> = (0..4u8)
+            .map(|i| vec![b'a' + i; 512])
+            .collect();
+        std::thread::scope(|s| {
+            for body in &bodies {
+                let p = p.clone();
+                s.spawn(move || {
+                    for _ in 0..16 {
+                        atomic_write(&p, body).unwrap();
+                    }
+                });
+            }
+        });
+        let got = std::fs::read(&p).unwrap();
+        assert_eq!(got.len(), 512);
+        assert!(got.windows(2).all(|w| w[0] == w[1]),
+                "file is one writer's body, never interleaved");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -205,6 +205,12 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+impl From<JsonError> for String {
+    fn from(e: JsonError) -> String {
+        e.to_string()
+    }
+}
+
 /// Parse a complete JSON document.
 pub fn parse(input: &str) -> Result<Value, JsonError> {
     let b = input.as_bytes();

@@ -5,9 +5,11 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod fsio;
 pub mod fxhash;
 pub mod json;
 pub mod rng;
 
+pub use fsio::atomic_write;
 pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;

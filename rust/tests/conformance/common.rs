@@ -1,6 +1,6 @@
 //! Shared harness for the conformance suite.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
@@ -12,10 +12,21 @@ use repro::coordinator::{self, BatchPolicy, Resident, ScoreError,
                          ScoreResponse, ServerMsg, SwapPolicy,
                          UpdateResponse};
 use repro::datasets;
+use repro::durability::DurabilityState;
 use repro::incremental::{ApplyOutcome, DriftPolicy, RebuildEvent};
 use repro::net::{Client, NetConfig, NetServer};
 use repro::obs::metrics::MetricsRegistry;
 use repro::session::{LowerSpec, Session};
+
+/// Serialize the suite. Armed fault points (e11–e20) are
+/// process-global: a `net.write=nth:1` armed by one test would fire
+/// on whichever connection writes first across all concurrently
+/// running tests. Every conformance test takes this guard first, so
+/// the chaos tests see only their own traffic and the non-chaos
+/// tests never absorb someone else's fault.
+pub fn serial() -> std::sync::MutexGuard<'static, ()> {
+    repro::fault::exclusive()
+}
 
 /// A front end over a test-owned batcher channel: the test *is* the
 /// batcher, so admission, sheds, drains and epoch flips are
@@ -118,6 +129,21 @@ pub fn expect_score(msg: ServerMsg) -> ScoreRequest {
     }
 }
 
+/// Poll `ping` until the served epoch exceeds `floor` (hot swaps
+/// land on the worker thread; bounded at ~5 s). Returns the last
+/// observed epoch — callers assert on it.
+pub fn wait_epoch_above(c: &mut Client, floor: u64) -> u64 {
+    let mut e = 0;
+    for _ in 0..250 {
+        e = c.ping().expect("ping");
+        if e > floor {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    e
+}
+
 /// Artifacts dir that does not exist: forces the host reference
 /// executor regardless of what the checkout has compiled.
 pub fn no_artifacts() -> PathBuf {
@@ -137,14 +163,55 @@ pub struct Live {
 }
 
 pub fn live_swapping() -> Live {
+    live_build(|r| r)
+}
+
+/// Fresh per-test WAL directory under the OS temp dir (removed if a
+/// previous run left one behind — recovery must see only this run's
+/// segments).
+pub fn wal_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "repro-conf-wal-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// [`live_swapping`] plus crash-safe durability: every acked update
+/// batch is journaled (fsync) into a WAL under `dir` before apply,
+/// and a snapshot is cut every `snapshot_every` landed swap epochs
+/// (0 = WAL only, never snapshot).
+pub fn live_durable(dir: &Path, snapshot_every: u64) -> Live {
+    let dur = DurabilityState::open(dir, 0, snapshot_every)
+        .expect("open WAL");
+    live_build(move |r| r.with_durability(dur))
+}
+
+/// Resume a durable serving stack from `dir`: recover (snapshot +
+/// WAL suffix), replay into a fresh resident pair, reopen the WAL
+/// after the recovered tail, and force the recovered plan live on
+/// the first batch. Returns the replay report alongside the stack.
+pub fn live_recovered(dir: &Path)
+                      -> (Live, repro::durability::ReplayReport) {
+    let rec = repro::durability::recover(dir).expect("recover");
+    let mut report = None;
+    let live = live_build(|mut r| {
+        report = Some(r.resume(&rec).expect("resume"));
+        let dur = DurabilityState::open(dir, rec.tail_seq, 0)
+            .expect("reopen WAL");
+        r.with_durability(dur).with_initial_swap()
+    });
+    (live, report.expect("resume ran"))
+}
+
+fn live_build(prep: impl FnOnce(Resident) -> Resident) -> Live {
     let ds = datasets::load("BZR", 0.02, 7);
     let spec = LowerSpec::default().with_shards(2).with_drift(
         DriftPolicy::default().with_threshold(-1.0));
     let mut session = Session::new(&ds, spec);
     let lowered = session.lower().expect("lower");
-    let resident = Resident::new(
+    let resident = prep(Resident::new(
         session, &ds.graph, &lowered.hag,
-        SwapPolicy { swap_plans: true, max_pending: 1 });
+        SwapPolicy { swap_plans: true, max_pending: 1 }));
     let server = coordinator::InferenceServer::for_lowered(
         no_artifacts(), "gcn", &ds, &lowered, BatchPolicy::default(),
         7, Some(resident))

@@ -8,10 +8,11 @@ use repro::net::frame::{Frame, FrameKind};
 use repro::net::{NetConfig, Outcome};
 use repro::util::json;
 
-use crate::common::{auto_responder, connect, scripted};
+use crate::common::{auto_responder, connect, scripted, serial};
 
 #[test]
 fn every_request_kind_roundtrips_with_id_correlation() {
+    let _guard = serial();
     let s = scripted(NetConfig::default());
     let responder = auto_responder(s.rx, s.epoch.clone());
     let mut c = connect(&s.net);
@@ -54,6 +55,7 @@ fn every_request_kind_roundtrips_with_id_correlation() {
 
 #[test]
 fn pipelined_requests_answer_each_id_exactly_once() {
+    let _guard = serial();
     let s = scripted(NetConfig::default());
     let responder = auto_responder(s.rx, s.epoch.clone());
     let mut c = connect(&s.net);

@@ -11,7 +11,7 @@ use repro::net::frame::{self, Frame, FrameKind};
 use repro::net::NetConfig;
 use repro::util::json;
 
-use crate::common::{auto_responder, scripted};
+use crate::common::{auto_responder, scripted, serial};
 
 /// Read one `\n`-terminated line from a raw stream.
 fn read_line(s: &mut TcpStream) -> String {
@@ -36,6 +36,7 @@ fn read_exact(s: &mut TcpStream, n: usize) -> Vec<u8> {
 
 #[test]
 fn text_and_binary_frames_mix_on_one_connection() {
+    let _guard = serial();
     let s = scripted(NetConfig::default());
     let responder = auto_responder(s.rx, s.epoch.clone());
     let mut raw = TcpStream::connect(s.net.local_addr())

@@ -7,7 +7,8 @@ use repro::net::frame::{self, ErrorCode, Frame, FrameKind, WireError};
 use repro::net::NetConfig;
 use repro::util::json::{self, Value};
 
-use crate::common::{auto_responder, connect, scripted, Scripted};
+use crate::common::{auto_responder, connect, scripted, serial,
+                    Scripted};
 
 /// Send raw bytes on a fresh connection; expect one `bad_frame`
 /// error frame followed by EOF.
@@ -27,6 +28,7 @@ fn expect_bad_frame_then_close(s: &Scripted, bytes: &[u8]) {
 
 #[test]
 fn malformed_frames_get_error_frames_then_close() {
+    let _guard = serial();
     let s = scripted(NetConfig::default());
     let responder = auto_responder(s.rx, s.epoch.clone());
 

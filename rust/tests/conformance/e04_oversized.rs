@@ -10,10 +10,11 @@ use repro::net::frame::{self, ErrorCode, Frame, FrameKind, WireError};
 use repro::net::NetConfig;
 use repro::util::json::Value;
 
-use crate::common::{auto_responder, connect, scripted};
+use crate::common::{auto_responder, connect, scripted, serial};
 
 #[test]
 fn oversized_payloads_are_refused_without_buffering() {
+    let _guard = serial();
     let cfg = NetConfig { max_payload: 256, ..NetConfig::default() };
     let s = scripted(cfg);
     let responder = auto_responder(s.rx, s.epoch.clone());

@@ -9,10 +9,11 @@ use std::sync::atomic::Ordering;
 use repro::net::frame::{ErrorCode, FrameKind};
 use repro::net::{NetConfig, Outcome};
 
-use crate::common::{auto_responder, connect, scripted};
+use crate::common::{auto_responder, connect, scripted, serial};
 
 #[test]
 fn pinned_reads_answer_or_mismatch_after_swap() {
+    let _guard = serial();
     let s = scripted(NetConfig::default());
     let responder = auto_responder(s.rx, s.epoch.clone());
     let mut c = connect(&s.net);

@@ -8,10 +8,11 @@ use std::time::Duration;
 use repro::net::frame::ErrorCode;
 use repro::net::Outcome;
 
-use crate::common::{connect, live_swapping};
+use crate::common::{connect, live_swapping, serial};
 
 #[test]
 fn live_swaps_stamp_strictly_newer_epochs() {
+    let _guard = serial();
     let live = live_swapping();
     let mut c = connect(&live.net);
     let feats = vec![0.5f32; live.f_in];

@@ -9,10 +9,12 @@ use repro::net::frame::{ErrorCode, Frame, FrameKind};
 use repro::net::{NetConfig, Outcome};
 use repro::util::json;
 
-use crate::common::{connect, expect_score, reply_score, scripted};
+use crate::common::{connect, expect_score, reply_score, scripted,
+                    serial};
 
 #[test]
 fn pipeline_overflow_sheds_with_retry_after() {
+    let _guard = serial();
     let cfg = NetConfig {
         max_inflight: 2,
         shed_after: 100,

@@ -11,7 +11,7 @@ use repro::net::{NetConfig, Outcome};
 use repro::util::json;
 
 use crate::common::{connect, expect_score, reply_score,
-                    scripted_with};
+                    scripted_with, serial};
 
 fn send_scores(c: &mut repro::net::Client, ids: std::ops::RangeInclusive<u64>) {
     for id in ids {
@@ -24,6 +24,7 @@ fn send_scores(c: &mut repro::net::Client, ids: std::ops::RangeInclusive<u64>) {
 
 #[test]
 fn backlog_cap_sheds_across_connections() {
+    let _guard = serial();
     let cfg = NetConfig {
         max_inflight: 100,
         shed_after: 4,
@@ -95,6 +96,7 @@ fn backlog_cap_sheds_across_connections() {
 
 #[test]
 fn bounded_batcher_queue_sheds_instead_of_buffering() {
+    let _guard = serial();
     // A tiny scripted queue (cap 2) stands in for "the batcher is
     // slower than the wire": overflow sheds at enqueue time.
     let s = scripted_with(NetConfig::default(), 2);

@@ -9,7 +9,8 @@ use repro::net::frame::{self, ErrorCode, Frame, FrameKind, WireError};
 use repro::net::NetConfig;
 use repro::util::json::{self, Value};
 
-use crate::common::{connect, expect_score, reply_score, scripted};
+use crate::common::{connect, expect_score, reply_score, scripted,
+                    serial};
 
 fn short_timeout() -> NetConfig {
     NetConfig {
@@ -20,6 +21,7 @@ fn short_timeout() -> NetConfig {
 
 #[test]
 fn idle_connections_are_closed() {
+    let _guard = serial();
     let s = scripted(short_timeout());
     let mut c = connect(&s.net);
     let t0 = Instant::now();
@@ -36,6 +38,7 @@ fn idle_connections_are_closed() {
 
 #[test]
 fn midframe_stall_is_rejected_not_held() {
+    let _guard = serial();
     let s = scripted(short_timeout());
     let mut c = connect(&s.net);
 
@@ -58,6 +61,7 @@ fn midframe_stall_is_rejected_not_held() {
 
 #[test]
 fn outstanding_work_blocks_idle_close() {
+    let _guard = serial();
     let s = scripted(short_timeout());
     let mut c = connect(&s.net);
 

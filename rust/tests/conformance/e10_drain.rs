@@ -9,10 +9,12 @@ use repro::net::frame::{ErrorCode, Frame, FrameKind, WireError};
 use repro::net::NetConfig;
 use repro::util::json;
 
-use crate::common::{connect, expect_score, reply_score, scripted};
+use crate::common::{connect, expect_score, reply_score, scripted,
+                    serial};
 
 #[test]
 fn drain_answers_inflight_and_refuses_new_work() {
+    let _guard = serial();
     let s = scripted(NetConfig::default());
     let mut c = connect(&s.net);
 

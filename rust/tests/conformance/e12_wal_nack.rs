@@ -1,0 +1,63 @@
+//! e12 — journal-then-ack under a failing fsync: a WAL commit
+//! failure nacks the whole update batch over the wire (an explicit
+//! `Internal` error frame, not a hang and not a false ack), applies
+//! nothing, and recovery replays exactly the acked deltas.
+
+use std::time::Duration;
+
+use repro::durability::recover;
+use repro::fault::{self, FaultAction, Trigger};
+use repro::incremental::GraphDelta;
+use repro::net::frame::ErrorCode;
+
+use crate::common::{connect, live_durable, serial, wal_dir};
+
+#[test]
+fn failed_wal_commit_nacks_the_batch_and_recovery_sees_only_acks() {
+    let _guard = serial();
+    fault::reset();
+    let dir = wal_dir("e12");
+    let live = live_durable(&dir, 0);
+    let mut c = connect(&live.net);
+
+    // First update lands durably.
+    c.node_add().expect("node_add").into_result().expect("acked");
+
+    // The next WAL commit's fsync fails. The ordering contract: no
+    // ack before the fsync returns Ok, so this batch must be refused
+    // wholesale — the reply channel is dropped and the listener
+    // answers with an Internal error frame.
+    fault::arm("wal.fsync", Trigger::Nth(1), FaultAction::Error, 0);
+    let rej = c.edge_insert(0, live.n).expect("wire stays up")
+        .into_result().expect_err("nacked, not acked");
+    assert_eq!(rej.code, ErrorCode::Internal);
+    assert_eq!(fault::fired("wal.fsync"), 1);
+
+    // The failure was transient and scoped to that batch: the same
+    // connection's next update lands durably.
+    c.edge_insert(0, live.n).expect("edge_insert").into_result()
+        .expect("acked after the nack");
+
+    drop(c);
+    live.net.drain(Duration::from_secs(5));
+    let stats = live.server.shutdown();
+    assert_eq!(stats.wal_nacked_batches, 1);
+    assert_eq!(stats.updates, 2, "the nacked delta was never applied");
+    fault::reset();
+
+    // Recovery sees exactly what was acked — the nacked batch left
+    // nothing behind (its staged bytes were rolled back; its burned
+    // sequence number is a legal hole).
+    let rec = recover(&dir).expect("recover");
+    let deltas: Vec<GraphDelta> =
+        rec.deltas.iter().map(|&(_, d)| d).collect();
+    assert_eq!(
+        deltas,
+        vec![GraphDelta::NodeAdd,
+             GraphDelta::EdgeInsert { src: 0, dst: live.n }],
+        "acked deltas only");
+    assert_eq!(rec.truncated_bytes, 0,
+               "rollback left no torn bytes on disk");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

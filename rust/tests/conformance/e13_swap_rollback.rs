@@ -1,0 +1,59 @@
+//! e13 — plan-swap failure is non-fatal: an injected `serve.swap`
+//! fault rolls back cleanly (updates stay acked, serving continues
+//! on the old plan at the old epoch) and a later flush retries the
+//! swap and lands it.
+
+use std::time::Duration;
+
+use repro::fault::{self, FaultAction, Trigger};
+
+use crate::common::{connect, live_swapping, serial, wait_epoch_above};
+
+#[test]
+fn failed_plan_swap_rolls_back_and_a_later_flush_lands_it() {
+    let _guard = serial();
+    fault::reset();
+    let live = live_swapping();
+    let mut c = connect(&live.net);
+    assert_eq!(c.ping().expect("ping"), 1);
+
+    // The first swap attempt fails after this flush.
+    fault::arm("serve.swap", Trigger::Nth(1), FaultAction::Error, 0);
+    c.node_add().expect("node_add").into_result().expect("acked");
+    c.edge_insert(0, live.n).expect("edge_insert").into_result()
+        .expect("update acks are independent of swap outcomes");
+
+    // Wait for the failed attempt, then prove the rollback: the old
+    // plan keeps serving at the old epoch.
+    for _ in 0..250 {
+        if fault::fired("serve.swap") >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(fault::fired("serve.swap"), 1, "swap was attempted");
+
+    // Forced drift (threshold < 0) retries the swap on the next
+    // flush; the retry must land and bump the epoch.
+    c.edge_insert(1, live.n).expect("edge_insert").into_result()
+        .expect("acked");
+    let e = wait_epoch_above(&mut c, 1);
+    assert!(e > 1, "retried swap must land (epoch still {e})");
+
+    // Serving is correct on the new plan: the added node answers.
+    let feats = vec![0.5f32; live.f_in];
+    let s = c.score(live.n, &feats).expect("score").into_result()
+        .expect("new node served post-swap");
+    assert!(s.epoch >= e);
+    assert_eq!(s.logits.len(), live.classes);
+
+    fault::reset();
+    drop(c);
+    live.net.drain(Duration::from_secs(5));
+    let stats = live.server.shutdown();
+    assert!(stats.swaps_skipped >= 1,
+            "the failed attempt is accounted as skipped");
+    assert!(stats.plan_swaps >= 1, "the retry is a real swap");
+    assert_eq!(stats.plan_matches_fresh, Some(true),
+               "rollback left the session coherent");
+}

@@ -1,0 +1,41 @@
+//! e14 — bounded-restart supervision: a batch worker that panics
+//! mid-execute drops that round's in-flight replies (clients see an
+//! explicit `Internal` error frame, not a hang), and the supervisor
+//! restarts the round loop — the very next request is served.
+
+use std::time::Duration;
+
+use repro::fault::{self, FaultAction, Trigger};
+use repro::net::frame::ErrorCode;
+
+use crate::common::{connect, live_swapping, serial};
+
+#[test]
+fn a_panicking_batch_is_absorbed_and_the_worker_restarts() {
+    let _guard = serial();
+    fault::reset();
+    let live = live_swapping();
+    let mut c = connect(&live.net);
+    let feats = vec![0.5f32; live.f_in];
+
+    // The first executed batch panics (worker dies mid-batch).
+    fault::arm("batcher.exec", Trigger::Nth(1), FaultAction::Panic, 0);
+    let rej = c.score(0, &feats).expect("wire stays up")
+        .into_result().expect_err("in-flight reply dropped");
+    assert_eq!(rej.code, ErrorCode::Internal,
+               "dropped reply surfaces as an explicit failure");
+    assert_eq!(fault::fired("batcher.exec"), 1);
+
+    // Supervision restarted the loop from the last good serving
+    // plan: the same connection's next request is answered.
+    let s = c.score(0, &feats).expect("score").into_result()
+        .expect("served after restart");
+    assert_eq!(s.logits.len(), live.classes);
+
+    fault::reset();
+    drop(c);
+    live.net.drain(Duration::from_secs(5));
+    let stats = live.server.shutdown();
+    assert_eq!(stats.worker_restarts, 1);
+    assert!(stats.requests >= 1, "post-restart request counted");
+}

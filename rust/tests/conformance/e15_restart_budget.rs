@@ -1,0 +1,50 @@
+//! e15 — the restart budget is bounded: a worker that panics on
+//! every batch is restarted at most `MAX_WORKER_RESTARTS` (3) times,
+//! after which the batcher exits and every subsequent wire request
+//! fails fast with `Internal` ("batcher is gone") instead of
+//! crash-looping or hanging. Shutdown still joins cleanly.
+
+use std::time::Duration;
+
+use repro::fault::{self, FaultAction, Trigger};
+use repro::net::frame::ErrorCode;
+
+use crate::common::{connect, live_swapping, serial};
+
+#[test]
+fn worker_restart_budget_exhausts_to_fail_fast_rejections() {
+    let _guard = serial();
+    fault::reset();
+    let live = live_swapping();
+    let mut c = connect(&live.net);
+    let feats = vec![0.5f32; live.f_in];
+
+    fault::arm("batcher.exec", Trigger::Always, FaultAction::Panic, 0);
+
+    // Every score triggers one panicking batch until the budget is
+    // spent; after that the queue is closed and admission answers
+    // for the dead batcher. Either way each attempt gets an explicit
+    // Internal frame within the client deadline — never a hang.
+    let mut gone = false;
+    for _ in 0..50 {
+        let rej = c.score(0, &feats).expect("wire stays up")
+            .into_result().expect_err("no batch may succeed");
+        assert_eq!(rej.code, ErrorCode::Internal);
+        if rej.message.contains("batcher is gone") {
+            gone = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(gone, "exhausted budget must fail fast, not retry");
+    assert!(fault::fired("batcher.exec") >= 3,
+            "budget allows exactly three panicking rounds");
+
+    fault::reset();
+    drop(c);
+    live.net.drain(Duration::from_secs(5));
+    let outcome = live.server.shutdown_outcome();
+    assert_eq!(outcome.stats.worker_restarts, 3);
+    assert!(outcome.resident.is_some(),
+            "the resident pair survives the worker's death");
+}

@@ -1,0 +1,40 @@
+//! e16 — a failed reply write tears down only its own connection:
+//! the client observes a transport error (never a silent hang, never
+//! a corrupt half-frame), the server survives, and a fresh
+//! connection is served normally.
+
+use std::time::Duration;
+
+use repro::fault::{self, FaultAction, Trigger};
+use repro::net::NetConfig;
+
+use crate::common::{auto_responder, connect, scripted, serial};
+
+#[test]
+fn a_failed_reply_write_tears_only_that_connection() {
+    let _guard = serial();
+    fault::reset();
+    let s = scripted(NetConfig::default());
+    let responder = auto_responder(s.rx, s.epoch.clone());
+
+    // The next reply write fails at the socket.
+    fault::arm("net.write", Trigger::Nth(1), FaultAction::Error, 0);
+    let mut a = connect(&s.net);
+    let res = a.score(3, &[0.5]);
+    assert!(res.is_err(),
+            "torn connection must surface as a client error");
+    assert_eq!(fault::fired("net.write"), 1);
+
+    // Connection-scoped blast radius: a new connection works.
+    let mut b = connect(&s.net);
+    let sc = b.score(4, &[0.5]).expect("score").into_result()
+        .expect("fresh connection served");
+    assert_eq!(sc.logits, vec![4.0, 0.25]);
+
+    fault::reset();
+    drop(a);
+    drop(b);
+    let ns = s.net.drain(Duration::from_secs(5));
+    assert!(ns.accepted >= 2);
+    responder.join().expect("responder exits with the server");
+}

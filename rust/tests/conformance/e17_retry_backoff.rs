@@ -1,0 +1,75 @@
+//! e17 — client back-off honors the server's hint: a load-shed
+//! `RetryAfter` (with its `retry_after_ms` hint) is absorbed by
+//! `score_with_retry`, which waits at least the hinted back-off
+//! before retrying and then succeeds once capacity frees up.
+
+use std::time::{Duration, Instant};
+
+use repro::net::frame::{Frame, FrameKind};
+use repro::net::{Client, NetConfig, RetryPolicy};
+use repro::util::json;
+
+use crate::common::{connect, expect_score, reply_score, scripted,
+                    serial};
+
+#[test]
+fn score_with_retry_absorbs_a_shed_and_honors_the_hint() {
+    let _guard = serial();
+    repro::fault::reset();
+    // Server-wide budget of one outstanding request.
+    let s = scripted(NetConfig {
+        shed_after: 1,
+        ..NetConfig::default()
+    });
+
+    // Connection A fills the budget: its request is admitted and
+    // deliberately left unanswered.
+    let mut a = connect(&s.net);
+    a.send(&Frame::new(FrameKind::ScoreReq, 1, 0,
+                       json::obj(vec![("node", json::num(1.0))])))
+        .expect("send");
+    let req_a = expect_score(
+        s.rx.recv_timeout(Duration::from_secs(5)).expect("A admitted"));
+
+    // Connection B retries through the shed on its own thread.
+    let addr = s.net.local_addr();
+    let b = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).expect("connect B");
+        c.set_read_timeout(Duration::from_secs(5)).expect("timeout");
+        let policy = RetryPolicy {
+            max_attempts: 5,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(200),
+            jitter_seed: 17,
+        };
+        let t0 = Instant::now();
+        let out = c.score_with_retry(7, &[0.5], &policy)
+            .expect("wire stays up");
+        (out, t0.elapsed())
+    });
+
+    // Wait until B has actually been shed, then free the budget.
+    let t0 = Instant::now();
+    while s.net.stats().shed < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "B never hit the shed");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    reply_score(req_a, &s.epoch);
+
+    // B's retried attempt is admitted and served.
+    let req_b = expect_score(
+        s.rx.recv_timeout(Duration::from_secs(5)).expect("B retried"));
+    reply_score(req_b, &s.epoch);
+
+    let (out, elapsed) = b.join().expect("B thread");
+    let score = out.into_result().expect("retry succeeded");
+    assert_eq!(score.logits, vec![7.0, 0.25]);
+    // The listener hints 50 ms on sheds; the back-off floor is the
+    // hint even though the policy's own base is 1 ms.
+    assert!(elapsed >= Duration::from_millis(50),
+            "hint is the back-off floor, elapsed {elapsed:?}");
+    assert!(s.net.stats().shed >= 1);
+
+    drop(a);
+}

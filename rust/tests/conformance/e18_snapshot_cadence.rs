@@ -1,0 +1,49 @@
+//! e18 — snapshot cadence: a durable live server cuts a graph+HAG
+//! snapshot at each configured plan-epoch boundary; the newest
+//! snapshot parses, reflects the landed topology, and recovery
+//! adopts it (WAL replay then starts after the snapshot's sequence).
+
+use std::time::Duration;
+
+use repro::durability::{recover, snapshot};
+
+use crate::common::{connect, live_durable, serial, wait_epoch_above,
+                    wal_dir};
+
+#[test]
+fn snapshots_land_on_the_epoch_cadence_and_parse() {
+    let _guard = serial();
+    repro::fault::reset();
+    let dir = wal_dir("e18");
+    let live = live_durable(&dir, 1); // snapshot on every landed epoch
+    let mut c = connect(&live.net);
+
+    c.node_add().expect("node_add").into_result().expect("acked");
+    c.edge_insert(0, live.n).expect("edge_insert").into_result()
+        .expect("acked");
+    let e = wait_epoch_above(&mut c, 1);
+    assert!(e > 1, "swap must land (epoch still {e})");
+
+    drop(c);
+    live.net.drain(Duration::from_secs(5));
+    let stats = live.server.shutdown();
+    assert!(stats.snapshots_written >= 1,
+            "at least one epoch boundary cut a snapshot");
+
+    // The newest snapshot parses and carries the landed topology:
+    // the added node and its wired edge.
+    let snap = snapshot::load_latest(&dir).expect("snapshot parses");
+    assert_eq!(snap.seq, 2, "cut after both acked deltas");
+    assert!(snap.epoch > 1, "cut at a post-swap boundary");
+    assert_eq!(snap.graph.n(), live.n as usize + 1);
+    assert_eq!(snap.graph.neighbors(live.n), &[0],
+               "snapshot graph has the inserted edge");
+
+    // Recovery adopts it: replay resumes after the snapshot seq.
+    let rec = recover(&dir).expect("recover");
+    let adopted = rec.snapshot.as_ref().expect("snapshot adopted");
+    assert_eq!(adopted.seq, 2);
+    assert_eq!(rec.tail_seq, 2);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

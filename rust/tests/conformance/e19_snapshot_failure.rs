@@ -1,0 +1,53 @@
+//! e19 — snapshots are best effort, the WAL is the truth: when every
+//! snapshot write fails, acks and hot swaps proceed unimpeded, the
+//! failures are counted, and recovery from the WAL alone still sees
+//! every acked delta.
+
+use std::time::Duration;
+
+use repro::durability::{recover, snapshot};
+use repro::fault::{self, FaultAction, Trigger};
+
+use crate::common::{connect, live_durable, serial, wait_epoch_above,
+                    wal_dir};
+
+#[test]
+fn snapshot_write_failures_never_block_serving_or_acks() {
+    let _guard = serial();
+    fault::reset();
+    let dir = wal_dir("e19");
+    let live = live_durable(&dir, 1); // tries on every landed epoch
+    fault::arm("snapshot.write", Trigger::Always, FaultAction::Error,
+               0);
+    let mut c = connect(&live.net);
+
+    c.node_add().expect("node_add").into_result().expect("acked");
+    c.edge_insert(0, live.n).expect("edge_insert").into_result()
+        .expect("acked");
+    let e = wait_epoch_above(&mut c, 1);
+    assert!(e > 1, "swaps land despite failing snapshots");
+
+    // Serving is live on the new plan.
+    let feats = vec![0.5f32; live.f_in];
+    let s = c.score(live.n, &feats).expect("score").into_result()
+        .expect("added node served");
+    assert_eq!(s.logits.len(), live.classes);
+
+    drop(c);
+    live.net.drain(Duration::from_secs(5));
+    let stats = live.server.shutdown();
+    assert_eq!(stats.snapshots_written, 0);
+    assert!(fault::fired("snapshot.write") >= 1,
+            "the cadence did attempt snapshots");
+    fault::reset();
+
+    // WAL-only recovery is complete: no snapshot on disk, every
+    // acked delta replayable.
+    assert!(snapshot::list(&dir).expect("list").is_empty());
+    let rec = recover(&dir).expect("recover");
+    assert!(rec.snapshot.is_none());
+    assert_eq!(rec.deltas.len(), 2);
+    assert_eq!(rec.tail_seq, 2);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

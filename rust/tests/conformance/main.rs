@@ -1,6 +1,6 @@
 //! Numbered wire-protocol conformance suite (`cargo test --test
 //! conformance`): one file per client-visible contract guarantee,
-//! e01 … e10, all runnable against the CPU-stub build (no PJRT
+//! e01 … e20, all runnable against the CPU-stub build (no PJRT
 //! artifacts, no network beyond loopback).
 //!
 //! Most guarantees run against a **scripted** back end: the TCP
@@ -11,18 +11,36 @@
 //! against a live `InferenceServer` with a forced-drift resident
 //! session instead.
 //!
-//! | file                | guarantee                                  |
-//! |---------------------|--------------------------------------------|
-//! | e01_framing         | binary frames: id correlation, every kind  |
-//! | e02_text_fallback   | JSON text mode; reply matches request mode |
-//! | e03_malformed       | malformed frames: error frame + close      |
-//! | e04_oversized       | payload caps enforced without buffering    |
-//! | e05_epoch_pin       | pinned reads answer or EpochMismatch       |
-//! | e06_epoch_monotone  | live swaps: epochs stamped, monotone       |
-//! | e07_shed_pipeline   | per-connection cap sheds with RetryAfter   |
-//! | e08_shed_backlog    | server-wide cap + queue bound, no hang     |
-//! | e09_timeouts        | idle close; mid-frame stall rejected       |
-//! | e10_drain           | drain answers in-flight, refuses new work  |
+//! e11–e20 are the **chaos** arm (DESIGN.md §14): deterministic
+//! faults injected at named points (`repro::fault`) prove the
+//! kill-at-any-point durability contract — acked deltas survive
+//! crashes, failed fsyncs nack instead of lying, swap/exec/socket
+//! failures are absorbed with bounded blast radius, and recovery
+//! resumes identical serving. Because armed fault points are
+//! process-global, every test serializes behind `common::serial()`.
+//!
+//! | file                  | guarantee                                |
+//! |-----------------------|------------------------------------------|
+//! | e01_framing           | binary frames: id correlation, all kinds |
+//! | e02_text_fallback     | JSON text mode; reply matches req mode   |
+//! | e03_malformed         | malformed frames: error frame + close    |
+//! | e04_oversized         | payload caps enforced without buffering  |
+//! | e05_epoch_pin         | pinned reads answer or EpochMismatch     |
+//! | e06_epoch_monotone    | live swaps: epochs stamped, monotone     |
+//! | e07_shed_pipeline     | per-connection cap sheds with RetryAfter |
+//! | e08_shed_backlog      | server-wide cap + queue bound, no hang   |
+//! | e09_timeouts          | idle close; mid-frame stall rejected     |
+//! | e10_drain             | drain answers in-flight, refuses new     |
+//! | e11_wal_torn_tail     | acked deltas survive a torn WAL tail     |
+//! | e12_wal_nack          | failed fsync nacks batch; acks recovered |
+//! | e13_swap_rollback     | failed swap rolls back; retry lands      |
+//! | e14_worker_restart    | batch panic absorbed; worker restarts    |
+//! | e15_restart_budget    | restart budget bounds; then fail-fast    |
+//! | e16_write_failure     | reply-write failure tears only its conn  |
+//! | e17_retry_backoff     | client retry honors the RetryAfter hint  |
+//! | e18_snapshot_cadence  | snapshots cut on epoch cadence, parse    |
+//! | e19_snapshot_failure  | snapshot failure never blocks acks       |
+//! | e20_recovery_identity | recover → identical plan, serving, WAL   |
 
 mod common;
 mod e01_framing;
@@ -35,3 +53,13 @@ mod e07_shed_pipeline;
 mod e08_shed_backlog;
 mod e09_timeouts;
 mod e10_drain;
+mod e11_wal_torn_tail;
+mod e12_wal_nack;
+mod e13_swap_rollback;
+mod e14_worker_restart;
+mod e15_restart_budget;
+mod e16_write_failure;
+mod e17_retry_backoff;
+mod e18_snapshot_cadence;
+mod e19_snapshot_failure;
+mod e20_recovery_identity;
